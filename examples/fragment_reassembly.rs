@@ -1,0 +1,133 @@
+//! The workload that created the first dynamic hash table: Herbert Xu's
+//! 2010 rebuildable table managed *fragment/flow state* in the Linux
+//! kernel's networking stack, where bursts of fragmented packets (or a
+//! DoS) can flood the table far past its design load factor (§1, §2).
+//!
+//! This example simulates that scenario on DHash: a flow table keyed by
+//! (src, dst, id)-style u64 flow ids, zipf-skewed steady traffic, and a
+//! periodic *fragment burst* that multiplies the live population. An
+//! operator loop watches the observed load factor and reacts by
+//! rebuilding to a larger bucket array (and back after the burst drains)
+//! — the "resize" half of DHash's dynamism, complementing the
+//! hash-change half shown in `attack_mitigation`.
+//!
+//! ```sh
+//! cargo run --release --example fragment_reassembly -- [--secs 8]
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dhash::dhash::{DHashMap, HashFn};
+use dhash::rcu::RcuThread;
+use dhash::torture::Zipf;
+use dhash::util::cli::Args;
+use dhash::util::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["secs", "flows"])?;
+    let secs: u64 = args.get_or("secs", 8u64)?;
+    let flows: u64 = args.get_or("flows", 200_000u64)?;
+
+    let map = Arc::new(DHashMap::with_buckets(1024, 0x5eed));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Traffic: zipf-skewed flow activity + a burst window each ~3s that
+    // floods short-lived fragment entries.
+    let traffic = {
+        let map = map.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let zipf = Zipf::new(flows, 1.1);
+            let mut rng = SplitMix64::new(3);
+            let mut frag_seq = flows; // fragment keys above the flow space
+            let t0 = Instant::now();
+            while !stop.load(Ordering::Relaxed) {
+                let in_burst = (t0.elapsed().as_millis() / 1000) % 3 == 2;
+                for _ in 0..512 {
+                    if in_burst {
+                        // Burst: insert fragment state, rarely cleaned.
+                        frag_seq += 1;
+                        let _ = map.insert(&g, frag_seq, 1);
+                        if frag_seq % 4 == 0 {
+                            map.delete(&g, frag_seq - 2);
+                        }
+                    } else {
+                        // Steady state: touch a zipf-ranked flow.
+                        let flow = zipf.sample(&mut rng);
+                        if map.lookup(&g, flow).is_none() {
+                            let _ = map.insert(&g, flow, 0);
+                        }
+                        // Age out a random old fragment if any.
+                        if frag_seq > flows {
+                            map.delete(&g, map_key_to_age(&mut rng, flows, frag_seq));
+                        }
+                    }
+                }
+                g.quiescent_state();
+            }
+            g.offline();
+        })
+    };
+
+    // Operator loop: keep the observed load factor in [2, 16] by
+    // rebuilding (grow on burst, shrink when it drains).
+    let g = RcuThread::register();
+    println!(
+        "{:>5} {:>10} {:>9} {:>8} {:>9}",
+        "t(s)", "entries", "buckets", "load", "action"
+    );
+    let t0 = Instant::now();
+    let mut next_seed = 1u64;
+    while t0.elapsed().as_secs() < secs {
+        // Sleep in an extended quiescent state: an online-but-sleeping
+        // registered thread would stall the reclaimer's grace periods.
+        g.offline_while(|| std::thread::sleep(Duration::from_millis(500)));
+        let entries = map.len(&g);
+        let buckets = map.nbuckets(&g);
+        let load = entries as f64 / buckets as f64;
+        let action = if load > 16.0 {
+            next_seed += 1;
+            let nb = (entries / 4).next_power_of_two().max(1024);
+            map.rebuild(&g, nb, HashFn::Seeded(next_seed)).ok();
+            format!("grow -> {nb}")
+        } else if load < 2.0 && buckets > 1024 {
+            next_seed += 1;
+            let nb = (entries / 4).next_power_of_two().max(1024);
+            map.rebuild(&g, nb, HashFn::Seeded(next_seed)).ok();
+            format!("shrink -> {nb}")
+        } else {
+            "-".to_string()
+        };
+        println!(
+            "{:>5.1} {:>10} {:>9} {:>8.2} {:>9}",
+            t0.elapsed().as_secs_f64(),
+            entries,
+            buckets,
+            load,
+            action
+        );
+        g.quiescent_state();
+    }
+    stop.store(true, Ordering::Relaxed);
+    g.offline_while(|| traffic.join()).unwrap();
+    println!(
+        "final: {} entries in {} buckets after {} rebuilds",
+        map.len(&g),
+        map.nbuckets(&g),
+        map.rebuild_count()
+    );
+    println!("fragment_reassembly OK");
+    Ok(())
+}
+
+/// Pick an old fragment key to expire (uniform over the fragment range).
+fn map_key_to_age(rng: &mut SplitMix64, flows: u64, frag_seq: u64) -> u64 {
+    if frag_seq <= flows + 1 {
+        flows + 1
+    } else {
+        flows + 1 + rng.next_bounded(frag_seq - flows)
+    }
+}

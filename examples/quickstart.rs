@@ -1,0 +1,50 @@
+//! Quickstart: the DHash public API in ~50 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use dhash::dhash::{DHashMap, HashFn};
+use dhash::rcu::RcuThread;
+
+fn main() {
+    // Every thread that touches the table registers with RCU once and
+    // announces quiescent states between operations (QSBR).
+    let guard = RcuThread::register();
+
+    // A table with 1024 buckets using the seeded mix64 hash family.
+    let map = DHashMap::with_buckets(1024, 0xdead_beef);
+
+    // Plain concurrent-map operations.
+    for k in 0..10_000u64 {
+        map.insert(&guard, k, k * k).unwrap();
+    }
+    assert_eq!(map.lookup(&guard, 77), Some(77 * 77));
+    assert!(map.delete(&guard, 77));
+    assert_eq!(map.lookup(&guard, 77), None);
+    println!("inserted 10k keys, lookup/delete OK, len = {}", map.len(&guard));
+
+    // The paper's party trick: replace the hash function *on the fly*.
+    // Other threads could keep reading and writing while this runs.
+    let stats = map
+        .rebuild(&guard, 4096, HashFn::Seeded(0x1234_5678))
+        .expect("no concurrent rebuild");
+    println!("rebuild: {stats}");
+
+    // Everything is still there, now placed by the new function.
+    assert_eq!(map.lookup(&guard, 78), Some(78 * 78));
+    assert_eq!(map.len(&guard), 9_999);
+    assert_eq!(map.nbuckets(&guard), 4096);
+
+    // Load-factor diagnostics (what the coordinator's detector watches).
+    let loads = map.bucket_loads(&guard);
+    let max = loads.iter().max().unwrap();
+    println!(
+        "bucket loads after rebuild: max={} mean={:.2}",
+        max,
+        9_999.0 / 4096.0
+    );
+
+    guard.quiescent_state();
+    println!("quickstart OK");
+}

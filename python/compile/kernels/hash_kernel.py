@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: batched keyed hashing (the splitmix64 finalizer).
+
+This is the compute hot-spot of DHash's control plane: the coordinator
+hashes *batches* of sampled keys to estimate bucket-load skew (collision
+attacks) and to pre-route batched requests. The mix is bit-for-bit the
+same as Rust's ``util::rng::mix64`` (see the pinned-vector tests on both
+sides), so the AOT artifact and the Rust data path always agree on bucket
+placement.
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): keys stream HBM->VMEM in
+``BLOCK``-sized tiles via ``BlockSpec``; the mix is pure element-wise VPU
+work on (8,128)-aligned tiles. ``interpret=True`` everywhere — the CPU
+PJRT client cannot execute Mosaic custom-calls (see /opt/xla-example).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Keys per grid step. 1024 u64 keys = 8 KiB per tile: far under VMEM and a
+# multiple of the (8,128) lane layout once viewed as 8x128.
+BLOCK = 1024
+
+def mix64(z):
+    """splitmix64 finalizer (Stafford variant 13) on uint64 arrays.
+
+    The constants are materialized *inside* the traced function (Python
+    ints + cast) — module-level device arrays would be closure-captured
+    constants, which pallas_call rejects.
+    """
+    c1 = jnp.uint64(0x9E3779B97F4A7C15)
+    c2 = jnp.uint64(0xBF58476D1CE4E5B9)
+    c3 = jnp.uint64(0x94D049BB133111EB)
+    z = (z + c1).astype(jnp.uint64)
+    z = ((z ^ (z >> jnp.uint64(30))) * c2).astype(jnp.uint64)
+    z = ((z ^ (z >> jnp.uint64(27))) * c3).astype(jnp.uint64)
+    return z ^ (z >> jnp.uint64(31))
+
+
+def _hash_block_kernel(seed_ref, nbuckets_ref, kind_ref, keys_ref, out_ref):
+    """One BLOCK of keys -> int32 bucket ids.
+
+    kind == 0: weak modulo placement (``key % nbuckets``), the attackable
+    function the paper's motivation section describes.
+    kind == 1: seeded placement (``mix64(key ^ seed) % nbuckets``).
+    """
+    keys = keys_ref[...]
+    seed = seed_ref[0]
+    nbuckets = nbuckets_ref[0]
+    kind = kind_ref[0]
+    seeded = mix64(keys ^ seed) % nbuckets
+    weak = keys % nbuckets
+    ids = jnp.where(kind == jnp.uint64(0), weak, seeded)
+    out_ref[...] = ids.astype(jnp.int32)
+
+
+def batch_hash(keys, seed, nbuckets, kind):
+    """Bucket ids for a batch of keys (shape [B], B a multiple of BLOCK).
+
+    Args:
+      keys: uint64[B]
+      seed: uint64[1]
+      nbuckets: uint64[1]  (>= 1)
+      kind: uint64[1]      (0 = modulo, 1 = seeded)
+
+    Returns:
+      int32[B] bucket ids in [0, nbuckets).
+    """
+    (b,) = keys.shape
+    assert b % BLOCK == 0, f"batch {b} not a multiple of {BLOCK}"
+    grid = (b // BLOCK,)
+    return pl.pallas_call(
+        _hash_block_kernel,
+        grid=grid,
+        in_specs=[
+            # Scalars are broadcast to every grid step.
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            # Key stream: one BLOCK tile per step (HBM->VMEM schedule).
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(seed, nbuckets, kind, keys)

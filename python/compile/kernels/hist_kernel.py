@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: per-block bucket histogram via one-hot matmul.
+
+Histogramming is a scatter — hostile to SIMD/MXU hardware. The TPU-shaped
+formulation (DESIGN.md §Hardware-Adaptation) recasts it as a dense
+matmul: ``ones[1, BLOCK] @ one_hot(ids)[BLOCK, NBINS]``, which maps onto
+the MXU systolic array instead of serializing through scalar scatters.
+Each grid step emits a partial histogram for its block; the L2 graph sums
+the partials (a tiny [nblocks, NBINS] reduction XLA fuses away).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .hash_kernel import BLOCK
+
+# Detector granularity: table bucket ids are folded modulo NBINS. 256 bins
+# keeps the one-hot tile at BLOCK x 256 f32 = 1 MiB — comfortably in VMEM
+# alongside the id tile — while resolving single-bucket flood attacks.
+NBINS = 256
+
+
+def _hist_block_kernel(ids_ref, out_ref):
+    ids = ids_ref[...] % NBINS
+    # One-hot as f32 so the contraction is an MXU matmul (bf16/f32), then
+    # round-trip to i32 counts; BLOCK <= 2^24 so f32 sums are exact.
+    onehot = (ids[:, None] == jnp.arange(NBINS, dtype=jnp.int32)[None, :]).astype(jnp.float32)
+    partial = jnp.sum(onehot, axis=0)
+    out_ref[...] = partial.astype(jnp.int32)[None, :]
+
+
+def bucket_histogram(ids):
+    """Partial histograms of int32 bucket ids folded into NBINS bins.
+
+    Args:
+      ids: int32[B], B a multiple of BLOCK.
+
+    Returns:
+      int32[B // BLOCK, NBINS] per-block partial histograms.
+    """
+    (b,) = ids.shape
+    assert b % BLOCK == 0, f"batch {b} not a multiple of {BLOCK}"
+    nblocks = b // BLOCK
+    return pl.pallas_call(
+        _hist_block_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, NBINS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, NBINS), jnp.int32),
+        interpret=True,
+    )(ids)

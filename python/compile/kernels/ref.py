@@ -1,0 +1,48 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels (the build-time
+correctness signal: pytest asserts kernel == ref on every sweep)."""
+
+import numpy as np
+
+_MASK = (1 << 64) - 1
+
+
+def mix64_py(z: int) -> int:
+    """Reference splitmix64 finalizer on Python ints (exact)."""
+    z = (z + 0x9E3779B97F4A7C15) & _MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+    return z ^ (z >> 31)
+
+
+def batch_hash_ref(keys: np.ndarray, seed: int, nbuckets: int, kind: int) -> np.ndarray:
+    """Oracle for hash_kernel.batch_hash (Python-int exact arithmetic)."""
+    out = np.empty(keys.shape[0], dtype=np.int32)
+    for i, k in enumerate(keys.tolist()):
+        if kind == 0:
+            out[i] = k % nbuckets
+        else:
+            out[i] = mix64_py(k ^ seed) % nbuckets
+    return out
+
+
+def bucket_histogram_ref(ids: np.ndarray, nbins: int, block: int) -> np.ndarray:
+    """Oracle for hist_kernel.bucket_histogram (per-block partials)."""
+    b = ids.shape[0]
+    nblocks = b // block
+    out = np.zeros((nblocks, nbins), dtype=np.int32)
+    for blk in range(nblocks):
+        chunk = ids[blk * block : (blk + 1) * block] % nbins
+        out[blk] = np.bincount(chunk, minlength=nbins).astype(np.int32)
+    return out
+
+
+def detector_ref(keys: np.ndarray, seed: int, nbuckets: int, kind: int, nbins: int):
+    """Oracle for the full L2 detector graph.
+
+    Returns (chi2: float, max_load: int, hist: int32[nbins]).
+    """
+    ids = batch_hash_ref(keys, seed, nbuckets, kind)
+    hist = np.bincount(ids % nbins, minlength=nbins).astype(np.int32)
+    expected = keys.shape[0] / nbins
+    chi2 = float(((hist - expected) ** 2 / expected).sum())
+    return chi2, int(hist.max()), hist

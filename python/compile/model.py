@@ -1,0 +1,54 @@
+"""L2: the collision-analytics graphs, composed from the L1 Pallas
+kernels and lowered once by aot.py. Python never runs at serve time —
+the Rust coordinator executes the lowered HLO through PJRT.
+
+Two exported graphs:
+
+* ``batch_hash_fn``  — keys -> bucket ids (the batcher's pre-routing).
+* ``detector_fn``    — keys -> (chi2, max_load, hist): bucket-skew
+  statistics driving the rebuild controller. chi2 across NBINS detector
+  bins ~ chi-square(NBINS-1) under a uniform hash; the controller's
+  threshold comes from that distribution (see coordinator/detector.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hash_kernel import batch_hash
+from .kernels.hist_kernel import NBINS, bucket_histogram
+
+jax.config.update("jax_enable_x64", True)
+
+# Exported batch size: the coordinator pads/folds its key samples to this.
+BATCH = 4096
+
+
+def batch_hash_fn(keys, seed, nbuckets, kind):
+    """keys u64[BATCH], seed/nbuckets/kind u64[1] -> int32[BATCH]."""
+    return (batch_hash(keys, seed, nbuckets, kind),)
+
+
+def detector_fn(keys, seed, nbuckets, kind):
+    """Bucket-skew statistics for a key sample.
+
+    Returns (chi2 f32[], max_load i32[], hist i32[NBINS]).
+    """
+    ids = batch_hash(keys, seed, nbuckets, kind)
+    partials = bucket_histogram(ids)
+    hist = jnp.sum(partials, axis=0, dtype=jnp.int32)
+    expected = jnp.float32(keys.shape[0] / NBINS)
+    diff = hist.astype(jnp.float32) - expected
+    chi2 = jnp.sum(diff * diff) / expected
+    max_load = jnp.max(hist)
+    return chi2, max_load, hist
+
+
+def example_args(batch: int = BATCH):
+    """ShapeDtypeStructs for lowering."""
+    u64 = jnp.uint64
+    return (
+        jax.ShapeDtypeStruct((batch,), u64),
+        jax.ShapeDtypeStruct((1,), u64),
+        jax.ShapeDtypeStruct((1,), u64),
+        jax.ShapeDtypeStruct((1,), u64),
+    )

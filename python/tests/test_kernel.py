@@ -1,0 +1,173 @@
+"""Kernel-vs-oracle correctness: the CORE build-time signal.
+
+Covers: pinned mix64 vectors (Rust agreement), hash kernel vs exact
+Python-int oracle, histogram kernel vs numpy bincount, the composed
+detector graph, and hypothesis sweeps over shapes/values.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.hash_kernel import BLOCK, batch_hash, mix64
+from compile.kernels.hist_kernel import NBINS, bucket_histogram
+from compile.kernels import ref
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+# The same vectors pinned in rust/src/util/rng.rs — guarantees the Rust
+# data path and the Pallas kernel place keys identically.
+PINNED = [
+    (0x0, 0xE220A8397B1DCDAF),
+    (0x1, 0x910A2DEC89025CC1),
+    (0x2, 0x975835DE1C9756CE),
+    (0xDEADBEEF, 0x4ADFB90F68C9EB9B),
+    (0xFFFFFFFFFFFFFFFF, 0xE4D971771B652C20),
+]
+
+
+def u64(xs):
+    return jnp.asarray(xs, dtype=jnp.uint64)
+
+
+class TestMix64:
+    def test_pinned_vectors_jnp(self):
+        for x, want in PINNED:
+            got = int(mix64(u64([x]))[0])
+            assert got == want, f"mix64({x:#x}) = {got:#x}, want {want:#x}"
+
+    def test_pinned_vectors_py(self):
+        for x, want in PINNED:
+            assert ref.mix64_py(x) == want
+
+    @given(st.integers(min_value=0, max_value=(1 << 64) - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_jnp_matches_python_int_reference(self, x):
+        assert int(mix64(u64([x]))[0]) == ref.mix64_py(x)
+
+
+class TestBatchHashKernel:
+    @pytest.mark.parametrize("kind", [0, 1])
+    @pytest.mark.parametrize("nbuckets", [1, 2, 64, 1024, 10_000_019])
+    def test_matches_ref(self, kind, nbuckets):
+        rng = np.random.default_rng(42)
+        keys = rng.integers(0, 1 << 64, size=BLOCK, dtype=np.uint64)
+        seed = 0xFEEDFACE
+        got = np.asarray(batch_hash(u64(keys), u64([seed]), u64([nbuckets]), u64([kind])))
+        want = ref.batch_hash_ref(keys, seed, nbuckets, kind)
+        np.testing.assert_array_equal(got, want)
+        assert got.max() < nbuckets
+
+    def test_multi_block_grid(self):
+        rng = np.random.default_rng(7)
+        b = 4 * BLOCK
+        keys = rng.integers(0, 1 << 64, size=b, dtype=np.uint64)
+        got = np.asarray(batch_hash(u64(keys), u64([1]), u64([97]), u64([1])))
+        want = ref.batch_hash_ref(keys, 1, 97, 1)
+        np.testing.assert_array_equal(got, want)
+
+    def test_modulo_kind_is_attackable(self):
+        nb = 64
+        keys = np.arange(5, 5 + 64 * BLOCK, 64, dtype=np.uint64)[:BLOCK]
+        ids = np.asarray(batch_hash(u64(keys), u64([0]), u64([nb]), u64([0])))
+        assert (ids == 5).all()
+
+    def test_seeded_kind_spreads_attack_keys(self):
+        nb = 64
+        keys = np.arange(5, 5 + 64 * BLOCK, 64, dtype=np.uint64)[:BLOCK]
+        ids = np.asarray(batch_hash(u64(keys), u64([9]), u64([nb]), u64([1])))
+        counts = np.bincount(ids, minlength=nb)
+        assert counts.max() < BLOCK // 8  # spread out, no flood bucket
+
+    @given(
+        nblocks=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=(1 << 64) - 1),
+        nbuckets=st.integers(min_value=1, max_value=(1 << 31) - 1),  # int32 id range
+        kind=st.integers(min_value=0, max_value=1),
+        data_seed=st.integers(min_value=0, max_value=2**31),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_hypothesis_sweep(self, nblocks, seed, nbuckets, kind, data_seed):
+        rng = np.random.default_rng(data_seed)
+        keys = rng.integers(0, 1 << 64, size=nblocks * BLOCK, dtype=np.uint64)
+        got = np.asarray(batch_hash(u64(keys), u64([seed]), u64([nbuckets]), u64([kind])))
+        want = ref.batch_hash_ref(keys, seed, nbuckets, kind)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestHistogramKernel:
+    def test_matches_ref_uniform(self):
+        rng = np.random.default_rng(3)
+        ids = rng.integers(0, 4096, size=2 * BLOCK, dtype=np.int32)
+        got = np.asarray(bucket_histogram(jnp.asarray(ids)))
+        want = ref.bucket_histogram_ref(ids, NBINS, BLOCK)
+        np.testing.assert_array_equal(got, want)
+        assert got.sum() == 2 * BLOCK
+
+    def test_flood_concentrates(self):
+        ids = np.full(BLOCK, 37, dtype=np.int32)
+        got = np.asarray(bucket_histogram(jnp.asarray(ids)))
+        assert got[0, 37] == BLOCK
+        assert got.sum() == BLOCK
+
+    @given(
+        nblocks=st.integers(min_value=1, max_value=3),
+        hi=st.integers(min_value=1, max_value=1 << 20),
+        data_seed=st.integers(min_value=0, max_value=2**31),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_hypothesis_sweep(self, nblocks, hi, data_seed):
+        rng = np.random.default_rng(data_seed)
+        ids = rng.integers(0, hi, size=nblocks * BLOCK, dtype=np.int32)
+        got = np.asarray(bucket_histogram(jnp.asarray(ids)))
+        want = ref.bucket_histogram_ref(ids, NBINS, BLOCK)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestDetectorGraph:
+    def run_detector(self, keys, seed, nbuckets, kind):
+        chi2, max_load, hist = jax.jit(model.detector_fn)(
+            u64(keys), u64([seed]), u64([nbuckets]), u64([kind])
+        )
+        return float(chi2), int(max_load), np.asarray(hist)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(11)
+        keys = rng.integers(0, 1 << 64, size=model.BATCH, dtype=np.uint64)
+        got = self.run_detector(keys, 5, 1024, 1)
+        want = ref.detector_ref(keys, 5, 1024, 1, NBINS)
+        assert got[1] == want[1]
+        np.testing.assert_array_equal(got[2], want[2])
+        np.testing.assert_allclose(got[0], want[0], rtol=1e-5)
+
+    def test_uniform_low_chi2_attack_high_chi2(self):
+        rng = np.random.default_rng(12)
+        uniform = rng.integers(0, 1 << 64, size=model.BATCH, dtype=np.uint64)
+        chi2_u, _, _ = self.run_detector(uniform, 1, 4096, 1)
+        # Under H0, E[chi2] = NBINS - 1 = 255; 2x that is a generous bound.
+        assert chi2_u < 2 * (NBINS - 1), f"uniform chi2 {chi2_u}"
+        # Attack: all keys in one bucket under modulo hashing.
+        attack = np.arange(3, 3 + 4096 * model.BATCH, 4096, dtype=np.uint64)[: model.BATCH]
+        chi2_a, max_a, _ = self.run_detector(attack, 1, 4096, 0)
+        assert chi2_a > 100 * (NBINS - 1), f"attack chi2 {chi2_a}"
+        assert max_a == model.BATCH
+
+    def test_detector_batch_is_block_multiple(self):
+        assert model.BATCH % BLOCK == 0
+
+
+class TestAotLowering:
+    def test_hlo_text_exports(self, tmp_path):
+        from compile.aot import to_hlo_text
+
+        ex = model.example_args()
+        for fn in (model.batch_hash_fn, model.detector_fn):
+            text = to_hlo_text(fn, ex)
+            assert "HloModule" in text
+            assert len(text) > 1000

@@ -1,0 +1,227 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   buckets   — DHash over MichaelList vs SpinlockList vs CowSortedArray
+//!               (paper goal 2: the progress/performance trade-off).
+//!   hazard    — lookups with vs without the `rebuild_cur` check: the
+//!               no-check variant exhibits false negatives under rebuild
+//!               (why Lemma 4.1's ordering exists) and the check costs
+//!               nothing when no rebuild runs.
+//!   distrib   — head-node distribution (DHash) vs tail-node (HT-RHT):
+//!               rebuild node throughput (explains Figure 3).
+//!   batchhash — coordinator batcher with/without AOT batch pre-hashing
+//!               (skipped gracefully when artifacts are absent).
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{full_mode, make_table, measure_window, repeats};
+use dhash::baselines::ConcurrentMap;
+use dhash::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use dhash::dhash::{DHashMap, HashFn};
+use dhash::lflist::{CowSortedArray, MichaelList, SpinlockList};
+use dhash::rcu::{rcu_barrier, RcuThread};
+use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
+use dhash::util::{SplitMix64, Summary};
+
+fn bucket_cfg(threads: usize, alpha: usize) -> TortureConfig {
+    TortureConfig {
+        threads,
+        mix: OpMix::lookup_pct(90),
+        alpha,
+        nbuckets: 512,
+        key_range: 500_000,
+        duration: measure_window(),
+        rebuild: RebuildMode::Continuous { alt_nbuckets: 1024 },
+        pin: true,
+        seed: 11,
+        hash_seed: 5,
+    }
+}
+
+fn bench_buckets() {
+    println!("# ablation buckets: DHash bucket-set algorithms, 90% lookups");
+    let threads = if full_mode() { vec![1, 4, 16] } else { vec![2] };
+    let alphas = if full_mode() { vec![20usize, 200] } else { vec![20] };
+    for alpha in alphas {
+        for &t in &threads {
+            let variants: Vec<(&str, Arc<dyn ConcurrentMap>)> = vec![
+                ("michael", Arc::new(DHashMap::<MichaelList>::with_hash(512, HashFn::Seeded(5)))),
+                ("spinlock", Arc::new(DHashMap::<SpinlockList>::with_hash(512, HashFn::Seeded(5)))),
+                ("cow", Arc::new(DHashMap::<CowSortedArray>::with_hash(512, HashFn::Seeded(5)))),
+            ];
+            for (name, map) in variants {
+                let cfg = bucket_cfg(t, alpha);
+                let samples = torture::measure_mops(map, &cfg, repeats());
+                let s = Summary::of(&samples);
+                println!(
+                    "buckets variant={name:<9} alpha={alpha:<4} threads={t:<3} \
+                     mops_mean={:<8.3} mops_stddev={:.3}",
+                    s.mean, s.stddev
+                );
+            }
+        }
+    }
+}
+
+fn bench_hazard() {
+    println!("# ablation hazard: lookup false negatives without the rebuild_cur check");
+    let map = Arc::new(DHashMap::<MichaelList>::with_hash(64, HashFn::Seeded(3)));
+    let nkeys = 20_000u64;
+    {
+        let g = RcuThread::register();
+        for k in 0..nkeys {
+            map.insert(&g, k, k).unwrap();
+        }
+        g.quiescent_state();
+    }
+    for skip_check in [false, true] {
+        let stop = Arc::new(AtomicBool::new(false));
+        let misses = Arc::new(AtomicU64::new(0));
+        let lookups = Arc::new(AtomicU64::new(0));
+        let mut readers = Vec::new();
+        for r in 0..2u64 {
+            let map = map.clone();
+            let stop = stop.clone();
+            let misses = misses.clone();
+            let lookups = lookups.clone();
+            readers.push(std::thread::spawn(move || {
+                let g = RcuThread::register();
+                let mut rng = SplitMix64::new(r + 1);
+                while !stop.load(Ordering::Relaxed) {
+                    let k = rng.next_bounded(nkeys);
+                    let hit = if skip_check {
+                        map.lookup_skip_hazard_check(&g, k).is_some()
+                    } else {
+                        map.lookup(&g, k).is_some()
+                    };
+                    if !hit {
+                        misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    lookups.fetch_add(1, Ordering::Relaxed);
+                    g.quiescent_state();
+                }
+                g.offline();
+            }));
+        }
+        {
+            let g = RcuThread::register();
+            let rounds = if full_mode() { 12 } else { 4 };
+            for i in 0..rounds {
+                map.rebuild(&g, if i % 2 == 0 { 128 } else { 64 }, HashFn::Seeded(50 + i))
+                    .unwrap();
+            }
+            g.quiescent_state();
+        }
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            r.join().unwrap();
+        }
+        let m = misses.load(Ordering::Relaxed);
+        let l = lookups.load(Ordering::Relaxed).max(1);
+        println!(
+            "hazard check={} lookups={l} false_negatives={m} rate={:.3e}",
+            if skip_check { "OFF" } else { "ON " },
+            m as f64 / l as f64
+        );
+    }
+    rcu_barrier();
+}
+
+fn bench_distrib() {
+    println!("# ablation distrib: rebuild node-throughput, head (DHash) vs tail (HT-RHT)");
+    let nodes: u64 = if full_mode() { 200_000 } else { 40_000 };
+    for table in ["dhash", "rht", "xu", "split"] {
+        let samples: Vec<f64> = (0..repeats())
+            .map(|_| {
+                let map = make_table(table, 1024, 1);
+                let g = RcuThread::register();
+                for k in 0..nodes {
+                    map.insert(&g, k, k);
+                }
+                let t0 = Instant::now();
+                map.rebuild(&g, 2048, HashFn::Seeded(2));
+                let dt = t0.elapsed().as_secs_f64();
+                g.quiescent_state();
+                rcu_barrier();
+                nodes as f64 / dt / 1e6 // Mnodes/s
+            })
+            .collect();
+        let s = Summary::of(&samples);
+        println!(
+            "distrib table={table:<8} nodes={nodes} mnodes_per_s_mean={:<8.3} stddev={:.3}",
+            s.mean, s.stddev
+        );
+    }
+}
+
+fn bench_batchhash() {
+    println!("# ablation batchhash: coordinator throughput with/without AOT pre-hashing");
+    if !dhash::runtime::Engine::default_dir().join("manifest.json").exists() {
+        println!("batchhash SKIPPED (run `make artifacts` first)");
+        return;
+    }
+    for pre_hash in [false, true] {
+        let cfg = CoordinatorConfig {
+            nbuckets: 4096,
+            hash: HashFn::Seeded(9),
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(200),
+                pre_hash,
+            },
+            enable_analytics: true,
+            ..Default::default()
+        };
+        let c = Arc::new(Coordinator::start(cfg).expect("artifacts present"));
+        let stop = Arc::new(AtomicBool::new(false));
+        let done = Arc::new(AtomicU64::new(0));
+        let mut clients = Vec::new();
+        for t in 0..2u64 {
+            let c2 = c.clone();
+            let s2 = stop.clone();
+            let d2 = done.clone();
+            clients.push(std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(t);
+                while !s2.load(Ordering::Relaxed) {
+                    let reqs: Vec<Request> = (0..64)
+                        .map(|_| {
+                            let k = rng.next_bounded(1_000_000);
+                            if rng.next_f64() < 0.9 {
+                                Request::get(k)
+                            } else {
+                                Request::put(k, k)
+                            }
+                        })
+                        .collect();
+                    let n = reqs.len() as u64;
+                    c2.execute_many(reqs);
+                    d2.fetch_add(n, Ordering::Relaxed);
+                }
+            }));
+        }
+        let window = measure_window().max(Duration::from_millis(500));
+        std::thread::sleep(window);
+        stop.store(true, Ordering::Relaxed);
+        for cl in clients {
+            cl.join().unwrap();
+        }
+        let reqs = done.load(Ordering::Relaxed);
+        println!(
+            "batchhash pre_hash={pre_hash:<5} req_per_s={:.0}",
+            reqs as f64 / window.as_secs_f64()
+        );
+        c.shutdown();
+    }
+}
+
+fn main() {
+    common::print_host_table1();
+    bench_buckets();
+    bench_hazard();
+    bench_distrib();
+    bench_batchhash();
+}

@@ -1,0 +1,95 @@
+//! Shared bench-harness plumbing: quick/full sweeps, table construction,
+//! and row printing. Used by every `[[bench]]` target.
+#![allow(dead_code)] // shared across several bench targets; each uses a subset
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
+use dhash::dhash::{DHashMap, HashFn};
+use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
+use dhash::util::Summary;
+
+/// Full paper-scale sweeps when `DHASH_BENCH_FULL=1`; CI-speed otherwise.
+pub fn full_mode() -> bool {
+    std::env::var("DHASH_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--full")
+}
+
+pub fn measure_window() -> Duration {
+    if full_mode() {
+        Duration::from_millis(2000)
+    } else {
+        Duration::from_millis(300)
+    }
+}
+
+pub fn repeats() -> usize {
+    if full_mode() {
+        5
+    } else {
+        2
+    }
+}
+
+/// Worker-thread sweep (paper x-axis: up to 2x oversubscription of a
+/// 24-core Ivy Bridge; this host is documented in the Table-1 header).
+pub fn thread_sweep() -> Vec<usize> {
+    if full_mode() {
+        vec![1, 2, 4, 8, 16, 24, 32, 48]
+    } else {
+        vec![1, 2, 4]
+    }
+}
+
+pub const TABLES: [&str; 4] = ["dhash", "xu", "rht", "split"];
+
+pub fn make_table(name: &str, nbuckets: usize, hash_seed: u64) -> Arc<dyn ConcurrentMap> {
+    match name {
+        "dhash" => Arc::new(DHashMap::with_buckets(nbuckets, hash_seed)),
+        "xu" => Arc::new(HtXu::new(nbuckets, HashFn::Seeded(hash_seed))),
+        "rht" => Arc::new(HtRht::new(nbuckets, HashFn::Seeded(hash_seed))),
+        "split" => Arc::new(HtSplit::new(nbuckets, 1 << 20)),
+        _ => unreachable!("unknown table {name}"),
+    }
+}
+
+/// One Figure-2-style cell: throughput of `table` under the §6.2
+/// continuous-rebuild protocol.
+pub fn fig2_cell(table: &str, threads: usize, lookup_pct: u8, alpha: usize) -> Summary {
+    let nbuckets = 1024;
+    let cfg = TortureConfig {
+        threads,
+        mix: OpMix::lookup_pct(lookup_pct),
+        alpha,
+        nbuckets,
+        // 0 = auto U = 2·α·β: keeps the population stationary at α·β so
+        // the load factor stays what the panel says (see torture docs).
+        key_range: 0,
+        duration: measure_window(),
+        rebuild: RebuildMode::Continuous { alt_nbuckets: nbuckets * 2 },
+        pin: true,
+        seed: 0xd1e5_5eed,
+        hash_seed: 0x5eed,
+    };
+    let map = make_table(table, cfg.nbuckets, cfg.hash_seed);
+    let samples = torture::measure_mops(map, &cfg, repeats());
+    Summary::of(&samples)
+}
+
+/// Print one figure row in a stable machine-parseable format.
+pub fn row(fig: &str, table: &str, x: impl std::fmt::Display, s: &Summary) {
+    println!(
+        "{fig} table={table:<8} x={x:<6} mops_mean={:<8.3} mops_stddev={:.3}",
+        s.mean, s.stddev
+    );
+}
+
+/// Host characteristics, printed as the Table-1 substitute.
+pub fn print_host_table1() {
+    let cores = dhash::util::affinity::ncpus();
+    println!("# Table 1 (this testbed; paper used Ivy Bridge / POWER9 / ARMv8):");
+    println!("#   arch=x86_64 cores={cores} (container) rustc=release");
+    println!("#   NOTE single-core host: thread sweeps measure oversubscription");
+    println!("#   behaviour (lock contention vs lock-freedom), not parallel speedup.");
+}

@@ -1,0 +1,60 @@
+//! Figure 2 regenerator: overall throughput of the four hash tables under
+//! the continuous-rebuild protocol (§6.2), across worker-thread counts.
+//!
+//! Panels:
+//!   fig2a  90% lookup, α=20      fig2b  80% lookup, α=20
+//!   fig2c  90% lookup, α=50      fig2d  80% lookup, α=50
+//!   fig2e  90% lookup, α=200     fig2f  80% lookup, α=200
+//!
+//! Also prints the paper's headline ratios (§1/§6.2): DHash vs each
+//! baseline at the highest thread count, for α=20 and α=200.
+//!
+//! Quick sweep by default; `DHASH_BENCH_FULL=1 cargo bench --bench fig2`
+//! (or `-- --full`) for the paper-scale sweep.
+
+mod common;
+
+use common::{fig2_cell, print_host_table1, row, thread_sweep, TABLES};
+use std::collections::HashMap;
+
+fn main() {
+    print_host_table1();
+    let panels = [
+        ("fig2a", 90u8, 20usize),
+        ("fig2b", 80, 20),
+        ("fig2c", 90, 50),
+        ("fig2d", 80, 50),
+        ("fig2e", 90, 200),
+        ("fig2f", 80, 200),
+    ];
+    let threads = thread_sweep();
+    let tmax = *threads.last().unwrap();
+    // (panel, table) -> mops at max threads, for the headline ratios.
+    let mut at_max: HashMap<(&str, &str), f64> = HashMap::new();
+
+    for (fig, lookup, alpha) in panels {
+        println!("# {fig}: {lookup}% lookup, load factor {alpha}");
+        for table in TABLES {
+            for &t in &threads {
+                let s = fig2_cell(table, t, lookup, alpha);
+                row(fig, table, t, &s);
+                if t == tmax {
+                    at_max.insert((fig, table), s.mean);
+                }
+            }
+        }
+    }
+
+    println!("# headline ratios (DHash / baseline at {tmax} threads):");
+    for (fig, alpha) in [("fig2a", 20), ("fig2b", 20), ("fig2e", 200), ("fig2f", 200)] {
+        let d = at_max[&(fig, "dhash")];
+        let r = |b: &str| d / at_max[&(fig, b)].max(1e-9);
+        println!(
+            "{fig} alpha={alpha}: DHash/Split={:.2}x DHash/Xu={:.2}x DHash/RHT={:.2}x \
+             (paper: 1.4-2.0x at alpha=20; 2.3-6.2x at alpha=200)",
+            r("split"),
+            r("xu"),
+            r("rht")
+        );
+    }
+}

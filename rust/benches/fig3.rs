@@ -1,0 +1,96 @@
+//! Figure 3 regenerator: rebuilding efficiency — wall time of one rebuild
+//! as a function of the number of nodes, with one concurrent worker
+//! (paper §6.3: 90% lookups in fig3a, 80% in fig3b; y-axis log scale).
+//!
+//! Expected shape (paper observations, checked in EXPERIMENTS.md):
+//!   * HT-Split lowest and flat (resize touches only the bucket array),
+//!   * HT-Xu next (single traversal thanks to its two pointer sets),
+//!   * DHash linear in n, clearly faster than HT-RHT,
+//!   * HT-RHT slowest (tail distribution re-traverses chains).
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use common::{full_mode, make_table, print_host_table1, repeats};
+use dhash::dhash::HashFn;
+use dhash::rcu::{rcu_barrier, RcuThread};
+use dhash::torture::OpMix;
+use dhash::util::{SplitMix64, Summary};
+
+/// Time one rebuild of `table` holding `nodes` keys while one worker
+/// performs the `lookup_pct` mix (the paper's measurement protocol).
+fn rebuild_time(table: &str, nodes: u64, lookup_pct: u8) -> f64 {
+    // 128 buckets keeps chains long (the paper's high-load regime) even
+    // at quick-mode node counts, so HT-RHT's per-node tail traversal
+    // (quadratic per chain) is visible without the full 10^6-node sweep.
+    let nbuckets = 128;
+    let map = make_table(table, nbuckets, 1);
+    {
+        let g = RcuThread::register();
+        for k in 0..nodes {
+            map.insert(&g, k * 2, k); // even keys: worker uses odd too
+        }
+        g.quiescent_state();
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let worker = {
+        let map = map.clone();
+        let stop = stop.clone();
+        let mix = OpMix::lookup_pct(lookup_pct);
+        std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let mut rng = SplitMix64::new(7);
+            while !stop.load(Ordering::Relaxed) {
+                let k = rng.next_bounded(nodes * 2);
+                match mix.pick(&mut rng) {
+                    dhash::torture::workload::Op::Lookup => {
+                        std::hint::black_box(map.lookup(&g, k));
+                    }
+                    dhash::torture::workload::Op::Insert => {
+                        std::hint::black_box(map.insert(&g, k, k));
+                    }
+                    dhash::torture::workload::Op::Delete => {
+                        std::hint::black_box(map.delete(&g, k));
+                    }
+                }
+                g.quiescent_state();
+            }
+            g.offline();
+        })
+    };
+    let g = RcuThread::register();
+    let t0 = Instant::now();
+    assert!(map.rebuild(&g, nbuckets * 2, HashFn::Seeded(9)));
+    let dt = t0.elapsed().as_secs_f64() * 1e3; // ms
+    stop.store(true, Ordering::Relaxed);
+    worker.join().unwrap();
+    g.quiescent_state();
+    rcu_barrier();
+    dt
+}
+
+fn main() {
+    print_host_table1();
+    let node_counts: Vec<u64> = if full_mode() {
+        vec![10_000, 31_600, 100_000, 316_000, 1_000_000]
+    } else {
+        vec![5_000, 20_000, 80_000]
+    };
+    for (fig, lookup) in [("fig3a", 90u8), ("fig3b", 80u8)] {
+        println!("# {fig}: rebuild time (ms) vs nodes, {lookup}% lookup worker");
+        for table in common::TABLES {
+            for &n in &node_counts {
+                let samples: Vec<f64> =
+                    (0..repeats()).map(|_| rebuild_time(table, n, lookup)).collect();
+                let s = Summary::of(&samples);
+                println!(
+                    "{fig} table={table:<8} nodes={n:<8} ms_mean={:<10.3} ms_stddev={:.3}",
+                    s.mean, s.stddev
+                );
+            }
+        }
+    }
+}

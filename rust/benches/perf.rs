@@ -1,0 +1,158 @@
+//! §Perf probes: microbenchmarks for every hot path, used to drive the
+//! optimization pass (EXPERIMENTS.md §Perf records before/after rows).
+//!
+//! Rows:
+//!   lookup_hit / lookup_miss   — single-thread lookup ns/op at α=20
+//!   insert_delete              — paired update ns/op
+//!   quiescent_state            — QSBR announcement ns/op
+//!   read_lock                  — read-side guard ns/op (should be ~0)
+//!   synchronize_rcu            — grace-period latency µs (2 live readers)
+//!   rebuild_rate               — rebuild node throughput Mnodes/s
+//!   detector_batch             — PJRT detector ms / 4096-key batch
+//!   batch_hash                 — PJRT pre-hash ms / 4096-key batch
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use dhash::dhash::{DHashMap, HashFn};
+use dhash::rcu::{rcu_barrier, synchronize_rcu, RcuThread};
+use dhash::runtime::{Engine, HashKind};
+use dhash::util::SplitMix64;
+
+fn ns_per_op(iters: u64, f: impl FnOnce()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() {
+    common::print_host_table1();
+    let iters: u64 = if common::full_mode() { 3_000_000 } else { 600_000 };
+
+    // Table at α = 20: 1024 buckets, 20480 keys.
+    let g = RcuThread::register();
+    let map = DHashMap::with_buckets(1024, 0x5eed);
+    let nkeys = 20_480u64;
+    for k in 0..nkeys {
+        map.insert(&g, k, k).unwrap();
+    }
+
+    let mut rng = SplitMix64::new(1);
+    let ns = ns_per_op(iters, || {
+        for _ in 0..iters {
+            let k = rng.next_bounded(nkeys);
+            std::hint::black_box(map.lookup(&g, k));
+        }
+    });
+    println!("perf lookup_hit ns_per_op={ns:.1} mops={:.2}", 1e3 / ns);
+
+    let mut rng = SplitMix64::new(2);
+    let ns = ns_per_op(iters, || {
+        for _ in 0..iters {
+            let k = nkeys + rng.next_bounded(nkeys);
+            std::hint::black_box(map.lookup(&g, k));
+        }
+    });
+    println!("perf lookup_miss ns_per_op={ns:.1} mops={:.2}", 1e3 / ns);
+
+    let upd_iters = iters / 4;
+    let mut rng = SplitMix64::new(3);
+    let ns = ns_per_op(upd_iters * 2, || {
+        for _ in 0..upd_iters {
+            let k = nkeys + 1 + rng.next_bounded(nkeys);
+            std::hint::black_box(map.insert(&g, k, k).is_ok());
+            std::hint::black_box(map.delete(&g, k));
+        }
+    });
+    println!("perf insert_delete ns_per_op={ns:.1} mops={:.2}", 1e3 / ns);
+
+    let ns = ns_per_op(iters, || {
+        for _ in 0..iters {
+            g.quiescent_state();
+        }
+    });
+    println!("perf quiescent_state ns_per_op={ns:.2}");
+
+    let ns = ns_per_op(iters, || {
+        for _ in 0..iters {
+            let guard = g.read_lock();
+            std::hint::black_box(&guard);
+        }
+    });
+    println!("perf read_lock ns_per_op={ns:.2}");
+
+    // Grace-period latency with two actively-quiescing readers.
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for _ in 0..2 {
+            let stop = stop.clone();
+            readers.push(std::thread::spawn(move || {
+                let t = RcuThread::register();
+                while !stop.load(Ordering::Relaxed) {
+                    t.quiescent_state();
+                    std::hint::spin_loop();
+                }
+                t.offline();
+            }));
+        }
+        let rounds = if common::full_mode() { 2000 } else { 400 };
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            synchronize_rcu();
+        }
+        let us = t0.elapsed().as_micros() as f64 / rounds as f64;
+        stop.store(true, Ordering::Relaxed);
+        for r in readers {
+            r.join().unwrap();
+        }
+        println!("perf synchronize_rcu us_per_gp={us:.2} (2 live readers)");
+    }
+
+    // Rebuild throughput (no concurrent workers: pure migration rate).
+    {
+        let n = if common::full_mode() { 400_000u64 } else { 100_000 };
+        let m2 = DHashMap::with_buckets(1024, 1);
+        for k in 0..n {
+            m2.insert(&g, k, k).unwrap();
+        }
+        let t0 = Instant::now();
+        m2.rebuild(&g, 2048, HashFn::Seeded(2)).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "perf rebuild_rate mnodes_per_s={:.3} ({n} nodes in {:.1} ms)",
+            n as f64 / dt / 1e6,
+            dt * 1e3
+        );
+    }
+
+    // PJRT artifact latencies (control-path budget: must stay ~ms).
+    if Engine::default_dir().join("manifest.json").exists() {
+        let engine = Engine::load(&Engine::default_dir()).unwrap();
+        let keys: Vec<u64> = (0..engine.batch as u64).collect();
+        // Warm up compilation caches.
+        engine.detect(&keys, 1, 4096, HashKind::Seeded).unwrap();
+        engine.batch_hash(&keys, 1, 4096, HashKind::Seeded).unwrap();
+        let rounds = if common::full_mode() { 200 } else { 50 };
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            std::hint::black_box(engine.detect(&keys, 1, 4096, HashKind::Seeded).unwrap());
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
+        println!("perf detector_batch ms_per_batch={ms:.3} (batch={})", engine.batch);
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            std::hint::black_box(engine.batch_hash(&keys, 1, 4096, HashKind::Seeded).unwrap());
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
+        println!("perf batch_hash ms_per_batch={ms:.3} (batch={})", engine.batch);
+    } else {
+        println!("perf detector_batch SKIPPED (no artifacts)");
+    }
+
+    g.quiescent_state();
+    rcu_barrier();
+}

@@ -1,0 +1,87 @@
+//! The comparison hash tables from the paper's evaluation (§6.1), built
+//! from scratch:
+//!
+//! * [`HtXu`] — Herbert Xu's dynamic hash table (Linux kernel, 2010):
+//!   **two sets of next pointers** per node, per-bucket locks for updates,
+//!   single-traversal rebuild that re-links every node through the spare
+//!   pointer set and swaps sets at the end.
+//! * [`HtRht`] — Thomas Graf's `rhashtable` (Linux kernel, 2014): single
+//!   pointer set, per-bucket locks, **unordered** chains, rebuild
+//!   distributes the **tail** node of each chain (so lookups may be
+//!   redirected into the new table and must tolerate it).
+//! * [`HtSplit`] — Shalev & Shavit's split-ordered list (2006): one
+//!   lock-free list in bit-reversed key order, dummy nodes per bucket,
+//!   resizable only (buckets double/halve; the hash function is fixed
+//!   `key mod 2^i`).
+//!
+//! All four tables (the three above plus `DHashMap`) implement
+//! [`ConcurrentMap`], the object-safe trait the torture framework and the
+//! benches drive.
+
+pub mod rht;
+pub mod split;
+pub mod xu;
+
+pub use rht::HtRht;
+pub use split::HtSplit;
+pub use xu::HtXu;
+
+use crate::dhash::{DHashMap, HashFn};
+use crate::lflist::BucketSet;
+use crate::rcu::RcuThread;
+
+/// Object-safe facade over the four evaluated hash tables.
+pub trait ConcurrentMap: Send + Sync + 'static {
+    /// Display name used in bench output (`HT-DHash`, `HT-Xu`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Value for `key`, if present.
+    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64>;
+
+    /// Insert; false if the key already exists.
+    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool;
+
+    /// Delete; false if absent.
+    fn delete(&self, guard: &RcuThread, key: u64) -> bool;
+
+    /// Dynamically change the table geometry / hash function.
+    ///
+    /// For the two dynamic tables this installs `hash`; for the resizable
+    /// `HtSplit`, `hash` is ignored (the paper's §6.2 protocol degrades
+    /// everyone to resizing for comparability anyway) and only the power-
+    /// of-two bucket count applies. Returns false if another rebuild is in
+    /// flight.
+    fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool;
+
+    /// Live entries (O(n), diagnostic).
+    fn len(&self, guard: &RcuThread) -> usize;
+}
+
+impl<B: BucketSet> ConcurrentMap for DHashMap<B> {
+    fn name(&self) -> &'static str {
+        "HT-DHash"
+    }
+
+    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        DHashMap::lookup(self, guard, key)
+    }
+
+    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        DHashMap::insert(self, guard, key, val).is_ok()
+    }
+
+    fn delete(&self, guard: &RcuThread, key: u64) -> bool {
+        DHashMap::delete(self, guard, key)
+    }
+
+    fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
+        DHashMap::rebuild(self, guard, nbuckets, hash).is_ok()
+    }
+
+    fn len(&self, guard: &RcuThread) -> usize {
+        DHashMap::len(self, guard)
+    }
+}
+
+#[cfg(test)]
+mod conformance;

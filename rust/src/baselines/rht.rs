@@ -1,0 +1,405 @@
+//! HT-RHT: the Linux kernel's generic resizable/dynamic hash table
+//! (`rhashtable`, Thomas Graf 2014, commit `7e1e77636e36`), user-space
+//! form per the paper's §6.1 (Nested/Listed-table features omitted).
+//!
+//! One next pointer per node, **unordered** per-bucket chains, per-bucket
+//! spinlocks for updates. A rebuild repeatedly takes a non-empty old
+//! bucket and distributes its **tail** node: the node is first spliced
+//! into the head of its new-table chain — which momentarily makes the old
+//! chain *flow into* the new one — and then removed from the old chain.
+//! Lock-free lookups tolerate being redirected into new-table nodes (the
+//! key comparison filters them) and fall back to the new table on a miss.
+//!
+//! The paper's critique (§2), reproduced by `bench fig3`: the rebuild
+//! re-traverses the chain for every node (tail distribution is O(n²) per
+//! bucket), bucket locks serialize updates, and unordered chains make
+//! misses pay full-chain traversals.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::ConcurrentMap;
+use crate::dhash::HashFn;
+use crate::lflist::spinlock_list::SpinLock;
+use crate::rcu::{call_rcu, synchronize_rcu, RcuThread};
+
+struct RhtNode {
+    key: u64,
+    val: AtomicU64,
+    next: AtomicUsize,
+}
+
+struct SendRht(*mut RhtNode);
+// SAFETY: reclaimer-only access after a grace period.
+unsafe impl Send for SendRht {}
+
+unsafe fn defer_free_rht(p: *mut RhtNode) {
+    let w = SendRht(p);
+    call_rcu(move || {
+        let w = w;
+        // SAFETY: grace period elapsed.
+        unsafe { drop(Box::from_raw(w.0)) };
+    });
+}
+
+struct RhtBucket {
+    lock: SpinLock,
+    head: AtomicUsize,
+}
+
+struct RhtTab {
+    nbuckets: usize,
+    hash: HashFn,
+    buckets: Box<[RhtBucket]>,
+    ht_new: AtomicPtr<RhtTab>,
+}
+
+impl RhtTab {
+    fn alloc(nbuckets: usize, hash: HashFn) -> *mut RhtTab {
+        assert!(nbuckets > 0);
+        let buckets: Box<[RhtBucket]> = (0..nbuckets)
+            .map(|_| RhtBucket {
+                lock: SpinLock::new(),
+                head: AtomicUsize::new(0),
+            })
+            .collect();
+        Box::into_raw(Box::new(RhtTab {
+            nbuckets,
+            hash,
+            buckets,
+            ht_new: AtomicPtr::new(std::ptr::null_mut()),
+        }))
+    }
+
+    #[inline]
+    fn bucket(&self, key: u64) -> &RhtBucket {
+        &self.buckets[self.hash.bucket(key, self.nbuckets)]
+    }
+
+    /// Lock-free unordered search. May walk across the splice point into
+    /// new-table nodes during a rebuild; harmless (keys filter) and
+    /// bounded (the walk ends at the chain's NULL).
+    fn find(&self, key: u64) -> Option<*mut RhtNode> {
+        let mut cur = self.bucket(key).head.load(Ordering::SeqCst) as *mut RhtNode;
+        while !cur.is_null() {
+            // SAFETY: RCU-live.
+            unsafe {
+                if (*cur).key == key {
+                    return Some(cur);
+                }
+                cur = (*cur).next.load(Ordering::SeqCst) as *mut RhtNode;
+            }
+        }
+        None
+    }
+
+    /// Unlink `key` from this bucket's chain; bucket lock must be held.
+    unsafe fn unlink_locked(&self, key: u64) -> Option<*mut RhtNode> {
+        let bucket = self.bucket(key);
+        let mut pp: *const AtomicUsize = &bucket.head;
+        loop {
+            let cur = (*pp).load(Ordering::SeqCst) as *mut RhtNode;
+            if cur.is_null() {
+                return None;
+            }
+            if (*cur).key == key {
+                let next = (*cur).next.load(Ordering::SeqCst);
+                (*pp).store(next, Ordering::SeqCst);
+                return Some(cur);
+            }
+            pp = &(*cur).next;
+        }
+    }
+}
+
+/// The rhashtable-style dynamic hash table.
+pub struct HtRht {
+    cur: AtomicPtr<RhtTab>,
+    rebuild_lock: Mutex<()>,
+}
+
+// SAFETY: atomics + per-bucket locks + RCU reclamation.
+unsafe impl Send for HtRht {}
+unsafe impl Sync for HtRht {}
+
+impl HtRht {
+    pub fn new(nbuckets: usize, hash: HashFn) -> Self {
+        Self {
+            cur: AtomicPtr::new(RhtTab::alloc(nbuckets, hash)),
+            rebuild_lock: Mutex::new(()),
+        }
+    }
+
+    #[inline]
+    fn tab(&self) -> &RhtTab {
+        // SAFETY: never null; RCU-protected replacement.
+        unsafe { &*self.cur.load(Ordering::SeqCst) }
+    }
+}
+
+impl ConcurrentMap for HtRht {
+    fn name(&self) -> &'static str {
+        "HT-RHT"
+    }
+
+    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        let _g = guard.read_lock();
+        let tab = self.tab();
+        if let Some(n) = tab.find(key) {
+            // SAFETY: RCU-live.
+            return Some(unsafe { (*n).val.load(Ordering::SeqCst) });
+        }
+        let new = tab.ht_new.load(Ordering::SeqCst);
+        if !new.is_null() {
+            // SAFETY: alive during read-side section.
+            if let Some(n) = unsafe { &*new }.find(key) {
+                // SAFETY: RCU-live.
+                return Some(unsafe { (*n).val.load(Ordering::SeqCst) });
+            }
+        }
+        None
+    }
+
+    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        let _g = guard.read_lock();
+        let tab = self.tab();
+        let ob = tab.bucket(key);
+        ob.lock.lock();
+        let new_ptr = tab.ht_new.load(Ordering::SeqCst);
+        let inserted = if new_ptr.is_null() {
+            if tab.find(key).is_some() {
+                false
+            } else {
+                let n = Box::into_raw(Box::new(RhtNode {
+                    key,
+                    val: AtomicU64::new(val),
+                    next: AtomicUsize::new(ob.head.load(Ordering::SeqCst)),
+                }));
+                ob.head.store(n as usize, Ordering::SeqCst);
+                true
+            }
+        } else {
+            // Rebuild in progress: insert goes to the newest table
+            // (kernel behaviour). Dup check covers both.
+            // SAFETY: alive during section.
+            let new = unsafe { &*new_ptr };
+            let nb = new.bucket(key);
+            nb.lock.lock();
+            let dup = tab.find(key).is_some() || new.find(key).is_some();
+            let r = if dup {
+                false
+            } else {
+                let n = Box::into_raw(Box::new(RhtNode {
+                    key,
+                    val: AtomicU64::new(val),
+                    next: AtomicUsize::new(nb.head.load(Ordering::SeqCst)),
+                }));
+                nb.head.store(n as usize, Ordering::SeqCst);
+                true
+            };
+            nb.lock.unlock();
+            r
+        };
+        ob.lock.unlock();
+        inserted
+    }
+
+    fn delete(&self, guard: &RcuThread, key: u64) -> bool {
+        let _g = guard.read_lock();
+        let tab = self.tab();
+        let ob = tab.bucket(key);
+        ob.lock.lock();
+        let new_ptr = tab.ht_new.load(Ordering::SeqCst);
+        // SAFETY: locks held on each chain we unlink from. A node is in
+        // exactly one chain (distribution moves it under both locks).
+        let found = unsafe {
+            if let Some(n) = tab.unlink_locked(key) {
+                defer_free_rht(n);
+                true
+            } else if !new_ptr.is_null() {
+                let new = &*new_ptr;
+                let nb = new.bucket(key);
+                nb.lock.lock();
+                let r = new.unlink_locked(key);
+                nb.lock.unlock();
+                if let Some(n) = r {
+                    defer_free_rht(n);
+                    true
+                } else {
+                    false
+                }
+            } else {
+                false
+            }
+        };
+        ob.lock.unlock();
+        found
+    }
+
+    fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
+        let lock = match self.rebuild_lock.try_lock() {
+            Ok(g) => g,
+            Err(_) => return false,
+        };
+        let old_ptr = self.cur.load(Ordering::SeqCst);
+        // SAFETY: rebuild lock held.
+        let old = unsafe { &*old_ptr };
+        let new_ptr = RhtTab::alloc(nbuckets, hash);
+        // SAFETY: fresh.
+        let new = unsafe { &*new_ptr };
+        old.ht_new.store(new_ptr, Ordering::SeqCst);
+        guard.offline_while(synchronize_rcu);
+
+        // Distribute: per old bucket, repeatedly move the TAIL node — the
+        // behaviour the paper singles out ("the rebuild thread must reach
+        // the tail of a list to distribute a single node").
+        for ob in old.buckets.iter() {
+            loop {
+                ob.lock.lock();
+                // Find tail and its predecessor link.
+                // SAFETY: old bucket lock held; chain stable.
+                let moved = unsafe {
+                    let mut pp: *const AtomicUsize = &ob.head;
+                    let mut cur = (*pp).load(Ordering::SeqCst) as *mut RhtNode;
+                    if cur.is_null() {
+                        false
+                    } else {
+                        loop {
+                            let next = (*cur).next.load(Ordering::SeqCst) as *mut RhtNode;
+                            if next.is_null() {
+                                break;
+                            }
+                            pp = &(*cur).next;
+                            cur = next;
+                        }
+                        // `cur` is the tail, `pp` the link pointing at it.
+                        let key = (*cur).key;
+                        let nb = new.bucket(key);
+                        nb.lock.lock();
+                        // Splice into the new chain head FIRST (the node
+                        // is momentarily reachable from both tables;
+                        // old-chain walkers flow into the new chain).
+                        (*cur)
+                            .next
+                            .store(nb.head.load(Ordering::SeqCst), Ordering::SeqCst);
+                        nb.head.store(cur as usize, Ordering::SeqCst);
+                        // Then cut it out of the old chain.
+                        (*pp).store(0, Ordering::SeqCst);
+                        nb.lock.unlock();
+                        true
+                    }
+                };
+                ob.lock.unlock();
+                if !moved {
+                    break;
+                }
+            }
+        }
+
+        self.cur.store(new_ptr, Ordering::SeqCst);
+        guard.offline_while(synchronize_rcu);
+        drop(lock);
+        // SAFETY: unpublished for a grace period; buckets are empty.
+        unsafe { drop(Box::from_raw(old_ptr)) };
+        true
+    }
+
+    fn len(&self, guard: &RcuThread) -> usize {
+        let _g = guard.read_lock();
+        let tab = self.tab();
+        let mut n = 0;
+        for b in tab.buckets.iter() {
+            let mut cur = b.head.load(Ordering::SeqCst) as *mut RhtNode;
+            while !cur.is_null() {
+                n += 1;
+                // SAFETY: RCU-live.
+                cur = unsafe { (*cur).next.load(Ordering::SeqCst) as *mut RhtNode };
+            }
+        }
+        n
+    }
+}
+
+impl Drop for HtRht {
+    fn drop(&mut self) {
+        let tab_ptr = self.cur.load(Ordering::SeqCst);
+        // SAFETY: exclusive access.
+        unsafe {
+            let tab = &*tab_ptr;
+            for b in tab.buckets.iter() {
+                let mut cur = b.head.load(Ordering::SeqCst) as *mut RhtNode;
+                while !cur.is_null() {
+                    let next = (*cur).next.load(Ordering::SeqCst) as *mut RhtNode;
+                    drop(Box::from_raw(cur));
+                    cur = next;
+                }
+            }
+            drop(Box::from_raw(tab_ptr));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rcu::rcu_barrier;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn tail_distribution_preserves_all_keys() {
+        let g = RcuThread::register();
+        let m = HtRht::new(4, HashFn::Seeded(1));
+        for k in 0..200u64 {
+            assert!(m.insert(&g, k, k + 7));
+        }
+        assert!(m.rebuild(&g, 32, HashFn::Seeded(2)));
+        assert_eq!(m.len(&g), 200);
+        for k in 0..200u64 {
+            assert_eq!(m.lookup(&g, k), Some(k + 7));
+        }
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn lookups_tolerate_redirection_under_live_rebuild() {
+        // Readers hammer lookups while a big rebuild runs; no persistent
+        // key may be missed even when walks cross the splice point.
+        let m = Arc::new(HtRht::new(4, HashFn::Seeded(3)));
+        let n = 2000u64;
+        {
+            let g = RcuThread::register();
+            for k in 0..n {
+                m.insert(&g, k, k);
+            }
+            g.quiescent_state();
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let m2 = m.clone();
+        let s2 = stop.clone();
+        let reader = std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let mut rng = crate::util::SplitMix64::new(5);
+            let mut misses = 0u64;
+            while !s2.load(Ordering::Relaxed) {
+                let k = rng.next_bounded(n);
+                if m2.lookup(&g, k).is_none() {
+                    misses += 1;
+                }
+                g.quiescent_state();
+            }
+            misses
+        });
+        {
+            let g = RcuThread::register();
+            for i in 0..4u64 {
+                m.rebuild(&g, if i % 2 == 0 { 64 } else { 4 }, HashFn::Seeded(i));
+            }
+            g.quiescent_state();
+        }
+        stop.store(true, Ordering::Relaxed);
+        assert_eq!(reader.join().unwrap(), 0, "HT-RHT lookup missed a key");
+        rcu_barrier();
+    }
+}

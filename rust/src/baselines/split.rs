@@ -1,0 +1,513 @@
+//! HT-Split: Shalev & Shavit's split-ordered list (J. ACM 2006), the
+//! lock-free *resizable* hash table (userspace-rcu's `rculfhash` lineage).
+//!
+//! All nodes live in ONE lock-free linked list sorted by *split-order*
+//! key: the bit-reversal of the hash. Buckets are just shortcut pointers
+//! (dummy nodes) into that list; doubling the bucket count never moves a
+//! node — it only adds dummies that *split* existing chains. The costs
+//! the paper notes (§2): the hash function is fixed to `key mod 2^i`
+//! (resizable, not dynamic — no escape from adversarial collisions), and
+//! every operation pays a bit-reversal.
+//!
+//! Implementation: Michael-style marked-pointer list (reusing the crate's
+//! RCU reclamation instead of the original's hazard pointers), a lazily
+//! allocated segment directory for the bucket array, and recursive parent
+//! initialization of dummy buckets.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+
+use super::ConcurrentMap;
+use crate::dhash::HashFn;
+use crate::rcu::{call_rcu, RcuThread};
+
+/// Max directory segments: segment `s` holds 2^s buckets, so 30 segments
+/// bound the table at 2^30 buckets — far beyond any test here.
+const MAX_SEGMENTS: usize = 30;
+
+const DELETED: usize = 1;
+
+#[inline(always)]
+fn untag(w: usize) -> *mut SoNode {
+    (w & !DELETED) as *mut SoNode
+}
+
+/// Split-order key of a regular node: bit-reversed, LSB set (odd).
+#[inline(always)]
+fn so_regular(key: u64) -> u64 {
+    key.reverse_bits() | 1
+}
+
+/// Split-order key of a dummy (bucket) node: bit-reversed, even.
+#[inline(always)]
+fn so_dummy(bucket: u64) -> u64 {
+    bucket.reverse_bits()
+}
+
+struct SoNode {
+    /// Split-order key (sort key of the master list).
+    so_key: u64,
+    /// Original key (0 for dummies; kept for debuggability).
+    #[allow(dead_code)]
+    key: u64,
+    val: AtomicU64,
+    next: AtomicUsize,
+}
+
+impl SoNode {
+    fn alloc(so_key: u64, key: u64, val: u64) -> *mut SoNode {
+        Box::into_raw(Box::new(SoNode {
+            so_key,
+            key,
+            val: AtomicU64::new(val),
+            next: AtomicUsize::new(0),
+        }))
+    }
+
+    #[inline(always)]
+    fn is_dummy(&self) -> bool {
+        self.so_key & 1 == 0
+    }
+}
+
+struct SendSo(*mut SoNode);
+// SAFETY: reclaimer-only access after a grace period.
+unsafe impl Send for SendSo {}
+
+unsafe fn defer_free_so(p: *mut SoNode) {
+    let w = SendSo(p);
+    call_rcu(move || {
+        let w = w;
+        // SAFETY: grace period elapsed.
+        unsafe { drop(Box::from_raw(w.0)) };
+    });
+}
+
+struct Pos {
+    prev: *const AtomicUsize,
+    cur: *mut SoNode,
+    next: usize,
+}
+
+/// The split-ordered-list hash table.
+pub struct HtSplit {
+    /// Current bucket count (always a power of two).
+    size: AtomicUsize,
+    /// Live regular nodes (drives automatic doubling).
+    count: AtomicUsize,
+    /// Segment directory: segment 0 holds bucket 0; segment s>0 holds
+    /// buckets [2^(s-1), 2^s). Entries are `*mut SoNode` dummy pointers
+    /// stored as usize (0 = uninitialized bucket).
+    segments: [AtomicPtr<AtomicUsize>; MAX_SEGMENTS],
+    /// Auto-resize threshold (load factor).
+    max_load: usize,
+}
+
+// SAFETY: lock-free structure over atomics; RCU reclamation.
+unsafe impl Send for HtSplit {}
+unsafe impl Sync for HtSplit {}
+
+impl HtSplit {
+    /// `nbuckets` is rounded up to a power of two. `max_load` is the load
+    /// factor beyond which the table doubles itself on insert.
+    pub fn new(nbuckets: usize, max_load: usize) -> Self {
+        let size = nbuckets.next_power_of_two().max(1);
+        let t = Self {
+            size: AtomicUsize::new(size),
+            count: AtomicUsize::new(0),
+            segments: std::array::from_fn(|_| AtomicPtr::new(std::ptr::null_mut())),
+            max_load: max_load.max(1),
+        };
+        // Bucket 0's dummy is the list head; install it eagerly.
+        let head = SoNode::alloc(so_dummy(0), 0, 0);
+        t.bucket_slot(0).store(head as usize, Ordering::SeqCst);
+        t
+    }
+
+    /// Segment index + offset for a bucket id.
+    #[inline]
+    fn locate(bucket: usize) -> (usize, usize) {
+        if bucket == 0 {
+            (0, 0)
+        } else {
+            let seg = usize::BITS as usize - bucket.leading_zeros() as usize;
+            (seg, bucket - (1 << (seg - 1)))
+        }
+    }
+
+    /// The directory slot for `bucket`, allocating its segment lazily.
+    fn bucket_slot(&self, bucket: usize) -> &AtomicUsize {
+        let (seg, off) = Self::locate(bucket);
+        let mut ptr = self.segments[seg].load(Ordering::SeqCst);
+        if ptr.is_null() {
+            let len = if seg == 0 { 1 } else { 1 << (seg - 1) };
+            let fresh: Box<[AtomicUsize]> = (0..len).map(|_| AtomicUsize::new(0)).collect();
+            let raw = Box::into_raw(fresh) as *mut AtomicUsize;
+            match self.segments[seg].compare_exchange(
+                std::ptr::null_mut(),
+                raw,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => ptr = raw,
+                Err(winner) => {
+                    // SAFETY: we lost; rebuild the box to free it.
+                    unsafe {
+                        drop(Box::from_raw(std::slice::from_raw_parts_mut(raw, len)));
+                    }
+                    ptr = winner;
+                }
+            }
+        }
+        // SAFETY: segments are never freed while the table lives.
+        unsafe { &*ptr.add(off) }
+    }
+
+    /// The dummy node of `bucket`, initializing it (and recursively its
+    /// parent) if needed — the split-ordered list's signature move.
+    fn get_bucket(&self, bucket: usize) -> *mut SoNode {
+        let slot = self.bucket_slot(bucket);
+        let w = slot.load(Ordering::SeqCst);
+        if w != 0 {
+            return w as *mut SoNode;
+        }
+        self.init_bucket(bucket)
+    }
+
+    fn init_bucket(&self, bucket: usize) -> *mut SoNode {
+        debug_assert!(bucket > 0);
+        // Parent: clear the most significant set bit.
+        let parent = bucket & !(1usize << (usize::BITS - 1 - bucket.leading_zeros()));
+        let parent_dummy = {
+            let pslot = self.bucket_slot(parent);
+            let w = pslot.load(Ordering::SeqCst);
+            if w != 0 {
+                w as *mut SoNode
+            } else {
+                self.init_bucket(parent)
+            }
+        };
+        // Insert this bucket's dummy starting from the parent's dummy.
+        let dummy = SoNode::alloc(so_dummy(bucket as u64), 0, 0);
+        let slot = self.bucket_slot(bucket);
+        match self.list_insert(parent_dummy, dummy) {
+            Ok(()) => {
+                slot.store(dummy as usize, Ordering::SeqCst);
+                dummy
+            }
+            Err(existing) => {
+                // A concurrent initializer beat us: free ours, adopt
+                // theirs (it may not be published to the slot yet — CAS).
+                // SAFETY: our dummy was never published.
+                unsafe { drop(Box::from_raw(dummy)) };
+                let _ = slot.compare_exchange(
+                    0,
+                    existing as usize,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                );
+                slot.load(Ordering::SeqCst) as *mut SoNode
+            }
+        }
+    }
+
+    /// Michael-style search from `head` for `so_key`; unlinks marked
+    /// nodes along the way (deferring their reclamation to RCU).
+    fn list_search(&self, head: *mut SoNode, so_key: u64) -> Pos {
+        'retry: loop {
+            // SAFETY: head is a dummy, never reclaimed while the table
+            // lives; inner nodes are RCU-protected.
+            unsafe {
+                let mut prev: *const AtomicUsize = &(*head).next;
+                let mut cur = untag((*prev).load(Ordering::SeqCst));
+                loop {
+                    if cur.is_null() {
+                        return Pos { prev, cur, next: 0 };
+                    }
+                    let next_t = (*cur).next.load(Ordering::SeqCst);
+                    if (*prev).load(Ordering::SeqCst) != cur as usize {
+                        continue 'retry;
+                    }
+                    if next_t & DELETED != 0 {
+                        let next = next_t & !DELETED;
+                        if (*prev)
+                            .compare_exchange(cur as usize, next, Ordering::SeqCst, Ordering::SeqCst)
+                            .is_ok()
+                        {
+                            defer_free_so(cur);
+                            cur = next as *mut SoNode;
+                            continue;
+                        }
+                        continue 'retry;
+                    }
+                    if (*cur).so_key >= so_key {
+                        return Pos {
+                            prev,
+                            cur,
+                            next: next_t,
+                        };
+                    }
+                    prev = &(*cur).next;
+                    cur = untag(next_t);
+                }
+            }
+        }
+    }
+
+    /// Insert `node` (ordered by so_key) starting at dummy `head`.
+    /// On duplicate so_key returns the incumbent.
+    fn list_insert(&self, head: *mut SoNode, node: *mut SoNode) -> Result<(), *mut SoNode> {
+        // SAFETY: node is ours until published; list protected by RCU.
+        let so_key = unsafe { (*node).so_key };
+        loop {
+            let pos = self.list_search(head, so_key);
+            if !pos.cur.is_null() && unsafe { (*pos.cur).so_key } == so_key {
+                return Err(pos.cur);
+            }
+            unsafe {
+                (*node).next.store(pos.cur as usize, Ordering::SeqCst);
+                if (*pos.prev)
+                    .compare_exchange(
+                        pos.cur as usize,
+                        node as usize,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    )
+                    .is_ok()
+                {
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Logically delete the node with `so_key` reachable from `head`.
+    fn list_delete(&self, head: *mut SoNode, so_key: u64) -> bool {
+        loop {
+            let pos = self.list_search(head, so_key);
+            if pos.cur.is_null() || unsafe { (*pos.cur).so_key } != so_key {
+                return false;
+            }
+            // SAFETY: RCU-live.
+            unsafe {
+                if (*pos.cur)
+                    .next
+                    .compare_exchange(
+                        pos.next,
+                        pos.next | DELETED,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    )
+                    .is_err()
+                {
+                    continue;
+                }
+                // Physical unlink; on failure a later search cleans up.
+                if (*pos.prev)
+                    .compare_exchange(
+                        pos.cur as usize,
+                        pos.next,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    )
+                    .is_ok()
+                {
+                    defer_free_so(pos.cur);
+                }
+                return true;
+            }
+        }
+    }
+
+    #[inline]
+    fn bucket_of(&self, key: u64) -> usize {
+        (key as usize) & (self.size.load(Ordering::SeqCst) - 1)
+    }
+
+    /// Double the bucket count (lock-free: losers of the CAS just skip).
+    fn maybe_grow(&self) {
+        let size = self.size.load(Ordering::SeqCst);
+        if self.count.load(Ordering::SeqCst) > size * self.max_load
+            && size < (1 << (MAX_SEGMENTS - 1))
+        {
+            let _ = self
+                .size
+                .compare_exchange(size, size * 2, Ordering::SeqCst, Ordering::SeqCst);
+        }
+    }
+
+    /// Explicit resize to a power of two (the §6.2 continuous-resize
+    /// protocol drives this). Shrinking leaves orphan dummies in the
+    /// list; they are harmless shortcuts that simply stop being used.
+    pub fn resize(&self, nbuckets: usize) {
+        let size = nbuckets.next_power_of_two().max(1).min(1 << (MAX_SEGMENTS - 1));
+        self.size.store(size, Ordering::SeqCst);
+    }
+}
+
+impl ConcurrentMap for HtSplit {
+    fn name(&self) -> &'static str {
+        "HT-Split"
+    }
+
+    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        let _g = guard.read_lock();
+        let head = self.get_bucket(self.bucket_of(key));
+        let so = so_regular(key);
+        let pos = self.list_search(head, so);
+        if !pos.cur.is_null() && unsafe { (*pos.cur).so_key } == so {
+            // SAFETY: RCU-live.
+            Some(unsafe { (*pos.cur).val.load(Ordering::SeqCst) })
+        } else {
+            None
+        }
+    }
+
+    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        let _g = guard.read_lock();
+        let head = self.get_bucket(self.bucket_of(key));
+        let node = SoNode::alloc(so_regular(key), key, val);
+        match self.list_insert(head, node) {
+            Ok(()) => {
+                self.count.fetch_add(1, Ordering::SeqCst);
+                self.maybe_grow();
+                true
+            }
+            Err(_) => {
+                // SAFETY: never published.
+                unsafe { drop(Box::from_raw(node)) };
+                false
+            }
+        }
+    }
+
+    fn delete(&self, guard: &RcuThread, key: u64) -> bool {
+        let _g = guard.read_lock();
+        let head = self.get_bucket(self.bucket_of(key));
+        if self.list_delete(head, so_regular(key)) {
+            self.count.fetch_sub(1, Ordering::SeqCst);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Resizable only: adopts the bucket count (power of two), ignores
+    /// `hash` — exactly the limitation the paper contrasts against.
+    fn rebuild(&self, _guard: &RcuThread, nbuckets: usize, _hash: HashFn) -> bool {
+        self.resize(nbuckets);
+        true
+    }
+
+    fn len(&self, guard: &RcuThread) -> usize {
+        let _g = guard.read_lock();
+        // Walk the master list from bucket 0's dummy.
+        let mut n = 0;
+        let mut cur = self.get_bucket(0);
+        // SAFETY: RCU-live chain.
+        unsafe {
+            cur = untag((*cur).next.load(Ordering::SeqCst));
+            while !cur.is_null() {
+                let next_t = (*cur).next.load(Ordering::SeqCst);
+                if next_t & DELETED == 0 && !(*cur).is_dummy() {
+                    n += 1;
+                }
+                cur = untag(next_t);
+            }
+        }
+        n
+    }
+}
+
+impl Drop for HtSplit {
+    fn drop(&mut self) {
+        // SAFETY: exclusive access; free the master list then segments.
+        unsafe {
+            let head = self.bucket_slot(0).load(Ordering::SeqCst) as *mut SoNode;
+            let mut cur = head;
+            while !cur.is_null() {
+                let next = untag((*cur).next.load(Ordering::SeqCst));
+                drop(Box::from_raw(cur));
+                cur = next;
+            }
+            for (seg, slot) in self.segments.iter().enumerate() {
+                let p = slot.load(Ordering::SeqCst);
+                if !p.is_null() {
+                    let len = if seg == 0 { 1 } else { 1 << (seg - 1) };
+                    drop(Box::from_raw(std::slice::from_raw_parts_mut(p, len)));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rcu::rcu_barrier;
+
+    #[test]
+    fn split_order_keys() {
+        // Dummies are even, regulars odd; parent ordering holds.
+        assert_eq!(so_dummy(0), 0);
+        assert!(so_regular(0) == 1);
+        for b in 1..64u64 {
+            assert_eq!(so_dummy(b) & 1, 0);
+            assert_eq!(so_regular(b) & 1, 1);
+        }
+        // Bucket 1's dummy sorts after bucket 0's.
+        assert!(so_dummy(0) < so_dummy(1));
+    }
+
+    #[test]
+    fn locate_segments() {
+        assert_eq!(HtSplit::locate(0), (0, 0));
+        assert_eq!(HtSplit::locate(1), (1, 0));
+        assert_eq!(HtSplit::locate(2), (2, 0));
+        assert_eq!(HtSplit::locate(3), (2, 1));
+        assert_eq!(HtSplit::locate(4), (3, 0));
+        assert_eq!(HtSplit::locate(7), (3, 3));
+        assert_eq!(HtSplit::locate(8), (4, 0));
+    }
+
+    #[test]
+    fn basic_and_growth() {
+        let g = RcuThread::register();
+        let m = HtSplit::new(2, 4);
+        for k in 0..500u64 {
+            assert!(m.insert(&g, k, k * 2), "insert {k}");
+        }
+        // Auto-doubling kicked in.
+        assert!(m.size.load(Ordering::SeqCst) > 2);
+        assert_eq!(m.len(&g), 500);
+        for k in 0..500u64 {
+            assert_eq!(m.lookup(&g, k), Some(k * 2), "key {k}");
+        }
+        for k in (0..500u64).step_by(2) {
+            assert!(m.delete(&g, k));
+        }
+        assert_eq!(m.len(&g), 250);
+        assert!(!m.insert(&g, 3, 0), "dup accepted");
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn shrink_keeps_contents() {
+        let g = RcuThread::register();
+        let m = HtSplit::new(64, 1 << 20); // no auto-grow
+        for k in 0..300u64 {
+            m.insert(&g, k, k);
+        }
+        m.resize(4);
+        assert_eq!(m.len(&g), 300);
+        for k in 0..300u64 {
+            assert_eq!(m.lookup(&g, k), Some(k));
+        }
+        m.resize(128);
+        for k in 0..300u64 {
+            assert_eq!(m.lookup(&g, k), Some(k));
+        }
+        g.quiescent_state();
+        rcu_barrier();
+    }
+}

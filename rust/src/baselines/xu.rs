@@ -1,0 +1,425 @@
+//! HT-Xu: Herbert Xu's dynamic hash table (Linux kernel commit
+//! `eb1d16414339`, 2010; user-space form in perfbook's `hash_resize`).
+//!
+//! Each node carries **two** sets of next pointers. Readers traverse the
+//! pointer set named by the current table; a rebuild re-links every node
+//! through the *other* set into the new bucket array in a single
+//! traversal, then swaps tables. The paper (§2) lists the costs DHash
+//! avoids: per-bucket locks serialize updates against each other and
+//! against the rebuild, and the doubled pointers bloat every node and
+//! lock the design to this one customized list.
+//!
+//! Faithfulness notes (DESIGN.md §Substitutions): chains are unordered
+//! with head insertion (as in the kernel); updates during a rebuild go to
+//! the *new* table and lookups check old-then-new, which preserves the
+//! algorithm's locking structure without the kernel's bucket-progress
+//! bookkeeping.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::ConcurrentMap;
+use crate::dhash::HashFn;
+use crate::lflist::spinlock_list::SpinLock;
+use crate::rcu::{call_rcu, synchronize_rcu, RcuThread};
+
+/// Node with two next-pointer sets (the signature feature of HT-Xu).
+struct XuNode {
+    key: u64,
+    val: AtomicU64,
+    next: [AtomicUsize; 2],
+}
+
+struct SendXu(*mut XuNode);
+// SAFETY: reclaimer-only access after a grace period.
+unsafe impl Send for SendXu {}
+
+unsafe fn defer_free_xu(p: *mut XuNode) {
+    let w = SendXu(p);
+    call_rcu(move || {
+        let w = w;
+        // SAFETY: grace period elapsed.
+        unsafe { drop(Box::from_raw(w.0)) };
+    });
+}
+
+struct XuBucket {
+    lock: SpinLock,
+    head: AtomicUsize,
+}
+
+struct XuTab {
+    /// Which `next[]` slot this table's chains thread through.
+    idx: usize,
+    nbuckets: usize,
+    hash: HashFn,
+    buckets: Box<[XuBucket]>,
+    ht_new: AtomicPtr<XuTab>,
+    /// Back-pointer to the predecessor table during the retirement window
+    /// (between `cur` swap and the old table's free). The two-pointer-set
+    /// design keeps every node linked in BOTH tables' chains through the
+    /// transition, so updates during the window must maintain both — a
+    /// post-swap delete that only purged the new chain would leave a
+    /// freed node reachable through the old chains still being traversed
+    /// by pre-swap-view operations (use-after-free).
+    ht_old: AtomicPtr<XuTab>,
+}
+
+impl XuTab {
+    fn alloc(idx: usize, nbuckets: usize, hash: HashFn) -> *mut XuTab {
+        assert!(nbuckets > 0);
+        let buckets: Box<[XuBucket]> = (0..nbuckets)
+            .map(|_| XuBucket {
+                lock: SpinLock::new(),
+                head: AtomicUsize::new(0),
+            })
+            .collect();
+        Box::into_raw(Box::new(XuTab {
+            idx,
+            nbuckets,
+            hash,
+            buckets,
+            ht_new: AtomicPtr::new(std::ptr::null_mut()),
+            ht_old: AtomicPtr::new(std::ptr::null_mut()),
+        }))
+    }
+
+    #[inline]
+    fn bucket(&self, key: u64) -> &XuBucket {
+        &self.buckets[self.hash.bucket(key, self.nbuckets)]
+    }
+
+    /// Unordered chain search through this table's pointer set.
+    /// Caller is inside an RCU read-side section.
+    fn find(&self, key: u64) -> Option<*mut XuNode> {
+        let mut cur = self.bucket(key).head.load(Ordering::SeqCst) as *mut XuNode;
+        while !cur.is_null() {
+            // SAFETY: nodes are RCU-reclaimed; alive during read side.
+            unsafe {
+                if (*cur).key == key {
+                    return Some(cur);
+                }
+                cur = (*cur).next[self.idx].load(Ordering::SeqCst) as *mut XuNode;
+            }
+        }
+        None
+    }
+
+    /// Unlink `key` from this table's chain; lock must be held.
+    /// Returns the node if it was present.
+    unsafe fn unlink_locked(&self, key: u64) -> Option<*mut XuNode> {
+        let bucket = self.bucket(key);
+        let mut pp: *const AtomicUsize = &bucket.head;
+        loop {
+            let cur = (*pp).load(Ordering::SeqCst) as *mut XuNode;
+            if cur.is_null() {
+                return None;
+            }
+            if (*cur).key == key {
+                let next = (*cur).next[self.idx].load(Ordering::SeqCst);
+                (*pp).store(next, Ordering::SeqCst);
+                return Some(cur);
+            }
+            pp = &(*cur).next[self.idx];
+        }
+    }
+}
+
+/// Herbert Xu's dynamic hash table.
+pub struct HtXu {
+    cur: AtomicPtr<XuTab>,
+    rebuild_lock: Mutex<()>,
+}
+
+// SAFETY: atomics + per-bucket locks + RCU reclamation throughout.
+unsafe impl Send for HtXu {}
+unsafe impl Sync for HtXu {}
+
+impl HtXu {
+    pub fn new(nbuckets: usize, hash: HashFn) -> Self {
+        Self {
+            cur: AtomicPtr::new(XuTab::alloc(0, nbuckets, hash)),
+            rebuild_lock: Mutex::new(()),
+        }
+    }
+
+    #[inline]
+    fn tab(&self) -> &XuTab {
+        // SAFETY: never null; RCU-protected replacement.
+        unsafe { &*self.cur.load(Ordering::SeqCst) }
+    }
+}
+
+impl ConcurrentMap for HtXu {
+    fn name(&self) -> &'static str {
+        "HT-Xu"
+    }
+
+    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        let _g = guard.read_lock();
+        let tab = self.tab();
+        if let Some(n) = tab.find(key) {
+            // SAFETY: RCU-live.
+            return Some(unsafe { (*n).val.load(Ordering::SeqCst) });
+        }
+        let new = tab.ht_new.load(Ordering::SeqCst);
+        if !new.is_null() {
+            // SAFETY: ht_new outlives the read-side section.
+            let new = unsafe { &*new };
+            if let Some(n) = new.find(key) {
+                // SAFETY: RCU-live.
+                return Some(unsafe { (*n).val.load(Ordering::SeqCst) });
+            }
+        }
+        None
+    }
+
+    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        let _g = guard.read_lock();
+        let tab = self.tab();
+        let ob = tab.bucket(key);
+        ob.lock.lock();
+        let new_ptr = tab.ht_new.load(Ordering::SeqCst);
+        let r = if new_ptr.is_null() {
+            // SAFETY: bucket lock held.
+            unsafe {
+                if tab.find(key).is_some() {
+                    false
+                } else {
+                    let n = Box::into_raw(Box::new(XuNode {
+                        key,
+                        val: AtomicU64::new(val),
+                        next: [
+                            AtomicUsize::new(ob.head.load(Ordering::SeqCst)),
+                            AtomicUsize::new(0),
+                        ],
+                    }));
+                    // Head insertion through set `idx` only; fix the slot.
+                    if tab.idx == 1 {
+                        let h = (*n).next[0].swap(0, Ordering::SeqCst);
+                        (*n).next[1].store(h, Ordering::SeqCst);
+                    }
+                    ob.head.store(n as usize, Ordering::SeqCst);
+                    true
+                }
+            }
+        } else {
+            // Rebuild in progress: insert into the new table (lock order:
+            // old bucket, then new bucket — same as the rebuilder).
+            // SAFETY: ht_new set ⇒ table alive during this section.
+            let new = unsafe { &*new_ptr };
+            let nb = new.bucket(key);
+            nb.lock.lock();
+            let dup = tab.find(key).is_some() || new.find(key).is_some();
+            let r = if dup {
+                false
+            } else {
+                let n = Box::into_raw(Box::new(XuNode {
+                    key,
+                    val: AtomicU64::new(val),
+                    next: [AtomicUsize::new(0), AtomicUsize::new(0)],
+                }));
+                // SAFETY: fresh node, lock held on the new bucket.
+                unsafe {
+                    (*n).next[new.idx].store(nb.head.load(Ordering::SeqCst), Ordering::SeqCst);
+                }
+                nb.head.store(n as usize, Ordering::SeqCst);
+                true
+            };
+            nb.lock.unlock();
+            r
+        };
+        ob.lock.unlock();
+        r
+    }
+
+    fn delete(&self, guard: &RcuThread, key: u64) -> bool {
+        let _g = guard.read_lock();
+        let tab = self.tab();
+        // Resolve the (older, newer) table pair. Pre-swap view: (tab,
+        // tab.ht_new). Retirement window view: (tab.ht_old, tab). Locks
+        // are always taken older-table-first, so both views agree on
+        // order and cannot deadlock.
+        let ht_new = tab.ht_new.load(Ordering::SeqCst);
+        let ht_old = tab.ht_old.load(Ordering::SeqCst);
+        // Phase matters for the free decision below: during the
+        // retirement window the *new* chain is authoritative — the old
+        // chains are stale (ops that no longer see ht_old delete through
+        // the new chain only), so "found in old chain, missing from new"
+        // means ALREADY deleted, not "not yet distributed".
+        let window = ht_new.is_null() && !ht_old.is_null();
+        // SAFETY: tables in transition are freed only after a grace
+        // period past their unlinking; we are inside a read-side section.
+        let (older, newer): (&XuTab, Option<&XuTab>) = unsafe {
+            if !ht_new.is_null() {
+                (tab, Some(&*ht_new))
+            } else if !ht_old.is_null() {
+                (&*ht_old, Some(tab))
+            } else {
+                (tab, None)
+            }
+        };
+        let ob = older.bucket(key);
+        ob.lock.lock();
+        // SAFETY: locks held on every chain we unlink from.
+        let found = unsafe {
+            let in_old = older.unlink_locked(key);
+            let in_new = if let Some(newer) = newer {
+                let nb = newer.bucket(key);
+                nb.lock.lock();
+                let r = newer.unlink_locked(key);
+                nb.lock.unlock();
+                r
+            } else {
+                None
+            };
+            // A distributed node lives in both chains; free exactly once.
+            match (in_old, in_new) {
+                (Some(a), Some(b)) => {
+                    debug_assert_eq!(a, b);
+                    defer_free_xu(a);
+                    true
+                }
+                (Some(a), None) => {
+                    if window {
+                        // Stale old-chain entry: a newer-view delete
+                        // already removed and scheduled the node through
+                        // the authoritative new chain. Freeing here would
+                        // be a double free (observed as glibc fastbin
+                        // corruption before this guard).
+                        false
+                    } else {
+                        // Pre-swap: the node simply has not been
+                        // distributed yet; the old chain is authoritative.
+                        defer_free_xu(a);
+                        true
+                    }
+                }
+                (None, Some(b)) => {
+                    defer_free_xu(b);
+                    true
+                }
+                (None, None) => false,
+            }
+        };
+        ob.lock.unlock();
+        found
+    }
+
+    fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
+        let lock = match self.rebuild_lock.try_lock() {
+            Ok(g) => g,
+            Err(_) => return false,
+        };
+        let old_ptr = self.cur.load(Ordering::SeqCst);
+        // SAFETY: rebuild lock held; only rebuilds replace `cur`.
+        let old = unsafe { &*old_ptr };
+        let new_ptr = XuTab::alloc(1 - old.idx, nbuckets, hash);
+        // SAFETY: fresh.
+        let new = unsafe { &*new_ptr };
+        new.ht_old.store(old_ptr, Ordering::SeqCst);
+        old.ht_new.store(new_ptr, Ordering::SeqCst);
+        // Updaters that predate ht_new must drain before we distribute.
+        guard.offline_while(synchronize_rcu);
+
+        // Single traversal: re-link every node through the spare pointer
+        // set. This is why HT-Xu's rebuild is the fastest of the dynamic
+        // tables (paper Fig. 3) — and why its nodes are fat.
+        for ob in old.buckets.iter() {
+            ob.lock.lock();
+            let mut cur = ob.head.load(Ordering::SeqCst) as *mut XuNode;
+            while !cur.is_null() {
+                // SAFETY: old-bucket lock held; chain stable.
+                unsafe {
+                    let key = (*cur).key;
+                    let next_old = (*cur).next[old.idx].load(Ordering::SeqCst);
+                    let nb = new.bucket(key);
+                    nb.lock.lock();
+                    (*cur).next[new.idx].store(nb.head.load(Ordering::SeqCst), Ordering::SeqCst);
+                    nb.head.store(cur as usize, Ordering::SeqCst);
+                    nb.lock.unlock();
+                    cur = next_old as *mut XuNode;
+                }
+            }
+            ob.lock.unlock();
+        }
+
+        // Swap tables. During the retirement window the new table's
+        // ht_old keeps updates maintaining BOTH chain sets (see field
+        // docs); only after every op that could hold either view drains
+        // do we sever the link and free the old bucket arrays (nodes
+        // live on — that is the two-pointer-set trick).
+        self.cur.store(new_ptr, Ordering::SeqCst);
+        guard.offline_while(synchronize_rcu);
+        new.ht_old.store(std::ptr::null_mut(), Ordering::SeqCst);
+        guard.offline_while(synchronize_rcu);
+        drop(lock);
+        // SAFETY: unpublished for a grace period; nodes are not owned by
+        // the table struct.
+        unsafe { drop(Box::from_raw(old_ptr)) };
+        true
+    }
+
+    fn len(&self, guard: &RcuThread) -> usize {
+        let _g = guard.read_lock();
+        let tab = self.tab();
+        let mut n = 0;
+        for b in tab.buckets.iter() {
+            let mut cur = b.head.load(Ordering::SeqCst) as *mut XuNode;
+            while !cur.is_null() {
+                n += 1;
+                // SAFETY: RCU-live.
+                cur = unsafe { (*cur).next[tab.idx].load(Ordering::SeqCst) as *mut XuNode };
+            }
+        }
+        n
+    }
+}
+
+impl Drop for HtXu {
+    fn drop(&mut self) {
+        // Exclusive access: free all nodes via the current pointer set,
+        // then the table.
+        let tab_ptr = self.cur.load(Ordering::SeqCst);
+        // SAFETY: exclusive.
+        unsafe {
+            let tab = &*tab_ptr;
+            for b in tab.buckets.iter() {
+                let mut cur = b.head.load(Ordering::SeqCst) as *mut XuNode;
+                while !cur.is_null() {
+                    let next = (*cur).next[tab.idx].load(Ordering::SeqCst) as *mut XuNode;
+                    drop(Box::from_raw(cur));
+                    cur = next;
+                }
+            }
+            drop(Box::from_raw(tab_ptr));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rcu::rcu_barrier;
+
+    #[test]
+    fn xu_two_pointer_sets_alternate() {
+        let g = RcuThread::register();
+        let m = HtXu::new(8, HashFn::Seeded(1));
+        for k in 0..50u64 {
+            assert!(m.insert(&g, k, k));
+        }
+        // idx flips 0 -> 1 -> 0 across rebuilds.
+        assert_eq!(m.tab().idx, 0);
+        assert!(m.rebuild(&g, 16, HashFn::Seeded(2)));
+        assert_eq!(m.tab().idx, 1);
+        assert!(m.rebuild(&g, 8, HashFn::Seeded(3)));
+        assert_eq!(m.tab().idx, 0);
+        assert_eq!(m.len(&g), 50);
+        for k in 0..50u64 {
+            assert_eq!(m.lookup(&g, k), Some(k));
+        }
+        g.quiescent_state();
+        rcu_barrier();
+    }
+}

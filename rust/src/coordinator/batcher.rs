@@ -1,0 +1,236 @@
+//! Request types and the size/time batcher.
+//!
+//! Clients enqueue single requests; the batcher groups them into batches
+//! of up to `max_batch`, waiting at most `max_wait` for stragglers — the
+//! paper's rationale 4: update requests reach hash tables in batches, and
+//! handling them as batches is where throughput comes from.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// A KV operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Request {
+    Get { key: u64 },
+    Put { key: u64, val: u64 },
+    Del { key: u64 },
+}
+
+impl Request {
+    pub fn get(key: u64) -> Self {
+        Request::Get { key }
+    }
+
+    pub fn put(key: u64, val: u64) -> Self {
+        Request::Put { key, val }
+    }
+
+    pub fn del(key: u64) -> Self {
+        Request::Del { key }
+    }
+
+    pub fn key(&self) -> u64 {
+        match *self {
+            Request::Get { key } | Request::Put { key, .. } | Request::Del { key } => key,
+        }
+    }
+}
+
+/// Reply to a [`Request`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Response {
+    /// Put/Del succeeded.
+    Ok,
+    /// Get hit.
+    Value(u64),
+    /// Get/Del miss.
+    Missing,
+}
+
+/// One enqueued request: the op, the client's reply channel, and the
+/// client-side sequence number (so `execute_many` reassembles order).
+pub(crate) type Entry = (Request, Sender<(usize, Response)>, usize);
+
+/// A batch handed to a KV worker.
+pub struct Batch {
+    pub(crate) entries: Vec<Entry>,
+    /// Set by the batcher when pre-hashing is enabled: entries are sorted
+    /// by bucket id so a worker touches buckets in order (locality; the
+    /// `batchhash` ablation measures the effect).
+    pub pre_hashed: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Max time to wait filling a batch once it has at least one entry.
+    pub max_wait: Duration,
+    /// Sort each batch by bucket id using the AOT batch-hash artifact
+    /// (requires analytics; no-op without it).
+    pub pre_hash: bool,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            pre_hash: false,
+        }
+    }
+}
+
+/// The batching loop: runs on its own thread, draining the client channel
+/// into batches. `hash_fn` (when pre-hashing) maps keys to bucket ids via
+/// the analytics thread.
+pub struct Batcher {
+    pub(crate) cfg: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Drain one batch's entries from `rx` (BLOCKING — the caller must be
+    /// in an RCU-offline state, see `server.rs`). Returns None when the
+    /// channel is closed and empty (shutdown).
+    pub(crate) fn collect(&self, rx: &Receiver<Entry>) -> Option<Vec<Entry>> {
+        // Block for the first entry.
+        let first = match rx.recv() {
+            Ok(e) => e,
+            Err(_) => return None,
+        };
+        let mut entries = vec![first];
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while entries.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(e) => entries.push(e),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(entries)
+    }
+
+    /// Turn collected entries into a [`Batch`], pre-routing (sorting by
+    /// bucket id) when enabled and the hash oracle is available. Runs
+    /// RCU-online (it may read the table's current hash function).
+    pub(crate) fn route(
+        &self,
+        mut entries: Vec<Entry>,
+        hash_ids: Option<&dyn Fn(&[u64]) -> Option<Vec<i32>>>,
+    ) -> Batch {
+        let mut pre_hashed = false;
+        if self.cfg.pre_hash {
+            if let Some(hash_ids) = hash_ids {
+                let keys: Vec<u64> = entries.iter().map(|(r, _, _)| r.key()).collect();
+                if let Some(ids) = hash_ids(&keys) {
+                    // Stable sort by bucket id (preserves per-key op
+                    // order within the batch).
+                    let mut tagged: Vec<(i32, Entry)> =
+                        ids.into_iter().zip(entries).collect();
+                    tagged.sort_by_key(|(id, _)| *id);
+                    entries = tagged.into_iter().map(|(_, e)| e).collect();
+                    pre_hashed = true;
+                }
+            }
+        }
+        Batch {
+            entries,
+            pre_hashed,
+        }
+    }
+
+    /// collect + route in one call (tests / simple drivers).
+    #[cfg(test)]
+    pub(crate) fn next_batch(
+        &self,
+        rx: &Receiver<Entry>,
+        hash_ids: Option<&dyn Fn(&[u64]) -> Option<Vec<i32>>>,
+    ) -> Option<Batch> {
+        self.collect(rx).map(|e| self.route(e, hash_ids))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_by_size() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(1),
+            pre_hash: false,
+        });
+        let (tx, rx) = channel();
+        let (reply, _keep) = channel();
+        for i in 0..10usize {
+            tx.send((Request::get(i as u64), reply.clone(), i)).unwrap();
+        }
+        let batch = b.next_batch(&rx, None).unwrap();
+        assert_eq!(batch.entries.len(), 4);
+        assert!(!batch.pre_hashed);
+        let batch = b.next_batch(&rx, None).unwrap();
+        assert_eq!(batch.entries.len(), 4);
+    }
+
+    #[test]
+    fn batches_by_time() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(10),
+            pre_hash: false,
+        });
+        let (tx, rx) = channel();
+        let (reply, _keep) = channel();
+        tx.send((Request::get(1), reply.clone(), 0)).unwrap();
+        tx.send((Request::get(2), reply.clone(), 1)).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx, None).unwrap();
+        assert_eq!(batch.entries.len(), 2);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn closed_channel_ends() {
+        let b = Batcher::new(BatcherConfig::default());
+        let (tx, rx) = channel::<Entry>();
+        drop(tx);
+        assert!(b.next_batch(&rx, None).is_none());
+    }
+
+    #[test]
+    fn pre_hash_sorts_by_bucket() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            pre_hash: true,
+        });
+        let (tx, rx) = channel();
+        let (reply, _keep) = channel();
+        for (i, k) in [9u64, 1, 5, 3].iter().enumerate() {
+            tx.send((Request::get(*k), reply.clone(), i)).unwrap();
+        }
+        // Fake hash: bucket = key (identity).
+        let hash = |keys: &[u64]| Some(keys.iter().map(|&k| k as i32).collect());
+        let batch = b.next_batch(&rx, Some(&hash)).unwrap();
+        assert!(batch.pre_hashed);
+        let keys: Vec<u64> = batch.entries.iter().map(|(r, _, _)| r.key()).collect();
+        assert_eq!(keys, vec![1, 3, 5, 9]);
+    }
+
+    #[test]
+    fn request_accessors() {
+        assert_eq!(Request::put(3, 4).key(), 3);
+        assert_eq!(Request::del(5).key(), 5);
+        assert_eq!(Request::get(6).key(), 6);
+    }
+}

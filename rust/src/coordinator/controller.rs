@@ -1,0 +1,163 @@
+//! The rebuild controller: turns attack verdicts into `ht_rebuild` calls
+//! with a fresh random seed, rate-limited by a cooldown so a sustained
+//! attack cannot make the service thrash on back-to-back rebuilds.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::dhash::HashFn;
+use crate::util::rng::mix64;
+
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Minimum spacing between mitigation rebuilds.
+    pub cooldown: Duration,
+    /// Bucket count for mitigation rebuilds (None = keep current).
+    pub rebuild_buckets: Option<usize>,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            cooldown: Duration::from_secs(1),
+            rebuild_buckets: None,
+        }
+    }
+}
+
+/// Record of one mitigation rebuild.
+#[derive(Clone, Debug)]
+pub struct RebuildEvent {
+    /// Offset from coordinator start.
+    pub at: Duration,
+    /// chi2 that triggered the rebuild.
+    pub chi2: f32,
+    /// The hash function installed.
+    pub new_hash: HashFn,
+    /// Nodes moved (from `RebuildStats`).
+    pub moved: u64,
+    /// Rebuild wall time.
+    pub elapsed: Duration,
+}
+
+pub struct RebuildController {
+    cfg: ControllerConfig,
+    start: Instant,
+    state: Mutex<CtlState>,
+}
+
+struct CtlState {
+    last_rebuild: Option<Instant>,
+    seed_state: u64,
+    events: Vec<RebuildEvent>,
+}
+
+impl RebuildController {
+    pub fn new(cfg: ControllerConfig, entropy: u64) -> Self {
+        Self {
+            cfg,
+            start: Instant::now(),
+            state: Mutex::new(CtlState {
+                last_rebuild: None,
+                seed_state: entropy,
+                events: Vec::new(),
+            }),
+        }
+    }
+
+    /// If the cooldown allows, pick a fresh hash function for mitigation.
+    /// The attacker cannot predict the next seed: it chains the previous
+    /// seed state through mix64 with the current monotonic clock.
+    pub fn plan_mitigation(&self, now: Instant) -> Option<HashFn> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(last) = st.last_rebuild {
+            if now.duration_since(last) < self.cfg.cooldown {
+                return None;
+            }
+        }
+        st.last_rebuild = Some(now);
+        st.seed_state = mix64(
+            st.seed_state ^ self.start.elapsed().as_nanos() as u64,
+        );
+        Some(HashFn::Seeded(st.seed_state))
+    }
+
+    /// Target bucket count for a mitigation rebuild.
+    pub fn buckets_for(&self, current: usize) -> usize {
+        self.cfg.rebuild_buckets.unwrap_or(current)
+    }
+
+    /// Record a completed mitigation.
+    pub fn record(&self, chi2: f32, new_hash: HashFn, moved: u64, elapsed: Duration) {
+        let mut st = self.state.lock().unwrap();
+        st.events.push(RebuildEvent {
+            at: self.start.elapsed(),
+            chi2,
+            new_hash,
+            moved,
+            elapsed,
+        });
+    }
+
+    pub fn events(&self) -> Vec<RebuildEvent> {
+        self.state.lock().unwrap().events.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cooldown_gates_rebuilds() {
+        let c = RebuildController::new(
+            ControllerConfig {
+                cooldown: Duration::from_millis(100),
+                rebuild_buckets: None,
+            },
+            42,
+        );
+        let t0 = Instant::now();
+        let first = c.plan_mitigation(t0);
+        assert!(first.is_some());
+        // Immediately after: blocked.
+        assert!(c.plan_mitigation(t0 + Duration::from_millis(10)).is_none());
+        // After cooldown: allowed, and with a different seed.
+        let second = c.plan_mitigation(t0 + Duration::from_millis(150));
+        assert!(second.is_some());
+        assert_ne!(first, second);
+    }
+
+    #[test]
+    fn seeds_are_unpredictable_chain() {
+        let c = RebuildController::new(ControllerConfig::default(), 1);
+        let a = c.plan_mitigation(Instant::now()).unwrap();
+        let c2 = RebuildController::new(ControllerConfig::default(), 2);
+        let b = c2.plan_mitigation(Instant::now()).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn buckets_override() {
+        let keep = RebuildController::new(ControllerConfig::default(), 3);
+        assert_eq!(keep.buckets_for(64), 64);
+        let grow = RebuildController::new(
+            ControllerConfig {
+                cooldown: Duration::ZERO,
+                rebuild_buckets: Some(4096),
+            },
+            3,
+        );
+        assert_eq!(grow.buckets_for(64), 4096);
+    }
+
+    #[test]
+    fn events_recorded() {
+        let c = RebuildController::new(ControllerConfig::default(), 9);
+        c.record(777.0, HashFn::Seeded(1), 100, Duration::from_millis(3));
+        let ev = c.events();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].chi2, 777.0);
+        assert_eq!(ev[0].moved, 100);
+    }
+}

@@ -1,0 +1,178 @@
+//! Attack detection: a lock-free key sampler fed by the KV workers and
+//! the chi-square skew test evaluated through the AOT detector artifact.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Lock-free ring buffer of recently *inserted* keys (collision attacks
+/// are insert floods). Writers race benignly: a slot may be overwritten
+/// before it is ever read — sampling, not logging.
+pub struct KeySampler {
+    ring: Box<[AtomicU64]>,
+    /// Total pushes (monotone; ring index = pushes % capacity).
+    pushes: AtomicUsize,
+}
+
+impl KeySampler {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity.is_power_of_two(), "capacity must be 2^k");
+        Self {
+            ring: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            pushes: AtomicUsize::new(0),
+        }
+    }
+
+    /// Record a key (hot path: one fetch_add + one store, both relaxed).
+    #[inline]
+    pub fn push(&self, key: u64) {
+        let i = self.pushes.fetch_add(1, Ordering::Relaxed) & (self.ring.len() - 1);
+        self.ring[i].store(key, Ordering::Relaxed);
+    }
+
+    /// Keys recorded so far (saturating at capacity for the snapshot).
+    pub fn occupancy(&self) -> usize {
+        self.pushes.load(Ordering::Relaxed).min(self.ring.len())
+    }
+
+    pub fn total_pushes(&self) -> usize {
+        self.pushes.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot the most recent `occupancy()` keys.
+    pub fn snapshot(&self) -> Vec<u64> {
+        let n = self.occupancy();
+        (0..n).map(|i| self.ring[i].load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Detector policy knobs.
+#[derive(Clone, Debug)]
+pub struct DetectorConfig {
+    /// Ring capacity (power of two). 4096 matches the artifact batch.
+    pub sample_capacity: usize,
+    /// How often the analytics thread evaluates the sample.
+    pub period: Duration,
+    /// Alarm threshold in chi2 standard deviations above the null mean:
+    /// chi2 > (nbins-1) + sigma * sqrt(2 (nbins-1)).
+    pub sigma: f32,
+    /// Minimum sampled keys before verdicts are meaningful.
+    pub min_samples: usize,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> Self {
+        Self {
+            sample_capacity: 4096,
+            period: Duration::from_millis(50),
+            sigma: 8.0,
+            min_samples: 1024,
+        }
+    }
+}
+
+/// Outcome of one detector evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SkewVerdict {
+    /// Not enough data yet.
+    Insufficient,
+    /// Distribution consistent with a healthy hash.
+    Healthy { chi2: f32 },
+    /// Bucket-load skew beyond the threshold: collision attack or
+    /// pathological workload; a rebuild is warranted.
+    Attack { chi2: f32, max_load: i32 },
+}
+
+impl SkewVerdict {
+    /// Classify a detector output against the policy threshold.
+    pub fn classify(
+        cfg: &DetectorConfig,
+        samples: usize,
+        chi2: f32,
+        max_load: i32,
+        nbins: usize,
+    ) -> SkewVerdict {
+        if samples < cfg.min_samples {
+            return SkewVerdict::Insufficient;
+        }
+        let dof = (nbins - 1) as f32;
+        let threshold = dof + cfg.sigma * (2.0 * dof).sqrt();
+        if chi2 > threshold {
+            SkewVerdict::Attack { chi2, max_load }
+        } else {
+            SkewVerdict::Healthy { chi2 }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_wraps_and_snapshots() {
+        let s = KeySampler::new(8);
+        assert_eq!(s.occupancy(), 0);
+        for k in 0..5u64 {
+            s.push(k);
+        }
+        assert_eq!(s.occupancy(), 5);
+        assert_eq!(s.snapshot(), vec![0, 1, 2, 3, 4]);
+        for k in 5..20u64 {
+            s.push(k);
+        }
+        assert_eq!(s.occupancy(), 8);
+        assert_eq!(s.total_pushes(), 20);
+        let snap = s.snapshot();
+        assert_eq!(snap.len(), 8);
+        // Ring holds the latest window (16..20 wrapped over 8..16).
+        assert!(snap.contains(&19));
+    }
+
+    #[test]
+    #[should_panic(expected = "2^k")]
+    fn sampler_requires_pow2() {
+        KeySampler::new(12);
+    }
+
+    #[test]
+    fn verdict_thresholds() {
+        let cfg = DetectorConfig {
+            min_samples: 100,
+            sigma: 8.0,
+            ..Default::default()
+        };
+        let nbins = 256;
+        // dof = 255, threshold = 255 + 8*sqrt(510) ~= 435.7
+        assert_eq!(
+            SkewVerdict::classify(&cfg, 50, 9999.0, 100, nbins),
+            SkewVerdict::Insufficient
+        );
+        assert!(matches!(
+            SkewVerdict::classify(&cfg, 4096, 300.0, 30, nbins),
+            SkewVerdict::Healthy { .. }
+        ));
+        assert!(matches!(
+            SkewVerdict::classify(&cfg, 4096, 500.0, 900, nbins),
+            SkewVerdict::Attack { .. }
+        ));
+    }
+
+    #[test]
+    fn concurrent_pushes_do_not_lose_counts() {
+        let s = std::sync::Arc::new(KeySampler::new(1024));
+        let mut hs = Vec::new();
+        for t in 0..4u64 {
+            let s2 = s.clone();
+            hs.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    s2.push(t * 100_000 + i);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(s.total_pushes(), 40_000);
+        assert_eq!(s.occupancy(), 1024);
+    }
+}

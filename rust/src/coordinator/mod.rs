@@ -1,0 +1,138 @@
+//! The serving-shaped L3 coordinator: a concurrent KV service built on
+//! [`DHashMap`] with request batching, worker routing, hash-collision
+//! attack detection through the AOT analytics artifacts, and automatic
+//! rebuild mitigation.
+//!
+//! Role in the reproduction: the paper motivates dynamic hash tables with
+//! bursty / adversarial workloads reaching servers in batches (§1,
+//! rationale 4). This module is that server:
+//!
+//! ```text
+//!  clients ──► Batcher ──► worker queue ──► KV workers ──► DHashMap
+//!                 │ (size/time batching)         │
+//!                 │                              └─ key samples ─┐
+//!                 ▼                                              ▼
+//!            (optional batch pre-hash          Analytics thread: PJRT
+//!             via batch_hash.hlo.txt)          detector.hlo.txt → chi²
+//!                                                   │ chi² > threshold
+//!                                                   ▼
+//!                                            RebuildController
+//!                                            (new seed → ht_rebuild)
+//! ```
+//!
+//! Python never runs here: the analytics thread executes pre-compiled
+//! HLO through the in-process PJRT CPU client ([`crate::runtime`]).
+
+mod batcher;
+mod controller;
+mod detector;
+mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig, Request, Response};
+pub use controller::{ControllerConfig, RebuildController, RebuildEvent};
+pub use detector::{DetectorConfig, KeySampler, SkewVerdict};
+pub use server::{Coordinator, CoordinatorConfig, CoordinatorStats};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhash::HashFn;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn quick_config() -> CoordinatorConfig {
+        CoordinatorConfig {
+            nbuckets: 64,
+            hash: HashFn::Seeded(7),
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+                pre_hash: false,
+            },
+            detector: DetectorConfig {
+                sample_capacity: 1024,
+                period: Duration::from_millis(20),
+                sigma: 8.0,
+                min_samples: 256,
+            },
+            controller: ControllerConfig {
+                cooldown: Duration::from_millis(50),
+                rebuild_buckets: None,
+            },
+            // Analytics requires artifacts; unit tests run without them.
+            enable_analytics: false,
+        }
+    }
+
+    #[test]
+    fn coordinator_serves_requests() {
+        let c = Arc::new(Coordinator::start(quick_config()).unwrap());
+        assert_eq!(c.execute(Request::put(1, 10)), Response::Ok);
+        assert_eq!(c.execute(Request::get(1)), Response::Value(10));
+        assert_eq!(c.execute(Request::del(1)), Response::Ok);
+        assert_eq!(c.execute(Request::get(1)), Response::Missing);
+        c.shutdown();
+    }
+
+    #[test]
+    fn coordinator_batch_roundtrip() {
+        let c = Arc::new(Coordinator::start(quick_config()).unwrap());
+        let reqs: Vec<Request> = (0..100u64).map(|k| Request::put(k, k * 2)).collect();
+        let resps = c.execute_many(reqs);
+        assert!(resps.iter().all(|r| *r == Response::Ok));
+        let gets: Vec<Request> = (0..100u64).map(Request::get).collect();
+        let resps = c.execute_many(gets);
+        for (k, r) in resps.iter().enumerate() {
+            assert_eq!(*r, Response::Value(k as u64 * 2));
+        }
+        let stats = c.stats();
+        assert!(stats.total_requests >= 200);
+        assert!(stats.total_batches >= 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn put_overwrites() {
+        let c = Arc::new(Coordinator::start(quick_config()).unwrap());
+        c.execute(Request::put(5, 1));
+        c.execute(Request::put(5, 2));
+        assert_eq!(c.execute(Request::get(5)), Response::Value(2));
+        c.shutdown();
+    }
+
+    #[test]
+    fn manual_rebuild_keeps_data() {
+        let c = Arc::new(Coordinator::start(quick_config()).unwrap());
+        for k in 0..200u64 {
+            c.execute(Request::put(k, k));
+        }
+        c.force_rebuild(128, HashFn::Seeded(0x1234));
+        for k in 0..200u64 {
+            assert_eq!(c.execute(Request::get(k)), Response::Value(k), "key {k}");
+        }
+        assert_eq!(c.stats().rebuilds, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let c = Arc::new(Coordinator::start(quick_config()).unwrap());
+        let mut hs = Vec::new();
+        for t in 0..4u64 {
+            let c2 = c.clone();
+            hs.push(std::thread::spawn(move || {
+                for i in 0..200u64 {
+                    let k = t * 1000 + i;
+                    assert_eq!(c2.execute(Request::put(k, k)), Response::Ok);
+                    assert_eq!(c2.execute(Request::get(k)), Response::Value(k));
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.stats().total_requests, 4 * 400);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,369 @@
+//! The coordinator proper: wires batcher → workers → DHashMap, plus the
+//! analytics thread (PJRT detector + rebuild controller).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{Batch, Batcher, BatcherConfig, Entry, Request, Response};
+use super::controller::{ControllerConfig, RebuildController};
+use super::detector::{DetectorConfig, KeySampler, SkewVerdict};
+use crate::dhash::{DHashMap, HashFn};
+use crate::rcu::RcuThread;
+use crate::runtime::{Engine, HashKind};
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub nbuckets: usize,
+    pub hash: HashFn,
+    /// KV worker threads.
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    pub detector: DetectorConfig,
+    pub controller: ControllerConfig,
+    /// Load the AOT artifacts and run the detector/mitigation loop.
+    /// Requires `make artifacts` to have produced `artifacts/`.
+    pub enable_analytics: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            nbuckets: 4096,
+            hash: HashFn::Seeded(0xD1E5_5EED),
+            workers: 2,
+            batcher: BatcherConfig::default(),
+            detector: DetectorConfig::default(),
+            controller: ControllerConfig::default(),
+            enable_analytics: true,
+        }
+    }
+}
+
+/// Aggregate service counters.
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorStats {
+    pub total_requests: u64,
+    pub total_batches: u64,
+    /// Mitigation + manual rebuilds completed.
+    pub rebuilds: u64,
+    /// chi2 from the most recent detector evaluation (0 until evaluated).
+    pub last_chi2: f32,
+    /// Detector evaluations performed.
+    pub detector_runs: u64,
+}
+
+struct Shared {
+    map: DHashMap,
+    sampler: KeySampler,
+    stop: AtomicBool,
+    total_requests: AtomicU64,
+    total_batches: AtomicU64,
+    rebuilds: AtomicU64,
+    detector_runs: AtomicU64,
+    /// f32 bits of the last chi2.
+    last_chi2: AtomicU64,
+    controller: RebuildController,
+}
+
+/// The running service. Create with [`Coordinator::start`], stop with
+/// [`Coordinator::shutdown`].
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    input: Mutex<Option<Sender<Entry>>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    cfg: CoordinatorConfig,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> anyhow::Result<Coordinator> {
+        let shared = Arc::new(Shared {
+            map: DHashMap::with_hash(cfg.nbuckets, cfg.hash),
+            sampler: KeySampler::new(cfg.detector.sample_capacity),
+            stop: AtomicBool::new(false),
+            total_requests: AtomicU64::new(0),
+            total_batches: AtomicU64::new(0),
+            rebuilds: AtomicU64::new(0),
+            detector_runs: AtomicU64::new(0),
+            last_chi2: AtomicU64::new(0),
+            controller: RebuildController::new(
+                cfg.controller.clone(),
+                // Seed entropy: wall clock + ASLR'd stack address. Not
+                // cryptographic, but unpredictable enough that an attacker
+                // cannot precompute collisions for the *next* seed.
+                crate::util::rng::mix64(
+                    std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .map(|d| d.as_nanos() as u64)
+                        .unwrap_or(0)
+                        ^ (&cfg as *const _ as u64),
+                ),
+            ),
+        });
+
+        let (client_tx, client_rx) = channel::<Entry>();
+        let (batch_tx, batch_rx) = channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let mut threads = Vec::new();
+
+        // Batcher thread.
+        {
+            let cfg_b = cfg.batcher.clone();
+            let shared2 = shared.clone();
+            // Pre-hashing needs its own Engine (PjRtClient is not Send,
+            // so each thread that executes artifacts owns one).
+            let want_prehash = cfg_b.pre_hash && cfg.enable_analytics;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("dhash-batcher".into())
+                    .spawn(move || {
+                        let batcher = Batcher::new(cfg_b);
+                        let engine = if want_prehash {
+                            Engine::load(&Engine::default_dir()).ok()
+                        } else {
+                            None
+                        };
+                        let g = RcuThread::register();
+                        loop {
+                            // Collect OFFLINE (blocking recv must not
+                            // stall grace periods), then route online.
+                            let Some(entries) =
+                                g.offline_while(|| batcher.collect(&client_rx))
+                            else {
+                                break; // input closed: shutdown
+                            };
+                            let b = match engine.as_ref() {
+                                Some(e) => {
+                                    // Hash oracle: the table's *current*
+                                    // function, evaluated via the AOT
+                                    // artifact.
+                                    let oracle = |keys: &[u64]| -> Option<Vec<i32>> {
+                                        let hash = shared2.map.hash_fn(&g);
+                                        let nb = shared2.map.nbuckets(&g) as u64;
+                                        let (kind, seed) = HashKind::of(hash);
+                                        e.batch_hash(keys, seed, nb, kind).ok()
+                                    };
+                                    batcher.route(entries, Some(&oracle))
+                                }
+                                None => batcher.route(entries, None),
+                            };
+                            g.quiescent_state();
+                            shared2.total_batches.fetch_add(1, Ordering::Relaxed);
+                            if batch_tx.send(b).is_err() {
+                                break;
+                            }
+                        }
+                    })?,
+            );
+        }
+
+        // KV workers.
+        for w in 0..cfg.workers.max(1) {
+            let shared2 = shared.clone();
+            let rx = batch_rx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("dhash-worker-{w}"))
+                    .spawn(move || {
+                        let g = RcuThread::register();
+                        loop {
+                            // Block offline so grace periods keep flowing
+                            // while we wait for work.
+                            let batch = g.offline_while(|| {
+                                let rx = rx.lock().unwrap();
+                                rx.recv().ok()
+                            });
+                            let Some(batch) = batch else { break };
+                            for (req, reply, seq) in batch.entries {
+                                let resp = match req {
+                                    Request::Get { key } => match shared2.map.lookup(&g, key) {
+                                        Some(v) => Response::Value(v),
+                                        None => Response::Missing,
+                                    },
+                                    Request::Put { key, val } => {
+                                        // Upsert: last-wins.
+                                        if shared2.map.insert(&g, key, val).is_err() {
+                                            shared2.map.delete(&g, key);
+                                            let _ = shared2.map.insert(&g, key, val);
+                                        }
+                                        shared2.sampler.push(key);
+                                        Response::Ok
+                                    }
+                                    Request::Del { key } => {
+                                        if shared2.map.delete(&g, key) {
+                                            Response::Ok
+                                        } else {
+                                            Response::Missing
+                                        }
+                                    }
+                                };
+                                shared2.total_requests.fetch_add(1, Ordering::Relaxed);
+                                let _ = reply.send((seq, resp));
+                            }
+                            g.quiescent_state();
+                        }
+                    })?,
+            );
+        }
+
+        // Analytics thread: detector + mitigation. The Engine is !Send
+        // (PjRtClient is Rc-based), so it is constructed *inside* the
+        // thread; load errors are reported back over a ready channel.
+        if cfg.enable_analytics {
+            let shared2 = shared.clone();
+            let det = cfg.detector.clone();
+            let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("dhash-analytics".into())
+                    .spawn(move || {
+                        let engine = match Engine::load(&Engine::default_dir()) {
+                            Ok(e) => {
+                                let _ = ready_tx.send(Ok(()));
+                                e
+                            }
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        let g = RcuThread::register();
+                        while !shared2.stop.load(Ordering::Relaxed) {
+                            g.offline_while(|| std::thread::sleep(det.period));
+                            let keys = shared2.sampler.snapshot();
+                            if keys.is_empty() {
+                                continue;
+                            }
+                            let hash = shared2.map.hash_fn(&g);
+                            let nb = shared2.map.nbuckets(&g) as u64;
+                            let (kind, seed) = HashKind::of(hash);
+                            let Ok(d) = engine.detect(&keys, seed, nb, kind) else {
+                                continue;
+                            };
+                            shared2.detector_runs.fetch_add(1, Ordering::Relaxed);
+                            shared2
+                                .last_chi2
+                                .store(d.chi2.to_bits() as u64, Ordering::Relaxed);
+                            let verdict = SkewVerdict::classify(
+                                &det,
+                                keys.len(),
+                                d.chi2,
+                                d.max_load,
+                                engine.nbins,
+                            );
+                            if let SkewVerdict::Attack { chi2, .. } = verdict {
+                                if let Some(new_hash) =
+                                    shared2.controller.plan_mitigation(Instant::now())
+                                {
+                                    let nb = shared2
+                                        .controller
+                                        .buckets_for(shared2.map.nbuckets(&g));
+                                    if let Ok(stats) = shared2.map.rebuild(&g, nb, new_hash) {
+                                        shared2.rebuilds.fetch_add(1, Ordering::Relaxed);
+                                        shared2.controller.record(
+                                            chi2,
+                                            new_hash,
+                                            stats.moved,
+                                            stats.elapsed,
+                                        );
+                                    }
+                                }
+                            }
+                            g.quiescent_state();
+                        }
+                    })?,
+            );
+            // Propagate artifact-loading failures to the caller.
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("analytics thread died during startup"))??;
+        }
+
+        Ok(Coordinator {
+            shared,
+            input: Mutex::new(Some(client_tx)),
+            threads: Mutex::new(threads),
+            cfg,
+        })
+    }
+
+    /// Execute one request (blocks for the reply).
+    pub fn execute(&self, req: Request) -> Response {
+        self.execute_many(vec![req]).pop().unwrap()
+    }
+
+    /// Execute a batch of requests, returning responses in order.
+    pub fn execute_many(&self, reqs: Vec<Request>) -> Vec<Response> {
+        let n = reqs.len();
+        let (reply_tx, reply_rx) = channel();
+        {
+            let input = self.input.lock().unwrap();
+            let tx = input.as_ref().expect("coordinator is shut down");
+            for (i, r) in reqs.into_iter().enumerate() {
+                tx.send((r, reply_tx.clone(), i)).expect("batcher alive");
+            }
+        }
+        drop(reply_tx);
+        let mut out = vec![Response::Missing; n];
+        for _ in 0..n {
+            let (i, resp) = reply_rx.recv().expect("workers alive");
+            out[i] = resp;
+        }
+        out
+    }
+
+    /// Trigger a rebuild right now (ops tooling / tests).
+    pub fn force_rebuild(&self, nbuckets: usize, hash: HashFn) -> bool {
+        let g = RcuThread::register();
+        let ok = self.shared.map.rebuild(&g, nbuckets, hash).is_ok();
+        if ok {
+            self.shared.rebuilds.fetch_add(1, Ordering::Relaxed);
+        }
+        g.quiescent_state();
+        ok
+    }
+
+    /// The underlying map (shared with the service; use a registered
+    /// guard).
+    pub fn map(&self) -> &DHashMap {
+        &self.shared.map
+    }
+
+    /// Mitigation rebuild history.
+    pub fn rebuild_events(&self) -> Vec<super::RebuildEvent> {
+        self.shared.controller.events()
+    }
+
+    pub fn stats(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            total_requests: self.shared.total_requests.load(Ordering::Relaxed),
+            total_batches: self.shared.total_batches.load(Ordering::Relaxed),
+            rebuilds: self.shared.rebuilds.load(Ordering::Relaxed),
+            last_chi2: f32::from_bits(self.shared.last_chi2.load(Ordering::Relaxed) as u32),
+            detector_runs: self.shared.detector_runs.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Stop all service threads and wait for them.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Closing the input channel unwinds batcher then workers.
+        *self.input.lock().unwrap() = None;
+        let mut threads = self.threads.lock().unwrap();
+        for h in threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,78 @@
+//! The user-replaceable hash function (paper Alg. 2: `ht->hash`).
+//!
+//! `Seeded` is the production family — the splitmix64 finalizer keyed by
+//! seed, the exact same mix the L1 Pallas kernel computes (see
+//! `python/compile/kernels/hash_kernel.py` and the agreement tests).
+//! `Modulo` is a deliberately weak function (`key % nbuckets`) kept for
+//! the collision-attack experiments: an adversary can trivially flood one
+//! bucket, which is precisely the situation `rebuild` exists to escape.
+
+use crate::util::rng::mix64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashFn {
+    /// `mix64(key ^ seed) % nbuckets` — strong, keyed.
+    Seeded(u64),
+    /// `key % nbuckets` — weak, attackable (evaluation use).
+    Modulo,
+}
+
+impl HashFn {
+    /// Map a key to a bucket index in `[0, nbuckets)`.
+    #[inline(always)]
+    pub fn bucket(self, key: u64, nbuckets: usize) -> usize {
+        debug_assert!(nbuckets > 0);
+        match self {
+            HashFn::Seeded(seed) => (mix64(key ^ seed) % nbuckets as u64) as usize,
+            HashFn::Modulo => (key % nbuckets as u64) as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_spreads_sequential_keys() {
+        let n = 64;
+        let mut loads = vec![0usize; n];
+        for k in 0..6400u64 {
+            loads[HashFn::Seeded(7).bucket(k, n)] += 1;
+        }
+        let max = *loads.iter().max().unwrap();
+        // Poisson with mean 100: max should be well under 2x mean.
+        assert!(max < 200, "max load {max}");
+    }
+
+    #[test]
+    fn modulo_is_attackable() {
+        let n = 64;
+        let mut loads = vec![0usize; n];
+        // Attack keys: all congruent to 3 mod 64.
+        for i in 0..1000u64 {
+            loads[HashFn::Modulo.bucket(3 + i * 64, n)] += 1;
+        }
+        assert_eq!(loads[3], 1000);
+        assert_eq!(loads.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn different_seeds_different_placement() {
+        let n = 1024;
+        let moved = (0..1000u64)
+            .filter(|&k| HashFn::Seeded(1).bucket(k, n) != HashFn::Seeded(2).bucket(k, n))
+            .count();
+        assert!(moved > 950, "{moved}/1000 moved");
+    }
+
+    #[test]
+    fn bucket_always_in_range() {
+        for n in [1usize, 2, 3, 64, 1000] {
+            for k in [0u64, 1, 63, u64::MAX] {
+                assert!(HashFn::Seeded(9).bucket(k, n) < n);
+                assert!(HashFn::Modulo.bucket(k, n) < n);
+            }
+        }
+    }
+}

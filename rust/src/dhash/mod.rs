@@ -1,0 +1,443 @@
+//! DHash — the paper's dynamic hash table (Algorithms 2–6).
+//!
+//! A `DHashMap` owns one hash table (an array of [`BucketSet`] buckets)
+//! plus, while a rebuild is in progress, a second one it is migrating to.
+//! [`DHashMap::rebuild`] swaps in an arbitrary *new hash function* (not
+//! merely a resize) without blocking concurrent lookup / insert / delete.
+//!
+//! The migration protocol (§3–§4): the rebuild thread distributes each
+//! node with *regular* list operations — delete from the old table, insert
+//! into the new — accepting a short **hazard period** in which the node is
+//! in neither table. During it, the node stays reachable through the
+//! per-map pointer `rebuild_cur`, and every lookup/delete checks, in this
+//! exact order:
+//!
+//! 1. the old table,
+//! 2. the node pointed to by `rebuild_cur`,
+//! 3. the new table.
+//!
+//! Lemma 4.1 (proved in the paper, exercised by `tests::` here and the
+//! `rust/tests/rebuild_torture.rs` integration suite) shows this order
+//! never misses a present key, because the rebuild writes in the opposite
+//! order: `rebuild_cur := n` → delete(old) → insert(new) → `rebuild_cur :=
+//! NULL`.
+
+mod hashfn;
+mod table;
+
+pub use hashfn::HashFn;
+pub use table::RebuildStats;
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+
+use crate::lflist::{
+    BucketSet, DeleteOutcome, MichaelList, Node, LOGICALLY_REMOVED,
+};
+use crate::rcu::{synchronize_rcu, RcuThread};
+use table::Table;
+
+/// Error returned by [`DHashMap::rebuild`] when another rebuild holds the
+/// rebuild lock (the paper's `-EBUSY`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RebuildBusy;
+
+impl std::fmt::Display for RebuildBusy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a rebuild operation is already in progress")
+    }
+}
+
+impl std::error::Error for RebuildBusy {}
+
+/// Error returned by [`DHashMap::insert`] on duplicate key (`-EEXIST`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KeyExists;
+
+impl std::fmt::Display for KeyExists {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a node with this key already exists")
+    }
+}
+
+impl std::error::Error for KeyExists {}
+
+/// The dynamic hash table (paper Algorithm 2), generic over the bucket
+/// set algorithm (paper goal 2 — modularity). `MichaelList` is the
+/// default and the configuration evaluated in the paper.
+pub struct DHashMap<B: BucketSet = MichaelList> {
+    /// `htp`: the current table. Replaced by rebuild (Alg. 3 line 42).
+    cur: AtomicPtr<Table<B>>,
+    /// The node currently in its hazard period, or null (Alg. 2).
+    rebuild_cur: AtomicPtr<Node>,
+    /// Serializes rebuild attempts (Alg. 2 `rebuild_lock`; trylock only).
+    rebuild_lock: std::sync::Mutex<()>,
+    /// Completed rebuild count (metrics).
+    rebuilds: AtomicU64,
+}
+
+// SAFETY: all shared state is atomics + RCU-managed tables.
+unsafe impl<B: BucketSet> Send for DHashMap<B> {}
+unsafe impl<B: BucketSet> Sync for DHashMap<B> {}
+
+impl DHashMap<MichaelList> {
+    /// A map with `nbuckets` buckets hashing with the seeded default
+    /// family (`mix64(key ^ seed) % nbuckets`).
+    pub fn with_buckets(nbuckets: usize, seed: u64) -> Self {
+        Self::with_hash(nbuckets, HashFn::Seeded(seed))
+    }
+}
+
+impl<B: BucketSet> DHashMap<B> {
+    /// A map with an explicit bucket algorithm and hash function
+    /// (`ht_alloc` in Alg. 2).
+    pub fn with_hash(nbuckets: usize, hash: HashFn) -> Self {
+        Self {
+            cur: AtomicPtr::new(Table::alloc(nbuckets, hash)),
+            rebuild_cur: AtomicPtr::new(std::ptr::null_mut()),
+            rebuild_lock: std::sync::Mutex::new(()),
+            rebuilds: AtomicU64::new(0),
+        }
+    }
+
+    #[inline(always)]
+    fn table(&self) -> &Table<B> {
+        // SAFETY: `cur` is never null; the pointed-to table is freed only
+        // after a grace period follows its replacement, and all callers
+        // hold a read-side critical section.
+        unsafe { &*self.cur.load(Ordering::SeqCst) }
+    }
+
+    /// Lookup (paper Algorithm 4). Returns a copy of the value.
+    ///
+    /// `u64::MAX` is reserved (bucket sentinel) and is never present.
+    pub fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        if key == u64::MAX {
+            return None;
+        }
+        let _g = guard.read_lock();
+        let htp = self.table();
+        // (1) Search the old (current) hash table.
+        if let Some(n) = htp.bucket(key).find(key) {
+            return Some(n.val.load(Ordering::SeqCst));
+        }
+        // (2) No rebuild in progress -> definitive miss.
+        let htp_new = htp.ht_new.load(Ordering::SeqCst);
+        if htp_new.is_null() {
+            return None;
+        }
+        // smp_rmb (paper line 53) is subsumed by the SeqCst atomics.
+        // (3) Check the node in its hazard period.
+        let cur = self.rebuild_cur.load(Ordering::SeqCst);
+        if !cur.is_null() {
+            // SAFETY: a node reachable through rebuild_cur is reclaimed
+            // only after rebuild_cur is cleared *and* a grace period
+            // passes; we are inside a read-side section.
+            let n = unsafe { &*cur };
+            if n.key == key && !n.logically_removed() {
+                return Some(n.val.load(Ordering::SeqCst));
+            }
+        }
+        // (4) Search the new hash table.
+        // SAFETY: ht_new tables are freed only after replacement + grace
+        // period; non-null here means it is still installed.
+        let htp_new = unsafe { &*htp_new };
+        htp_new
+            .bucket(key)
+            .find(key)
+            .map(|n| n.val.load(Ordering::SeqCst))
+    }
+
+    /// ABLATION ONLY (bench `ablation`, row `hazard`): Algorithm 4
+    /// *without* step (2), the `rebuild_cur` hazard-period check. This is
+    /// deliberately incorrect — it demonstrates the false negatives the
+    /// paper's check-order proof (Lemma 4.1) exists to prevent. Never use
+    /// it for real lookups.
+    #[doc(hidden)]
+    pub fn lookup_skip_hazard_check(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        let _g = guard.read_lock();
+        let htp = self.table();
+        if key == u64::MAX {
+            return None;
+        }
+        if let Some(n) = htp.bucket(key).find(key) {
+            return Some(n.val.load(Ordering::SeqCst));
+        }
+        let htp_new = htp.ht_new.load(Ordering::SeqCst);
+        if htp_new.is_null() {
+            return None;
+        }
+        // SAFETY: as in `lookup`.
+        let htp_new = unsafe { &*htp_new };
+        htp_new
+            .bucket(key)
+            .find(key)
+            .map(|n| n.val.load(Ordering::SeqCst))
+    }
+
+    /// Delete (paper Algorithm 5). Returns true if a node was deleted.
+    pub fn delete(&self, guard: &RcuThread, key: u64) -> bool {
+        if key == u64::MAX {
+            return false;
+        }
+        let _g = guard.read_lock();
+        let htp = self.table();
+        // (1) Try the old table.
+        if let DeleteOutcome::Deleted(_) = htp.bucket(key).delete(key, LOGICALLY_REMOVED) {
+            return true;
+        }
+        let htp_new = htp.ht_new.load(Ordering::SeqCst);
+        if htp_new.is_null() {
+            return false;
+        }
+        // (2) Check the hazard-period node: mark it deleted in place
+        // (paper line 75). The flag is preserved by the rebuild's
+        // re-insert, so the node is born dead in the new table.
+        let cur = self.rebuild_cur.load(Ordering::SeqCst);
+        if !cur.is_null() {
+            // SAFETY: as in lookup.
+            let n = unsafe { &*cur };
+            if n.key == key {
+                let prev = n.set_flag(LOGICALLY_REMOVED);
+                if prev & LOGICALLY_REMOVED == 0 {
+                    // We won the logical deletion.
+                    return true;
+                }
+                // Already deleted by someone else; fall through.
+            }
+        }
+        // (3) Try the new table.
+        // SAFETY: as in lookup.
+        let htp_new = unsafe { &*htp_new };
+        matches!(
+            htp_new.bucket(key).delete(key, LOGICALLY_REMOVED),
+            DeleteOutcome::Deleted(_)
+        )
+    }
+
+    /// Insert (paper Algorithm 6). Fails with [`KeyExists`] if the key is
+    /// already present.
+    pub fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> Result<(), KeyExists> {
+        assert_ne!(key, u64::MAX, "key u64::MAX is reserved (bucket sentinel)");
+        let node = Node::alloc(key, val);
+        let _g = guard.read_lock();
+        let htp = self.table();
+        let htp_new = htp.ht_new.load(Ordering::SeqCst);
+        // No rebuild -> old table; rebuild in progress -> new table
+        // (Lemma 4.3: the RCU barrier in rebuild makes this safe).
+        let bucket = if htp_new.is_null() {
+            htp.bucket(key)
+        } else {
+            // SAFETY: as in lookup.
+            unsafe { &*htp_new }.bucket(key)
+        };
+        match bucket.insert(node) {
+            Ok(()) => Ok(()),
+            Err(n) => {
+                // SAFETY: rejected nodes were never published (paper frees
+                // directly on line 97).
+                unsafe { Node::free(n) };
+                Err(KeyExists)
+            }
+        }
+    }
+
+    /// Rebuild (paper Algorithm 3): migrate every node into a fresh table
+    /// with `nbuckets` buckets and hash function `hash`, concurrently with
+    /// other operations. Returns stats, or [`RebuildBusy`] if another
+    /// rebuild is running.
+    ///
+    /// The caller must *not* be inside a read-side critical section; its
+    /// registration is placed offline across the internal grace-period
+    /// waits.
+    pub fn rebuild(
+        &self,
+        guard: &RcuThread,
+        nbuckets: usize,
+        hash: HashFn,
+    ) -> Result<RebuildStats, RebuildBusy> {
+        let t0 = std::time::Instant::now();
+        // Line 19: trylock; concurrent rebuilds get -EBUSY.
+        let lock = match self.rebuild_lock.try_lock() {
+            Ok(g) => g,
+            Err(_) => return Err(RebuildBusy),
+        };
+
+        let htp_ptr = self.cur.load(Ordering::SeqCst);
+        // SAFETY: we hold the rebuild lock; `cur` can only be replaced by
+        // a rebuild, so the table stays alive for this whole function.
+        let htp = unsafe { &*htp_ptr };
+
+        // Line 21-22: allocate and publish the new table.
+        let htp_new_ptr = Table::<B>::alloc(nbuckets, hash);
+        // SAFETY: freshly allocated, never null.
+        let htp_new = unsafe { &*htp_new_ptr };
+        htp.ht_new.store(htp_new_ptr, Ordering::SeqCst);
+
+        // Line 23 (barrier 1): wait for ops that may not see ht_new yet.
+        guard.offline_while(synchronize_rcu);
+
+        // Lines 24-39: distribute every node, head-first.
+        let mut moved = 0u64;
+        let skipped = 0u64;
+        let mut dropped_dup = 0u64;
+        for bucket in htp.buckets() {
+            loop {
+                // Lines 25-29 fused (§Perf opt 2): take the head node
+                // for distribution in one traversal; the `publish`
+                // callback keeps the paper's ordering (rebuild_cur set
+                // BEFORE the logical delete, so a node is reachable via
+                // rebuild_cur from the moment it can be absent from the
+                // old table — the crux of Lemma 4.1).
+                let popped = bucket.take_first_for_distribution(&mut |cand| {
+                    // Line 26-27: publish the hazard-period pointer for
+                    // every candidate BEFORE its logical delete. Release
+                    // is the paper's smp_wmb (§Perf opt 1).
+                    self.rebuild_cur.store(cand, Ordering::Release);
+                });
+                match popped {
+                    None => {
+                        // A raced candidate may linger in rebuild_cur; a
+                        // user delete could free it after its own grace
+                        // period while the pointer still dangles (the
+                        // paper's pseudocode has the same hole on its
+                        // line-30 `continue` path — see DESIGN.md
+                        // §Deviations). Clear before leaving the bucket.
+                        self.rebuild_cur
+                            .store(std::ptr::null_mut(), Ordering::Release);
+                        break;
+                    }
+                    Some(n) => {
+                        // SAFETY: unlinked by the pop; owned by us.
+                        let key = unsafe { (*n).key };
+                        let _ = skipped; // concurrent-delete losses are folded into the pop loop
+                        // Line 32 (prepare_node) — DELIBERATE DEVIATION
+                        // from the paper's pseudocode: we do NOT clear
+                        // IS_BEING_DISTRIBUTED here. Clearing it would
+                        // make the node's `next` word byte-identical to
+                        // its pre-distribution value, re-arming stale
+                        // unlink/link CASes held by concurrent ops whose
+                        // `prev` is this node (an ABA the paper's removed
+                        // tag field used to prevent). Instead, `insert`
+                        // clears the bit atomically with publishing the
+                        // node's new successor — a single transition from
+                        // old-chain view to new-chain view. See
+                        // DESIGN.md §Deviations.
+                        // Lines 33-34: insert into the new table.
+                        match htp_new.bucket(key).insert(n) {
+                            Ok(()) => {
+                                moved += 1;
+                                // Line 37-38: leave the hazard period
+                                // (Release = the paper's smp_wmb).
+                                self.rebuild_cur
+                                    .store(std::ptr::null_mut(), Ordering::Release);
+                            }
+                            Err(n) => {
+                                // Line 35: a concurrent insert won the new
+                                // table; drop the old node. NOTE: we clear
+                                // rebuild_cur BEFORE the deferred free —
+                                // the paper's pseudocode orders these the
+                                // other way, which would let a reader
+                                // starting mid-grace-period still fetch
+                                // the pointer (see DESIGN.md §Deviations).
+                                self.rebuild_cur
+                                    .store(std::ptr::null_mut(), Ordering::SeqCst);
+                                // SAFETY: not in any table; unreachable
+                                // once rebuild_cur is cleared.
+                                unsafe { Node::defer_free(n) };
+                                dropped_dup += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Line 41: wait for ops still accessing nodes via old buckets.
+        guard.offline_while(synchronize_rcu);
+        // Line 42: install the new table.
+        self.cur.store(htp_new_ptr, Ordering::SeqCst);
+        // Line 43: wait for ops still referencing the old table.
+        guard.offline_while(synchronize_rcu);
+        // Lines 44-45: release the lock, free the old table.
+        drop(lock);
+        // SAFETY: unpublished for a full grace period; leftover nodes in
+        // its buckets (marked-but-still-linked residue) are freed by the
+        // table's Drop, which has exclusive access now.
+        unsafe { drop(Box::from_raw(htp_ptr)) };
+
+        self.rebuilds.fetch_add(1, Ordering::Relaxed);
+        Ok(RebuildStats {
+            moved,
+            skipped,
+            dropped_dup,
+            nbuckets,
+            elapsed: t0.elapsed(),
+        })
+    }
+
+    /// Number of completed rebuilds.
+    pub fn rebuild_count(&self) -> u64 {
+        self.rebuilds.load(Ordering::Relaxed)
+    }
+
+    /// Current bucket count.
+    pub fn nbuckets(&self, guard: &RcuThread) -> usize {
+        let _g = guard.read_lock();
+        self.table().nbuckets
+    }
+
+    /// Current hash function.
+    pub fn hash_fn(&self, guard: &RcuThread) -> HashFn {
+        let _g = guard.read_lock();
+        self.table().hash
+    }
+
+    /// Live node count — O(n) scan (diagnostics; racy under concurrency).
+    pub fn len(&self, guard: &RcuThread) -> usize {
+        let _g = guard.read_lock();
+        self.table().buckets().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self, guard: &RcuThread) -> bool {
+        self.len(guard) == 0
+    }
+
+    /// Per-bucket live-node counts of the *current* table (the collision
+    /// diagnostic the coordinator's detector cross-checks).
+    pub fn bucket_loads(&self, guard: &RcuThread) -> Vec<usize> {
+        let _g = guard.read_lock();
+        self.table().buckets().map(|b| b.len()).collect()
+    }
+
+    /// Sorted snapshot of all live `(key, value)` pairs (test use; racy
+    /// under concurrency).
+    pub fn snapshot(&self, guard: &RcuThread) -> Vec<(u64, u64)> {
+        let _g = guard.read_lock();
+        let mut out: Vec<(u64, u64)> = self.table().buckets().flat_map(|b| b.collect()).collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+impl<B: BucketSet> Drop for DHashMap<B> {
+    fn drop(&mut self) {
+        // Exclusive access: no concurrent ops, no rebuild in flight (it
+        // would borrow &self). A grace period covers stragglers that might
+        // still be referenced by queued call_rcu callbacks? No — callbacks
+        // never touch tables, only nodes they own. Direct free is safe.
+        let cur = self.cur.load(Ordering::SeqCst);
+        if !cur.is_null() {
+            // SAFETY: exclusive; Table::drop drains buckets.
+            unsafe {
+                let ht_new = (*cur).ht_new.load(Ordering::SeqCst);
+                if !ht_new.is_null() {
+                    drop(Box::from_raw(ht_new));
+                }
+                drop(Box::from_raw(cur));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,70 @@
+//! The table backbone (paper Alg. 2 `struct ht`): a bucket array, the
+//! hash function, and the `ht_new` forwarding pointer set during rebuild.
+
+use std::sync::atomic::AtomicPtr;
+use std::time::Duration;
+
+use super::HashFn;
+use crate::lflist::BucketSet;
+
+pub(super) struct Table<B: BucketSet> {
+    pub nbuckets: usize,
+    pub hash: HashFn,
+    pub bkts: Box<[B]>,
+    /// Null unless a rebuild is migrating this table into a successor.
+    pub ht_new: AtomicPtr<Table<B>>,
+}
+
+impl<B: BucketSet> Table<B> {
+    /// `ht_alloc` (Alg. 2): heap-allocate a table with empty buckets.
+    pub fn alloc(nbuckets: usize, hash: HashFn) -> *mut Table<B> {
+        assert!(nbuckets > 0, "hash table needs at least one bucket");
+        let bkts: Box<[B]> = (0..nbuckets).map(|_| B::new()).collect();
+        Box::into_raw(Box::new(Table {
+            nbuckets,
+            hash,
+            bkts,
+            ht_new: AtomicPtr::new(std::ptr::null_mut()),
+        }))
+    }
+
+    /// The bucket for `key` under this table's hash function.
+    #[inline(always)]
+    pub fn bucket(&self, key: u64) -> &B {
+        &self.bkts[self.hash.bucket(key, self.nbuckets)]
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = &B> {
+        self.bkts.iter()
+    }
+}
+
+// Dropping a table drains its buckets (each BucketSet frees residual
+// nodes in drain_exclusive / its own Drop).
+
+/// Outcome of a completed rebuild (returned by `DHashMap::rebuild`).
+#[derive(Debug, Clone)]
+pub struct RebuildStats {
+    /// Nodes migrated into the new table.
+    pub moved: u64,
+    /// Nodes that vanished under us (concurrently deleted) — Alg. 3 l.30.
+    pub skipped: u64,
+    /// Nodes dropped because a concurrent insert won the new table —
+    /// Alg. 3 l.35.
+    pub dropped_dup: u64,
+    /// Bucket count of the new table.
+    pub nbuckets: usize,
+    /// Wall-clock duration of the whole rebuild (including the three
+    /// grace periods).
+    pub elapsed: Duration,
+}
+
+impl std::fmt::Display for RebuildStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rebuild: moved={} skipped={} dropped_dup={} nbuckets={} elapsed={:?}",
+            self.moved, self.skipped, self.dropped_dup, self.nbuckets, self.elapsed
+        )
+    }
+}

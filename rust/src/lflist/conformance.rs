@@ -1,0 +1,228 @@
+//! Shared conformance suite: every [`BucketSet`] implementation must pass
+//! the same behavioral contract (Algorithm 1 semantics + the DHash
+//! hazard-period requirements). Invoked once per implementation via the
+//! macro at the bottom.
+
+use super::*;
+use crate::rcu::{rcu_barrier, RcuThread};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn keys<B: BucketSet>(b: &B) -> Vec<u64> {
+    b.collect().into_iter().map(|(k, _)| k).collect()
+}
+
+pub(crate) fn ordered_unique_inserts<B: BucketSet>() {
+    let b = B::new();
+    for k in [8u64, 3, 11, 1, 6] {
+        assert!(b.insert(Node::alloc(k, k)).is_ok());
+    }
+    assert_eq!(keys(&b), vec![1, 3, 6, 8, 11]);
+    assert_eq!(b.len(), 5);
+}
+
+pub(crate) fn duplicate_rejected<B: BucketSet>() {
+    let b = B::new();
+    b.insert(Node::alloc(9, 1)).unwrap();
+    let dup = Node::alloc(9, 2);
+    let r = b.insert(dup);
+    assert!(r.is_err());
+    // SAFETY: rejected node never published.
+    unsafe { Node::free(r.unwrap_err()) };
+    assert_eq!(b.find(9).unwrap().val.load(Ordering::SeqCst), 1);
+}
+
+pub(crate) fn delete_then_miss<B: BucketSet>() {
+    let t = RcuThread::register();
+    let b = B::new();
+    for k in 0..16u64 {
+        b.insert(Node::alloc(k, k)).unwrap();
+    }
+    for k in (0..16u64).step_by(2) {
+        assert!(matches!(
+            b.delete(k, LOGICALLY_REMOVED),
+            DeleteOutcome::Deleted(_)
+        ));
+    }
+    for k in 0..16u64 {
+        assert_eq!(b.find(k).is_some(), k % 2 == 1, "key {k}");
+    }
+    assert_eq!(b.len(), 8);
+    assert_eq!(b.delete(2, LOGICALLY_REMOVED), DeleteOutcome::NotFound);
+    t.quiescent_state();
+    rcu_barrier();
+}
+
+pub(crate) fn distribution_unlinks_without_reclaim<B: BucketSet>() {
+    let t = RcuThread::register();
+    let b = B::new();
+    b.insert(Node::alloc(5, 50)).unwrap();
+    b.insert(Node::alloc(6, 60)).unwrap();
+    let n = match b.delete(5, IS_BEING_DISTRIBUTED) {
+        DeleteOutcome::Deleted(p) => p,
+        _ => panic!("expected node"),
+    };
+    assert_eq!(keys(&b), vec![6]);
+    // The node must still be alive with the distribution flag set, owned
+    // by us (the rebuild role): reuse it in a fresh bucket.
+    // SAFETY: contract guarantees unlinked + unreclaimed.
+    unsafe {
+        assert_eq!((*n).key, 5);
+        assert!((*n).flags() & IS_BEING_DISTRIBUTED != 0);
+    }
+    // Re-insert WITHOUT clearing the flag: insert itself must drop
+    // IS_BEING_DISTRIBUTED when it publishes the new successor.
+    let b2 = B::new();
+    b2.insert(n).unwrap();
+    let found = b2.find(5).unwrap();
+    assert_eq!(found.val.load(Ordering::SeqCst), 50);
+    assert_eq!(found.flags() & IS_BEING_DISTRIBUTED, 0, "flag not cleared");
+    t.quiescent_state();
+    rcu_barrier();
+}
+
+pub(crate) fn born_dead_insert_invisible<B: BucketSet>() {
+    // §4.4 race: a hazard-period deleter marks the node before the rebuild
+    // re-insert lands. The node must never become visible.
+    let t = RcuThread::register();
+    let b = B::new();
+    let n = Node::alloc(7, 70);
+    // SAFETY: we own n.
+    unsafe { (*n).set_flag(LOGICALLY_REMOVED) };
+    b.insert(n).unwrap();
+    assert!(b.find(7).is_none());
+    assert!(!keys(&b).contains(&7));
+    t.quiescent_state();
+    rcu_barrier();
+}
+
+pub(crate) fn first_returns_live_minimum<B: BucketSet>() {
+    let t = RcuThread::register();
+    let b = B::new();
+    assert!(b.first().is_none());
+    for k in [4u64, 2, 9] {
+        b.insert(Node::alloc(k, 0)).unwrap();
+    }
+    b.delete(2, LOGICALLY_REMOVED);
+    let f = b.first().unwrap();
+    // SAFETY: RCU-live.
+    assert_eq!(unsafe { (*f).key }, 4);
+    t.quiescent_state();
+    rcu_barrier();
+}
+
+pub(crate) fn drain_style_rebuild_empties<B: BucketSet>() {
+    // Emulates the rebuild traversal: repeatedly take `first`, remove it
+    // for distribution, reuse elsewhere.
+    let t = RcuThread::register();
+    let b = B::new();
+    for k in 0..32u64 {
+        b.insert(Node::alloc(k, k)).unwrap();
+    }
+    let b2 = B::new();
+    let mut moved = 0;
+    while let Some(p) = b.first() {
+        // SAFETY: RCU-live.
+        let key = unsafe { (*p).key };
+        match b.delete(key, IS_BEING_DISTRIBUTED) {
+            DeleteOutcome::Deleted(n) => {
+                // insert clears IS_BEING_DISTRIBUTED itself.
+                b2.insert(n).unwrap();
+                moved += 1;
+            }
+            DeleteOutcome::NotFound => {}
+        }
+    }
+    assert_eq!(moved, 32);
+    assert!(b.is_empty());
+    assert_eq!(b2.len(), 32);
+    t.quiescent_state();
+    rcu_barrier();
+}
+
+pub(crate) fn concurrent_churn_no_corruption<B: BucketSet>(b: Arc<B>) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut hs = Vec::new();
+    for tid in 0..3u64 {
+        let b2 = b.clone();
+        let s2 = stop.clone();
+        hs.push(std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let mut i = 0u64;
+            while !s2.load(Ordering::SeqCst) {
+                let k = (tid * 13 + i * 7) % 48;
+                match i % 3 {
+                    0 => {
+                        if let Err(p) = b2.insert(Node::alloc(k, i)) {
+                            // SAFETY: rejected, unpublished.
+                            unsafe { Node::free(p) };
+                        }
+                    }
+                    1 => {
+                        b2.delete(k, LOGICALLY_REMOVED);
+                    }
+                    _ => {
+                        if let Some(n) = b2.find(k) {
+                            assert_eq!(n.key, k);
+                        }
+                    }
+                }
+                g.quiescent_state();
+                i += 1;
+            }
+            i
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    stop.store(true, Ordering::SeqCst);
+    let total: u64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 300, "too few iterations: {total}");
+    let ks = keys(&*b);
+    assert!(ks.windows(2).all(|w| w[0] < w[1]), "order violated: {ks:?}");
+    rcu_barrier();
+}
+
+macro_rules! conformance_suite {
+    ($modname:ident, $ty:ty) => {
+        mod $modname {
+            use super::*;
+
+            #[test]
+            fn ordered_unique_inserts() {
+                super::ordered_unique_inserts::<$ty>();
+            }
+            #[test]
+            fn duplicate_rejected() {
+                super::duplicate_rejected::<$ty>();
+            }
+            #[test]
+            fn delete_then_miss() {
+                super::delete_then_miss::<$ty>();
+            }
+            #[test]
+            fn distribution_unlinks_without_reclaim() {
+                super::distribution_unlinks_without_reclaim::<$ty>();
+            }
+            #[test]
+            fn born_dead_insert_invisible() {
+                super::born_dead_insert_invisible::<$ty>();
+            }
+            #[test]
+            fn first_returns_live_minimum() {
+                super::first_returns_live_minimum::<$ty>();
+            }
+            #[test]
+            fn drain_style_rebuild_empties() {
+                super::drain_style_rebuild_empties::<$ty>();
+            }
+            #[test]
+            fn concurrent_churn_no_corruption() {
+                super::concurrent_churn_no_corruption(std::sync::Arc::new(<$ty>::new()));
+            }
+        }
+    };
+}
+
+conformance_suite!(michael, super::MichaelList);
+conformance_suite!(spinlock, super::SpinlockList);
+conformance_suite!(cow, super::CowSortedArray);

@@ -1,0 +1,604 @@
+//! RCU-based lock-free ordered linked list (paper §4.1).
+//!
+//! This is Michael's lock-free list [SPAA'02] with the paper's three
+//! modifications:
+//!
+//! 1. RCU replaces hazard pointers as the memory-reclamation scheme, which
+//!    removes the per-step memory fences of the hazard-pointer protocol
+//!    from traversal;
+//! 2. the per-node 64-bit ABA `tag` field is dropped — RCU guarantees a
+//!    node cannot be reclaimed (hence reused through the allocator) while
+//!    any reader that might hold a reference is still inside its read-side
+//!    critical section;
+//! 3. reclamation uses `call_rcu`, so `delete` never blocks on readers.
+//!
+//! One DHash-specific subtlety remains (paper §4.4): a node removed with
+//! `IS_BEING_DISTRIBUTED` is *reused* — re-inserted into the new table
+//! with its flags cleared — potentially while an old-table traversal still
+//! holds a reference to it. The list tolerates this because `search`
+//! re-validates `*prev == cur` before acting on a loaded `next` word and
+//! restarts from the (old table's) head on any mismatch, so a traversal
+//! can never silently continue through a node that was unlinked under it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::{
+    tag_of, untag, BucketSet, DeleteOutcome, Node, FLAG_MASK, IS_BEING_DISTRIBUTED,
+    LOGICALLY_REMOVED,
+};
+
+/// Position returned by `search`: `cur` is the first live node with
+/// `key >= target` (or null), `prev` the link word pointing at it.
+struct Pos {
+    prev: *const AtomicUsize,
+    cur: *mut Node,
+    /// Untagged `next` word of `cur` (0 if `cur` is null).
+    next: usize,
+}
+
+impl Pos {
+    #[inline(always)]
+    fn found(&self, key: u64) -> bool {
+        // SAFETY: `cur`, when non-null, is a list node kept alive by RCU.
+        // The sentinel (key == SENTINEL_KEY) is structural, never a match:
+        // DHashMap reserves u64::MAX at the API boundary.
+        debug_assert_ne!(key, SENTINEL_KEY, "u64::MAX keys are reserved");
+        !self.cur.is_null() && unsafe { (*self.cur).key } == key
+    }
+}
+
+/// The lock-free ordered list. One instance per hash bucket.
+pub struct MichaelList {
+    head: AtomicUsize,
+}
+
+// SAFETY: all mutation happens through atomics; reclamation through RCU.
+unsafe impl Send for MichaelList {}
+unsafe impl Sync for MichaelList {}
+
+/// Sentinel key of the permanent tail node each list ends with. Chains
+/// never terminate in NULL: a reused (distributed) node's `next` word
+/// therefore never transits through a value (`0`) that a stale tail
+/// insert/delete CAS from the *old* table could still expect — the last
+/// piece of the reuse-ABA story (see `dhash::rebuild`'s deviation note).
+/// The key value `u64::MAX` is reserved; `DHashMap` rejects it.
+pub const SENTINEL_KEY: u64 = u64::MAX;
+
+impl MichaelList {
+    fn new_with_sentinel() -> Self {
+        let sentinel = Node::alloc(SENTINEL_KEY, 0);
+        Self {
+            head: AtomicUsize::new(sentinel as usize),
+        }
+    }
+
+    /// True if `p` is this chain's permanent tail.
+    #[inline(always)]
+    fn is_sentinel(p: *mut Node) -> bool {
+        // SAFETY: sentinel nodes live as long as the list.
+        !p.is_null() && unsafe { (*p).key } == SENTINEL_KEY
+    }
+
+    /// Michael's search, RCU flavor. Returns the position for `key`,
+    /// physically unlinking every marked node encountered on the way.
+    ///
+    /// Unlink/reclaim protocol: the thread whose CAS unlinks a node owns
+    /// the reclamation decision. Nodes whose flags are exactly
+    /// `LOGICALLY_REMOVED` are handed to `call_rcu`; nodes carrying
+    /// `IS_BEING_DISTRIBUTED` (alone or together with a concurrent
+    /// `LOGICALLY_REMOVED` from the hazard-period delete path) belong to
+    /// the rebuild thread, which re-inserts or frees them itself.
+    fn search(&self, key: u64) -> Pos {
+        'retry: loop {
+            let mut prev: *const AtomicUsize = &self.head;
+            // SAFETY: `prev` points to either the bucket head or the
+            // `next` field of a node kept alive by RCU for the duration of
+            // the caller's read-side critical section.
+            let mut cur = untag(unsafe { (*prev).load(Ordering::SeqCst) });
+            loop {
+                if cur.is_null() {
+                    return Pos {
+                        prev,
+                        cur,
+                        next: 0,
+                    };
+                }
+                // SAFETY: as above; RCU keeps `cur` alive.
+                let next_t = unsafe { (*cur).next.load(Ordering::SeqCst) };
+                // Re-validate: `prev` must still point at `cur` with no
+                // flags. Fails if (a) a concurrent op unlinked/inserted
+                // here, (b) the node holding `prev` got marked, or (c) a
+                // rebuild reused a node under us. Restart from head.
+                if unsafe { (*prev).load(Ordering::SeqCst) } != cur as usize {
+                    continue 'retry;
+                }
+                if tag_of(next_t) != 0 {
+                    // `cur` is logically deleted: unlink it before moving
+                    // past (the §4.4 rule — never traverse beyond a marked
+                    // node without removing it first).
+                    let next = next_t & !FLAG_MASK;
+                    if unsafe {
+                        (*prev)
+                            .compare_exchange(
+                                cur as usize,
+                                next,
+                                Ordering::SeqCst,
+                                Ordering::SeqCst,
+                            )
+                            .is_ok()
+                    } {
+                        if tag_of(next_t) == LOGICALLY_REMOVED {
+                            // SAFETY: we won the unlink CAS; the node is
+                            // unreachable for new readers and ours to
+                            // reclaim after a grace period.
+                            unsafe { Node::defer_free(cur) };
+                        }
+                        cur = next as *mut Node;
+                        continue;
+                    } else {
+                        continue 'retry;
+                    }
+                }
+                // SAFETY: RCU keeps `cur` alive.
+                let ckey = unsafe { (*cur).key };
+                if ckey >= key {
+                    return Pos {
+                        prev,
+                        cur,
+                        next: next_t,
+                    };
+                }
+                // SAFETY: `cur` stays valid; taking the address of its
+                // atomic `next` field is safe under RCU.
+                prev = unsafe { &(*cur).next as *const AtomicUsize };
+                cur = untag(next_t);
+            }
+        }
+    }
+
+    /// Lock-free insert preserving a concurrently-set `LOGICALLY_REMOVED`
+    /// bit on `node` (hazard-period semantics, see trait docs).
+    fn insert_node(&self, node: *mut Node) -> Result<(), *mut Node> {
+        // SAFETY: caller owns `node` (unpublished here); RCU protects the
+        // list nodes touched by `search`.
+        let key = unsafe { (*node).key };
+        loop {
+            let pos = self.search(key);
+            if pos.found(key) {
+                return Err(node);
+            }
+            // Point the node at its successor. CAS (not store) so a delete
+            // arriving through `rebuild_cur` between our load and the link
+            // CAS cannot have its LOGICALLY_REMOVED bit overwritten.
+            loop {
+                // SAFETY: node is ours or (rebuild path) unlinked + owned.
+                let old = unsafe { (*node).next.load(Ordering::SeqCst) };
+                let new = pos.cur as usize | (old & LOGICALLY_REMOVED);
+                if unsafe {
+                    (*node)
+                        .next
+                        .compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                } {
+                    break;
+                }
+            }
+            // SAFETY: `pos.prev` valid under RCU (revalidated by the CAS).
+            if unsafe {
+                (*pos.prev)
+                    .compare_exchange(
+                        pos.cur as usize,
+                        node as usize,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    )
+                    .is_ok()
+            } {
+                return Ok(());
+            }
+            // Lost the race: retry from a fresh search.
+        }
+    }
+
+    fn delete_node(&self, key: u64, flag: usize) -> DeleteOutcome {
+        debug_assert!(flag == LOGICALLY_REMOVED || flag == IS_BEING_DISTRIBUTED);
+        loop {
+            let pos = self.search(key);
+            if !pos.found(key) {
+                return DeleteOutcome::NotFound;
+            }
+            let cur = pos.cur;
+            // Logical delete: mark `next`. The expected value is the
+            // unmarked snapshot, so exactly one deleter can win.
+            if unsafe {
+                (*cur)
+                    .next
+                    .compare_exchange(pos.next, pos.next | flag, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_err()
+            } {
+                // Another op marked or relinked `cur`; retry. If it was
+                // deleted by someone else, the fresh search reports
+                // NotFound.
+                continue;
+            }
+            // Physical unlink. On success the unlinker reclaims iff the
+            // node carries only LOGICALLY_REMOVED.
+            if unsafe {
+                (*pos.prev)
+                    .compare_exchange(cur as usize, pos.next, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            } {
+                if flag == LOGICALLY_REMOVED {
+                    // SAFETY: unlinked by us; reclaim after grace period.
+                    unsafe { Node::defer_free(cur) };
+                }
+            } else if flag == IS_BEING_DISTRIBUTED {
+                // The rebuild thread is about to *reuse* this node, so it
+                // must be physically out of the list first. `search` walks
+                // until it reaches a key >= ours and unlinks every marked
+                // node on the way, so one call suffices to guarantee the
+                // unlink happened (here or elsewhere).
+                let _ = self.search(key);
+            }
+            return DeleteOutcome::Deleted(cur);
+        }
+    }
+}
+
+// SAFETY: see trait contract; the implementation above maintains all four
+// guarantees (RCU-valid pointers, call_rcu reclamation, unlink-before-
+// return for distribution, LOGICALLY_REMOVED preservation on insert).
+unsafe impl BucketSet for MichaelList {
+    fn new() -> Self {
+        Self::new_with_sentinel()
+    }
+
+    fn find(&self, key: u64) -> Option<&Node> {
+        let pos = self.search(key);
+        if pos.found(key) {
+            // SAFETY: valid under the caller's RCU read-side section.
+            Some(unsafe { &*pos.cur })
+        } else {
+            None
+        }
+    }
+
+    fn insert(&self, node: *mut Node) -> Result<(), *mut Node> {
+        self.insert_node(node)
+    }
+
+    fn delete(&self, key: u64, flag: usize) -> DeleteOutcome {
+        self.delete_node(key, flag)
+    }
+
+    fn first(&self) -> Option<*mut Node> {
+        // key 0 is <= every key, so this returns the first live node and
+        // opportunistically unlinks marked ones at the front.
+        let pos = self.search(0);
+        if pos.cur.is_null() || Self::is_sentinel(pos.cur) {
+            None
+        } else {
+            Some(pos.cur)
+        }
+    }
+
+    fn take_first_for_distribution(
+        &self,
+        publish: &mut dyn FnMut(*mut Node),
+    ) -> Option<*mut Node> {
+        // Fused first() + delete(key, DIST): one search instead of two
+        // (the default impl re-searches by key, which for the head node
+        // walks the same prefix again). §Perf opt 2.
+        loop {
+            let pos = self.search(0);
+            if pos.cur.is_null() || Self::is_sentinel(pos.cur) {
+                return None;
+            }
+            let cur = pos.cur;
+            // Hazard publication precedes the logical delete (Alg. 3
+            // lines 26 -> 29).
+            publish(cur);
+            // Logical removal for distribution (expected: unmarked).
+            if unsafe {
+                (*cur)
+                    .next
+                    .compare_exchange(
+                        pos.next,
+                        pos.next | IS_BEING_DISTRIBUTED,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    )
+                    .is_err()
+            } {
+                continue; // raced a deleter or an insert after cur
+            }
+            // Physical unlink; on failure force it via a search (the
+            // rebuild reuses the node, so it must be out of the chain).
+            if unsafe {
+                (*pos.prev)
+                    .compare_exchange(cur as usize, pos.next, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_err()
+            } {
+                // SAFETY: key immutable, node RCU-live.
+                let _ = self.search(unsafe { (*cur).key });
+            }
+            return Some(cur);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.collect().len()
+    }
+
+    fn collect(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cur = untag(self.head.load(Ordering::SeqCst));
+        while !cur.is_null() {
+            // SAFETY: alive under RCU (callers hold a read-side section;
+            // tests hold exclusive access).
+            let next_t = unsafe { (*cur).next.load(Ordering::SeqCst) };
+            if tag_of(next_t) == 0 && !Self::is_sentinel(cur) {
+                unsafe { out.push(((*cur).key, (*cur).val.load(Ordering::SeqCst))) };
+            }
+            cur = untag(next_t);
+        }
+        out
+    }
+
+    fn drain_exclusive(&mut self) {
+        let mut cur = untag(*self.head.get_mut());
+        while !cur.is_null() {
+            // SAFETY: exclusive access (`&mut self`), no concurrent
+            // readers can exist; free immediately.
+            unsafe {
+                let next = untag((*cur).next.load(Ordering::SeqCst));
+                Node::free(cur);
+                cur = next;
+            }
+        }
+        *self.head.get_mut() = 0;
+    }
+}
+
+impl Drop for MichaelList {
+    fn drop(&mut self) {
+        self.drain_exclusive();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rcu::{rcu_barrier, RcuThread};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    fn keys(list: &MichaelList) -> Vec<u64> {
+        list.collect().into_iter().map(|(k, _)| k).collect()
+    }
+
+    #[test]
+    fn insert_keeps_order() {
+        let l = MichaelList::new();
+        for k in [5u64, 1, 9, 3, 7] {
+            assert!(l.insert(Node::alloc(k, k * 10)).is_ok());
+        }
+        assert_eq!(keys(&l), vec![1, 3, 5, 7, 9]);
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let l = MichaelList::new();
+        assert!(l.insert(Node::alloc(4, 1)).is_ok());
+        let dup = Node::alloc(4, 2);
+        match l.insert(dup) {
+            Err(p) => {
+                assert_eq!(p, dup);
+                // SAFETY: rejected node never published.
+                unsafe { Node::free(p) };
+            }
+            Ok(()) => panic!("duplicate accepted"),
+        }
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.find(4).unwrap().val.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn find_miss_and_hit() {
+        let l = MichaelList::new();
+        for k in [2u64, 4, 6] {
+            l.insert(Node::alloc(k, k)).unwrap();
+        }
+        assert!(l.find(3).is_none());
+        assert!(l.find(0).is_none());
+        assert!(l.find(7).is_none());
+        assert_eq!(l.find(4).unwrap().key, 4);
+    }
+
+    #[test]
+    fn delete_logical_and_reinsert() {
+        let t = RcuThread::register();
+        let l = MichaelList::new();
+        l.insert(Node::alloc(10, 1)).unwrap();
+        assert!(matches!(
+            l.delete(10, LOGICALLY_REMOVED),
+            DeleteOutcome::Deleted(_)
+        ));
+        assert!(l.find(10).is_none());
+        assert_eq!(l.delete(10, LOGICALLY_REMOVED), DeleteOutcome::NotFound);
+        // Same key can be inserted again.
+        l.insert(Node::alloc(10, 2)).unwrap();
+        assert_eq!(l.find(10).unwrap().val.load(Ordering::SeqCst), 2);
+        t.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn delete_for_distribution_unlinks_but_does_not_free() {
+        let t = RcuThread::register();
+        let l = MichaelList::new();
+        l.insert(Node::alloc(1, 11)).unwrap();
+        l.insert(Node::alloc(2, 22)).unwrap();
+        let n = match l.delete(1, IS_BEING_DISTRIBUTED) {
+            DeleteOutcome::Deleted(p) => p,
+            _ => panic!("missing node"),
+        };
+        // Physically unlinked: not reachable, len drops.
+        assert_eq!(keys(&l), vec![2]);
+        // Node memory still live and owned by us (the "rebuild thread"):
+        // SAFETY: unlinked, not reclaimed by contract.
+        unsafe {
+            assert_eq!((*n).key, 1);
+            assert_eq!((*n).flags(), IS_BEING_DISTRIBUTED);
+        }
+        // Reuse it in another list, as rebuild does (insert clears the
+        // distribution flag atomically with the link).
+        let l2 = MichaelList::new();
+        l2.insert(n).unwrap();
+        assert_eq!(keys(&l2), vec![1]);
+        t.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn insert_preserves_concurrent_logical_removal() {
+        // Simulates the §4.4 hazard-period race: a deleter marks the node
+        // through rebuild_cur *while* the rebuild thread re-inserts it.
+        let t = RcuThread::register();
+        let l = MichaelList::new();
+        let n = Node::alloc(5, 5);
+        // Deleter marks first (worst case), then insert runs.
+        // SAFETY: we own n.
+        unsafe { (*n).set_flag(LOGICALLY_REMOVED) };
+        l.insert(n).unwrap();
+        // The node is in the list but born dead: find must skip it and the
+        // traversal unlinks + frees it.
+        assert!(l.find(5).is_none());
+        assert_eq!(l.len(), 0);
+        t.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn first_skips_marked_nodes() {
+        let t = RcuThread::register();
+        let l = MichaelList::new();
+        for k in [1u64, 2, 3] {
+            l.insert(Node::alloc(k, k)).unwrap();
+        }
+        l.delete(1, LOGICALLY_REMOVED);
+        let f = l.first().unwrap();
+        // SAFETY: RCU-live.
+        assert_eq!(unsafe { (*f).key }, 2);
+        t.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn empty_list_edge_cases() {
+        let l = MichaelList::new();
+        assert!(l.find(0).is_none());
+        assert!(l.first().is_none());
+        assert!(l.is_empty());
+        assert_eq!(l.delete(0, LOGICALLY_REMOVED), DeleteOutcome::NotFound);
+    }
+
+    #[test]
+    fn u64_extreme_keys() {
+        // u64::MAX itself is the reserved sentinel key; MAX-1 is the
+        // largest storable key.
+        let l = MichaelList::new();
+        for k in [0u64, 1, u64::MAX - 2, u64::MAX - 1] {
+            l.insert(Node::alloc(k, k)).unwrap();
+        }
+        assert_eq!(keys(&l), vec![0, 1, u64::MAX - 2, u64::MAX - 1]);
+        assert_eq!(l.find(u64::MAX - 1).unwrap().key, u64::MAX - 1);
+    }
+
+    #[test]
+    fn concurrent_disjoint_inserts() {
+        let l = Arc::new(MichaelList::new());
+        let mut hs = Vec::new();
+        for t in 0..4u64 {
+            let l2 = l.clone();
+            hs.push(std::thread::spawn(move || {
+                let g = RcuThread::register();
+                for i in 0..250u64 {
+                    l2.insert(Node::alloc(t * 1000 + i, i)).unwrap();
+                    g.quiescent_state();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(l.len(), 1000);
+        let ks = keys(&l);
+        assert!(ks.windows(2).all(|w| w[0] < w[1]), "not sorted/unique");
+    }
+
+    #[test]
+    fn concurrent_same_key_insert_exactly_one_wins() {
+        for _ in 0..20 {
+            let l = Arc::new(MichaelList::new());
+            let mut hs = Vec::new();
+            for _ in 0..4 {
+                let l2 = l.clone();
+                hs.push(std::thread::spawn(move || {
+                    let g = RcuThread::register();
+                    let n = Node::alloc(42, 0);
+                    let r = l2.insert(n);
+                    if let Err(p) = r {
+                        // SAFETY: rejected, unpublished.
+                        unsafe { Node::free(p) };
+                        g.quiescent_state();
+                        false
+                    } else {
+                        g.quiescent_state();
+                        true
+                    }
+                }));
+            }
+            let wins = hs.into_iter().filter(|_| true).map(|h| h.join().unwrap()).filter(|&x| x).count();
+            assert_eq!(wins, 1);
+            assert_eq!(l.len(), 1);
+        }
+    }
+
+    #[test]
+    fn concurrent_insert_delete_churn() {
+        let l = Arc::new(MichaelList::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut hs = Vec::new();
+        for t in 0..4u64 {
+            let l2 = l.clone();
+            let s2 = stop.clone();
+            hs.push(std::thread::spawn(move || {
+                let g = RcuThread::register();
+                let mut i = 0u64;
+                while !s2.load(Ordering::SeqCst) {
+                    let k = (t * 7 + i) % 64;
+                    if i % 2 == 0 {
+                        if let Err(p) = l2.insert(Node::alloc(k, i)) {
+                            // SAFETY: rejected, unpublished.
+                            unsafe { Node::free(p) };
+                        }
+                    } else {
+                        l2.delete(k, LOGICALLY_REMOVED);
+                    }
+                    g.quiescent_state();
+                    i += 1;
+                }
+                i
+            }));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        stop.store(true, Ordering::SeqCst);
+        let total: u64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 1000, "too few iterations: {total}");
+        // Structural invariant after the dust settles: sorted unique keys.
+        let ks = keys(&l);
+        assert!(ks.windows(2).all(|w| w[0] < w[1]));
+        rcu_barrier();
+    }
+}

@@ -1,0 +1,303 @@
+//! Hash-bucket set algorithms (paper §4.1, Algorithm 1).
+//!
+//! The central type is [`Node`]: a key/value pair whose `next` word embeds
+//! the paper's two flag bits in its least-significant bits:
+//!
+//! * [`LOGICALLY_REMOVED`] (bit 0) — the node was logically deleted by a
+//!   user `delete`; whoever physically unlinks it reclaims it via
+//!   `call_rcu`.
+//! * [`IS_BEING_DISTRIBUTED`] (bit 1) — the node was logically removed by
+//!   a *rebuild* operation; its memory is **not** reclaimed because the
+//!   rebuild thread will re-insert the very same node into the new table.
+//!
+//! DHash is modular (paper goal 2): any set providing the Algorithm 1 API
+//! can serve as the bucket implementation. That API is the [`BucketSet`]
+//! trait here, and three implementations with different progress/perf
+//! trade-offs ship with the crate:
+//!
+//! | impl | find | insert/delete | notes |
+//! |---|---|---|---|
+//! | [`MichaelList`] | lock-free | lock-free | the paper's default: RCU-based Michael list |
+//! | [`SpinlockList`] | blocking | blocking | simplest correct baseline bucket |
+//! | [`CowSortedArray`] | wait-free | blocking (copy-on-write) | read-optimized bucket |
+
+pub mod cow_array;
+pub mod michael;
+pub mod spinlock_list;
+
+pub use cow_array::CowSortedArray;
+pub use michael::MichaelList;
+pub use spinlock_list::SpinlockList;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::rcu::call_rcu;
+
+/// Bit 0 of `Node::next`: logically deleted by a user delete operation.
+pub const LOGICALLY_REMOVED: usize = 0b01;
+/// Bit 1 of `Node::next`: logically removed by a rebuild operation, about
+/// to be re-inserted into the new table (do not reclaim).
+pub const IS_BEING_DISTRIBUTED: usize = 0b10;
+/// Mask of both flag bits.
+pub const FLAG_MASK: usize = 0b11;
+
+/// A hash-table node. Allocated on insert, moved (not copied) between the
+/// old and the new table by rebuild operations, reclaimed through RCU.
+///
+/// `next` is a tagged pointer: the two least-significant bits are the flag
+/// bits above (pointers are at least word-aligned on every supported
+/// architecture, as the paper notes in §4.1).
+#[repr(C)]
+pub struct Node {
+    pub key: u64,
+    pub val: AtomicU64,
+    pub next: AtomicUsize,
+}
+
+/// Process-wide node allocation accounting, used by leak tests and the
+/// coordinator's metrics endpoint. Relaxed counters: negligible cost next
+/// to the allocator call they accompany.
+pub mod mem_stats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub(super) static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    pub(super) static FREES: AtomicU64 = AtomicU64::new(0);
+
+    /// (allocated, freed) node counts since process start.
+    pub fn counts() -> (u64, u64) {
+        (ALLOCS.load(Ordering::Relaxed), FREES.load(Ordering::Relaxed))
+    }
+
+    /// Nodes currently live (allocated - freed).
+    pub fn live() -> u64 {
+        let (a, f) = counts();
+        a - f
+    }
+}
+
+impl Node {
+    /// Heap-allocate a node. The caller owns the raw pointer until it is
+    /// successfully published into a set.
+    pub fn alloc(key: u64, val: u64) -> *mut Node {
+        mem_stats::ALLOCS.fetch_add(1, Ordering::Relaxed);
+        Box::into_raw(Box::new(Node {
+            key,
+            val: AtomicU64::new(val),
+            next: AtomicUsize::new(0),
+        }))
+    }
+
+    /// Immediately free a node.
+    ///
+    /// # Safety
+    /// `ptr` must be a unique, unpublished (or fully unlinked and
+    /// grace-period-expired) node allocated by [`Node::alloc`].
+    pub unsafe fn free(ptr: *mut Node) {
+        mem_stats::FREES.fetch_add(1, Ordering::Relaxed);
+        drop(Box::from_raw(ptr));
+    }
+
+    /// Free a node after a grace period (`call_rcu(htnp, free)` in the
+    /// paper's pseudocode).
+    ///
+    /// # Safety
+    /// `ptr` must be unlinked from every set (unreachable for new readers)
+    /// and must not be freed by anyone else.
+    pub unsafe fn defer_free(ptr: *mut Node) {
+        let p = SendPtr(ptr);
+        call_rcu(move || {
+            let p = p; // move the whole wrapper (edition-2021 field capture)
+            // SAFETY: a grace period has elapsed since the node became
+            // unreachable, so no reader holds a reference.
+            unsafe { Node::free(p.0) }
+        });
+    }
+
+    /// The flag bits of this node's `next` word.
+    #[inline(always)]
+    pub fn flags(&self) -> usize {
+        self.next.load(Ordering::SeqCst) & FLAG_MASK
+    }
+
+    /// True if a user delete has logically removed this node.
+    #[inline(always)]
+    pub fn logically_removed(&self) -> bool {
+        self.flags() & LOGICALLY_REMOVED != 0
+    }
+
+    /// Atomically set flag bits (paper's `set_flag` helper, Alg. 2).
+    /// Returns the *previous* flag bits.
+    #[inline]
+    pub fn set_flag(&self, flag: usize) -> usize {
+        self.next.fetch_or(flag & FLAG_MASK, Ordering::SeqCst) & FLAG_MASK
+    }
+
+    /// Atomically clear flag bits (paper's `clean_flag` helper, Alg. 2).
+    #[inline]
+    pub fn clean_flag(&self, flag: usize) {
+        self.next.fetch_and(!(flag & FLAG_MASK), Ordering::SeqCst);
+    }
+}
+
+/// Untag a `next` word into a node pointer.
+#[inline(always)]
+pub(crate) fn untag(word: usize) -> *mut Node {
+    (word & !FLAG_MASK) as *mut Node
+}
+
+/// The flag bits of a `next` word.
+#[inline(always)]
+pub(crate) fn tag_of(word: usize) -> usize {
+    word & FLAG_MASK
+}
+
+/// Raw-pointer wrapper that may cross threads (for `call_rcu` closures).
+pub(crate) struct SendPtr(pub *mut Node);
+// SAFETY: the pointer's referent is only touched after a grace period, at
+// which point the reclaimer thread has exclusive access.
+unsafe impl Send for SendPtr {}
+
+/// Outcome of a `BucketSet::delete`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeleteOutcome {
+    /// The node with the matching key was logically removed by this call.
+    /// The pointer is valid until the end of the current RCU read-side
+    /// critical section; for `IS_BEING_DISTRIBUTED` deletes it is also
+    /// guaranteed to be physically unlinked, so the rebuild thread may
+    /// reuse it.
+    Deleted(*mut Node),
+    /// No live node with the key was present.
+    NotFound,
+}
+
+/// The Algorithm 1 API: what a set algorithm must provide to serve as a
+/// DHash bucket. All methods are called from within an RCU read-side
+/// critical section (the `DHashMap` wrapper guarantees this).
+///
+/// # Safety
+/// Implementations must guarantee:
+/// * returned node pointers remain valid until the current grace period
+///   expires;
+/// * `delete(_, LOGICALLY_REMOVED)` reclaims through [`Node::defer_free`]
+///   (never synchronously);
+/// * `delete(_, IS_BEING_DISTRIBUTED)` physically unlinks before
+///   returning and does **not** reclaim;
+/// * `insert` preserves a concurrently-set `LOGICALLY_REMOVED` bit on the
+///   node being inserted (the hazard-period delete race, §4.4), and
+///   clears `IS_BEING_DISTRIBUTED` *atomically with* publishing the
+///   node's new successor — a node arriving from a rebuild still carries
+///   the bit, which keeps stale CASes (whose `prev` is this node) failing
+///   until the node's next pointer really has moved to the new chain.
+pub unsafe trait BucketSet: Send + Sync + 'static {
+    fn new() -> Self
+    where
+        Self: Sized;
+
+    /// Find the live node with `key` (paper: `lflist_find`).
+    fn find(&self, key: u64) -> Option<&Node>;
+
+    /// Insert an owned node (paper: `lflist_insert`). On duplicate key the
+    /// node is returned to the caller via `Err` and the set is unchanged.
+    fn insert(&self, node: *mut Node) -> Result<(), *mut Node>;
+
+    /// Logically delete the node with `key`, tagging it with `flag`
+    /// (paper: `lflist_delete`).
+    fn delete(&self, key: u64, flag: usize) -> DeleteOutcome;
+
+    /// First live node, used by the rebuild traversal (DHash distributes
+    /// *head* nodes — §6.3 credits this for its rebuild speed).
+    fn first(&self) -> Option<*mut Node>;
+
+    /// Atomically take the first live node for distribution: equivalent
+    /// to `first()` + `delete(key, IS_BEING_DISTRIBUTED)` but fused so
+    /// implementations can do it in one traversal (§Perf opt 2: the
+    /// rebuild loop is the paper's Fig 3 hot path).
+    ///
+    /// `publish` is invoked with each candidate BEFORE its logical
+    /// delete — DHash points `rebuild_cur` at the node there, preserving
+    /// the paper's hazard-period ordering (Alg. 3 line 26 precedes line
+    /// 29): from the moment a node can be missing from the old table, it
+    /// is reachable through `rebuild_cur`. Returns the unlinked,
+    /// DIST-tagged node, or None when no live node remains.
+    fn take_first_for_distribution(
+        &self,
+        publish: &mut dyn FnMut(*mut Node),
+    ) -> Option<*mut Node> {
+        loop {
+            let p = self.first()?;
+            publish(p);
+            // SAFETY: RCU-live; key is immutable.
+            let key = unsafe { (*p).key };
+            match self.delete(key, IS_BEING_DISTRIBUTED) {
+                DeleteOutcome::Deleted(n) => return Some(n),
+                DeleteOutcome::NotFound => continue, // raced a deleter
+            }
+        }
+    }
+
+    /// Count of live nodes (O(n); test/diagnostic use).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of live `(key, value)` pairs in key order (test use).
+    fn collect(&self) -> Vec<(u64, u64)>;
+
+    /// Drain and free all nodes. Requires exclusive access (`&mut`), used
+    /// by table teardown after a final grace period.
+    fn drain_exclusive(&mut self);
+}
+
+#[cfg(test)]
+mod conformance;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_flag_helpers() {
+        let n = Node::alloc(7, 70);
+        // SAFETY: exclusive access in this test.
+        unsafe {
+            assert_eq!((*n).flags(), 0);
+            assert!(!(*n).logically_removed());
+            let prev = (*n).set_flag(LOGICALLY_REMOVED);
+            assert_eq!(prev, 0);
+            assert!((*n).logically_removed());
+            let prev = (*n).set_flag(IS_BEING_DISTRIBUTED);
+            assert_eq!(prev, LOGICALLY_REMOVED);
+            assert_eq!((*n).flags(), FLAG_MASK);
+            (*n).clean_flag(IS_BEING_DISTRIBUTED);
+            assert_eq!((*n).flags(), LOGICALLY_REMOVED);
+            (*n).clean_flag(LOGICALLY_REMOVED);
+            assert_eq!((*n).flags(), 0);
+            Node::free(n);
+        }
+    }
+
+    #[test]
+    fn tagging_roundtrip() {
+        let n = Node::alloc(1, 2);
+        let word = n as usize | IS_BEING_DISTRIBUTED;
+        assert_eq!(untag(word), n);
+        assert_eq!(tag_of(word), IS_BEING_DISTRIBUTED);
+        // SAFETY: exclusive access.
+        unsafe { Node::free(n) };
+    }
+
+    #[test]
+    fn nodes_are_word_aligned() {
+        // The two flag bits require >= 4-byte alignment; Node contains
+        // u64/atomics so alignment is 8 on all supported targets.
+        assert!(std::mem::align_of::<Node>() >= 4);
+        for _ in 0..64 {
+            let n = Node::alloc(0, 0);
+            assert_eq!(n as usize & FLAG_MASK, 0);
+            // SAFETY: exclusive access.
+            unsafe { Node::free(n) };
+        }
+    }
+}

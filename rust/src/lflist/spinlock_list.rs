@@ -1,0 +1,330 @@
+//! A spinlock-serialized ordered list bucket.
+//!
+//! The simplest correct [`BucketSet`]: every operation takes a per-bucket
+//! spinlock. This is the progress/engineering-effort end of the paper's
+//! modularity trade-off (goal 2) — and, paired with the torture framework,
+//! it demonstrates *why* the lock-free default wins under heavy load (the
+//! `buckets` ablation bench).
+//!
+//! Two things remain concurrent even under the lock:
+//! * reclamation — `find` results must stay valid after unlock, so
+//!   deletion defers frees with `call_rcu`;
+//! * the hazard-period protocol — a deleter holding `rebuild_cur` may OR
+//!   `LOGICALLY_REMOVED` into *any* node's `next` word at any moment
+//!   (§4.4), so traversals always untag link words and link updates use
+//!   flag-preserving CAS rather than plain stores.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use super::{untag, BucketSet, DeleteOutcome, Node, FLAG_MASK, LOGICALLY_REMOVED};
+
+/// Minimal test-and-test-and-set spinlock (parking_lot is unavailable in
+/// the offline build; a raw spinlock also matches the per-bucket locks of
+/// the baselines we compare against).
+pub(crate) struct SpinLock {
+    locked: AtomicBool,
+}
+
+impl SpinLock {
+    pub(crate) const fn new() -> Self {
+        Self {
+            locked: AtomicBool::new(false),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn lock(&self) {
+        loop {
+            if !self.locked.swap(true, Ordering::Acquire) {
+                return;
+            }
+            let mut spins = 0;
+            while self.locked.load(Ordering::Relaxed) {
+                spins += 1;
+                if spins < 32 {
+                    std::hint::spin_loop();
+                } else {
+                    // Mandatory on the single-core CI host: the holder
+                    // cannot progress unless we yield.
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub(crate) fn unlock(&self) {
+        self.locked.store(false, Ordering::Release);
+    }
+
+    pub(crate) fn with<R>(&self, f: impl FnOnce() -> R) -> R {
+        self.lock();
+        let r = f();
+        self.unlock();
+        r
+    }
+}
+
+/// Update the node-pointer part of a link word, preserving any flag bits a
+/// concurrent hazard-period deleter may set between our load and store.
+///
+/// # Safety
+/// `link` must point to a valid link word (bucket head or a live node's
+/// `next` field) and the caller must hold the bucket lock (so no other
+/// thread rewrites the *pointer* part concurrently).
+unsafe fn set_link(link: &AtomicUsize, target: usize) {
+    debug_assert_eq!(target & FLAG_MASK, 0);
+    loop {
+        let old = link.load(Ordering::SeqCst);
+        let new = target | (old & FLAG_MASK);
+        if link
+            .compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            return;
+        }
+    }
+}
+
+/// Spinlock-protected sorted singly-linked list over the shared [`Node`]
+/// representation.
+pub struct SpinlockList {
+    lock: SpinLock,
+    head: AtomicUsize,
+}
+
+// SAFETY: the chain is only restructured under `lock`; reclamation is RCU.
+unsafe impl Send for SpinlockList {}
+unsafe impl Sync for SpinlockList {}
+
+impl SpinlockList {
+    /// Unlink and lazily reclaim marked nodes; lock must be held.
+    ///
+    /// Marked nodes appear in a lock-based bucket only through the
+    /// born-dead insert path (a hazard-period delete raced with a rebuild
+    /// re-insert).
+    unsafe fn prune_locked(&self) {
+        let mut pp: *const AtomicUsize = &self.head;
+        loop {
+            let cur = untag((*pp).load(Ordering::SeqCst));
+            if cur.is_null() {
+                return;
+            }
+            let flags = (*cur).flags();
+            if flags != 0 {
+                let next = untag((*cur).next.load(Ordering::SeqCst));
+                set_link(&*pp, next as usize);
+                if flags == LOGICALLY_REMOVED {
+                    Node::defer_free(cur);
+                }
+                // IS_BEING_DISTRIBUTED nodes belong to the rebuilder.
+            } else {
+                pp = &(*cur).next;
+            }
+        }
+    }
+}
+
+// SAFETY: trait contract upheld — RCU-deferred reclamation, synchronous
+// unlink for distribution (everything is synchronous under the lock), and
+// LOGICALLY_REMOVED preservation on insert / link updates (flag-preserving
+// CAS everywhere).
+unsafe impl BucketSet for SpinlockList {
+    fn new() -> Self {
+        Self {
+            lock: SpinLock::new(),
+            head: AtomicUsize::new(0),
+        }
+    }
+
+    fn find(&self, key: u64) -> Option<&Node> {
+        self.lock.with(|| {
+            // SAFETY: lock held, chain stable; refs stay valid past unlock
+            // thanks to RCU-deferred reclamation.
+            unsafe {
+                let mut cur = untag(self.head.load(Ordering::SeqCst));
+                while !cur.is_null() {
+                    let k = (*cur).key;
+                    if k == key {
+                        return if (*cur).flags() == 0 {
+                            Some(&*cur)
+                        } else {
+                            None
+                        };
+                    }
+                    if k > key {
+                        return None;
+                    }
+                    cur = untag((*cur).next.load(Ordering::SeqCst));
+                }
+                None
+            }
+        })
+    }
+
+    fn insert(&self, node: *mut Node) -> Result<(), *mut Node> {
+        self.lock.with(|| {
+            // SAFETY: lock held.
+            unsafe {
+                self.prune_locked();
+                let key = (*node).key;
+                let mut pp: *const AtomicUsize = &self.head;
+                let mut cur = untag((*pp).load(Ordering::SeqCst));
+                while !cur.is_null() && (*cur).key < key {
+                    pp = &(*cur).next;
+                    cur = untag((*cur).next.load(Ordering::SeqCst));
+                }
+                if !cur.is_null() && (*cur).key == key {
+                    return Err(node);
+                }
+                // Point the node at its successor, preserving a racing
+                // LOGICALLY_REMOVED (hazard-period delete, §4.4).
+                loop {
+                    let old = (*node).next.load(Ordering::SeqCst);
+                    let new = cur as usize | (old & LOGICALLY_REMOVED);
+                    if (*node)
+                        .next
+                        .compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        break;
+                    }
+                }
+                set_link(&*pp, node as usize);
+                Ok(())
+            }
+        })
+    }
+
+    fn delete(&self, key: u64, flag: usize) -> DeleteOutcome {
+        self.lock.with(|| {
+            // SAFETY: lock held.
+            unsafe {
+                let mut pp: *const AtomicUsize = &self.head;
+                loop {
+                    let cur = untag((*pp).load(Ordering::SeqCst));
+                    if cur.is_null() {
+                        return DeleteOutcome::NotFound;
+                    }
+                    let k = (*cur).key;
+                    if k == key {
+                        if (*cur).flags() != 0 {
+                            return DeleteOutcome::NotFound; // already dead
+                        }
+                        (*cur).set_flag(flag);
+                        let next = untag((*cur).next.load(Ordering::SeqCst));
+                        set_link(&*pp, next as usize);
+                        if flag == LOGICALLY_REMOVED {
+                            Node::defer_free(cur);
+                        }
+                        return DeleteOutcome::Deleted(cur);
+                    }
+                    if k > key {
+                        return DeleteOutcome::NotFound;
+                    }
+                    pp = &(*cur).next;
+                }
+            }
+        })
+    }
+
+    fn first(&self) -> Option<*mut Node> {
+        self.lock.with(|| {
+            // SAFETY: lock held.
+            unsafe {
+                self.prune_locked();
+                let h = untag(self.head.load(Ordering::SeqCst));
+                if h.is_null() {
+                    None
+                } else {
+                    Some(h)
+                }
+            }
+        })
+    }
+
+    fn len(&self) -> usize {
+        self.collect().len()
+    }
+
+    fn collect(&self) -> Vec<(u64, u64)> {
+        self.lock.with(|| {
+            let mut out = Vec::new();
+            // SAFETY: lock held.
+            unsafe {
+                let mut cur = untag(self.head.load(Ordering::SeqCst));
+                while !cur.is_null() {
+                    if (*cur).flags() == 0 {
+                        out.push(((*cur).key, (*cur).val.load(Ordering::SeqCst)));
+                    }
+                    cur = untag((*cur).next.load(Ordering::SeqCst));
+                }
+            }
+            out
+        })
+    }
+
+    fn drain_exclusive(&mut self) {
+        // SAFETY: exclusive access.
+        unsafe {
+            let mut cur = untag(self.head.load(Ordering::SeqCst));
+            while !cur.is_null() {
+                let next = untag((*cur).next.load(Ordering::SeqCst));
+                Node::free(cur);
+                cur = next;
+            }
+            self.head.store(0, Ordering::SeqCst);
+        }
+    }
+}
+
+impl Drop for SpinlockList {
+    fn drop(&mut self) {
+        self.drain_exclusive();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn spinlock_mutual_exclusion() {
+        let lock = Arc::new(SpinLock::new());
+        let counter = Arc::new(std::cell::UnsafeCell::new(0u64));
+        struct Shared(Arc<std::cell::UnsafeCell<u64>>);
+        unsafe impl Send for Shared {}
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let l = lock.clone();
+            let c = Shared(counter.clone());
+            hs.push(std::thread::spawn(move || {
+                let c = c; // move the Send wrapper itself
+                for _ in 0..10_000 {
+                    // SAFETY: mutation only under the lock.
+                    l.with(|| unsafe { *c.0.get() += 1 });
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        // SAFETY: all threads joined.
+        assert_eq!(unsafe { *counter.get() }, 40_000);
+    }
+
+    #[test]
+    fn ordered_unique() {
+        let l = SpinlockList::new();
+        for k in [9u64, 1, 5, 3, 7] {
+            l.insert(Node::alloc(k, 0)).unwrap();
+        }
+        let ks: Vec<u64> = l.collect().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(ks, vec![1, 3, 5, 7, 9]);
+        let dup = Node::alloc(5, 0);
+        assert!(l.insert(dup).is_err());
+        // SAFETY: rejected node unpublished.
+        unsafe { Node::free(dup) };
+    }
+}

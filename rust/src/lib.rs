@@ -1,0 +1,50 @@
+//! # DHash — dynamic, efficient concurrent hash tables
+//!
+//! A from-scratch reproduction of *"DHash: Enabling Dynamic and Efficient
+//! Hash Tables"* (Wang, Fu, Xiao, Tian — CS.DC 2020) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a concurrent hash table
+//!   whose hash function can be replaced *on the fly* (`rebuild`) without
+//!   blocking concurrent lookup / insert / delete. Plus every substrate it
+//!   needs: a userspace QSBR [`rcu`] implementation, an RCU-based lock-free
+//!   ordered list ([`lflist`]), the three baselines the paper evaluates
+//!   against ([`baselines`]), the hash-torture benchmarking framework
+//!   ([`torture`]), and a serving-style coordinator ([`coordinator`]) that
+//!   detects hash-collision attacks and triggers rebuilds.
+//! * **L2/L1 (build-time Python)** — the collision-analytics compute
+//!   (batched keyed hashing + bucket-skew statistics) authored in JAX +
+//!   Pallas, AOT-lowered to HLO text, and executed from Rust through the
+//!   PJRT runtime wrapper ([`runtime`]). Python is never on the request
+//!   path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use dhash::dhash::{DHashMap, HashFn};
+//! use dhash::rcu::RcuThread;
+//!
+//! let map = DHashMap::with_buckets(1024, 0xdead_beef);
+//! let guard = RcuThread::register();
+//! map.insert(&guard, 42, 4242).unwrap();
+//! assert_eq!(map.lookup(&guard, 42), Some(4242));
+//! // Change the hash function while other threads keep operating:
+//! map.rebuild(&guard, 4096, HashFn::Seeded(0x1234_5678)).unwrap();
+//! assert_eq!(map.lookup(&guard, 42), Some(4242));
+//! map.delete(&guard, 42);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every figure of the paper to a bench target.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod dhash;
+pub mod lflist;
+pub mod rcu;
+pub mod runtime;
+pub mod torture;
+pub mod util;
+
+pub use crate::dhash::DHashMap;
+pub use crate::rcu::RcuThread;

@@ -1,0 +1,193 @@
+//! `dhash` — the leader binary: torture benchmarks, the KV service, and
+//! rebuild diagnostics from one CLI.
+//!
+//! ```text
+//! dhash torture  [--table dhash|xu|rht|split] [--threads N] [--lookup-pct P]
+//!                [--alpha A] [--buckets B] [--keys U] [--secs S]
+//!                [--no-rebuild] [--repeats R]
+//! dhash serve    [--buckets B] [--workers W] [--secs S] [--attack-at T]
+//!                [--weak-hash] [--no-analytics]
+//! dhash rebuild  [--table dhash|xu|rht|split] [--nodes N] [--buckets B]
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
+use dhash::coordinator::{Coordinator, CoordinatorConfig, Request};
+use dhash::dhash::{DHashMap, HashFn};
+use dhash::rcu::RcuThread;
+use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
+use dhash::util::cli::Args;
+use dhash::util::Summary;
+
+fn make_table(name: &str, nbuckets: usize, seed: u64) -> Arc<dyn ConcurrentMap> {
+    match name {
+        "dhash" => Arc::new(DHashMap::with_buckets(nbuckets, seed)),
+        "xu" => Arc::new(HtXu::new(nbuckets, HashFn::Seeded(seed))),
+        "rht" => Arc::new(HtRht::new(nbuckets, HashFn::Seeded(seed))),
+        "split" => Arc::new(HtSplit::new(nbuckets, 1 << 20)),
+        other => {
+            eprintln!("unknown table {other:?} (want dhash|xu|rht|split)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_torture(args: &Args) -> anyhow::Result<()> {
+    let table = args.get("table").unwrap_or("dhash").to_string();
+    let buckets = args.get_or("buckets", 1024usize)?;
+    let cfg = TortureConfig {
+        threads: args.get_or("threads", 4usize)?,
+        mix: OpMix::lookup_pct(args.get_or("lookup-pct", 90u8)?),
+        alpha: args.get_or("alpha", 20usize)?,
+        nbuckets: buckets,
+        key_range: args.get_or("keys", 1_000_000u64)?,
+        duration: Duration::from_secs_f64(args.get_or("secs", 1.0f64)?),
+        rebuild: if args.get_bool("no-rebuild") {
+            RebuildMode::None
+        } else {
+            RebuildMode::Continuous {
+                alt_nbuckets: match args.get_or("alt-buckets", 0usize)? {
+                    0 => buckets * 2,
+                    x => x,
+                },
+            }
+        },
+        pin: !args.get_bool("no-pin"),
+        seed: args.get_or("seed", 0xd1e5_5eedu64)?,
+        hash_seed: args.get_or("hash-seed", 0x5eedu64)?,
+    };
+    let repeats = args.get_or("repeats", 3usize)?;
+    let map = make_table(&table, cfg.nbuckets, cfg.hash_seed);
+    eprintln!(
+        "torture: table={} threads={} mix={}%L alpha={} buckets={} U={} {:?}",
+        map.name(),
+        cfg.threads,
+        cfg.mix.lookup,
+        cfg.alpha,
+        cfg.nbuckets,
+        cfg.key_range,
+        cfg.rebuild
+    );
+    let samples = torture::measure_mops(map, &cfg, repeats);
+    let s = Summary::of(&samples);
+    println!(
+        "{} threads={} mops_mean={:.3} mops_stddev={:.3} samples={:?}",
+        table, cfg.threads, s.mean, s.stddev, samples
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let secs = args.get_or("secs", 10u64)?;
+    let attack_at = args.get_or("attack-at", secs / 2)?;
+    let nbuckets = args.get_or("buckets", 4096usize)?;
+    let cfg = CoordinatorConfig {
+        nbuckets,
+        hash: if args.get_bool("weak-hash") {
+            HashFn::Modulo
+        } else {
+            HashFn::Seeded(0xd1e5)
+        },
+        workers: args.get_or("workers", 2usize)?,
+        enable_analytics: !args.get_bool("no-analytics"),
+        ..Default::default()
+    };
+    eprintln!("serve: {cfg:?} for {secs}s, attack at {attack_at}s");
+    let c = Arc::new(Coordinator::start(cfg)?);
+
+    // Client load: normal traffic, then an attack burst.
+    let c2 = c.clone();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let s2 = stop.clone();
+    let client = std::thread::spawn(move || {
+        let mut rng = dhash::util::SplitMix64::new(1);
+        let mut attack = dhash::torture::AttackGen::new(nbuckets, 7);
+        let t0 = std::time::Instant::now();
+        while !s2.load(std::sync::atomic::Ordering::Relaxed) {
+            let attacking = t0.elapsed().as_secs() >= attack_at;
+            let reqs: Vec<Request> = (0..64)
+                .map(|_| {
+                    if attacking && rng.next_f64() < 0.8 {
+                        Request::put(attack.next().unwrap(), 0)
+                    } else {
+                        let k = rng.next_bounded(1_000_000);
+                        if rng.next_f64() < 0.9 {
+                            Request::get(k)
+                        } else {
+                            Request::put(k, k)
+                        }
+                    }
+                })
+                .collect();
+            c2.execute_many(reqs);
+        }
+    });
+
+    for sec in 0..secs {
+        std::thread::sleep(Duration::from_secs(1));
+        let st = c.stats();
+        println!(
+            "t={:>3}s requests={:>9} batches={:>7} chi2={:>10.1} rebuilds={}",
+            sec + 1,
+            st.total_requests,
+            st.total_batches,
+            st.last_chi2,
+            st.rebuilds
+        );
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    client.join().unwrap();
+    for ev in c.rebuild_events() {
+        println!(
+            "mitigation at {:?}: chi2={:.1} -> {:?} ({} nodes in {:?})",
+            ev.at, ev.chi2, ev.new_hash, ev.moved, ev.elapsed
+        );
+    }
+    c.shutdown();
+    Ok(())
+}
+
+fn cmd_rebuild(args: &Args) -> anyhow::Result<()> {
+    let table = args.get("table").unwrap_or("dhash").to_string();
+    let nodes = args.get_or("nodes", 100_000u64)?;
+    let nbuckets = args.get_or("buckets", 1024usize)?;
+    let map = make_table(&table, nbuckets, 1);
+    let g = RcuThread::register();
+    for k in 0..nodes {
+        map.insert(&g, k, k);
+    }
+    let t0 = std::time::Instant::now();
+    let ok = map.rebuild(&g, nbuckets * 2, HashFn::Seeded(2));
+    let dt = t0.elapsed();
+    g.quiescent_state();
+    println!(
+        "{}: rebuild of {} nodes -> {} buckets: ok={} in {:?} ({:.0} nodes/ms)",
+        map.name(),
+        nodes,
+        nbuckets * 2,
+        ok,
+        dt,
+        nodes as f64 / dt.as_secs_f64() / 1e3
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    const KNOWN: &[&str] = &[
+        "table", "threads", "lookup-pct", "alpha", "buckets", "alt-buckets", "keys", "secs",
+        "no-rebuild", "no-pin", "repeats", "seed", "hash-seed", "workers", "attack-at",
+        "weak-hash", "no-analytics", "nodes",
+    ];
+    let args = Args::from_env(KNOWN)?;
+    match args.positional().first().map(|s| s.as_str()) {
+        Some("torture") => cmd_torture(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("rebuild") => cmd_rebuild(&args),
+        _ => {
+            eprintln!("usage: dhash <torture|serve|rebuild> [flags] (see source docs)");
+            std::process::exit(2);
+        }
+    }
+}

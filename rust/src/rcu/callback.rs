@@ -1,0 +1,165 @@
+//! `call_rcu`: deferred execution after a grace period, serviced by a
+//! lazily-spawned background reclaimer thread (the paper's delete path
+//! must not block on prior readers — §4.1 "(3) To reclaim a node, call_rcu
+//! is used, such that a delete operation will not be blocked").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use once_cell::sync::Lazy;
+
+type Callback = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Callback),
+    /// Barrier: reply on the channel once every callback enqueued before
+    /// this marker has executed.
+    Flush(Sender<()>),
+}
+
+thread_local! {
+    /// Per-thread clone of the reclaimer sender: call_rcu is on the
+    /// delete hot path, and going through the global mutex on every call
+    /// serializes all deleters (§Perf opt 3).
+    static TLS_TX: std::cell::OnceCell<Sender<Msg>> = const { std::cell::OnceCell::new() };
+}
+
+fn with_sender<R>(f: impl FnOnce(&Sender<Msg>) -> R) -> R {
+    TLS_TX.with(|c| f(c.get_or_init(|| QUEUE.lock().unwrap().clone())))
+}
+
+static QUEUE: Lazy<Mutex<Sender<Msg>>> = Lazy::new(|| {
+    let (tx, rx) = mpsc::channel::<Msg>();
+    std::thread::Builder::new()
+        .name("rcu-reclaimer".into())
+        .spawn(move || {
+            let mut pending: Vec<Msg> = Vec::new();
+            loop {
+                // Block for the first message, then drain opportunistically
+                // so one grace period amortizes over a batch of callbacks.
+                match rx.recv() {
+                    Ok(m) => pending.push(m),
+                    Err(_) => break, // all senders gone: process exit
+                }
+                while let Ok(m) = rx.try_recv() {
+                    pending.push(m);
+                    if pending.len() >= 4096 {
+                        break;
+                    }
+                }
+                // Give very recent enqueuers a moment to batch up.
+                std::thread::sleep(Duration::from_micros(100));
+                while let Ok(m) = rx.try_recv() {
+                    pending.push(m);
+                    if pending.len() >= 8192 {
+                        break;
+                    }
+                }
+                super::qsbr::global().synchronize(None);
+                GRACE_PERIODS.fetch_add(1, Ordering::Relaxed);
+                for m in pending.drain(..) {
+                    match m {
+                        Msg::Run(cb) => {
+                            cb();
+                            EXECUTED.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Msg::Flush(tx) => {
+                            let _ = tx.send(());
+                        }
+                    }
+                }
+            }
+        })
+        .expect("spawn rcu-reclaimer");
+    Mutex::new(tx)
+});
+
+static ENQUEUED: AtomicU64 = AtomicU64::new(0);
+static EXECUTED: AtomicU64 = AtomicU64::new(0);
+static GRACE_PERIODS: AtomicU64 = AtomicU64::new(0);
+
+/// Schedule `f` to run after a future grace period. Never blocks (beyond a
+/// channel send); safe to call from inside a read-side critical section.
+pub fn call_rcu(f: impl FnOnce() + Send + 'static) {
+    ENQUEUED.fetch_add(1, Ordering::Relaxed);
+    with_sender(|tx| tx.send(Msg::Run(Box::new(f)))).expect("rcu-reclaimer alive");
+}
+
+/// Wait until every callback enqueued *before* this call has executed
+/// (liburcu's `rcu_barrier`). Used by tests and orderly shutdown.
+///
+/// A registered caller is placed in an extended quiescent state for the
+/// wait — the reclaimer runs `synchronize` internally and would otherwise
+/// deadlock against a blocked-but-online caller.
+pub fn rcu_barrier() {
+    super::qsbr::with_current_offline(|| {
+        let (tx, rx) = mpsc::channel();
+        with_sender(|q| q.send(Msg::Flush(tx))).expect("rcu-reclaimer alive");
+        rx.recv().expect("rcu-reclaimer alive");
+    })
+}
+
+/// (enqueued, executed, grace_periods) counters for observability tests
+/// and the coordinator's metrics endpoint.
+pub fn reclaimer_stats() -> (u64, u64, u64) {
+    (
+        ENQUEUED.load(Ordering::Relaxed),
+        EXECUTED.load(Ordering::Relaxed),
+        GRACE_PERIODS.load(Ordering::Relaxed),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn barrier_flushes_all_prior_callbacks() {
+        let n = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let n2 = n.clone();
+            call_rcu(move || {
+                n2.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        rcu_barrier();
+        assert_eq!(n.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn stats_monotonic() {
+        let (e0, x0, _) = reclaimer_stats();
+        call_rcu(|| {});
+        rcu_barrier();
+        let (e1, x1, g1) = reclaimer_stats();
+        assert!(e1 > e0);
+        assert!(x1 > x0);
+        assert!(g1 >= 1);
+    }
+
+    #[test]
+    fn callbacks_from_many_threads() {
+        let n = Arc::new(AtomicUsize::new(0));
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let n2 = n.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..250 {
+                    let n3 = n2.clone();
+                    call_rcu(move || {
+                        n3.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        rcu_barrier();
+        assert_eq!(n.load(Ordering::SeqCst), 1000);
+    }
+}

@@ -1,0 +1,257 @@
+//! QSBR grace-period machinery: thread records, the global grace-period
+//! counter, and `synchronize_rcu`.
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One registered reader thread. `ctr == 0` means offline; otherwise the
+/// value of the global grace-period counter at the thread's most recent
+/// quiescent state.
+struct ThreadRecord {
+    ctr: AtomicU64,
+}
+
+/// The RCU domain: the global grace-period counter plus the registry of
+/// reader threads. A single process-wide domain (as in liburcu) is exposed
+/// through the free functions; the struct is public so tests can create
+/// isolated domains.
+pub struct RcuDomain {
+    gp: AtomicU64,
+    /// Serializes grace-period detection (concurrent `synchronize_rcu`
+    /// calls batch behind each other, exactly like liburcu's `gp_lock`).
+    gp_lock: Mutex<()>,
+    registry: Mutex<Vec<Arc<ThreadRecord>>>,
+}
+
+impl Default for RcuDomain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RcuDomain {
+    pub const fn new() -> Self {
+        Self {
+            gp: AtomicU64::new(1),
+            gp_lock: Mutex::new(()),
+            registry: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn register(&'static self) -> RcuThread {
+        let rec = Arc::new(ThreadRecord {
+            // Born online, as if it had just announced a quiescent state.
+            ctr: AtomicU64::new(self.gp.load(Ordering::SeqCst)),
+        });
+        self.registry.lock().unwrap().push(rec.clone());
+        RcuThread {
+            domain: self,
+            rec,
+            depth: Cell::new(0),
+            _not_send: PhantomData,
+        }
+    }
+
+    /// Wait for a full grace period: on return, every read-side critical
+    /// section that was in progress when this call began has completed.
+    pub fn synchronize(&self, caller: Option<&RcuThread>) {
+        // A registered caller must not wait on its own record: announce
+        // offline for the duration (its read-side references are its own
+        // responsibility — calling synchronize_rcu inside a read-side
+        // critical section is a bug, same as in liburcu).
+        let restore = caller.map(|t| {
+            let prev = t.rec.ctr.swap(0, Ordering::SeqCst);
+            (t, prev)
+        });
+
+        {
+            let _g = self.gp_lock.lock().unwrap();
+            let target = self.gp.fetch_add(1, Ordering::SeqCst) + 1;
+            // Snapshot the registry; threads registered *after* the bump
+            // cannot hold pre-bump references, so the snapshot is enough.
+            let records: Vec<Arc<ThreadRecord>> =
+                self.registry.lock().unwrap().iter().cloned().collect();
+            for rec in records {
+                let mut spins = 0u32;
+                loop {
+                    let c = rec.ctr.load(Ordering::SeqCst);
+                    if c == 0 || c >= target {
+                        break;
+                    }
+                    spins += 1;
+                    if spins < 64 {
+                        std::hint::spin_loop();
+                    } else {
+                        // Single-core friendliness: give the reader a turn.
+                        std::thread::yield_now();
+                        if spins > 4096 {
+                            std::thread::sleep(std::time::Duration::from_micros(50));
+                        }
+                    }
+                }
+            }
+        }
+
+        if let Some((t, prev)) = restore {
+            if prev != 0 {
+                // Re-online at the *current* GP value.
+                t.rec.ctr.store(self.gp.load(Ordering::SeqCst), Ordering::SeqCst);
+            }
+        }
+    }
+
+    fn deregister(&self, rec: &Arc<ThreadRecord>) {
+        // Go offline FIRST: an in-flight `synchronize` may hold a snapshot
+        // containing this record; a frozen non-zero ctr would stall that
+        // grace period forever once the thread is gone.
+        rec.ctr.store(0, Ordering::SeqCst);
+        let mut reg = self.registry.lock().unwrap();
+        if let Some(pos) = reg.iter().position(|r| Arc::ptr_eq(r, rec)) {
+            reg.swap_remove(pos);
+        }
+    }
+}
+
+/// The process-wide RCU domain used by the hash tables.
+static GLOBAL: RcuDomain = RcuDomain::new();
+
+pub(crate) fn global() -> &'static RcuDomain {
+    &GLOBAL
+}
+
+thread_local! {
+    /// Set while this thread owns a registration, so `synchronize_rcu`
+    /// (the free function) can exempt the caller's own record.
+    static CURRENT: Cell<*const ThreadRecord> = const { Cell::new(std::ptr::null()) };
+}
+
+/// Run `f` with the calling thread's registration (if any) in an extended
+/// quiescent state. Every potentially-blocking wait inside the crate
+/// (`synchronize_rcu`, `rcu_barrier`, lock acquisition in rebuild) funnels
+/// through this so a registered caller can never stall someone else's
+/// grace period while it blocks.
+pub(crate) fn with_current_offline<R>(f: impl FnOnce() -> R) -> R {
+    let cur = CURRENT.with(|c| c.get());
+    if cur.is_null() {
+        return f();
+    }
+    // SAFETY: the record outlives the RcuThread guard that set CURRENT and
+    // the guard clears CURRENT on drop, so `cur` is valid here.
+    let rec = unsafe { &*cur };
+    let prev = rec.ctr.swap(0, Ordering::SeqCst);
+    let r = f();
+    if prev != 0 {
+        rec.ctr
+            .store(GLOBAL.gp.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+    r
+}
+
+/// Wait for a grace period on the global domain.
+///
+/// Must **not** be called from inside a read-side critical section (it
+/// would deadlock against itself); a registered caller is treated as
+/// passing through an extended quiescent state for the duration.
+pub fn synchronize_rcu() {
+    with_current_offline(|| GLOBAL.synchronize(None));
+}
+
+/// A per-thread RCU registration (QSBR). Obtain one with
+/// [`RcuThread::register`]; all hash-table operations take `&RcuThread` as
+/// compile-time proof the calling thread participates in grace periods.
+///
+/// Not `Send`: the registration is bound to the OS thread that created it.
+pub struct RcuThread {
+    domain: &'static RcuDomain,
+    rec: Arc<ThreadRecord>,
+    /// Read-side nesting depth (guards are re-entrant, like liburcu).
+    depth: Cell<u32>,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl RcuThread {
+    /// Register the calling thread with the global domain.
+    pub fn register() -> Self {
+        let t = global().register();
+        CURRENT.with(|c| c.set(Arc::as_ptr(&t.rec)));
+        t
+    }
+
+    /// Enter a read-side critical section. Zero instructions under QSBR —
+    /// the guard only tracks nesting so [`quiescent_state`] can assert it
+    /// is not called with a section open (a debug build check).
+    ///
+    /// [`quiescent_state`]: RcuThread::quiescent_state
+    #[inline(always)]
+    pub fn read_lock(&self) -> RcuReadGuard<'_> {
+        self.depth.set(self.depth.get() + 1);
+        RcuReadGuard { owner: self }
+    }
+
+    /// Announce a quiescent state: the thread holds no RCU-protected
+    /// references. Cost: one load + one store.
+    #[inline(always)]
+    pub fn quiescent_state(&self) {
+        debug_assert_eq!(
+            self.depth.get(),
+            0,
+            "quiescent_state inside a read-side critical section"
+        );
+        self.rec
+            .ctr
+            .store(self.domain.gp.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+
+    /// Enter an extended quiescent state (e.g. before blocking).
+    #[inline]
+    pub fn offline(&self) {
+        debug_assert_eq!(self.depth.get(), 0, "offline inside a read-side section");
+        self.rec.ctr.store(0, Ordering::SeqCst);
+    }
+
+    /// Leave the extended quiescent state.
+    #[inline]
+    pub fn online(&self) {
+        self.rec
+            .ctr
+            .store(self.domain.gp.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+
+    /// Run `f` while offline (for blocking operations such as lock
+    /// acquisition or I/O), restoring the online state afterwards.
+    pub fn offline_while<R>(&self, f: impl FnOnce() -> R) -> R {
+        self.offline();
+        let r = f();
+        self.online();
+        r
+    }
+
+    /// `synchronize_rcu` with this thread exempted (equivalent to the free
+    /// function, but skips the thread-local probe).
+    pub fn synchronize(&self) {
+        self.domain.synchronize(Some(self));
+    }
+}
+
+impl Drop for RcuThread {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(std::ptr::null()));
+        self.domain.deregister(&self.rec);
+    }
+}
+
+/// Marker guard for a QSBR read-side critical section (no runtime effect
+/// beyond nesting accounting; reclamation is prevented by the *absence* of
+/// quiescent-state announcements, not by this guard).
+pub struct RcuReadGuard<'a> {
+    owner: &'a RcuThread,
+}
+
+impl Drop for RcuReadGuard<'_> {
+    #[inline(always)]
+    fn drop(&mut self) {
+        self.owner.depth.set(self.owner.depth.get() - 1);
+    }
+}

@@ -1,0 +1,203 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and execute them from Rust. Python is never
+//! on the request path — the coordinator calls [`Engine`] methods, which
+//! run the pre-compiled XLA executables on the in-process CPU PJRT
+//! client (see /opt/xla-example/load_hlo for the reference wiring).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Skew statistics computed by the detector artifact (the L2 graph built
+/// from the L1 Pallas kernels).
+#[derive(Clone, Debug)]
+pub struct Detection {
+    /// Pearson chi-square of the key sample's bucket histogram against
+    /// uniform, over `nbins` detector bins. Under a healthy hash this is
+    /// ~chi2(nbins-1): mean ≈ nbins-1, stddev ≈ sqrt(2(nbins-1)).
+    pub chi2: f32,
+    /// Largest detector-bin load in the sample.
+    pub max_load: i32,
+    /// The full folded histogram (diagnostics / logging).
+    pub hist: Vec<i32>,
+}
+
+/// Hash-function kind tags shared with the kernels (0 = modulo,
+/// 1 = seeded mix64).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashKind {
+    Modulo,
+    Seeded,
+}
+
+impl HashKind {
+    fn tag(self) -> u64 {
+        match self {
+            HashKind::Modulo => 0,
+            HashKind::Seeded => 1,
+        }
+    }
+
+    /// The kind tag for a table's [`crate::dhash::HashFn`], plus its seed.
+    pub fn of(hash: crate::dhash::HashFn) -> (Self, u64) {
+        match hash {
+            crate::dhash::HashFn::Modulo => (HashKind::Modulo, 0),
+            crate::dhash::HashFn::Seeded(s) => (HashKind::Seeded, s),
+        }
+    }
+}
+
+/// The loaded-and-compiled artifact bundle.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    batch_hash: xla::PjRtLoadedExecutable,
+    detector: xla::PjRtLoadedExecutable,
+    /// Exported batch size (keys per execution); inputs are padded.
+    pub batch: usize,
+    /// Detector histogram bins.
+    pub nbins: usize,
+}
+
+impl Engine {
+    /// Default artifact directory: `$DHASH_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DHASH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load and compile both artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let batch = json_usize(&manifest, "batch").context("manifest: batch")?;
+        let nbins = json_usize(&manifest, "nbins").context("manifest: nbins")?;
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        };
+        let batch_hash = load("batch_hash.hlo.txt")?;
+        let detector = load("detector.hlo.txt")?;
+        Ok(Engine {
+            client,
+            batch_hash,
+            detector,
+            batch,
+            nbins,
+        })
+    }
+
+    /// Pad (or fold) `keys` to exactly `self.batch` entries. Shorter
+    /// samples repeat cyclically so the histogram stays proportional.
+    fn pad_keys(&self, keys: &[u64]) -> Vec<u64> {
+        assert!(!keys.is_empty(), "empty key sample");
+        let mut out = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            out.push(keys[i % keys.len()]);
+        }
+        out
+    }
+
+    fn args(
+        &self,
+        keys: &[u64],
+        seed: u64,
+        nbuckets: u64,
+        kind: HashKind,
+    ) -> Result<[xla::Literal; 4]> {
+        if nbuckets == 0 {
+            bail!("nbuckets must be positive");
+        }
+        let keys = self.pad_keys(keys);
+        Ok([
+            xla::Literal::vec1(&keys),
+            xla::Literal::vec1(&[seed]),
+            xla::Literal::vec1(&[nbuckets]),
+            xla::Literal::vec1(&[kind.tag()]),
+        ])
+    }
+
+    /// Bucket ids for up to `batch` keys (`batch_hash.hlo.txt`). Returns
+    /// exactly `keys.len().min(batch)` ids.
+    pub fn batch_hash(
+        &self,
+        keys: &[u64],
+        seed: u64,
+        nbuckets: u64,
+        kind: HashKind,
+    ) -> Result<Vec<i32>> {
+        let args = self.args(keys, seed, nbuckets, kind)?;
+        let result = self.batch_hash.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        let ids: Vec<i32> = result.to_vec()?;
+        Ok(ids[..keys.len().min(self.batch)].to_vec())
+    }
+
+    /// Skew statistics for a key sample (`detector.hlo.txt`).
+    pub fn detect(
+        &self,
+        keys: &[u64],
+        seed: u64,
+        nbuckets: u64,
+        kind: HashKind,
+    ) -> Result<Detection> {
+        let args = self.args(keys, seed, nbuckets, kind)?;
+        let (chi2, max_load, hist) = self.detector.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?
+            .to_tuple3()?;
+        Ok(Detection {
+            chi2: chi2.get_first_element::<f32>()?,
+            max_load: max_load.get_first_element::<i32>()?,
+            hist: hist.to_vec()?,
+        })
+    }
+
+    /// Detector threshold for "this sample is an attack": mean + `k`
+    /// standard deviations of the chi2(nbins-1) null distribution.
+    pub fn chi2_threshold(&self, k: f32) -> f32 {
+        let dof = (self.nbins - 1) as f32;
+        dof + k * (2.0 * dof).sqrt()
+    }
+}
+
+/// Extract `"name": <integer>` from a flat JSON string (the manifest is
+/// machine-generated and tiny; a JSON crate is unavailable offline).
+fn json_usize(s: &str, name: &str) -> Result<usize> {
+    let pat = format!("\"{name}\":");
+    let at = s.find(&pat).with_context(|| format!("missing {name}"))?;
+    let rest = s[at + pat.len()..].trim_start();
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().with_context(|| format!("bad {name}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_usize_extracts() {
+        let s = r#"{ "batch": 4096, "nbins": 256, "outputs": {} }"#;
+        assert_eq!(json_usize(s, "batch").unwrap(), 4096);
+        assert_eq!(json_usize(s, "nbins").unwrap(), 256);
+        assert!(json_usize(s, "missing").is_err());
+    }
+
+    #[test]
+    fn chi2_threshold_shape() {
+        // Engine::load needs artifacts; threshold math is pure.
+        let dof = 255.0f32;
+        let t = dof + 8.0 * (2.0 * dof).sqrt();
+        assert!(t > dof && t < 3.0 * dof);
+    }
+}

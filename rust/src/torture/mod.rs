@@ -1,0 +1,336 @@
+//! The hash-torture benchmarking framework (paper §6.1, extending
+//! perfbook's `hashtorture`).
+//!
+//! A run spawns `threads` workers, each performing a random mix of
+//! lookup / insert / delete operations (distribution `m`) over keys drawn
+//! uniformly from `[0, key_range)`, optionally alongside a *rebuilder*
+//! thread that continuously rebuilds the table between two sizes (the
+//! §6.2 protocol: same hash function on both sides, which degrades the
+//! dynamic tables to resizable ones so HT-Split can be compared fairly).
+//!
+//! The average load factor α is controlled the way the paper does it:
+//! prefill `α · β` nodes and keep the insert ratio equal to the delete
+//! ratio so the population stays put in expectation.
+
+pub mod workload;
+pub mod zipf;
+
+pub use workload::{AttackGen, OpMix};
+pub use zipf::Zipf;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crossbeam_utils::CachePadded;
+
+use crate::baselines::ConcurrentMap;
+use crate::dhash::HashFn;
+use crate::rcu::RcuThread;
+use crate::util::affinity;
+use crate::util::SplitMix64;
+
+/// Rebuilder behaviour during a torture run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RebuildMode {
+    /// No rebuilds: measures the table's steady-state common-op path.
+    None,
+    /// Continuously rebuild between `nbuckets` and `alt_nbuckets` with
+    /// the *same* hash function (paper §6.2).
+    Continuous { alt_nbuckets: usize },
+}
+
+/// One torture-run configuration (the paper's parameters m, α, β, U).
+#[derive(Clone, Debug)]
+pub struct TortureConfig {
+    /// Worker thread count.
+    pub threads: usize,
+    /// Operation mix `m` (lookup percentage; the rest splits evenly
+    /// between insert and delete).
+    pub mix: OpMix,
+    /// Average load factor α: prefill is `alpha * nbuckets` nodes.
+    pub alpha: usize,
+    /// Bucket count β of the initial table.
+    pub nbuckets: usize,
+    /// Key range U (paper: 10,000,000). `0` = auto: U = 2·α·β, the
+    /// value at which uniform-random inserts and deletes *balance*
+    /// (insert succeeds w.p. 1 - n/U, delete w.p. n/U; equilibrium is
+    /// n = U/2), keeping the population stationary at exactly α·β. The
+    /// paper's fixed U drifts toward U/2 over long windows; see
+    /// EXPERIMENTS.md §Fig2 notes.
+    pub key_range: u64,
+    /// Measurement window.
+    pub duration: Duration,
+    pub rebuild: RebuildMode,
+    /// Pin workers round-robin to cores (performance-first mapping).
+    pub pin: bool,
+    /// Workload PRNG seed (runs are reproducible given a seed).
+    pub seed: u64,
+    /// Hash seed shared by old/new tables under Continuous rebuild.
+    pub hash_seed: u64,
+}
+
+impl TortureConfig {
+    /// U, resolving `0` to the stationary value 2·α·β.
+    pub fn resolved_key_range(&self) -> u64 {
+        if self.key_range == 0 {
+            2 * (self.alpha * self.nbuckets) as u64
+        } else {
+            self.key_range
+        }
+    }
+}
+
+impl Default for TortureConfig {
+    fn default() -> Self {
+        Self {
+            threads: 2,
+            mix: OpMix::lookup_pct(90),
+            alpha: 20,
+            nbuckets: 1024,
+            key_range: 1_000_000,
+            duration: Duration::from_millis(500),
+            rebuild: RebuildMode::Continuous { alt_nbuckets: 2048 },
+            pin: true,
+            seed: 0xd1e5_5eed,
+            hash_seed: 0x5eed,
+        }
+    }
+}
+
+/// Result of one torture run.
+#[derive(Clone, Debug)]
+pub struct TortureReport {
+    pub table: &'static str,
+    /// Total completed operations across workers.
+    pub total_ops: u64,
+    pub per_thread_ops: Vec<u64>,
+    /// Completed rebuilds during the window.
+    pub rebuilds: u64,
+    pub elapsed: Duration,
+}
+
+impl TortureReport {
+    /// Throughput in million operations per second (the paper's y-axis).
+    pub fn mops(&self) -> f64 {
+        self.total_ops as f64 / self.elapsed.as_secs_f64() / 1e6
+    }
+}
+
+/// Prefill `alpha * nbuckets` distinct keys so the measured phase starts
+/// at the target load factor. Returns the number inserted.
+pub fn prefill(map: &dyn ConcurrentMap, cfg: &TortureConfig) -> u64 {
+    let g = RcuThread::register();
+    let target = (cfg.alpha * cfg.nbuckets) as u64;
+    let key_range = cfg.resolved_key_range();
+    assert!(
+        target <= key_range / 2,
+        "key range too small for target population (α·β = {target}, U = {key_range})"
+    );
+    let mut rng = SplitMix64::new(cfg.seed ^ 0xf1ff);
+    let mut n = 0;
+    while n < target {
+        let k = rng.next_bounded(key_range);
+        if map.insert(&g, k, k) {
+            n += 1;
+        }
+        if n % 1024 == 0 {
+            g.quiescent_state();
+        }
+    }
+    g.quiescent_state();
+    n
+}
+
+/// Run one torture measurement (prefill NOT included; call [`prefill`]).
+pub fn run(map: Arc<dyn ConcurrentMap>, cfg: &TortureConfig) -> TortureReport {
+    let stop = Arc::new(AtomicBool::new(false));
+    let counters: Arc<Vec<CachePadded<AtomicU64>>> = Arc::new(
+        (0..cfg.threads)
+            .map(|_| CachePadded::new(AtomicU64::new(0)))
+            .collect(),
+    );
+    let rebuilds = Arc::new(AtomicU64::new(0));
+
+    let mut handles = Vec::with_capacity(cfg.threads + 1);
+    for t in 0..cfg.threads {
+        let map = map.clone();
+        let stop = stop.clone();
+        let counters = counters.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            if cfg.pin {
+                affinity::pin_next();
+            }
+            let key_range = cfg.resolved_key_range();
+            let g = RcuThread::register();
+            let mut rng = SplitMix64::new(cfg.seed.wrapping_add(t as u64 * 0x9e37));
+            let mut local = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                // Batch 64 ops between stop-flag checks and counter
+                // publication to keep the hot loop tight.
+                for _ in 0..64 {
+                    let key = rng.next_bounded(key_range);
+                    match cfg.mix.pick(&mut rng) {
+                        workload::Op::Lookup => {
+                            std::hint::black_box(map.lookup(&g, key));
+                        }
+                        workload::Op::Insert => {
+                            std::hint::black_box(map.insert(&g, key, key));
+                        }
+                        workload::Op::Delete => {
+                            std::hint::black_box(map.delete(&g, key));
+                        }
+                    }
+                    local += 1;
+                }
+                g.quiescent_state();
+                counters[t].store(local, Ordering::Relaxed);
+            }
+            g.offline();
+        }));
+    }
+
+    // Optional continuous rebuilder (not counted as a worker).
+    let rebuilder = match cfg.rebuild {
+        RebuildMode::None => None,
+        RebuildMode::Continuous { alt_nbuckets } => {
+            let map = map.clone();
+            let stop = stop.clone();
+            let rebuilds = rebuilds.clone();
+            let cfg = cfg.clone();
+            Some(std::thread::spawn(move || {
+                let g = RcuThread::register();
+                let hash = HashFn::Seeded(cfg.hash_seed);
+                let mut flip = false;
+                while !stop.load(Ordering::Relaxed) {
+                    let nb = if flip { cfg.nbuckets } else { alt_nbuckets };
+                    flip = !flip;
+                    if map.rebuild(&g, nb, hash) {
+                        rebuilds.fetch_add(1, Ordering::Relaxed);
+                    }
+                    g.quiescent_state();
+                }
+                g.offline();
+            }))
+        }
+    };
+
+    let t0 = Instant::now();
+    std::thread::sleep(cfg.duration);
+    stop.store(true, Ordering::Relaxed);
+    let elapsed = t0.elapsed();
+    for h in handles {
+        h.join().unwrap();
+    }
+    if let Some(h) = rebuilder {
+        h.join().unwrap();
+    }
+
+    let per_thread_ops: Vec<u64> = counters.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+    TortureReport {
+        table: map.name(),
+        total_ops: per_thread_ops.iter().sum(),
+        per_thread_ops,
+        rebuilds: rebuilds.load(Ordering::Relaxed),
+        elapsed,
+    }
+}
+
+/// Convenience: prefill + `repeats` measured runs, returning Mop/s
+/// samples (the benches feed these into `util::stats::Summary`).
+pub fn measure_mops(
+    map: Arc<dyn ConcurrentMap>,
+    cfg: &TortureConfig,
+    repeats: usize,
+) -> Vec<f64> {
+    prefill(&*map, cfg);
+    (0..repeats).map(|_| run(map.clone(), cfg).mops()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{HtRht, HtSplit, HtXu};
+    use crate::dhash::DHashMap;
+    use crate::rcu::rcu_barrier;
+
+    fn tiny_cfg() -> TortureConfig {
+        TortureConfig {
+            threads: 2,
+            mix: OpMix::lookup_pct(80),
+            alpha: 4,
+            nbuckets: 64,
+            key_range: 0, // auto: stationary 2·α·β
+            duration: Duration::from_millis(120),
+            rebuild: RebuildMode::Continuous { alt_nbuckets: 128 },
+            pin: false,
+            seed: 7,
+            hash_seed: 3,
+        }
+    }
+
+    #[test]
+    fn prefill_reaches_target_population() {
+        let cfg = tiny_cfg();
+        let map: Arc<dyn ConcurrentMap> = Arc::new(DHashMap::with_buckets(cfg.nbuckets, 3));
+        let n = prefill(&*map, &cfg);
+        assert_eq!(n, (cfg.alpha * cfg.nbuckets) as u64);
+        let g = RcuThread::register();
+        assert_eq!(map.len(&g), n as usize);
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn run_produces_ops_and_rebuilds_dhash() {
+        let cfg = tiny_cfg();
+        let map: Arc<dyn ConcurrentMap> = Arc::new(DHashMap::with_buckets(cfg.nbuckets, 3));
+        prefill(&*map, &cfg);
+        let rep = run(map, &cfg);
+        assert!(rep.total_ops > 1000, "ops {}", rep.total_ops);
+        assert!(rep.rebuilds > 0, "no rebuilds completed");
+        assert!(rep.mops() > 0.0);
+        assert_eq!(rep.per_thread_ops.len(), 2);
+        rcu_barrier();
+    }
+
+    #[test]
+    fn run_all_baselines_smoke() {
+        let cfg = TortureConfig {
+            duration: Duration::from_millis(80),
+            ..tiny_cfg()
+        };
+        let tables: Vec<Arc<dyn ConcurrentMap>> = vec![
+            Arc::new(HtXu::new(cfg.nbuckets, HashFn::Seeded(cfg.hash_seed))),
+            Arc::new(HtRht::new(cfg.nbuckets, HashFn::Seeded(cfg.hash_seed))),
+            Arc::new(HtSplit::new(cfg.nbuckets, 1 << 20)),
+        ];
+        for map in tables {
+            prefill(&*map, &cfg);
+            let rep = run(map.clone(), &cfg);
+            assert!(rep.total_ops > 500, "{}: {}", rep.table, rep.total_ops);
+        }
+        rcu_barrier();
+    }
+
+    #[test]
+    fn population_stays_near_target() {
+        // insert% == delete% keeps the population stable in expectation.
+        let cfg = TortureConfig {
+            duration: Duration::from_millis(250),
+            ..tiny_cfg()
+        };
+        let map: Arc<dyn ConcurrentMap> = Arc::new(DHashMap::with_buckets(cfg.nbuckets, 3));
+        let target = prefill(&*map, &cfg) as f64;
+        run(map.clone(), &cfg);
+        let g = RcuThread::register();
+        let after = map.len(&g) as f64;
+        assert!(
+            (after - target).abs() / target < 0.5,
+            "population drifted: {target} -> {after}"
+        );
+        g.quiescent_state();
+        rcu_barrier();
+    }
+}

@@ -1,0 +1,117 @@
+//! Workload building blocks: the operation mix `m` and the adversarial
+//! key generator used by the attack-mitigation experiments.
+
+use crate::util::SplitMix64;
+
+/// One hash-table operation kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Lookup,
+    Insert,
+    Delete,
+}
+
+/// The paper's operation mix `m`: a lookup percentage, with the remainder
+/// split evenly between inserts and deletes (keeping the population
+/// stationary, §6.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpMix {
+    /// Lookup share in percent (0..=100).
+    pub lookup: u8,
+}
+
+impl OpMix {
+    pub fn lookup_pct(lookup: u8) -> Self {
+        assert!(lookup <= 100);
+        Self { lookup }
+    }
+
+    /// Sample an operation.
+    #[inline(always)]
+    pub fn pick(&self, rng: &mut SplitMix64) -> Op {
+        let r = rng.next_bounded(100) as u8;
+        if r < self.lookup {
+            Op::Lookup
+        } else if (r - self.lookup) % 2 == 0 {
+            Op::Insert
+        } else {
+            Op::Delete
+        }
+    }
+}
+
+/// Generates keys that all collide under `key % nbuckets` — the
+/// algorithmic-complexity attack (Crosby & Wallach) that motivates
+/// dynamic hash tables (§1).
+#[derive(Clone, Debug)]
+pub struct AttackGen {
+    nbuckets: u64,
+    residue: u64,
+    i: u64,
+}
+
+impl AttackGen {
+    /// Attack keys congruent to `residue` modulo `nbuckets`.
+    pub fn new(nbuckets: usize, residue: u64) -> Self {
+        let nbuckets = nbuckets as u64;
+        Self {
+            nbuckets,
+            residue: residue % nbuckets,
+            i: 0,
+        }
+    }
+}
+
+impl Iterator for AttackGen {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        let k = self.residue + self.i * self.nbuckets;
+        self.i += 1;
+        Some(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_respects_ratios() {
+        let mix = OpMix::lookup_pct(90);
+        let mut rng = SplitMix64::new(1);
+        let mut counts = [0u32; 3];
+        for _ in 0..100_000 {
+            match mix.pick(&mut rng) {
+                Op::Lookup => counts[0] += 1,
+                Op::Insert => counts[1] += 1,
+                Op::Delete => counts[2] += 1,
+            }
+        }
+        let l = counts[0] as f64 / 1e5;
+        assert!((l - 0.90).abs() < 0.01, "lookup share {l}");
+        // insert ~= delete.
+        let ratio = counts[1] as f64 / counts[2] as f64;
+        assert!((0.8..1.25).contains(&ratio), "ins/del ratio {ratio}");
+    }
+
+    #[test]
+    fn mix_extremes() {
+        let mut rng = SplitMix64::new(2);
+        let all_lookup = OpMix::lookup_pct(100);
+        assert!((0..1000).all(|_| all_lookup.pick(&mut rng) == Op::Lookup));
+        let no_lookup = OpMix::lookup_pct(0);
+        assert!((0..1000).all(|_| no_lookup.pick(&mut rng) != Op::Lookup));
+    }
+
+    #[test]
+    fn attack_keys_collide_under_modulo() {
+        let n = 64;
+        let keys: Vec<u64> = AttackGen::new(n, 5).take(100).collect();
+        assert_eq!(keys.len(), 100);
+        assert!(keys.iter().all(|k| k % n as u64 == 5));
+        // Distinct keys.
+        let set: std::collections::HashSet<_> = keys.iter().collect();
+        assert_eq!(set.len(), 100);
+    }
+}

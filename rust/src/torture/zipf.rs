@@ -1,0 +1,141 @@
+//! Zipfian key generator (rejection-inversion sampling, Hörmann &
+//! Derflinger 1996 — the method used by YCSB and rand_distr). Real KV
+//! workloads are heavily skewed; the paper's "bursts of incoming data"
+//! motivation is modeled by high-s zipf traffic in the
+//! `fragment_reassembly` example.
+
+use crate::util::SplitMix64;
+
+/// Zipf(n, s) sampler over `{1, ..., n}` (rank 1 is the hottest).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_integral_x1: f64,
+    h_integral_n: f64,
+    s_const: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1, "zipf needs n >= 1");
+        assert!(
+            s > 0.0 && s != 1.0,
+            "exponent must be > 0 and != 1 (use ~1.0001 near 1)"
+        );
+        let mut z = Self {
+            n,
+            s,
+            h_integral_x1: 0.0,
+            h_integral_n: 0.0,
+            s_const: 0.0,
+        };
+        // The -1.0 extends the inversion domain to cover rank 1 (the
+        // area of the leftmost bar, h(1) = 1) — Apache commons'
+        // RejectionInversionZipfSampler does the same.
+        z.h_integral_x1 = z.h_integral(1.5) - 1.0;
+        z.h_integral_n = z.h_integral(n as f64 + 0.5);
+        z.s_const = 2.0 - z.h_integral_inv(z.h_integral(2.5) - z.h(2.0));
+        z
+    }
+
+    /// H(x) = (x^(1-s) - 1) / (1-s), computed stably via expm1/ln.
+    #[inline]
+    fn h_integral(&self, x: f64) -> f64 {
+        ((1.0 - self.s) * x.ln()).exp_m1() / (1.0 - self.s)
+    }
+
+    /// Inverse of `h_integral`.
+    #[inline]
+    fn h_integral_inv(&self, x: f64) -> f64 {
+        (((1.0 - self.s) * x).ln_1p() / (1.0 - self.s)).exp()
+    }
+
+    /// h(x) = x^(-s).
+    #[inline]
+    fn h(&self, x: f64) -> f64 {
+        (-self.s * x.ln()).exp()
+    }
+
+    /// Draw one rank in `[1, n]`.
+    pub fn sample(&self, rng: &mut SplitMix64) -> u64 {
+        loop {
+            let p = rng.next_f64();
+            let u = self.h_integral_n + p * (self.h_integral_x1 - self.h_integral_n);
+            let x = self.h_integral_inv(u);
+            let k = x.round().clamp(1.0, self.n as f64);
+            if k - x <= self.s_const || u >= self.h_integral(k + 0.5) - self.h(k) {
+                return k as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..10_000 {
+            let k = z.sample(&mut rng);
+            assert!((1..=1000).contains(&k));
+        }
+    }
+
+    #[test]
+    fn skew_concentrates_on_head() {
+        let z = Zipf::new(10_000, 1.2);
+        let mut rng = SplitMix64::new(6);
+        let n = 50_000;
+        let head = (0..n).filter(|_| z.sample(&mut rng) <= 10).count();
+        // With s=1.2 the top-10 ranks should absorb a large share.
+        assert!(
+            head as f64 / n as f64 > 0.3,
+            "head share too small: {head}/{n}"
+        );
+    }
+
+    #[test]
+    fn low_skew_is_spread_out() {
+        let z = Zipf::new(1000, 0.5);
+        let mut rng = SplitMix64::new(7);
+        let n = 50_000;
+        let head = (0..n).filter(|_| z.sample(&mut rng) <= 10).count();
+        assert!(
+            (head as f64) / (n as f64) < 0.3,
+            "low-skew head share too large: {head}/{n}"
+        );
+    }
+
+    #[test]
+    fn rank_frequencies_decrease() {
+        let z = Zipf::new(50, 1.5);
+        let mut rng = SplitMix64::new(8);
+        let mut counts = [0u32; 51];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        assert!(counts[1] > counts[2]);
+        assert!(counts[2] > counts[5]);
+        assert!(counts[5] > counts[20]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let z = Zipf::new(100, 1.1);
+        let mut a = SplitMix64::new(9);
+        let mut b = SplitMix64::new(9);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut a), z.sample(&mut b));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exponent")]
+    fn rejects_s_equal_one() {
+        Zipf::new(10, 1.0);
+    }
+}

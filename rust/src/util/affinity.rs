@@ -1,0 +1,76 @@
+//! CPU pinning for the torture framework's performance-first thread
+//! mapping (paper §6.1: "a new thread is mapped to the CPU core that has
+//! the smallest number of worker threads running on it").
+//!
+//! On the single-core container this degenerates to pinning everything to
+//! core 0, but the mapping logic is kept faithful so the harness behaves
+//! correctly on real multi-core hosts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of online CPUs.
+pub fn ncpus() -> usize {
+    // SAFETY: sysconf is async-signal-safe and has no memory preconditions.
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n <= 0 {
+        1
+    } else {
+        n as usize
+    }
+}
+
+/// Pin the calling thread to `cpu` (modulo the online CPU count).
+/// Returns false if the kernel rejected the mask (non-fatal: the harness
+/// proceeds unpinned).
+pub fn pin_to(cpu: usize) -> bool {
+    let n = ncpus();
+    let cpu = cpu % n;
+    // SAFETY: CPU_* macros are reimplemented via raw bit manipulation on a
+    // zeroed cpu_set_t, which is a plain bitmask struct.
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(cpu, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    }
+}
+
+static NEXT: AtomicUsize = AtomicUsize::new(0);
+
+/// Performance-first mapping: assign worker `i` the next least-loaded core
+/// (round-robin over online cores, which is equivalent under uniform
+/// workers). Returns the core id chosen.
+pub fn pin_next() -> usize {
+    let cpu = NEXT.fetch_add(1, Ordering::Relaxed) % ncpus();
+    pin_to(cpu);
+    cpu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ncpus_positive() {
+        assert!(ncpus() >= 1);
+    }
+
+    #[test]
+    fn pin_to_current_host() {
+        // Must not crash, and pinning to core 0 should succeed everywhere.
+        assert!(pin_to(0));
+        // Out-of-range wraps.
+        assert!(pin_to(ncpus() + 3));
+    }
+
+    #[test]
+    fn round_robin_advances() {
+        let a = pin_next();
+        let b = pin_next();
+        let n = ncpus();
+        if n > 1 {
+            assert_ne!(a, b);
+        } else {
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal `--flag value` argument parser (clap is unavailable offline).
+//!
+//! Supports `--name value`, `--name=value`, boolean `--name`, and a list of
+//! positional arguments. Unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Args {
+    /// Parse from an explicit token stream. `known` lists the accepted flag
+    /// names (without the `--`); a value-less occurrence stores `"true"`.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        tokens: I,
+        known: &[&str],
+    ) -> Result<Self, ParseError> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if !known.contains(&name.as_str()) {
+                    return Err(ParseError(format!("unknown flag --{name}")));
+                }
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        // Treat a following token as the value unless it is
+                        // itself a flag.
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                out.flags.insert(name, value);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(known: &[&str]) -> Result<Self, ParseError> {
+        Self::parse(std::env::args().skip(1), known)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, ParseError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| ParseError(format!("bad value for --{name}: {s:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = Args::parse(
+            toks("run --threads 8 --alpha=20 --verbose --out x.csv"),
+            &["threads", "alpha", "verbose", "out"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["run".to_string()]);
+        assert_eq!(a.get_or("threads", 1usize).unwrap(), 8);
+        assert_eq!(a.get_or("alpha", 0u64).unwrap(), 20);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(toks("--nope 3"), &["yes"]).is_err());
+    }
+
+    #[test]
+    fn bad_value_type() {
+        let a = Args::parse(toks("--threads abc"), &["threads"]).unwrap();
+        assert!(a.get_or("threads", 1usize).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(toks(""), &["threads"]).unwrap();
+        assert_eq!(a.get_or("threads", 4usize).unwrap(), 4);
+        assert!(!a.get_bool("threads"));
+    }
+}

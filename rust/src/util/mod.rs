@@ -1,0 +1,12 @@
+//! Small self-contained utilities: PRNG, hashing, statistics, CLI parsing,
+//! and CPU affinity. The offline build environment provides no `rand`,
+//! `clap`, or `criterion`, so these are implemented in-repo.
+
+pub mod affinity;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::{mix64, SplitMix64};
+pub use stats::Summary;

@@ -1,0 +1,98 @@
+//! End-to-end coordinator test: the full detect→rebuild loop against a
+//! synthetic collision attack, with the real PJRT artifacts. Requires
+//! `make artifacts` (skips cleanly otherwise).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dhash::coordinator::{
+    BatcherConfig, ControllerConfig, Coordinator, CoordinatorConfig, DetectorConfig, Request,
+    Response,
+};
+use dhash::dhash::HashFn;
+use dhash::torture::AttackGen;
+
+fn artifacts_present() -> bool {
+    let ok = dhash::runtime::Engine::default_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+fn attack_config(nbuckets: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        nbuckets,
+        hash: HashFn::Modulo, // vulnerable on purpose
+        workers: 2,
+        batcher: BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(100),
+            pre_hash: false,
+        },
+        detector: DetectorConfig {
+            sample_capacity: 4096,
+            period: Duration::from_millis(20),
+            sigma: 8.0,
+            min_samples: 512,
+        },
+        controller: ControllerConfig {
+            cooldown: Duration::from_millis(100),
+            rebuild_buckets: None,
+        },
+        enable_analytics: true,
+    }
+}
+
+#[test]
+fn detects_and_mitigates_collision_attack() {
+    if !artifacts_present() {
+        return;
+    }
+    let nbuckets = 1024;
+    let c = Arc::new(Coordinator::start(attack_config(nbuckets)).unwrap());
+
+    // Benign phase: random puts, detector should stay quiet.
+    let reqs: Vec<Request> = (0..2048u64).map(|i| Request::put(i * 7919, i)).collect();
+    c.execute_many(reqs);
+    std::thread::sleep(Duration::from_millis(120));
+    assert_eq!(c.stats().rebuilds, 0, "false positive on benign traffic");
+
+    // Attack phase: flood colliding keys (all ≡ 3 mod nbuckets).
+    let attack: Vec<Request> = AttackGen::new(nbuckets, 3)
+        .take(6000)
+        .map(|k| Request::put(k, 0))
+        .collect();
+    for chunk in attack.chunks(512) {
+        c.execute_many(chunk.to_vec());
+    }
+    // Give the analytics loop time to sample + evaluate + rebuild.
+    let mut waited = 0;
+    while c.stats().rebuilds == 0 && waited < 3_000 {
+        std::thread::sleep(Duration::from_millis(50));
+        waited += 50;
+    }
+    let st = c.stats();
+    assert!(st.rebuilds >= 1, "attack was never mitigated (chi2={})", st.last_chi2);
+    let events = c.rebuild_events();
+    assert!(!events.is_empty());
+    assert!(matches!(events[0].new_hash, HashFn::Seeded(_)), "mitigation must install a seeded hash");
+
+    // The service still works and holds the data.
+    assert_eq!(c.execute(Request::get(3)), Response::Value(0)); // attack key
+    assert_eq!(c.execute(Request::get(7919)), Response::Value(1)); // benign key
+    c.shutdown();
+}
+
+#[test]
+fn detector_runs_are_counted() {
+    if !artifacts_present() {
+        return;
+    }
+    let c = Arc::new(Coordinator::start(attack_config(256)).unwrap());
+    let reqs: Vec<Request> = (0..1024u64).map(|i| Request::put(i, i)).collect();
+    c.execute_many(reqs);
+    std::thread::sleep(Duration::from_millis(200));
+    assert!(c.stats().detector_runs > 0, "analytics loop never evaluated");
+    c.shutdown();
+}

@@ -1,0 +1,87 @@
+//! Cross-layer agreement: the Rust data path (`util::rng::mix64` /
+//! `HashFn`) and the AOT Pallas kernel (`batch_hash.hlo.txt`) must place
+//! every key in the same bucket. Requires `make artifacts`.
+
+use dhash::dhash::HashFn;
+use dhash::runtime::{Engine, HashKind};
+use dhash::util::SplitMix64;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Engine::load(&dir).expect("artifacts present but failed to load"))
+}
+
+#[test]
+fn seeded_hash_agrees_with_rust() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = SplitMix64::new(123);
+    let keys: Vec<u64> = (0..engine.batch).map(|_| rng.next_u64()).collect();
+    for (seed, nbuckets) in [(0u64, 1024u64), (0xdead_beef, 97), (u64::MAX, 4096)] {
+        let ids = engine
+            .batch_hash(&keys, seed, nbuckets, HashKind::Seeded)
+            .unwrap();
+        let hash = HashFn::Seeded(seed);
+        for (k, id) in keys.iter().zip(&ids) {
+            assert_eq!(
+                *id as usize,
+                hash.bucket(*k, nbuckets as usize),
+                "seeded disagreement for key {k:#x} seed {seed:#x} nb {nbuckets}"
+            );
+        }
+    }
+}
+
+#[test]
+fn modulo_hash_agrees_with_rust() {
+    let Some(engine) = engine_or_skip() else { return };
+    let keys: Vec<u64> = (0..256u64).map(|i| i * 7919).collect();
+    let ids = engine.batch_hash(&keys, 0, 64, HashKind::Modulo).unwrap();
+    assert_eq!(ids.len(), keys.len());
+    for (k, id) in keys.iter().zip(&ids) {
+        assert_eq!(*id as usize, HashFn::Modulo.bucket(*k, 64));
+    }
+}
+
+#[test]
+fn detector_flags_attack_but_not_uniform() {
+    let Some(engine) = engine_or_skip() else { return };
+    // Uniform random keys under a seeded hash: chi2 near nbins-1.
+    let mut rng = SplitMix64::new(7);
+    let uniform: Vec<u64> = (0..engine.batch).map(|_| rng.next_u64()).collect();
+    let d = engine.detect(&uniform, 5, 4096, HashKind::Seeded).unwrap();
+    let dof = (engine.nbins - 1) as f32;
+    assert!(d.chi2 < 2.0 * dof, "uniform chi2 too high: {}", d.chi2);
+    assert_eq!(d.hist.iter().map(|&x| x as usize).sum::<usize>(), engine.batch);
+
+    // Collision attack under the weak modulo hash: chi2 explodes.
+    let attack: Vec<u64> = (0..engine.batch as u64).map(|i| 7 + i * 4096).collect();
+    let d = engine.detect(&attack, 0, 4096, HashKind::Modulo).unwrap();
+    assert!(d.chi2 > 50.0 * dof, "attack chi2 too low: {}", d.chi2);
+    assert_eq!(d.max_load as usize, engine.batch);
+
+    // The very same attack keys under a seeded rebuild: healthy again —
+    // this is the mitigation the coordinator performs.
+    let d = engine.detect(&attack, 0x1234, 4096, HashKind::Seeded).unwrap();
+    assert!(d.chi2 < 2.0 * dof, "post-rebuild chi2 still high: {}", d.chi2);
+}
+
+#[test]
+fn short_samples_are_padded() {
+    let Some(engine) = engine_or_skip() else { return };
+    let ids = engine.batch_hash(&[42], 1, 16, HashKind::Seeded).unwrap();
+    assert_eq!(ids.len(), 1);
+    assert_eq!(ids[0] as usize, HashFn::Seeded(1).bucket(42, 16));
+    let d = engine.detect(&[42, 43], 1, 16, HashKind::Seeded).unwrap();
+    // Two keys folded over the whole batch: extreme skew by construction.
+    assert!(d.max_load as usize >= engine.batch / 4);
+}
+
+#[test]
+fn chi2_threshold_monotone_in_sigma() {
+    let Some(engine) = engine_or_skip() else { return };
+    assert!(engine.chi2_threshold(4.0) < engine.chi2_threshold(8.0));
+}

@@ -1,0 +1,193 @@
+//! Model-based property tests: every table implementation is checked
+//! against `std::collections::HashMap` over random operation sequences
+//! (including interleaved rebuilds), with failing-seed reporting and
+//! sequence shrinking. This is the "property-based tests on invariants"
+//! pillar of the suite: single-threaded sequences make outcomes exactly
+//! predictable, so any divergence is a real bug, and rebuilds exercise
+//! the migration machinery deterministically.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
+use dhash::dhash::{DHashMap, HashFn};
+use dhash::lflist::{CowSortedArray, MichaelList, SpinlockList};
+use dhash::rcu::{rcu_barrier, RcuThread};
+use dhash::util::prop::{check, shrink_ops, Gen};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Op {
+    Insert(u64, u64),
+    Delete(u64),
+    Lookup(u64),
+    Rebuild(usize, u64),
+}
+
+fn gen_ops(g: &mut Gen, max_len: usize, key_space: u64) -> Vec<Op> {
+    g.vec(max_len, |g| {
+        let k = g.range(0, key_space);
+        match g.usize_in(0, 10) {
+            0..=3 => Op::Insert(k, g.u64() >> 1),
+            4..=6 => Op::Delete(k),
+            7..=8 => Op::Lookup(k),
+            _ => Op::Rebuild(g.usize_in(1, 6) * 16, g.u64()),
+        }
+    })
+}
+
+/// Run `ops` against both the real table and the model; return the first
+/// divergence as Err.
+fn run_against_model(map: &dyn ConcurrentMap, ops: &[Op]) -> Result<(), String> {
+    let g = RcuThread::register();
+    let mut model: HashMap<u64, u64> = HashMap::new();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Insert(k, v) => {
+                let want = !model.contains_key(&k);
+                let got = map.insert(&g, k, v);
+                if got != want {
+                    return Err(format!("op {i} {op:?}: insert returned {got}, model {want}"));
+                }
+                if want {
+                    model.insert(k, v);
+                }
+            }
+            Op::Delete(k) => {
+                let want = model.remove(&k).is_some();
+                let got = map.delete(&g, k);
+                if got != want {
+                    return Err(format!("op {i} {op:?}: delete returned {got}, model {want}"));
+                }
+            }
+            Op::Lookup(k) => {
+                let want = model.get(&k).copied();
+                let got = map.lookup(&g, k);
+                if got != want {
+                    return Err(format!("op {i} {op:?}: lookup {got:?}, model {want:?}"));
+                }
+            }
+            Op::Rebuild(nb, seed) => {
+                // Single-threaded: a rebuild must always succeed and
+                // preserve contents exactly.
+                if !map.rebuild(&g, nb, HashFn::Seeded(seed)) {
+                    return Err(format!("op {i} {op:?}: rebuild refused"));
+                }
+                let got_len = map.len(&g);
+                if got_len != model.len() {
+                    return Err(format!(
+                        "op {i} {op:?}: len {got_len} != model {}",
+                        model.len()
+                    ));
+                }
+            }
+        }
+    }
+    // Final audit: every model key present with the right value; len agrees.
+    for (k, v) in &model {
+        let got = map.lookup(&g, *k);
+        if got != Some(*v) {
+            return Err(format!("final audit: key {k} -> {got:?}, model {v}"));
+        }
+    }
+    if map.len(&g) != model.len() {
+        return Err(format!(
+            "final audit: len {} != model {}",
+            map.len(&g),
+            model.len()
+        ));
+    }
+    g.quiescent_state();
+    Ok(())
+}
+
+fn fresh(table: &str) -> Arc<dyn ConcurrentMap> {
+    match table {
+        "dhash-michael" => Arc::new(DHashMap::<MichaelList>::with_hash(16, HashFn::Seeded(1))),
+        "dhash-spinlock" => Arc::new(DHashMap::<SpinlockList>::with_hash(16, HashFn::Seeded(1))),
+        "dhash-cow" => Arc::new(DHashMap::<CowSortedArray>::with_hash(16, HashFn::Seeded(1))),
+        "xu" => Arc::new(HtXu::new(16, HashFn::Seeded(1))),
+        "rht" => Arc::new(HtRht::new(16, HashFn::Seeded(1))),
+        "split" => Arc::new(HtSplit::new(16, 1 << 20)),
+        _ => unreachable!(),
+    }
+}
+
+fn model_check(table: &'static str, cases: usize) {
+    check(table, cases, |g| {
+        let ops = gen_ops(g, 400, 64);
+        let map = fresh(table);
+        match run_against_model(&*map, &ops) {
+            Ok(()) => Ok(()),
+            Err(first_err) => {
+                // Shrink to a minimal failing sequence for the report.
+                let minimal = shrink_ops(&ops, |xs| run_against_model(&*fresh(table), xs).is_err());
+                let final_err = run_against_model(&*fresh(table), &minimal).unwrap_err();
+                Err(format!(
+                    "{first_err}\nshrunk to {} ops: {minimal:?}\n-> {final_err}",
+                    minimal.len()
+                ))
+            }
+        }
+    });
+    rcu_barrier();
+}
+
+#[test]
+fn model_dhash_michael() {
+    model_check("dhash-michael", 30);
+}
+
+#[test]
+fn model_dhash_spinlock() {
+    model_check("dhash-spinlock", 20);
+}
+
+#[test]
+fn model_dhash_cow() {
+    model_check("dhash-cow", 20);
+}
+
+#[test]
+fn model_xu() {
+    model_check("xu", 20);
+}
+
+#[test]
+fn model_rht() {
+    model_check("rht", 20);
+}
+
+#[test]
+fn model_split() {
+    model_check("split", 20);
+}
+
+#[test]
+fn model_dense_key_collisions() {
+    // Tiny key space (8 keys) forces constant insert/delete collisions
+    // and same-bucket churn.
+    check("dense keys", 20, |g| {
+        let ops = gen_ops(g, 600, 8);
+        run_against_model(&*fresh("dhash-michael"), &ops)
+    });
+    rcu_barrier();
+}
+
+#[test]
+fn model_rebuild_heavy() {
+    // Rebuild-dominated sequences: every few ops the table migrates.
+    check("rebuild heavy", 10, |g| {
+        let map = fresh("dhash-michael");
+        let ops: Vec<Op> = (0..200)
+            .map(|i| {
+                if i % 5 == 4 {
+                    Op::Rebuild(g.usize_in(1, 8) * 8, g.u64())
+                } else {
+                    Op::Insert(g.range(0, 32), i as u64)
+                }
+            })
+            .collect();
+        run_against_model(&*map, &ops)
+    });
+    rcu_barrier();
+}

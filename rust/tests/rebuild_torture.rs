@@ -1,0 +1,100 @@
+//! Heavy cross-table integration stress: all four tables under the
+//! torture framework with continuous rebuilds, verifying throughput is
+//! produced, rebuilds complete, and populations survive.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
+use dhash::dhash::{DHashMap, HashFn};
+use dhash::rcu::{rcu_barrier, RcuThread};
+use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
+
+fn cfg(threads: usize, lookup: u8, alpha: usize) -> TortureConfig {
+    TortureConfig {
+        threads,
+        mix: OpMix::lookup_pct(lookup),
+        alpha,
+        nbuckets: 256,
+        key_range: 0, // auto: stationary 2·α·β
+        duration: Duration::from_millis(250),
+        rebuild: RebuildMode::Continuous { alt_nbuckets: 512 },
+        pin: false,
+        seed: 3,
+        hash_seed: 9,
+    }
+}
+
+fn tables(nbuckets: usize, seed: u64) -> Vec<Arc<dyn ConcurrentMap>> {
+    vec![
+        Arc::new(DHashMap::with_buckets(nbuckets, seed)),
+        Arc::new(HtXu::new(nbuckets, HashFn::Seeded(seed))),
+        Arc::new(HtRht::new(nbuckets, HashFn::Seeded(seed))),
+        Arc::new(HtSplit::new(nbuckets, 1 << 20)),
+    ]
+}
+
+#[test]
+fn all_tables_survive_torture_with_rebuilds() {
+    let c = cfg(3, 90, 8);
+    for map in tables(c.nbuckets, c.hash_seed) {
+        let target = torture::prefill(&*map, &c);
+        let rep = torture::run(map.clone(), &c);
+        assert!(rep.total_ops > 1_000, "{}: {} ops", rep.table, rep.total_ops);
+        // Population stays in the same ballpark (insert% == delete%).
+        let g = RcuThread::register();
+        let after = map.len(&g) as f64;
+        g.quiescent_state();
+        assert!(
+            (after - target as f64).abs() / target as f64 <= 0.6,
+            "{}: population drifted {target} -> {after}",
+            rep.table
+        );
+    }
+    rcu_barrier();
+}
+
+#[test]
+fn update_heavy_mix_with_rebuilds() {
+    // 0% lookups: pure insert/delete churn under continuous rebuilding —
+    // the paper's "heavy workload" stressor taken to the extreme.
+    let c = cfg(2, 0, 16);
+    for map in tables(c.nbuckets, c.hash_seed) {
+        torture::prefill(&*map, &c);
+        let rep = torture::run(map.clone(), &c);
+        assert!(rep.total_ops > 500, "{}: {} ops", rep.table, rep.total_ops);
+    }
+    rcu_barrier();
+}
+
+#[test]
+fn dhash_high_load_factor_torture() {
+    // α = 200: the heavy regime where the paper's headline 2.3-6.2x lives.
+    let c = cfg(2, 90, 200);
+    let map: Arc<dyn ConcurrentMap> = Arc::new(DHashMap::with_buckets(c.nbuckets, c.hash_seed));
+    torture::prefill(&*map, &c);
+    let rep = torture::run(map.clone(), &c);
+    assert!(rep.total_ops > 1_000);
+    assert!(rep.rebuilds > 0, "no rebuild completed at alpha=200");
+    rcu_barrier();
+}
+
+#[test]
+fn no_node_leaks_after_full_cycle() {
+    use dhash::lflist::mem_stats;
+    rcu_barrier();
+    let before = mem_stats::live();
+    {
+        let c = cfg(2, 80, 8);
+        let map: Arc<dyn ConcurrentMap> = Arc::new(DHashMap::with_buckets(c.nbuckets, c.hash_seed));
+        torture::prefill(&*map, &c);
+        torture::run(map.clone(), &c);
+        drop(map);
+    }
+    rcu_barrier();
+    let after = mem_stats::live();
+    assert!(
+        after <= before + 64,
+        "suspected node leak: live {before} -> {after}"
+    );
+}
