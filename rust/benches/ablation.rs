@@ -39,6 +39,7 @@ fn bucket_cfg(threads: usize, alpha: usize) -> TortureConfig {
         seed: 11,
         hash_seed: 5,
     }
+    .clamped_for_smoke()
 }
 
 fn bench_buckets() {
@@ -108,7 +109,13 @@ fn bench_hazard() {
         }
         {
             let g = RcuThread::register();
-            let rounds = if full_mode() { 12 } else { 4 };
+            let rounds = if common::smoke_mode() {
+                2
+            } else if full_mode() {
+                12
+            } else {
+                4
+            };
             for i in 0..rounds {
                 map.rebuild(&g, if i % 2 == 0 { 128 } else { 64 }, HashFn::Seeded(50 + i))
                     .unwrap();
@@ -132,7 +139,13 @@ fn bench_hazard() {
 
 fn bench_distrib() {
     println!("# ablation distrib: rebuild node-throughput, head (DHash) vs tail (HT-RHT)");
-    let nodes: u64 = if full_mode() { 200_000 } else { 40_000 };
+    let nodes: u64 = if common::smoke_mode() {
+        8_000
+    } else if full_mode() {
+        200_000
+    } else {
+        40_000
+    };
     for table in ["dhash", "rht", "xu", "split"] {
         let samples: Vec<f64> = (0..repeats())
             .map(|_| {
@@ -158,11 +171,7 @@ fn bench_distrib() {
 }
 
 fn bench_batchhash() {
-    println!("# ablation batchhash: coordinator throughput with/without AOT pre-hashing");
-    if !dhash::runtime::Engine::default_dir().join("manifest.json").exists() {
-        println!("batchhash SKIPPED (run `make artifacts` first)");
-        return;
-    }
+    println!("# ablation batchhash: coordinator throughput with/without batch pre-hashing");
     for pre_hash in [false, true] {
         let cfg = CoordinatorConfig {
             nbuckets: 4096,
@@ -176,7 +185,7 @@ fn bench_batchhash() {
             enable_analytics: true,
             ..Default::default()
         };
-        let c = Arc::new(Coordinator::start(cfg).expect("artifacts present"));
+        let c = Arc::new(Coordinator::start(cfg).expect("default engine"));
         let stop = Arc::new(AtomicBool::new(false));
         let done = Arc::new(AtomicU64::new(0));
         let mut clients = Vec::new();
@@ -203,7 +212,11 @@ fn bench_batchhash() {
                 }
             }));
         }
-        let window = measure_window().max(Duration::from_millis(500));
+        let window = if common::smoke_mode() {
+            measure_window()
+        } else {
+            measure_window().max(Duration::from_millis(500))
+        };
         std::thread::sleep(window);
         stop.store(true, Ordering::Relaxed);
         for cl in clients {

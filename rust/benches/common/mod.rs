@@ -16,8 +16,17 @@ pub fn full_mode() -> bool {
         || std::env::args().any(|a| a == "--full")
 }
 
+/// CI bench-smoke gate (`DHASH_SMOKE=1`): shrink every sweep so the whole
+/// `cargo bench` suite is a compile-and-run check in well under 2 minutes.
+/// No performance meaning; takes precedence over `full_mode`.
+pub fn smoke_mode() -> bool {
+    torture::smoke_mode()
+}
+
 pub fn measure_window() -> Duration {
-    if full_mode() {
+    if smoke_mode() {
+        Duration::from_millis(60)
+    } else if full_mode() {
         Duration::from_millis(2000)
     } else {
         Duration::from_millis(300)
@@ -25,7 +34,9 @@ pub fn measure_window() -> Duration {
 }
 
 pub fn repeats() -> usize {
-    if full_mode() {
+    if smoke_mode() {
+        1
+    } else if full_mode() {
         5
     } else {
         2
@@ -35,7 +46,9 @@ pub fn repeats() -> usize {
 /// Worker-thread sweep (paper x-axis: up to 2x oversubscription of a
 /// 24-core Ivy Bridge; this host is documented in the Table-1 header).
 pub fn thread_sweep() -> Vec<usize> {
-    if full_mode() {
+    if smoke_mode() {
+        vec![1, 2]
+    } else if full_mode() {
         vec![1, 2, 4, 8, 16, 24, 32, 48]
     } else {
         vec![1, 2, 4]
@@ -71,7 +84,8 @@ pub fn fig2_cell(table: &str, threads: usize, lookup_pct: u8, alpha: usize) -> S
         pin: true,
         seed: 0xd1e5_5eed,
         hash_seed: 0x5eed,
-    };
+    }
+    .clamped_for_smoke();
     let map = make_table(table, cfg.nbuckets, cfg.hash_seed);
     let samples = torture::measure_mops(map, &cfg, repeats());
     Summary::of(&samples)

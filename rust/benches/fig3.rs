@@ -74,7 +74,9 @@ fn rebuild_time(table: &str, nodes: u64, lookup_pct: u8) -> f64 {
 
 fn main() {
     print_host_table1();
-    let node_counts: Vec<u64> = if full_mode() {
+    let node_counts: Vec<u64> = if common::smoke_mode() {
+        vec![2_000, 8_000]
+    } else if full_mode() {
         vec![10_000, 31_600, 100_000, 316_000, 1_000_000]
     } else {
         vec![5_000, 20_000, 80_000]

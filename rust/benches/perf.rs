@@ -8,8 +8,8 @@
 //!   read_lock                  — read-side guard ns/op (should be ~0)
 //!   synchronize_rcu            — grace-period latency µs (2 live readers)
 //!   rebuild_rate               — rebuild node throughput Mnodes/s
-//!   detector_batch             — PJRT detector ms / 4096-key batch
-//!   batch_hash                 — PJRT pre-hash ms / 4096-key batch
+//!   detector_batch             — detector-engine ms / 4096-key batch
+//!   batch_hash                 — engine pre-hash ms / 4096-key batch
 
 mod common;
 
@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use dhash::dhash::{DHashMap, HashFn};
 use dhash::rcu::{rcu_barrier, synchronize_rcu, RcuThread};
-use dhash::runtime::{Engine, HashKind};
+use dhash::runtime::{load_engine, Engine as _, HashKind};
 use dhash::util::SplitMix64;
 
 fn ns_per_op(iters: u64, f: impl FnOnce()) -> f64 {
@@ -30,7 +30,13 @@ fn ns_per_op(iters: u64, f: impl FnOnce()) -> f64 {
 
 fn main() {
     common::print_host_table1();
-    let iters: u64 = if common::full_mode() { 3_000_000 } else { 600_000 };
+    let iters: u64 = if common::smoke_mode() {
+        60_000
+    } else if common::full_mode() {
+        3_000_000
+    } else {
+        600_000
+    };
 
     // Table at α = 20: 1024 buckets, 20480 keys.
     let g = RcuThread::register();
@@ -99,7 +105,13 @@ fn main() {
                 t.offline();
             }));
         }
-        let rounds = if common::full_mode() { 2000 } else { 400 };
+        let rounds = if common::smoke_mode() {
+            50
+        } else if common::full_mode() {
+            2000
+        } else {
+            400
+        };
         let t0 = Instant::now();
         for _ in 0..rounds {
             synchronize_rcu();
@@ -114,7 +126,13 @@ fn main() {
 
     // Rebuild throughput (no concurrent workers: pure migration rate).
     {
-        let n = if common::full_mode() { 400_000u64 } else { 100_000 };
+        let n: u64 = if common::smoke_mode() {
+            20_000
+        } else if common::full_mode() {
+            400_000
+        } else {
+            100_000
+        };
         let m2 = DHashMap::with_buckets(1024, 1);
         for k in 0..n {
             m2.insert(&g, k, k).unwrap();
@@ -129,11 +147,11 @@ fn main() {
         );
     }
 
-    // PJRT artifact latencies (control-path budget: must stay ~ms).
-    if Engine::default_dir().join("manifest.json").exists() {
-        let engine = Engine::load(&Engine::default_dir()).unwrap();
-        let keys: Vec<u64> = (0..engine.batch as u64).collect();
-        // Warm up compilation caches.
+    // Detector-engine latencies (control-path budget: must stay ~ms).
+    {
+        let engine = load_engine().expect("default engine always loads");
+        let keys: Vec<u64> = (0..engine.batch() as u64).collect();
+        // Warm up caches.
         engine.detect(&keys, 1, 4096, HashKind::Seeded).unwrap();
         engine.batch_hash(&keys, 1, 4096, HashKind::Seeded).unwrap();
         let rounds = if common::full_mode() { 200 } else { 50 };
@@ -142,15 +160,21 @@ fn main() {
             std::hint::black_box(engine.detect(&keys, 1, 4096, HashKind::Seeded).unwrap());
         }
         let ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
-        println!("perf detector_batch ms_per_batch={ms:.3} (batch={})", engine.batch);
+        println!(
+            "perf detector_batch ms_per_batch={ms:.3} (engine={} batch={})",
+            engine.name(),
+            engine.batch()
+        );
         let t0 = Instant::now();
         for _ in 0..rounds {
             std::hint::black_box(engine.batch_hash(&keys, 1, 4096, HashKind::Seeded).unwrap());
         }
         let ms = t0.elapsed().as_secs_f64() * 1e3 / rounds as f64;
-        println!("perf batch_hash ms_per_batch={ms:.3} (batch={})", engine.batch);
-    } else {
-        println!("perf detector_batch SKIPPED (no artifacts)");
+        println!(
+            "perf batch_hash ms_per_batch={ms:.3} (engine={} batch={})",
+            engine.name(),
+            engine.batch()
+        );
     }
 
     g.quiescent_state();

@@ -4,14 +4,16 @@
 //! A KV service (L3 coordinator over DHash) starts with a *weak* modulo
 //! hash. Client threads send batched GET/PUT traffic; partway through, an
 //! adversary floods PUTs whose keys all collide under the weak hash
-//! (Crosby–Wallach complexity attack). The analytics thread — running the
-//! AOT-compiled JAX/Pallas detector artifact through PJRT (L2+L1) —
-//! watches the sampled key stream's chi², flags the attack, and the
-//! controller rebuilds the table with a fresh seeded hash *without
-//! stopping the service*. The run reports a per-interval timeline of
-//! throughput, p50/p99 latency, and chi², plus the mitigation events.
+//! (Crosby–Wallach complexity attack). The analytics thread — evaluating
+//! the detector kernels through the configured [`dhash::runtime::Engine`]
+//! backend (native by default; `DHASH_ENGINE=pjrt` for the AOT JAX/Pallas
+//! artifacts) — watches the sampled key stream's chi², flags the attack,
+//! and the controller rebuilds the table with a fresh seeded hash
+//! *without stopping the service*. The run reports a per-interval
+//! timeline of throughput, p50/p99 latency, and chi², plus the mitigation
+//! events.
 //!
-//! Requires artifacts: `make artifacts` first (or `make build`).
+//! Runs on a clean checkout: no artifacts and no Python toolchain needed.
 //!
 //! ```sh
 //! cargo run --release --example attack_mitigation -- \

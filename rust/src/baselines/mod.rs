@@ -55,6 +55,11 @@ pub trait ConcurrentMap: Send + Sync + 'static {
 
     /// Live entries (O(n), diagnostic).
     fn len(&self, guard: &RcuThread) -> usize;
+
+    /// True when no live entries exist (O(n), diagnostic).
+    fn is_empty(&self, guard: &RcuThread) -> bool {
+        self.len(guard) == 0
+    }
 }
 
 impl<B: BucketSet> ConcurrentMap for DHashMap<B> {

@@ -230,7 +230,12 @@ impl HtSplit {
                     if next_t & DELETED != 0 {
                         let next = next_t & !DELETED;
                         if (*prev)
-                            .compare_exchange(cur as usize, next, Ordering::SeqCst, Ordering::SeqCst)
+                            .compare_exchange(
+                                cur as usize,
+                                next,
+                                Ordering::SeqCst,
+                                Ordering::SeqCst,
+                            )
                             .is_ok()
                         {
                             defer_free_so(cur);

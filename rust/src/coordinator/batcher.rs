@@ -130,14 +130,21 @@ impl Batcher {
         if self.cfg.pre_hash {
             if let Some(hash_ids) = hash_ids {
                 let keys: Vec<u64> = entries.iter().map(|(r, _, _)| r.key()).collect();
-                if let Some(ids) = hash_ids(&keys) {
-                    // Stable sort by bucket id (preserves per-key op
-                    // order within the batch).
-                    let mut tagged: Vec<(i32, Entry)> =
-                        ids.into_iter().zip(entries).collect();
-                    tagged.sort_by_key(|(id, _)| *id);
-                    entries = tagged.into_iter().map(|(_, e)| e).collect();
-                    pre_hashed = true;
+                match hash_ids(&keys) {
+                    // Engines may return fewer ids than keys (the kernel
+                    // batch caps at `Engine::batch()`); zipping a short id
+                    // vector would silently drop entries — and their reply
+                    // channels. Pre-route only on an exact-length answer.
+                    Some(ids) if ids.len() == entries.len() => {
+                        // Stable sort by bucket id (preserves per-key op
+                        // order within the batch).
+                        let mut tagged: Vec<(i32, Entry)> =
+                            ids.into_iter().zip(entries).collect();
+                        tagged.sort_by_key(|(id, _)| *id);
+                        entries = tagged.into_iter().map(|(_, e)| e).collect();
+                        pre_hashed = true;
+                    }
+                    _ => {}
                 }
             }
         }
@@ -225,6 +232,28 @@ mod tests {
         assert!(batch.pre_hashed);
         let keys: Vec<u64> = batch.entries.iter().map(|(r, _, _)| r.key()).collect();
         assert_eq!(keys, vec![1, 3, 5, 9]);
+    }
+
+    #[test]
+    fn pre_hash_with_short_id_vector_keeps_all_entries() {
+        // An engine whose kernel batch is smaller than the request batch
+        // returns fewer ids than keys; routing must keep every entry (a
+        // dropped entry would orphan its reply channel) and fall back to
+        // un-routed order.
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            pre_hash: true,
+        });
+        let (tx, rx) = channel();
+        let (reply, _keep) = channel();
+        for (i, k) in [9u64, 1, 5, 3].iter().enumerate() {
+            tx.send((Request::get(*k), reply.clone(), i)).unwrap();
+        }
+        let hash = |keys: &[u64]| Some(keys.iter().take(2).map(|&k| k as i32).collect());
+        let batch = b.next_batch(&rx, Some(&hash)).unwrap();
+        assert!(!batch.pre_hashed);
+        assert_eq!(batch.entries.len(), 4);
     }
 
     #[test]

@@ -12,16 +12,18 @@
 //!                 │ (size/time batching)         │
 //!                 │                              └─ key samples ─┐
 //!                 ▼                                              ▼
-//!            (optional batch pre-hash          Analytics thread: PJRT
-//!             via batch_hash.hlo.txt)          detector.hlo.txt → chi²
+//!            (optional batch pre-hash          Analytics thread: Engine
+//!             via the Engine backend)          detect(sample) → chi²
 //!                                                   │ chi² > threshold
 //!                                                   ▼
 //!                                            RebuildController
 //!                                            (new seed → ht_rebuild)
 //! ```
 //!
-//! Python never runs here: the analytics thread executes pre-compiled
-//! HLO through the in-process PJRT CPU client ([`crate::runtime`]).
+//! Python never runs here: the analytics thread evaluates the detector
+//! kernels through a [`crate::runtime::Engine`] backend — the pure-Rust
+//! native engine by default, or the AOT PJRT artifacts under
+//! `DHASH_ENGINE=pjrt` (feature `pjrt`).
 
 mod batcher;
 mod controller;
@@ -60,7 +62,10 @@ mod tests {
                 cooldown: Duration::from_millis(50),
                 rebuild_buckets: None,
             },
-            // Analytics requires artifacts; unit tests run without them.
+            // These tests use 64 buckets — fewer than the detector's 256
+            // bins, which the folding histogram would misread as skew (the
+            // detector assumes nbuckets >= nbins; see runtime::native).
+            // The detector loop is covered by tests/coordinator_e2e.rs.
             enable_analytics: false,
         }
     }

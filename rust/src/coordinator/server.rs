@@ -1,5 +1,5 @@
 //! The coordinator proper: wires batcher → workers → DHashMap, plus the
-//! analytics thread (PJRT detector + rebuild controller).
+//! analytics thread (detector engine + rebuild controller).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -12,7 +12,7 @@ use super::controller::{ControllerConfig, RebuildController};
 use super::detector::{DetectorConfig, KeySampler, SkewVerdict};
 use crate::dhash::{DHashMap, HashFn};
 use crate::rcu::RcuThread;
-use crate::runtime::{Engine, HashKind};
+use crate::runtime::{load_engine, Engine, HashKind};
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -23,8 +23,9 @@ pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
     pub detector: DetectorConfig,
     pub controller: ControllerConfig,
-    /// Load the AOT artifacts and run the detector/mitigation loop.
-    /// Requires `make artifacts` to have produced `artifacts/`.
+    /// Run the detector/mitigation loop on the configured engine backend
+    /// ([`crate::runtime::load_engine`]; the native backend by default,
+    /// `DHASH_ENGINE=pjrt` for the AOT-artifact backend).
     pub enable_analytics: bool,
 }
 
@@ -112,16 +113,17 @@ impl Coordinator {
         {
             let cfg_b = cfg.batcher.clone();
             let shared2 = shared.clone();
-            // Pre-hashing needs its own Engine (PjRtClient is not Send,
-            // so each thread that executes artifacts owns one).
+            // Pre-hashing needs its own engine (backends need not be
+            // Send — the PJRT client is thread-bound — so each thread
+            // that evaluates kernels owns one).
             let want_prehash = cfg_b.pre_hash && cfg.enable_analytics;
             threads.push(
                 std::thread::Builder::new()
                     .name("dhash-batcher".into())
                     .spawn(move || {
                         let batcher = Batcher::new(cfg_b);
-                        let engine = if want_prehash {
-                            Engine::load(&Engine::default_dir()).ok()
+                        let engine: Option<Box<dyn Engine>> = if want_prehash {
+                            load_engine().ok()
                         } else {
                             None
                         };
@@ -137,8 +139,8 @@ impl Coordinator {
                             let b = match engine.as_ref() {
                                 Some(e) => {
                                     // Hash oracle: the table's *current*
-                                    // function, evaluated via the AOT
-                                    // artifact.
+                                    // function, evaluated through the
+                                    // engine backend.
                                     let oracle = |keys: &[u64]| -> Option<Vec<i32>> {
                                         let hash = shared2.map.hash_fn(&g);
                                         let nb = shared2.map.nbuckets(&g) as u64;
@@ -208,9 +210,10 @@ impl Coordinator {
             );
         }
 
-        // Analytics thread: detector + mitigation. The Engine is !Send
-        // (PjRtClient is Rc-based), so it is constructed *inside* the
-        // thread; load errors are reported back over a ready channel.
+        // Analytics thread: detector + mitigation. Engines need not be
+        // Send (the PJRT client is thread-bound), so the engine is
+        // constructed *inside* the thread; load errors are reported back
+        // over a ready channel.
         if cfg.enable_analytics {
             let shared2 = shared.clone();
             let det = cfg.detector.clone();
@@ -219,7 +222,7 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name("dhash-analytics".into())
                     .spawn(move || {
-                        let engine = match Engine::load(&Engine::default_dir()) {
+                        let engine = match load_engine() {
                             Ok(e) => {
                                 let _ = ready_tx.send(Ok(()));
                                 e
@@ -230,6 +233,7 @@ impl Coordinator {
                             }
                         };
                         let g = RcuThread::register();
+                        let mut detect_err_logged = false;
                         while !shared2.stop.load(Ordering::Relaxed) {
                             g.offline_while(|| std::thread::sleep(det.period));
                             let keys = shared2.sampler.snapshot();
@@ -239,8 +243,24 @@ impl Coordinator {
                             let hash = shared2.map.hash_fn(&g);
                             let nb = shared2.map.nbuckets(&g) as u64;
                             let (kind, seed) = HashKind::of(hash);
-                            let Ok(d) = engine.detect(&keys, seed, nb, kind) else {
-                                continue;
+                            let d = match engine.detect(&keys, seed, nb, kind) {
+                                Ok(d) => d,
+                                Err(e) => {
+                                    // A backend that cannot evaluate (e.g.
+                                    // the pjrt backend without an XLA
+                                    // binding) means detection is dead;
+                                    // say so once instead of silently
+                                    // never mitigating.
+                                    if !detect_err_logged {
+                                        detect_err_logged = true;
+                                        eprintln!(
+                                            "dhash-analytics: detector disabled, \
+                                             engine {:?} cannot evaluate: {e:?}",
+                                            engine.name()
+                                        );
+                                    }
+                                    continue;
+                                }
                             };
                             shared2.detector_runs.fetch_add(1, Ordering::Relaxed);
                             shared2
@@ -251,7 +271,7 @@ impl Coordinator {
                                 keys.len(),
                                 d.chi2,
                                 d.max_load,
-                                engine.nbins,
+                                engine.nbins(),
                             );
                             if let SkewVerdict::Attack { chi2, .. } = verdict {
                                 if let Some(new_hash) =

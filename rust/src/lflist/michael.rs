@@ -559,7 +559,11 @@ mod tests {
                     }
                 }));
             }
-            let wins = hs.into_iter().filter(|_| true).map(|h| h.join().unwrap()).filter(|&x| x).count();
+            let wins = hs
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .filter(|&x| x)
+                .count();
             assert_eq!(wins, 1);
             assert_eq!(l.len(), 1);
         }

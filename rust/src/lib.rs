@@ -12,11 +12,12 @@
 //!   against ([`baselines`]), the hash-torture benchmarking framework
 //!   ([`torture`]), and a serving-style coordinator ([`coordinator`]) that
 //!   detects hash-collision attacks and triggers rebuilds.
-//! * **L2/L1 (build-time Python)** — the collision-analytics compute
-//!   (batched keyed hashing + bucket-skew statistics) authored in JAX +
-//!   Pallas, AOT-lowered to HLO text, and executed from Rust through the
-//!   PJRT runtime wrapper ([`runtime`]). Python is never on the request
-//!   path.
+//! * **L2/L1 (analytics kernels)** — the collision-analytics compute
+//!   (batched keyed hashing + bucket-skew statistics) behind the
+//!   [`runtime::Engine`] trait: a pure-Rust native backend (default,
+//!   dependency-free) and, under the `pjrt` feature, the AOT-lowered
+//!   JAX + Pallas HLO artifacts. Python is never on the request path —
+//!   it is only the reference implementation and artifact producer.
 //!
 //! ## Quick start
 //!

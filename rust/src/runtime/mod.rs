@@ -1,15 +1,40 @@
-//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, produced
-//! once by `make artifacts`) and execute them from Rust. Python is never
-//! on the request path — the coordinator calls [`Engine`] methods, which
-//! run the pre-compiled XLA executables on the in-process CPU PJRT
-//! client (see /opt/xla-example/load_hlo for the reference wiring).
+//! The detector engine: batched keyed hashing + bucket-skew statistics
+//! behind one [`Engine`] trait, with pluggable backends.
+//!
+//! The coordinator's analytics path (batch pre-hashing and the chi-square
+//! collision detector) is expressed as two kernels — `batch_hash` and
+//! `detect` — whose reference semantics live in
+//! `python/compile/kernels/ref.py`. Two backends implement them:
+//!
+//! * [`native::NativeEngine`] (**default**) — a pure-Rust
+//!   reimplementation, bit-for-bit equal to the Python reference on the
+//!   hash path and validated against golden vectors emitted by
+//!   `python/tests/gen_golden.py`. Runs on any machine: no artifacts, no
+//!   Python toolchain.
+//! * [`pjrt::PjrtEngine`] (cargo feature `pjrt`) — the AOT-artifact
+//!   backend: loads the HLO text lowered from the JAX/Pallas kernels
+//!   (`python -m compile.aot`) for execution on an in-process PJRT
+//!   client. The artifact plumbing (manifest, shapes, padding) compiles
+//!   and is tested everywhere; executing the HLO additionally needs an
+//!   XLA binding that is not part of the offline dependency set — see
+//!   `DESIGN.md` §Feature matrix.
+//!
+//! Backend selection is environment-driven: `DHASH_ENGINE=native` (the
+//! default) or `DHASH_ENGINE=pjrt`, resolved by [`load_engine`].
 
-use std::path::{Path, PathBuf};
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use anyhow::{bail, Context, Result};
+pub use native::NativeEngine;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtEngine;
 
-/// Skew statistics computed by the detector artifact (the L2 graph built
-/// from the L1 Pallas kernels).
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// Skew statistics computed by a detector backend over one key sample.
 #[derive(Clone, Debug)]
 pub struct Detection {
     /// Pearson chi-square of the key sample's bucket histogram against
@@ -31,7 +56,8 @@ pub enum HashKind {
 }
 
 impl HashKind {
-    fn tag(self) -> u64 {
+    /// The numeric tag the kernels take as their `kind` argument.
+    pub fn tag(self) -> u64 {
         match self {
             HashKind::Modulo => 0,
             HashKind::Seeded => 1,
@@ -47,138 +73,69 @@ impl HashKind {
     }
 }
 
-/// The loaded-and-compiled artifact bundle.
-pub struct Engine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    batch_hash: xla::PjRtLoadedExecutable,
-    detector: xla::PjRtLoadedExecutable,
-    /// Exported batch size (keys per execution); inputs are padded.
-    pub batch: usize,
-    /// Detector histogram bins.
-    pub nbins: usize,
-}
+/// A detector backend: the two analytics kernels plus the shape constants
+/// policy code needs. Backends are constructed on the thread that uses
+/// them (the PJRT client is not `Send`), so the trait does not require
+/// `Send`.
+pub trait Engine {
+    /// Backend name for logs and bench rows.
+    fn name(&self) -> &'static str;
 
-impl Engine {
-    /// Default artifact directory: `$DHASH_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("DHASH_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
+    /// Keys per kernel execution. The native backend processes samples of
+    /// any size up to this; the artifact backend pads shorter samples.
+    fn batch(&self) -> usize;
 
-    /// Load and compile both artifacts from `dir`.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
-        let batch = json_usize(&manifest, "batch").context("manifest: batch")?;
-        let nbins = json_usize(&manifest, "nbins").context("manifest: nbins")?;
+    /// Detector histogram bins (bucket ids are folded modulo this).
+    fn nbins(&self) -> usize;
 
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not UTF-8")?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))
-        };
-        let batch_hash = load("batch_hash.hlo.txt")?;
-        let detector = load("detector.hlo.txt")?;
-        Ok(Engine {
-            client,
-            batch_hash,
-            detector,
-            batch,
-            nbins,
-        })
-    }
-
-    /// Pad (or fold) `keys` to exactly `self.batch` entries. Shorter
-    /// samples repeat cyclically so the histogram stays proportional.
-    fn pad_keys(&self, keys: &[u64]) -> Vec<u64> {
-        assert!(!keys.is_empty(), "empty key sample");
-        let mut out = Vec::with_capacity(self.batch);
-        for i in 0..self.batch {
-            out.push(keys[i % keys.len()]);
-        }
-        out
-    }
-
-    fn args(
+    /// Bucket ids for up to [`Engine::batch`] keys. Returns exactly
+    /// `keys.len().min(self.batch())` ids.
+    fn batch_hash(
         &self,
         keys: &[u64],
         seed: u64,
         nbuckets: u64,
         kind: HashKind,
-    ) -> Result<[xla::Literal; 4]> {
-        if nbuckets == 0 {
-            bail!("nbuckets must be positive");
-        }
-        let keys = self.pad_keys(keys);
-        Ok([
-            xla::Literal::vec1(&keys),
-            xla::Literal::vec1(&[seed]),
-            xla::Literal::vec1(&[nbuckets]),
-            xla::Literal::vec1(&[kind.tag()]),
-        ])
-    }
+    ) -> Result<Vec<i32>>;
 
-    /// Bucket ids for up to `batch` keys (`batch_hash.hlo.txt`). Returns
-    /// exactly `keys.len().min(batch)` ids.
-    pub fn batch_hash(
-        &self,
-        keys: &[u64],
-        seed: u64,
-        nbuckets: u64,
-        kind: HashKind,
-    ) -> Result<Vec<i32>> {
-        let args = self.args(keys, seed, nbuckets, kind)?;
-        let result = self.batch_hash.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?
-            .to_tuple1()?;
-        let ids: Vec<i32> = result.to_vec()?;
-        Ok(ids[..keys.len().min(self.batch)].to_vec())
-    }
-
-    /// Skew statistics for a key sample (`detector.hlo.txt`).
-    pub fn detect(
-        &self,
-        keys: &[u64],
-        seed: u64,
-        nbuckets: u64,
-        kind: HashKind,
-    ) -> Result<Detection> {
-        let args = self.args(keys, seed, nbuckets, kind)?;
-        let (chi2, max_load, hist) = self.detector.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?
-            .to_tuple3()?;
-        Ok(Detection {
-            chi2: chi2.get_first_element::<f32>()?,
-            max_load: max_load.get_first_element::<i32>()?,
-            hist: hist.to_vec()?,
-        })
-    }
+    /// Skew statistics for a key sample.
+    fn detect(&self, keys: &[u64], seed: u64, nbuckets: u64, kind: HashKind) -> Result<Detection>;
 
     /// Detector threshold for "this sample is an attack": mean + `k`
     /// standard deviations of the chi2(nbins-1) null distribution.
-    pub fn chi2_threshold(&self, k: f32) -> f32 {
-        let dof = (self.nbins - 1) as f32;
+    fn chi2_threshold(&self, k: f32) -> f32 {
+        let dof = (self.nbins() - 1) as f32;
         dof + k * (2.0 * dof).sqrt()
     }
 }
 
-/// Extract `"name": <integer>` from a flat JSON string (the manifest is
-/// machine-generated and tiny; a JSON crate is unavailable offline).
-fn json_usize(s: &str, name: &str) -> Result<usize> {
-    let pat = format!("\"{name}\":");
-    let at = s.find(&pat).with_context(|| format!("missing {name}"))?;
-    let rest = s[at + pat.len()..].trim_start();
-    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
-    digits.parse().with_context(|| format!("bad {name}"))
+/// Artifact directory for the PJRT backend: `$DHASH_ARTIFACTS` or
+/// `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("DHASH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Construct the configured detector backend: `$DHASH_ENGINE` picks
+/// `native` (the default) or `pjrt` (requires the `pjrt` cargo feature
+/// and artifacts from `python -m compile.aot`).
+pub fn load_engine() -> Result<Box<dyn Engine>> {
+    match std::env::var("DHASH_ENGINE").as_deref() {
+        Err(_) | Ok("") | Ok("native") => Ok(Box::new(NativeEngine::new())),
+        Ok("pjrt") => load_pjrt(),
+        Ok(other) => bail!("unknown DHASH_ENGINE {other:?} (expected \"native\" or \"pjrt\")"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn load_pjrt() -> Result<Box<dyn Engine>> {
+    Ok(Box::new(PjrtEngine::load(&artifacts_dir())?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn load_pjrt() -> Result<Box<dyn Engine>> {
+    bail!("DHASH_ENGINE=pjrt requested, but this binary was built without the `pjrt` feature")
 }
 
 #[cfg(test)]
@@ -186,18 +143,35 @@ mod tests {
     use super::*;
 
     #[test]
-    fn json_usize_extracts() {
-        let s = r#"{ "batch": 4096, "nbins": 256, "outputs": {} }"#;
-        assert_eq!(json_usize(s, "batch").unwrap(), 4096);
-        assert_eq!(json_usize(s, "nbins").unwrap(), 256);
-        assert!(json_usize(s, "missing").is_err());
+    fn default_engine_is_native() {
+        // The suite does not set DHASH_ENGINE; the default must be the
+        // dependency-free native backend.
+        let engine = load_engine().unwrap();
+        assert_eq!(engine.name(), "native");
+        assert!(engine.batch() >= 1024);
+        assert!(engine.nbins() >= 64);
     }
 
     #[test]
     fn chi2_threshold_shape() {
-        // Engine::load needs artifacts; threshold math is pure.
-        let dof = 255.0f32;
-        let t = dof + 8.0 * (2.0 * dof).sqrt();
+        let engine = NativeEngine::new();
+        let dof = (engine.nbins() - 1) as f32;
+        let t = engine.chi2_threshold(8.0);
         assert!(t > dof && t < 3.0 * dof);
+        assert!(engine.chi2_threshold(4.0) < t);
+    }
+
+    #[test]
+    fn hash_kind_tags_and_of() {
+        assert_eq!(HashKind::Modulo.tag(), 0);
+        assert_eq!(HashKind::Seeded.tag(), 1);
+        assert_eq!(
+            HashKind::of(crate::dhash::HashFn::Modulo),
+            (HashKind::Modulo, 0)
+        );
+        assert_eq!(
+            HashKind::of(crate::dhash::HashFn::Seeded(7)),
+            (HashKind::Seeded, 7)
+        );
     }
 }

@@ -1,0 +1,214 @@
+//! The default detector backend: a pure-Rust reimplementation of the
+//! batched keyed-hash, bucket-histogram, and chi-square kernels.
+//!
+//! Semantics match `python/compile/kernels/ref.py` exactly:
+//!
+//! * `batch_hash`: `kind == 0` → `key % nbuckets`; `kind == 1` →
+//!   `mix64(key ^ seed) % nbuckets` (the splitmix64 finalizer shared with
+//!   [`crate::util::rng::mix64`] and the Pallas kernel — pinned vectors on
+//!   all three sides).
+//! * `detect`: fold bucket ids modulo `nbins`, histogram, Pearson
+//!   chi-square against the uniform expectation `n / nbins`, max load.
+//!
+//! One deliberate difference from the AOT artifact: the artifact executes
+//! a fixed `[batch]`-shaped graph, so short samples are padded by cyclic
+//! repetition; the native backend computes on the exact sample, which
+//! keeps the chi-square on its nominal null distribution for every sample
+//! size. `rust/tests/golden_vectors.rs` pins both kernels against vectors
+//! emitted by the Python reference implementation.
+
+use anyhow::{bail, Result};
+
+use super::{Detection, Engine, HashKind};
+use crate::util::rng::mix64;
+
+/// Pure-Rust detector engine. Construction is free; the struct only
+/// carries the shape constants.
+pub struct NativeEngine {
+    batch: usize,
+    nbins: usize,
+}
+
+/// Keys per execution, matching the exported artifact batch
+/// (`python/compile/model.py::BATCH`) so sampler sizing is
+/// backend-independent.
+pub const DEFAULT_BATCH: usize = 4096;
+
+/// Detector histogram bins, matching
+/// `python/compile/kernels/hist_kernel.py::NBINS`. Table bucket ids are
+/// folded modulo this, so detection granularity assumes `nbuckets` is a
+/// multiple of (or at least no smaller than) `nbins`.
+pub const DEFAULT_NBINS: usize = 256;
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        Self::with_shape(DEFAULT_BATCH, DEFAULT_NBINS)
+    }
+
+    /// An engine with explicit shape constants (tests and experiments).
+    pub fn with_shape(batch: usize, nbins: usize) -> Self {
+        assert!(batch > 0 && nbins > 0);
+        Self { batch, nbins }
+    }
+
+    /// One key's bucket id under the kernel's placement rules.
+    #[inline]
+    fn bucket(key: u64, seed: u64, nbuckets: u64, kind: HashKind) -> u64 {
+        match kind {
+            HashKind::Modulo => key % nbuckets,
+            HashKind::Seeded => mix64(key ^ seed) % nbuckets,
+        }
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn nbins(&self) -> usize {
+        self.nbins
+    }
+
+    fn batch_hash(
+        &self,
+        keys: &[u64],
+        seed: u64,
+        nbuckets: u64,
+        kind: HashKind,
+    ) -> Result<Vec<i32>> {
+        if nbuckets == 0 {
+            bail!("nbuckets must be positive");
+        }
+        Ok(keys
+            .iter()
+            .take(self.batch)
+            .map(|&k| Self::bucket(k, seed, nbuckets, kind) as i32)
+            .collect())
+    }
+
+    fn detect(&self, keys: &[u64], seed: u64, nbuckets: u64, kind: HashKind) -> Result<Detection> {
+        if nbuckets == 0 {
+            bail!("nbuckets must be positive");
+        }
+        if keys.is_empty() {
+            bail!("empty key sample");
+        }
+        let mut hist = vec![0i32; self.nbins];
+        for &k in keys {
+            let bin = (Self::bucket(k, seed, nbuckets, kind) % self.nbins as u64) as usize;
+            hist[bin] += 1;
+        }
+        let expected = keys.len() as f64 / self.nbins as f64;
+        let chi2: f64 = hist
+            .iter()
+            .map(|&h| {
+                let d = h as f64 - expected;
+                d * d / expected
+            })
+            .sum();
+        let max_load = hist.iter().copied().max().unwrap_or(0);
+        Ok(Detection {
+            chi2: chi2 as f32,
+            max_load,
+            hist,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dhash::HashFn;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn agrees_with_table_hash_fn() {
+        // The native kernel and the data path's HashFn must place every
+        // key identically — the same invariant the PJRT artifact pins in
+        // rust/tests/hash_agreement.rs.
+        let e = NativeEngine::new();
+        let mut rng = SplitMix64::new(99);
+        let keys: Vec<u64> = (0..512).map(|_| rng.next_u64()).collect();
+        for (seed, nb) in [(0u64, 1024u64), (0xdead_beef, 97), (u64::MAX, 4096)] {
+            let ids = e.batch_hash(&keys, seed, nb, HashKind::Seeded).unwrap();
+            for (k, id) in keys.iter().zip(&ids) {
+                assert_eq!(*id as usize, HashFn::Seeded(seed).bucket(*k, nb as usize));
+            }
+        }
+        let ids = e.batch_hash(&keys, 0, 64, HashKind::Modulo).unwrap();
+        for (k, id) in keys.iter().zip(&ids) {
+            assert_eq!(*id as usize, HashFn::Modulo.bucket(*k, 64));
+        }
+    }
+
+    #[test]
+    fn batch_hash_truncates_to_batch() {
+        let e = NativeEngine::with_shape(8, 4);
+        let keys: Vec<u64> = (0..32).collect();
+        let ids = e.batch_hash(&keys, 1, 16, HashKind::Seeded).unwrap();
+        assert_eq!(ids.len(), 8);
+        assert!(e.batch_hash(&[], 1, 16, HashKind::Seeded).unwrap().is_empty());
+        assert!(e.batch_hash(&keys, 1, 0, HashKind::Seeded).is_err());
+    }
+
+    #[test]
+    fn detect_uniform_vs_attack() {
+        let e = NativeEngine::new();
+        let dof = (e.nbins() - 1) as f32;
+
+        // Uniform random keys, seeded hash: chi2 near its null mean.
+        let mut rng = SplitMix64::new(3);
+        let uniform: Vec<u64> = (0..e.batch()).map(|_| rng.next_u64()).collect();
+        let d = e.detect(&uniform, 5, 4096, HashKind::Seeded).unwrap();
+        assert!(d.chi2 < 2.0 * dof, "uniform chi2 {}", d.chi2);
+        assert_eq!(d.hist.iter().map(|&x| x as usize).sum::<usize>(), e.batch());
+
+        // Collision attack under the weak modulo hash: chi2 explodes.
+        let attack: Vec<u64> = (0..e.batch() as u64).map(|i| 7 + i * 4096).collect();
+        let d = e.detect(&attack, 0, 4096, HashKind::Modulo).unwrap();
+        assert!(d.chi2 > 50.0 * dof, "attack chi2 {}", d.chi2);
+        assert_eq!(d.max_load as usize, e.batch());
+
+        // The same attack keys under a fresh seeded hash: healthy again —
+        // the mitigation the coordinator performs.
+        let d = e.detect(&attack, 0x1234, 4096, HashKind::Seeded).unwrap();
+        assert!(d.chi2 < 2.0 * dof, "post-rebuild chi2 {}", d.chi2);
+    }
+
+    #[test]
+    fn detect_short_samples_use_exact_length() {
+        // Unlike the fixed-shape artifact, the native backend does not pad:
+        // the histogram of a 2-key sample sums to 2.
+        let e = NativeEngine::new();
+        let d = e.detect(&[42, 43], 1, 4096, HashKind::Seeded).unwrap();
+        assert_eq!(d.hist.iter().map(|&x| x as i64).sum::<i64>(), 2);
+        assert!(d.max_load <= 2);
+        assert!(e.detect(&[], 1, 4096, HashKind::Seeded).is_err());
+    }
+
+    #[test]
+    fn detect_single_bucket_chi2_closed_form() {
+        // n keys in one bin of nbins: chi2 = (n-e)^2/e + (nbins-1)*e with
+        // e = n/nbins. Exact arithmetic check against the implementation.
+        let e = NativeEngine::with_shape(4096, 256);
+        let n = 1024u64;
+        let keys: Vec<u64> = (0..n).map(|i| 3 + i * 256).collect(); // all ≡ 3 (mod 256)
+        let d = e.detect(&keys, 0, 256, HashKind::Modulo).unwrap();
+        let exp = n as f64 / 256.0;
+        let want = (n as f64 - exp) * (n as f64 - exp) / exp + 255.0 * exp;
+        assert!((d.chi2 as f64 - want).abs() / want < 1e-6, "{} vs {want}", d.chi2);
+        assert_eq!(d.max_load, n as i32);
+        assert_eq!(d.hist[3], n as i32);
+    }
+}

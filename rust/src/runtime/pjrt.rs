@@ -1,0 +1,192 @@
+//! The AOT-artifact detector backend (cargo feature `pjrt`): load the
+//! HLO text lowered from the JAX/Pallas kernels (`artifacts/*.hlo.txt`,
+//! produced once by `python -m compile.aot`) for execution on an
+//! in-process PJRT CPU client. Python is never on the request path.
+//!
+//! What compiles here — and is tested everywhere — is the artifact
+//! plumbing: manifest parsing, shape constants, HLO sanity checks, and
+//! the fixed-batch padding rule the lowered graphs require. Actually
+//! *executing* the HLO needs an in-process XLA binding (`xla-rs` /
+//! `xla_extension`), which is not part of this workspace's offline
+//! dependency set; until that binding is wired back in (DESIGN.md
+//! §Feature matrix documents the seam), the execute paths return a
+//! descriptive error and deployments use the default
+//! [`super::NativeEngine`], which implements the same kernel semantics.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{Detection, Engine, HashKind};
+
+/// The loaded artifact bundle: manifest constants plus the HLO module
+/// text of both kernels, shape-checked and ready for a PJRT compile.
+pub struct PjrtEngine {
+    dir: PathBuf,
+    batch_hash_hlo: String,
+    detector_hlo: String,
+    batch: usize,
+    nbins: usize,
+}
+
+impl PjrtEngine {
+    /// Load and validate the artifact bundle from `dir`.
+    pub fn load(dir: &Path) -> Result<PjrtEngine> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!(
+                "reading {}/manifest.json (run `python -m compile.aot --out-dir artifacts`)",
+                dir.display()
+            )
+        })?;
+        let batch = json_usize(&manifest, "batch").context("manifest: batch")?;
+        let nbins = json_usize(&manifest, "nbins").context("manifest: nbins")?;
+        let load = |name: &str| -> Result<String> {
+            let path = dir.join(name);
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            if !text.contains("HloModule") {
+                bail!("{} does not look like HLO text", path.display());
+            }
+            Ok(text)
+        };
+        Ok(PjrtEngine {
+            dir: dir.to_path_buf(),
+            batch_hash_hlo: load("batch_hash.hlo.txt")?,
+            detector_hlo: load("detector.hlo.txt")?,
+            batch,
+            nbins,
+        })
+    }
+
+    /// Pad (or fold) `keys` to exactly `self.batch` entries — the lowered
+    /// graphs have a fixed `[batch]` input shape. Shorter samples repeat
+    /// cyclically so the histogram stays proportional.
+    pub fn pad_keys(&self, keys: &[u64]) -> Vec<u64> {
+        assert!(!keys.is_empty(), "empty key sample");
+        let mut out = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            out.push(keys[i % keys.len()]);
+        }
+        out
+    }
+
+    /// HLO module text of one kernel (compile input for the PJRT client).
+    pub fn hlo_text(&self, kernel: &str) -> Option<&str> {
+        match kernel {
+            "batch_hash" => Some(&self.batch_hash_hlo),
+            "detector" => Some(&self.detector_hlo),
+            _ => None,
+        }
+    }
+
+    fn check_args(&self, keys: &[u64], nbuckets: u64) -> Result<()> {
+        if nbuckets == 0 {
+            bail!("nbuckets must be positive");
+        }
+        if keys.is_empty() {
+            bail!("empty key sample");
+        }
+        Ok(())
+    }
+
+    fn execute_unavailable(&self, kernel: &str) -> anyhow::Error {
+        anyhow::anyhow!(
+            "PJRT backend loaded {kernel}.hlo.txt from {} but cannot execute it: in-process \
+             XLA execution needs the `xla-rs` binding, which is outside the offline dependency \
+             set (see DESIGN.md §Feature matrix). Use the default native engine \
+             (unset DHASH_ENGINE or set DHASH_ENGINE=native).",
+            self.dir.display()
+        )
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn nbins(&self) -> usize {
+        self.nbins
+    }
+
+    fn batch_hash(
+        &self,
+        keys: &[u64],
+        seed: u64,
+        nbuckets: u64,
+        kind: HashKind,
+    ) -> Result<Vec<i32>> {
+        self.check_args(keys, nbuckets)?;
+        // Argument marshalling parity with the lowered graph signature:
+        // (keys u64[batch], seed u64[1], nbuckets u64[1], kind u64[1]).
+        let _args = (self.pad_keys(keys), [seed], [nbuckets], [kind.tag()]);
+        Err(self.execute_unavailable("batch_hash"))
+    }
+
+    fn detect(&self, keys: &[u64], seed: u64, nbuckets: u64, kind: HashKind) -> Result<Detection> {
+        self.check_args(keys, nbuckets)?;
+        let _args = (self.pad_keys(keys), [seed], [nbuckets], [kind.tag()]);
+        Err(self.execute_unavailable("detector"))
+    }
+}
+
+/// Extract `"name": <integer>` from a flat JSON string (the manifest is
+/// machine-generated and tiny; a JSON crate is unavailable offline).
+fn json_usize(s: &str, name: &str) -> Result<usize> {
+    let pat = format!("\"{name}\":");
+    let at = s.find(&pat).with_context(|| format!("missing {name}"))?;
+    let rest = s[at + pat.len()..].trim_start();
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().with_context(|| format!("bad {name}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_usize_extracts() {
+        let s = r#"{ "batch": 4096, "nbins": 256, "outputs": {} }"#;
+        assert_eq!(json_usize(s, "batch").unwrap(), 4096);
+        assert_eq!(json_usize(s, "nbins").unwrap(), 256);
+        assert!(json_usize(s, "missing").is_err());
+    }
+
+    #[test]
+    fn load_validates_a_synthetic_artifact_dir() {
+        let dir = std::env::temp_dir().join(format!("dhash-pjrt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"batch": 2048, "nbins": 128}"#).unwrap();
+        std::fs::write(dir.join("batch_hash.hlo.txt"), "HloModule batch_hash\n").unwrap();
+        std::fs::write(dir.join("detector.hlo.txt"), "HloModule detector\n").unwrap();
+
+        let e = PjrtEngine::load(&dir).unwrap();
+        assert_eq!(e.batch(), 2048);
+        assert_eq!(e.nbins(), 128);
+        assert_eq!(e.name(), "pjrt");
+        assert!(e.hlo_text("detector").unwrap().contains("HloModule"));
+        assert!(e.hlo_text("nope").is_none());
+        assert_eq!(e.pad_keys(&[1, 2, 3]).len(), 2048);
+        // Execution is stubbed offline: a descriptive error, not a panic.
+        assert!(e.batch_hash(&[1], 0, 16, HashKind::Modulo).is_err());
+        assert!(e.detect(&[1], 0, 16, HashKind::Seeded).is_err());
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_missing_or_bogus_artifacts() {
+        let dir = std::env::temp_dir().join(format!("dhash-pjrt-bogus-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(PjrtEngine::load(&dir).is_err(), "no manifest must fail");
+        std::fs::write(dir.join("manifest.json"), r#"{"batch": 64, "nbins": 16}"#).unwrap();
+        std::fs::write(dir.join("batch_hash.hlo.txt"), "not hlo").unwrap();
+        std::fs::write(dir.join("detector.hlo.txt"), "HloModule d\n").unwrap();
+        assert!(PjrtEngine::load(&dir).is_err(), "bogus HLO must fail");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -70,6 +70,14 @@ pub struct TortureConfig {
     pub hash_seed: u64,
 }
 
+/// True when the CI bench-smoke knob is set: `DHASH_SMOKE=1` shrinks
+/// durations and thread counts across the bench harness so a full
+/// `cargo bench` sweep is a compile-and-run sanity gate (< 2 min), with
+/// no performance meaning.
+pub fn smoke_mode() -> bool {
+    std::env::var("DHASH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 impl TortureConfig {
     /// U, resolving `0` to the stationary value 2·α·β.
     pub fn resolved_key_range(&self) -> u64 {
@@ -78,6 +86,17 @@ impl TortureConfig {
         } else {
             self.key_range
         }
+    }
+
+    /// Clamp this configuration for the CI smoke gate. A no-op unless
+    /// [`smoke_mode`] is set; under it, runs are capped at 2 threads and
+    /// a 60 ms measurement window.
+    pub fn clamped_for_smoke(mut self) -> Self {
+        if smoke_mode() {
+            self.threads = self.threads.min(2);
+            self.duration = self.duration.min(Duration::from_millis(60));
+        }
+        self
     }
 }
 
@@ -268,6 +287,26 @@ mod tests {
             seed: 7,
             hash_seed: 3,
         }
+    }
+
+    #[test]
+    fn smoke_clamp_caps_threads_and_duration() {
+        // Unset: clamping is a no-op.
+        std::env::remove_var("DHASH_SMOKE");
+        let cfg = TortureConfig {
+            threads: 16,
+            duration: Duration::from_secs(5),
+            ..tiny_cfg()
+        };
+        let same = cfg.clone().clamped_for_smoke();
+        assert_eq!(same.threads, 16);
+        assert_eq!(same.duration, Duration::from_secs(5));
+        // Set: threads and window shrink to smoke scale.
+        std::env::set_var("DHASH_SMOKE", "1");
+        let small = cfg.clamped_for_smoke();
+        std::env::remove_var("DHASH_SMOKE");
+        assert!(small.threads <= 2);
+        assert!(small.duration <= Duration::from_millis(60));
     }
 
     #[test]

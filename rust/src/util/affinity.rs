@@ -2,36 +2,55 @@
 //! mapping (paper §6.1: "a new thread is mapped to the CPU core that has
 //! the smallest number of worker threads running on it").
 //!
-//! On the single-core container this degenerates to pinning everything to
-//! core 0, but the mapping logic is kept faithful so the harness behaves
-//! correctly on real multi-core hosts.
+//! The `libc` crate is outside this workspace's dependency set, so the one
+//! syscall needed (`sched_setaffinity`) is declared directly against the
+//! C library; `cpu_set_t` is a plain 1024-bit mask on Linux. On a
+//! single-core container this degenerates to pinning everything to core 0,
+//! but the mapping logic is kept faithful so the harness behaves correctly
+//! on real multi-core hosts.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
-/// Number of online CPUs.
+/// Number of online CPUs, snapshotted before any pinning narrows this
+/// thread's affinity mask (`available_parallelism` reads the mask).
 pub fn ncpus() -> usize {
-    // SAFETY: sysconf is async-signal-safe and has no memory preconditions.
-    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
-    if n <= 0 {
-        1
-    } else {
-        n as usize
+    static NCPUS: OnceLock<usize> = OnceLock::new();
+    *NCPUS.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+#[cfg(target_os = "linux")]
+fn set_affinity(cpu: usize) -> bool {
+    // glibc/musl: int sched_setaffinity(pid_t, size_t, const cpu_set_t*);
+    // pid 0 = the calling thread; cpu_set_t = 1024-bit mask (16 u64s).
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
     }
+    let mut mask = [0u64; 16];
+    if cpu >= mask.len() * 64 {
+        return false;
+    }
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    // SAFETY: the mask buffer outlives the call and the size matches.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn set_affinity(_cpu: usize) -> bool {
+    // Thread affinity is not portable; treat pinning as a successful
+    // no-op so the harness proceeds identically.
+    true
 }
 
 /// Pin the calling thread to `cpu` (modulo the online CPU count).
 /// Returns false if the kernel rejected the mask (non-fatal: the harness
 /// proceeds unpinned).
 pub fn pin_to(cpu: usize) -> bool {
-    let n = ncpus();
-    let cpu = cpu % n;
-    // SAFETY: CPU_* macros are reimplemented via raw bit manipulation on a
-    // zeroed cpu_set_t, which is a plain bitmask struct.
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_SET(cpu, &mut set);
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
-    }
+    set_affinity(cpu % ncpus())
 }
 
 static NEXT: AtomicUsize = AtomicUsize::new(0);
@@ -50,8 +69,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn ncpus_positive() {
+    fn ncpus_positive_and_stable() {
         assert!(ncpus() >= 1);
+        assert_eq!(ncpus(), ncpus());
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! End-to-end coordinator test: the full detect→rebuild loop against a
-//! synthetic collision attack, with the real PJRT artifacts. Requires
-//! `make artifacts` (skips cleanly otherwise).
+//! synthetic collision attack, running on the default native detector
+//! engine — no AOT artifacts, no Python toolchain required.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -11,14 +11,6 @@ use dhash::coordinator::{
 };
 use dhash::dhash::HashFn;
 use dhash::torture::AttackGen;
-
-fn artifacts_present() -> bool {
-    let ok = dhash::runtime::Engine::default_dir().join("manifest.json").exists();
-    if !ok {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
-    }
-    ok
-}
 
 fn attack_config(nbuckets: usize) -> CoordinatorConfig {
     CoordinatorConfig {
@@ -46,13 +38,10 @@ fn attack_config(nbuckets: usize) -> CoordinatorConfig {
 
 #[test]
 fn detects_and_mitigates_collision_attack() {
-    if !artifacts_present() {
-        return;
-    }
     let nbuckets = 1024;
     let c = Arc::new(Coordinator::start(attack_config(nbuckets)).unwrap());
 
-    // Benign phase: random puts, detector should stay quiet.
+    // Benign phase: evenly-spread puts, detector should stay quiet.
     let reqs: Vec<Request> = (0..2048u64).map(|i| Request::put(i * 7919, i)).collect();
     c.execute_many(reqs);
     std::thread::sleep(Duration::from_millis(120));
@@ -73,10 +62,18 @@ fn detects_and_mitigates_collision_attack() {
         waited += 50;
     }
     let st = c.stats();
-    assert!(st.rebuilds >= 1, "attack was never mitigated (chi2={})", st.last_chi2);
+    assert!(
+        st.rebuilds >= 1,
+        "attack was never mitigated (chi2={})",
+        st.last_chi2
+    );
+    assert!(st.detector_runs > 0);
     let events = c.rebuild_events();
     assert!(!events.is_empty());
-    assert!(matches!(events[0].new_hash, HashFn::Seeded(_)), "mitigation must install a seeded hash");
+    assert!(
+        matches!(events[0].new_hash, HashFn::Seeded(_)),
+        "mitigation must install a seeded hash"
+    );
 
     // The service still works and holds the data.
     assert_eq!(c.execute(Request::get(3)), Response::Value(0)); // attack key
@@ -86,13 +83,39 @@ fn detects_and_mitigates_collision_attack() {
 
 #[test]
 fn detector_runs_are_counted() {
-    if !artifacts_present() {
-        return;
-    }
     let c = Arc::new(Coordinator::start(attack_config(256)).unwrap());
     let reqs: Vec<Request> = (0..1024u64).map(|i| Request::put(i, i)).collect();
     c.execute_many(reqs);
-    std::thread::sleep(Duration::from_millis(200));
+    let mut waited = 0;
+    while c.stats().detector_runs == 0 && waited < 2_000 {
+        std::thread::sleep(Duration::from_millis(25));
+        waited += 25;
+    }
     assert!(c.stats().detector_runs > 0, "analytics loop never evaluated");
+    c.shutdown();
+}
+
+#[test]
+fn benign_seeded_service_never_rebuilds() {
+    // A service already on a seeded hash sees the same attack keys as
+    // uniform load: the detector must not fire.
+    let mut cfg = attack_config(1024);
+    cfg.hash = HashFn::Seeded(0xfeed);
+    let c = Arc::new(Coordinator::start(cfg).unwrap());
+    let reqs: Vec<Request> = AttackGen::new(1024, 3)
+        .take(4096)
+        .map(|k| Request::put(k, k))
+        .collect();
+    c.execute_many(reqs);
+    // Poll until the detector has evaluated the full sample a few times
+    // (a fixed sleep flakes on loaded runners), then check no rebuild.
+    let mut waited = 0;
+    while c.stats().detector_runs < 3 && waited < 3_000 {
+        std::thread::sleep(Duration::from_millis(25));
+        waited += 25;
+    }
+    let st = c.stats();
+    assert!(st.detector_runs > 0, "detector never ran");
+    assert_eq!(st.rebuilds, 0, "seeded hash misdetected as attacked");
     c.shutdown();
 }

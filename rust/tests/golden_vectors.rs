@@ -1,0 +1,88 @@
+//! Replay the golden kernel vectors emitted by the Python reference
+//! implementation (`python/tests/gen_golden.py`, backed by
+//! `python/compile/kernels/ref.py`) against the native detector engine.
+//! This is the cross-language contract the multi-backend refactor rests
+//! on: the pure-Rust kernels must be indistinguishable from the oracle
+//! the Pallas kernels are themselves tested against.
+
+use dhash::runtime::{Engine, HashKind, NativeEngine};
+
+const GOLDEN: &str = include_str!("golden/kernel_vectors.txt");
+
+fn kv(token: &str, key: &str) -> u64 {
+    let (k, v) = token.split_once('=').expect("key=value token");
+    assert_eq!(k, key, "expected {key}= in golden header");
+    v.parse().unwrap_or_else(|_| panic!("bad {key} value {v:?}"))
+}
+
+fn numbers<T: std::str::FromStr>(line: &str, tag: &str) -> Vec<T>
+where
+    T::Err: std::fmt::Debug,
+{
+    let rest = line
+        .strip_prefix(tag)
+        .unwrap_or_else(|| panic!("expected line tagged {tag:?}, got {line:?}"));
+    rest.split_whitespace()
+        .map(|t| t.parse().expect("numeric token"))
+        .collect()
+}
+
+fn kind_of(tag: u64) -> HashKind {
+    match tag {
+        0 => HashKind::Modulo,
+        1 => HashKind::Seeded,
+        other => panic!("unknown kind tag {other}"),
+    }
+}
+
+#[test]
+fn native_engine_matches_python_reference() {
+    let mut lines = GOLDEN.lines().filter(|l| !l.starts_with('#'));
+    let mut batch_cases = 0;
+    let mut detector_cases = 0;
+
+    while let Some(header) = lines.next() {
+        let mut toks = header.split_whitespace();
+        match toks.next() {
+            Some("batch_hash") => {
+                let kind = kind_of(kv(toks.next().unwrap(), "kind"));
+                let seed = kv(toks.next().unwrap(), "seed");
+                let nbuckets = kv(toks.next().unwrap(), "nbuckets");
+                let keys: Vec<u64> = numbers(lines.next().unwrap(), "keys ");
+                let want: Vec<i32> = numbers(lines.next().unwrap(), "ids ");
+                let engine = NativeEngine::new();
+                let got = engine.batch_hash(&keys, seed, nbuckets, kind).unwrap();
+                assert_eq!(got, want, "batch_hash mismatch: {header}");
+                batch_cases += 1;
+            }
+            Some("detector") => {
+                let kind = kind_of(kv(toks.next().unwrap(), "kind"));
+                let seed = kv(toks.next().unwrap(), "seed");
+                let nbuckets = kv(toks.next().unwrap(), "nbuckets");
+                let nbins = kv(toks.next().unwrap(), "nbins") as usize;
+                let n = kv(toks.next().unwrap(), "n") as usize;
+                let keys: Vec<u64> = numbers(lines.next().unwrap(), "keys ");
+                assert_eq!(keys.len(), n, "key count mismatch: {header}");
+                let chi2: Vec<f64> = numbers(lines.next().unwrap(), "chi2 ");
+                let max_load: Vec<i32> = numbers(lines.next().unwrap(), "max_load ");
+                let hist: Vec<i32> = numbers(lines.next().unwrap(), "hist ");
+
+                let engine = NativeEngine::with_shape(keys.len().max(1), nbins);
+                let got = engine.detect(&keys, seed, nbuckets, kind).unwrap();
+                assert_eq!(got.hist, hist, "hist mismatch: {header}");
+                assert_eq!(got.max_load, max_load[0], "max_load mismatch: {header}");
+                let want = chi2[0];
+                let rel = (got.chi2 as f64 - want).abs() / want.max(1e-9);
+                assert!(
+                    rel < 1e-4,
+                    "chi2 mismatch: {header}: got {} want {want}",
+                    got.chi2
+                );
+                detector_cases += 1;
+            }
+            other => panic!("unknown golden record {other:?}"),
+        }
+    }
+    assert!(batch_cases >= 10, "only {batch_cases} batch_hash cases");
+    assert!(detector_cases >= 3, "only {detector_cases} detector cases");
+}

@@ -1,0 +1,230 @@
+//! Offline vendored subset of the `anyhow` crate (the container image has
+//! no crates.io access). Implements the slice of the public API this
+//! workspace uses — [`Error`], [`Result`], [`Context`], [`anyhow!`],
+//! [`bail!`] — with the same semantics: a type-erased error with a
+//! human-readable context chain. Swap the path dependency for the registry
+//! crate when building with network access; no call sites change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error: any `std::error::Error + Send + Sync` plus a chain
+/// of context messages added by [`Context`].
+///
+/// Deliberately does **not** implement `std::error::Error` itself (exactly
+/// like the real crate) so the blanket `From<E: std::error::Error>` below
+/// cannot collide with the core identity `From<T> for T`.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// Wrap this error under a new context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error(Box::new(ContextError {
+            msg: context.to_string(),
+            source: self.0,
+        }))
+    }
+
+    /// Iterate the error and its sources, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain {
+            next: Some(self.0.as_ref()),
+        }
+    }
+
+    /// The lowest-level source in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur: &(dyn StdError + 'static) = self.0.as_ref();
+        while let Some(next) = cur.source() {
+            cur = next;
+        }
+        cur
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(Box::new(e))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)?;
+        let mut source = self.0.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = source {
+            write!(f, "\n    {e}")?;
+            source = e.source();
+        }
+        Ok(())
+    }
+}
+
+/// Iterator over an error's source chain (see [`Error::chain`]).
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+/// Leaf error holding only a message (`anyhow!`, `Option::context`).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// A context message layered over an underlying error.
+struct ContextError {
+    msg: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} (caused by: {})", self.msg, self.source)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(self.source.as_ref())
+    }
+}
+
+/// Attach context to a `Result` or `Option`, producing `Result<T, Error>`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn from_and_question_mark() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn context_chains_and_debug_prints_causes() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(e.chain().count(), 2);
+        assert!(format!("{e:?}").contains("Caused by"));
+        assert_eq!(e.root_cause().to_string(), "missing");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let e: Result<()> = Err(anyhow!("bottom {}", 1));
+        let e = e.with_context(|| format!("layer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "layer 2");
+        assert_eq!(e.root_cause().to_string(), "bottom 1");
+
+        let none: Option<u32> = None;
+        assert_eq!(none.context("absent").unwrap_err().to_string(), "absent");
+        assert_eq!(Some(3u32).context("absent").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged: {flag}");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged: true");
+    }
+}

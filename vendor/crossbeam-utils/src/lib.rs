@@ -1,0 +1,75 @@
+//! Offline vendored subset of the `crossbeam-utils` crate (no crates.io
+//! access in the container image): [`CachePadded`], the one item this
+//! workspace uses. Swap the path dependency for the registry version when
+//! building with network access.
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns a value to the length of a cache line so neighbouring
+/// values never share one (prevents false sharing between per-thread
+/// counters). 128 bytes covers the spatial-prefetcher pairing on modern
+/// x86_64 and the 128-byte lines of apple-silicon aarch64 — the same
+/// conservative choice the real crate makes for those targets.
+#[derive(Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> Self {
+        CachePadded { value }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for CachePadded<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("CachePadded").field(&self.value).finish()
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        CachePadded::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_and_transparent() {
+        assert!(std::mem::align_of::<CachePadded<u64>>() >= 128);
+        let mut c = CachePadded::new(5u64);
+        assert_eq!(*c, 5);
+        *c += 1;
+        assert_eq!(c.into_inner(), 6);
+    }
+
+    #[test]
+    fn array_elements_do_not_share_lines() {
+        let xs: Vec<CachePadded<u64>> = (0..4u64).map(CachePadded::new).collect();
+        let a = &*xs[0] as *const u64 as usize;
+        let b = &*xs[1] as *const u64 as usize;
+        assert!(b - a >= 128);
+    }
+}

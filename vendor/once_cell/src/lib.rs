@@ -1,0 +1,110 @@
+//! Offline vendored subset of the `once_cell` crate (no crates.io access
+//! in the container image): `sync::Lazy` and `sync::OnceCell`, built on
+//! `std::sync::OnceLock`. Same public semantics as the registry crate for
+//! the surface this workspace uses; swap the path dependency for the
+//! registry version when building with network access.
+
+pub mod sync {
+    use std::cell::Cell;
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// Thread-safe cell initialized at most once (`once_cell::sync::OnceCell`).
+    pub struct OnceCell<T>(OnceLock<T>);
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> Self {
+            OnceCell(OnceLock::new())
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            self.0.get()
+        }
+
+        pub fn set(&self, value: T) -> Result<(), T> {
+            self.0.set(value)
+        }
+
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.0.get_or_init(f)
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    /// A value lazily initialized on first dereference
+    /// (`once_cell::sync::Lazy`); usable in `static` items.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: Cell<Option<F>>,
+    }
+
+    // SAFETY: `init` is only taken inside `OnceLock::get_or_init`, which
+    // serializes the single initialization across threads; afterwards the
+    // cell is never touched again.
+    unsafe impl<T: Sync + Send, F: Send> Sync for Lazy<T, F> {}
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Lazy {
+                cell: OnceLock::new(),
+                init: Cell::new(Some(init)),
+            }
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Lazy<T, F> {
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(|| match this.init.take() {
+                Some(f) => f(),
+                None => panic!("Lazy instance previously poisoned"),
+            })
+        }
+    }
+
+    impl<T, F: FnOnce() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::{Lazy, OnceCell};
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    static COUNT: AtomicU32 = AtomicU32::new(0);
+    static LAZY: Lazy<u32> = Lazy::new(|| {
+        COUNT.fetch_add(1, Ordering::SeqCst);
+        42
+    });
+
+    #[test]
+    fn lazy_initializes_exactly_once() {
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            handles.push(std::thread::spawn(|| *LAZY));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 42);
+        }
+        assert_eq!(*LAZY, 42);
+        assert_eq!(COUNT.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn once_cell_set_get() {
+        let c: OnceCell<u32> = OnceCell::new();
+        assert!(c.get().is_none());
+        assert!(c.set(1).is_ok());
+        assert_eq!(c.set(2), Err(2));
+        assert_eq!(c.get_or_init(|| 9), &1);
+    }
+}
