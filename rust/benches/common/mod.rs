@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
-use dhash::dhash::{DHashMap, HashFn};
+use dhash::dhash::{DHashMap, HashFn, ShardedDHash};
 use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
 use dhash::util::Summary;
 
@@ -64,6 +64,67 @@ pub fn make_table(name: &str, nbuckets: usize, hash_seed: u64) -> Arc<dyn Concur
         "rht" => Arc::new(HtRht::new(nbuckets, HashFn::Seeded(hash_seed))),
         "split" => Arc::new(HtSplit::new(nbuckets, 1 << 20)),
         _ => unreachable!("unknown table {name}"),
+    }
+}
+
+/// A `ShardedDHash` holding the same *total* bucket budget as an
+/// unsharded table with `nbuckets_total` buckets.
+pub fn make_sharded(
+    shards: usize,
+    nbuckets_total: usize,
+    hash_seed: u64,
+) -> Arc<dyn ConcurrentMap> {
+    Arc::new(ShardedDHash::with_buckets(
+        shards,
+        (nbuckets_total / shards).max(1),
+        hash_seed,
+    ))
+}
+
+/// Machine-readable smoke-bench artifact. Under `DHASH_SMOKE=1` (the CI
+/// gate) `flush` writes `BENCH_<name>.json` next to the bench's working
+/// directory so the workflow can archive the perf trajectory PR over PR;
+/// interactive and full runs keep stdout as the only interface.
+pub struct BenchJson {
+    name: &'static str,
+    rows: Vec<String>,
+}
+
+impl BenchJson {
+    pub fn new(name: &'static str) -> Self {
+        Self {
+            name,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Record one row: a metric label plus numeric fields.
+    pub fn row(&mut self, metric: &str, fields: &[(&str, f64)]) {
+        let mut s = format!("{{\"metric\":\"{metric}\"");
+        for (k, v) in fields {
+            // Keep the file valid JSON even if a timer misbehaves.
+            let v = if v.is_finite() { *v } else { -1.0 };
+            s.push_str(&format!(",\"{k}\":{v}"));
+        }
+        s.push('}');
+        self.rows.push(s);
+    }
+
+    /// Write `BENCH_<name>.json` when running as the CI smoke gate.
+    pub fn flush(&self) {
+        if !smoke_mode() {
+            return;
+        }
+        let path = format!("BENCH_{}.json", self.name);
+        let body = format!(
+            "{{\"bench\":\"{}\",\"rows\":[{}]}}\n",
+            self.name,
+            self.rows.join(",")
+        );
+        match std::fs::write(&path, body) {
+            Ok(()) => println!("# wrote {path} ({} rows)", self.rows.len()),
+            Err(e) => eprintln!("BENCH json write failed ({path}): {e}"),
+        }
     }
 }
 

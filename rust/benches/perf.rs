@@ -8,8 +8,13 @@
 //!   read_lock                  — read-side guard ns/op (should be ~0)
 //!   synchronize_rcu            — grace-period latency µs (2 live readers)
 //!   rebuild_rate               — rebuild node throughput Mnodes/s
+//!   sharded_lookup_hit         — lookup ns/op through the 4-shard facade
+//!   rebuild_all_rate           — staggered whole-map rebuild Mnodes/s
 //!   detector_batch             — detector-engine ms / 4096-key batch
 //!   batch_hash                 — engine pre-hash ms / 4096-key batch
+//!
+//! Under `DHASH_SMOKE=1` the rows are also written to `BENCH_perf.json`
+//! (see `common::BenchJson`) so CI archives the perf trajectory.
 
 mod common;
 
@@ -17,7 +22,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use dhash::dhash::{DHashMap, HashFn};
+use dhash::dhash::{DHashMap, HashFn, ShardedDHash};
 use dhash::rcu::{rcu_barrier, synchronize_rcu, RcuThread};
 use dhash::runtime::{load_engine, Engine as _, HashKind};
 use dhash::util::SplitMix64;
@@ -30,6 +35,7 @@ fn ns_per_op(iters: u64, f: impl FnOnce()) -> f64 {
 
 fn main() {
     common::print_host_table1();
+    let mut json = common::BenchJson::new("perf");
     let iters: u64 = if common::smoke_mode() {
         60_000
     } else if common::full_mode() {
@@ -54,6 +60,7 @@ fn main() {
         }
     });
     println!("perf lookup_hit ns_per_op={ns:.1} mops={:.2}", 1e3 / ns);
+    json.row("lookup_hit", &[("ns_per_op", ns), ("mops", 1e3 / ns)]);
 
     let mut rng = SplitMix64::new(2);
     let ns = ns_per_op(iters, || {
@@ -63,6 +70,7 @@ fn main() {
         }
     });
     println!("perf lookup_miss ns_per_op={ns:.1} mops={:.2}", 1e3 / ns);
+    json.row("lookup_miss", &[("ns_per_op", ns), ("mops", 1e3 / ns)]);
 
     let upd_iters = iters / 4;
     let mut rng = SplitMix64::new(3);
@@ -74,6 +82,7 @@ fn main() {
         }
     });
     println!("perf insert_delete ns_per_op={ns:.1} mops={:.2}", 1e3 / ns);
+    json.row("insert_delete", &[("ns_per_op", ns), ("mops", 1e3 / ns)]);
 
     let ns = ns_per_op(iters, || {
         for _ in 0..iters {
@@ -81,6 +90,7 @@ fn main() {
         }
     });
     println!("perf quiescent_state ns_per_op={ns:.2}");
+    json.row("quiescent_state", &[("ns_per_op", ns)]);
 
     let ns = ns_per_op(iters, || {
         for _ in 0..iters {
@@ -89,6 +99,7 @@ fn main() {
         }
     });
     println!("perf read_lock ns_per_op={ns:.2}");
+    json.row("read_lock", &[("ns_per_op", ns)]);
 
     // Grace-period latency with two actively-quiescing readers.
     {
@@ -122,6 +133,7 @@ fn main() {
             r.join().unwrap();
         }
         println!("perf synchronize_rcu us_per_gp={us:.2} (2 live readers)");
+        json.row("synchronize_rcu", &[("us_per_gp", us)]);
     }
 
     // Rebuild throughput (no concurrent workers: pure migration rate).
@@ -145,6 +157,39 @@ fn main() {
             n as f64 / dt / 1e6,
             dt * 1e3
         );
+        json.row("rebuild_rate", &[("mnodes_per_s", n as f64 / dt / 1e6)]);
+    }
+
+    // Sharded-facade rows: routing overhead on the lookup hot path, and
+    // the staggered whole-map rebuild rate (4 shards, same α=20 budget).
+    {
+        let sm = ShardedDHash::with_buckets(4, 256, 0x5eed);
+        for k in 0..nkeys {
+            sm.insert(&g, k, k).unwrap();
+        }
+        let mut rng = SplitMix64::new(9);
+        let ns = ns_per_op(iters, || {
+            for _ in 0..iters {
+                let k = rng.next_bounded(nkeys);
+                std::hint::black_box(sm.lookup(&g, k));
+            }
+        });
+        println!(
+            "perf sharded_lookup_hit ns_per_op={ns:.1} mops={:.2} (4 shards)",
+            1e3 / ns
+        );
+        json.row("sharded_lookup_hit", &[("ns_per_op", ns), ("mops", 1e3 / ns)]);
+
+        let t0 = Instant::now();
+        sm.rebuild_all(&g, 512, HashFn::Seeded(2)).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "perf rebuild_all_rate mnodes_per_s={:.3} ({nkeys} nodes, 4 staggered shards, \
+             {:.1} ms)",
+            nkeys as f64 / dt / 1e6,
+            dt * 1e3
+        );
+        json.row("rebuild_all_rate", &[("mnodes_per_s", nkeys as f64 / dt / 1e6)]);
     }
 
     // Detector-engine latencies (control-path budget: must stay ~ms).
@@ -165,6 +210,7 @@ fn main() {
             engine.name(),
             engine.batch()
         );
+        json.row("detector_batch", &[("ms_per_batch", ms)]);
         let t0 = Instant::now();
         for _ in 0..rounds {
             std::hint::black_box(engine.batch_hash(&keys, 1, 4096, HashKind::Seeded).unwrap());
@@ -175,8 +221,10 @@ fn main() {
             engine.name(),
             engine.batch()
         );
+        json.row("batch_hash", &[("ms_per_batch", ms)]);
     }
 
+    json.flush();
     g.quiescent_state();
     rcu_barrier();
 }

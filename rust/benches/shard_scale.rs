@@ -1,0 +1,65 @@
+//! §Sharding scalability: `ShardedDHash` throughput under the §6.2
+//! continuous-rebuild torture protocol, swept over shards ∈ {1, 4, 16} ×
+//! worker threads at a constant total bucket budget. The trait-level
+//! rebuild path drives the *staggered* `rebuild_all` (one shard migrating
+//! at a time), so the sweep measures exactly what sharding buys: smaller
+//! migration working sets and rebuild/update parallelism across shards.
+//!
+//! Under `DHASH_SMOKE=1` the rows are also written to
+//! `BENCH_shard_scale.json` (see `common::BenchJson`).
+
+mod common;
+
+use std::sync::Arc;
+
+use dhash::map::ConcurrentMap;
+use dhash::rcu::rcu_barrier;
+use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
+use dhash::util::Summary;
+
+const TOTAL_BUCKETS: usize = 1024;
+const SHARD_SWEEP: [usize; 3] = [1, 4, 16];
+
+fn main() {
+    common::print_host_table1();
+    let mut json = common::BenchJson::new("shard_scale");
+    for &shards in &SHARD_SWEEP {
+        for &threads in &common::thread_sweep() {
+            let cfg = TortureConfig {
+                threads,
+                mix: OpMix::lookup_pct(90),
+                alpha: 20,
+                nbuckets: TOTAL_BUCKETS,
+                key_range: 0, // auto: stationary 2·α·β
+                duration: common::measure_window(),
+                rebuild: RebuildMode::Continuous {
+                    alt_nbuckets: TOTAL_BUCKETS * 2,
+                },
+                pin: true,
+                seed: 0xd1e5_5eed,
+                hash_seed: 0x5eed,
+            }
+            .clamped_for_smoke();
+            let map: Arc<dyn ConcurrentMap> =
+                common::make_sharded(shards, cfg.nbuckets, cfg.hash_seed);
+            let samples = torture::measure_mops(map, &cfg, common::repeats());
+            let s = Summary::of(&samples);
+            println!(
+                "shard_scale shards={shards:<3} threads={threads:<3} \
+                 mops_mean={:<8.3} mops_stddev={:.3}",
+                s.mean, s.stddev
+            );
+            json.row(
+                "throughput",
+                &[
+                    ("shards", shards as f64),
+                    ("threads", threads as f64),
+                    ("mops_mean", s.mean),
+                    ("mops_stddev", s.stddev),
+                ],
+            );
+        }
+    }
+    json.flush();
+    rcu_barrier();
+}

@@ -15,9 +15,15 @@
 //!
 //! Runs on a clean checkout: no artifacts and no Python toolchain needed.
 //!
+//! With `--shards N` (default 4) the service runs the sharded map and the
+//! adversary aims its flood at ONE shard: the per-shard chi² verdict
+//! trips only there and the mitigation rebuilds only the victim shard —
+//! 1/N of the keys migrate while the other shards serve untouched.
+//! `--shards 1` reproduces the original whole-table demo.
+//!
 //! ```sh
 //! cargo run --release --example attack_mitigation -- \
-//!     [--secs 12] [--attack-at 4] [--clients 2] [--no-analytics]
+//!     [--secs 12] [--attack-at 4] [--clients 2] [--shards 4] [--no-analytics]
 //! ```
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -28,22 +34,37 @@ use dhash::coordinator::{
     BatcherConfig, ControllerConfig, Coordinator, CoordinatorConfig, DetectorConfig, Request,
 };
 use dhash::dhash::HashFn;
-use dhash::torture::AttackGen;
+use dhash::torture::{AttackGen, ShardedAttackGen};
 use dhash::util::stats::percentile;
 use dhash::util::SplitMix64;
 
 fn main() -> anyhow::Result<()> {
-    let args = dhash::util::cli::Args::from_env(&["secs", "attack-at", "clients", "no-analytics"])?;
+    let args = dhash::util::cli::Args::from_env(&[
+        "secs",
+        "attack-at",
+        "clients",
+        "shards",
+        "no-analytics",
+    ])?;
     let secs: u64 = args.get_or("secs", 12u64)?;
     let attack_at: u64 = args.get_or("attack-at", 4u64)?;
     let nclients: usize = args.get_or("clients", 2usize)?;
+    let shards: usize = args.get_or("shards", 4usize)?;
     let analytics = !args.get_bool("no-analytics");
+    anyhow::ensure!(
+        shards >= 1 && shards.is_power_of_two(),
+        "--shards must be a power of two"
+    );
+    // The adversary concentrates on one shard (the targeted-mitigation
+    // demo); with --shards 1 this is the whole table.
+    let victim = shards - 1;
 
-    let nbuckets = 4096usize;
+    let nbuckets = 4096usize; // per shard
     let cfg = CoordinatorConfig {
         nbuckets,
         // Deliberately weak: the attacker knows bucket = key % nbuckets.
         hash: HashFn::Modulo,
+        shards,
         workers: 2,
         batcher: BatcherConfig {
             max_batch: 64,
@@ -63,8 +84,8 @@ fn main() -> anyhow::Result<()> {
         enable_analytics: analytics,
     };
     eprintln!(
-        "attack_mitigation: {nbuckets} buckets, weak modulo hash, attack at t={attack_at}s, \
-         analytics={analytics}"
+        "attack_mitigation: {shards} shard(s) x {nbuckets} buckets, weak modulo hash, \
+         attack on shard {victim} at t={attack_at}s, analytics={analytics}"
     );
     let coord = Arc::new(Coordinator::start(cfg)?);
 
@@ -82,7 +103,12 @@ fn main() -> anyhow::Result<()> {
         let latencies = latencies.clone();
         clients.push(std::thread::spawn(move || {
             let mut rng = SplitMix64::new(c as u64 + 1);
-            let mut attack = AttackGen::new(nbuckets, 7 + c as u64);
+            // All clients aim at the same victim shard (sharded mode).
+            let mut attack: Box<dyn Iterator<Item = u64>> = if shards > 1 {
+                Box::new(ShardedAttackGen::new(nbuckets, 7 + c as u64, shards, victim))
+            } else {
+                Box::new(AttackGen::new(nbuckets, 7 + c as u64))
+            };
             let t0 = Instant::now();
             while !stop.load(Ordering::Relaxed) {
                 let attacking = t0.elapsed().as_secs() >= attack_at;
@@ -148,14 +174,23 @@ fn main() -> anyhow::Result<()> {
         println!("\nmitigation events:");
         for ev in &events {
             println!(
-                "  t={:>6.2?}  chi2={:>10.1}  installed {:?}  moved {} nodes in {:?}",
-                ev.at, ev.chi2, ev.new_hash, ev.moved, ev.elapsed
+                "  t={:>6.2?}  shard={}  chi2={:>10.1}  installed {:?}  moved {} nodes in {:?}",
+                ev.at, ev.shard, ev.chi2, ev.new_hash, ev.moved, ev.elapsed
             );
         }
         if events.is_empty() {
             println!("  (none — was the attack window long enough?)");
+        } else if shards > 1 && events.iter().all(|e| e.shard == victim) {
+            println!(
+                "\nattack detected and mitigated while serving: OK \
+                 (only shard {victim} of {shards} migrated)"
+            );
         } else {
             println!("\nattack detected and mitigated while serving: OK");
+        }
+        let per_shard = coord.stats().last_chi2_per_shard;
+        if per_shard.len() > 1 {
+            println!("final per-shard chi2: {per_shard:.1?}");
         }
     } else {
         println!("\nanalytics disabled: attack ran unmitigated (baseline mode)");

@@ -1,8 +1,9 @@
-//! Behavioral conformance for every [`ConcurrentMap`]: DHash and the
-//! three baselines must agree on map semantics (the torture framework and
-//! all benches assume this).
+//! Behavioral conformance for every [`ConcurrentMap`]: DHash (plain and
+//! sharded) and the three baselines must agree on map semantics (the
+//! torture framework and all benches assume this).
 
-use super::*;
+use super::{ConcurrentMap, HtRht, HtSplit, HtXu};
+use crate::dhash::{DHashMap, HashFn, ShardedDHash};
 use crate::rcu::{rcu_barrier, RcuThread};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -10,6 +11,9 @@ use std::sync::Arc;
 fn make(name: &str) -> Arc<dyn ConcurrentMap> {
     match name {
         "dhash" => Arc::new(DHashMap::with_buckets(32, 1)),
+        // Same 32-bucket budget, split across 4 shards: the suite is the
+        // proof that sharding composes without changing map semantics.
+        "sharded" => Arc::new(ShardedDHash::with_buckets(4, 8, 1)),
         "xu" => Arc::new(HtXu::new(32, HashFn::Seeded(1))),
         "rht" => Arc::new(HtRht::new(32, HashFn::Seeded(1))),
         "split" => Arc::new(HtSplit::new(32, 1 << 20)),
@@ -55,6 +59,14 @@ fn rebuild_preserves(m: &dyn ConcurrentMap) {
     assert_eq!(m.len(&g), 500, "{} len after rebuild", m.name());
     for k in 0..500u64 {
         assert_eq!(m.lookup(&g, k * 3), Some(k), "{} key {k}", m.name());
+    }
+    // Tables that support enumeration must agree with len/lookup.
+    if let Some(snap) = m.snapshot(&g) {
+        assert_eq!(snap.len(), 500, "{} snapshot after rebuild", m.name());
+        assert!(snap.windows(2).all(|w| w[0].0 < w[1].0), "{} unsorted", m.name());
+    }
+    if let Some(loads) = m.bucket_loads(&g) {
+        assert_eq!(loads.iter().sum::<usize>(), 500, "{} loads", m.name());
     }
     assert!(m.rebuild(&g, 16, HashFn::Seeded(78)));
     assert_eq!(m.len(&g), 500);
@@ -196,6 +208,7 @@ macro_rules! map_suite {
 }
 
 map_suite!(dhash, "dhash");
+map_suite!(sharded, "sharded");
 map_suite!(xu, "xu");
 map_suite!(rht, "rht");
 map_suite!(split, "split");

@@ -14,9 +14,11 @@
 //!   resizable only (buckets double/halve; the hash function is fixed
 //!   `key mod 2^i`).
 //!
-//! All four tables (the three above plus `DHashMap`) implement
-//! [`ConcurrentMap`], the object-safe trait the torture framework and the
-//! benches drive.
+//! All evaluated tables (the three above plus `DHashMap` and the sharded
+//! `ShardedDHash`) implement [`ConcurrentMap`], the object-safe facade
+//! the torture framework, the coordinator, and the benches drive. The
+//! trait itself lives in [`crate::map`] (re-exported here for existing
+//! call sites).
 
 pub mod rht;
 pub mod split;
@@ -26,67 +28,7 @@ pub use rht::HtRht;
 pub use split::HtSplit;
 pub use xu::HtXu;
 
-use crate::dhash::{DHashMap, HashFn};
-use crate::lflist::BucketSet;
-use crate::rcu::RcuThread;
-
-/// Object-safe facade over the four evaluated hash tables.
-pub trait ConcurrentMap: Send + Sync + 'static {
-    /// Display name used in bench output (`HT-DHash`, `HT-Xu`, ...).
-    fn name(&self) -> &'static str;
-
-    /// Value for `key`, if present.
-    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64>;
-
-    /// Insert; false if the key already exists.
-    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool;
-
-    /// Delete; false if absent.
-    fn delete(&self, guard: &RcuThread, key: u64) -> bool;
-
-    /// Dynamically change the table geometry / hash function.
-    ///
-    /// For the two dynamic tables this installs `hash`; for the resizable
-    /// `HtSplit`, `hash` is ignored (the paper's §6.2 protocol degrades
-    /// everyone to resizing for comparability anyway) and only the power-
-    /// of-two bucket count applies. Returns false if another rebuild is in
-    /// flight.
-    fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool;
-
-    /// Live entries (O(n), diagnostic).
-    fn len(&self, guard: &RcuThread) -> usize;
-
-    /// True when no live entries exist (O(n), diagnostic).
-    fn is_empty(&self, guard: &RcuThread) -> bool {
-        self.len(guard) == 0
-    }
-}
-
-impl<B: BucketSet> ConcurrentMap for DHashMap<B> {
-    fn name(&self) -> &'static str {
-        "HT-DHash"
-    }
-
-    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
-        DHashMap::lookup(self, guard, key)
-    }
-
-    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
-        DHashMap::insert(self, guard, key, val).is_ok()
-    }
-
-    fn delete(&self, guard: &RcuThread, key: u64) -> bool {
-        DHashMap::delete(self, guard, key)
-    }
-
-    fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
-        DHashMap::rebuild(self, guard, nbuckets, hash).is_ok()
-    }
-
-    fn len(&self, guard: &RcuThread) -> usize {
-        DHashMap::len(self, guard)
-    }
-}
+pub use crate::map::ConcurrentMap;
 
 #[cfg(test)]
 mod conformance;

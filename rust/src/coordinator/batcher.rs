@@ -66,8 +66,10 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Max time to wait filling a batch once it has at least one entry.
     pub max_wait: Duration,
-    /// Sort each batch by bucket id using the AOT batch-hash artifact
-    /// (requires analytics; no-op without it).
+    /// Sort each batch by routing id (requires analytics; no-op without
+    /// it). Unsharded: bucket id via the AOT batch-hash artifact.
+    /// Sharded: the fixed shard-selector id, so a worker walks shards in
+    /// order (the per-shard hash may diverge after targeted mitigations).
     pub pre_hash: bool,
 }
 

@@ -1,7 +1,10 @@
-//! The rebuild controller: turns attack verdicts into `ht_rebuild` calls
-//! with a fresh random seed, rate-limited by a cooldown so a sustained
-//! attack cannot make the service thrash on back-to-back rebuilds.
+//! The rebuild controller: turns attack verdicts into rebuild calls with
+//! a fresh random seed, rate-limited by a **per-shard** cooldown so a
+//! sustained attack cannot make the service thrash on back-to-back
+//! rebuilds — while an attack on one shard never blocks mitigating a
+//! different shard (targeted mitigation).
 
+use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -10,7 +13,7 @@ use crate::util::rng::mix64;
 
 #[derive(Clone, Debug)]
 pub struct ControllerConfig {
-    /// Minimum spacing between mitigation rebuilds.
+    /// Minimum spacing between mitigation rebuilds of the *same* shard.
     pub cooldown: Duration,
     /// Bucket count for mitigation rebuilds (None = keep current).
     pub rebuild_buckets: Option<usize>,
@@ -30,6 +33,8 @@ impl Default for ControllerConfig {
 pub struct RebuildEvent {
     /// Offset from coordinator start.
     pub at: Duration,
+    /// The shard that was rebuilt (0 in unsharded deployments).
+    pub shard: usize,
     /// chi2 that triggered the rebuild.
     pub chi2: f32,
     /// The hash function installed.
@@ -47,7 +52,9 @@ pub struct RebuildController {
 }
 
 struct CtlState {
-    last_rebuild: Option<Instant>,
+    /// Per-shard cooldown clocks (shard 0 doubles as the whole-map clock
+    /// for unsharded deployments).
+    last_rebuild: HashMap<usize, Instant>,
     seed_state: u64,
     events: Vec<RebuildEvent>,
 }
@@ -58,26 +65,38 @@ impl RebuildController {
             cfg,
             start: Instant::now(),
             state: Mutex::new(CtlState {
-                last_rebuild: None,
+                last_rebuild: HashMap::new(),
                 seed_state: entropy,
                 events: Vec::new(),
             }),
         }
     }
 
-    /// If the cooldown allows, pick a fresh hash function for mitigation.
-    /// The attacker cannot predict the next seed: it chains the previous
-    /// seed state through mix64 with the current monotonic clock.
+    /// [`RebuildController::plan_mitigation_for`] on shard 0 — the
+    /// whole-map path for unsharded deployments.
     pub fn plan_mitigation(&self, now: Instant) -> Option<HashFn> {
+        self.plan_mitigation_for(0, now)
+    }
+
+    /// If `shard`'s cooldown allows, pick a fresh hash function for a
+    /// targeted mitigation of that shard. Cooldowns are independent per
+    /// shard: a hot shard being in cooldown must not block mitigating a
+    /// freshly-attacked one. The attacker cannot predict the next seed:
+    /// it chains the previous seed state through mix64 with the current
+    /// monotonic clock (and the shard id, so two shards mitigated in the
+    /// same instant never share a seed).
+    pub fn plan_mitigation_for(&self, shard: usize, now: Instant) -> Option<HashFn> {
         let mut st = self.state.lock().unwrap();
-        if let Some(last) = st.last_rebuild {
+        if let Some(&last) = st.last_rebuild.get(&shard) {
             if now.duration_since(last) < self.cfg.cooldown {
                 return None;
             }
         }
-        st.last_rebuild = Some(now);
+        st.last_rebuild.insert(shard, now);
         st.seed_state = mix64(
-            st.seed_state ^ self.start.elapsed().as_nanos() as u64,
+            st.seed_state
+                ^ self.start.elapsed().as_nanos() as u64
+                ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
         );
         Some(HashFn::Seeded(st.seed_state))
     }
@@ -87,11 +106,12 @@ impl RebuildController {
         self.cfg.rebuild_buckets.unwrap_or(current)
     }
 
-    /// Record a completed mitigation.
-    pub fn record(&self, chi2: f32, new_hash: HashFn, moved: u64, elapsed: Duration) {
+    /// Record a completed mitigation of `shard`.
+    pub fn record(&self, shard: usize, chi2: f32, new_hash: HashFn, moved: u64, elapsed: Duration) {
         let mut st = self.state.lock().unwrap();
         st.events.push(RebuildEvent {
             at: self.start.elapsed(),
+            shard,
             chi2,
             new_hash,
             moved,
@@ -129,6 +149,27 @@ mod tests {
     }
 
     #[test]
+    fn cooldown_is_per_shard() {
+        let c = RebuildController::new(
+            ControllerConfig {
+                cooldown: Duration::from_millis(100),
+                rebuild_buckets: None,
+            },
+            7,
+        );
+        let t0 = Instant::now();
+        let a = c.plan_mitigation_for(0, t0);
+        assert!(a.is_some());
+        // Shard 0 is cooling down, but shard 3 is independent.
+        assert!(c.plan_mitigation_for(0, t0 + Duration::from_millis(10)).is_none());
+        let b = c.plan_mitigation_for(3, t0 + Duration::from_millis(10));
+        assert!(b.is_some());
+        assert_ne!(a, b, "distinct shards must get distinct seeds");
+        // And shard 3 now cools down on its own clock.
+        assert!(c.plan_mitigation_for(3, t0 + Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
     fn seeds_are_unpredictable_chain() {
         let c = RebuildController::new(ControllerConfig::default(), 1);
         let a = c.plan_mitigation(Instant::now()).unwrap();
@@ -154,9 +195,10 @@ mod tests {
     #[test]
     fn events_recorded() {
         let c = RebuildController::new(ControllerConfig::default(), 9);
-        c.record(777.0, HashFn::Seeded(1), 100, Duration::from_millis(3));
+        c.record(2, 777.0, HashFn::Seeded(1), 100, Duration::from_millis(3));
         let ev = c.events();
         assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].shard, 2);
         assert_eq!(ev[0].chi2, 777.0);
         assert_eq!(ev[0].moved, 100);
     }

@@ -45,6 +45,19 @@ impl KeySampler {
     }
 }
 
+/// Split a key sample by destination shard, using the same fixed
+/// shard-selector pre-hash a [`crate::dhash::ShardedDHash`] routes with.
+/// The analytics thread evaluates chi² per shard from the partitions, so
+/// a collision flood aimed at one shard trips only that shard's verdict
+/// (targeted mitigation). With `nshards == 1` this is the identity.
+pub fn partition_by_shard(keys: &[u64], nshards: usize) -> Vec<Vec<u64>> {
+    let mut parts = vec![Vec::new(); nshards];
+    for &k in keys {
+        parts[crate::dhash::shard_of(k, nshards)].push(k);
+    }
+    parts
+}
+
 /// Detector policy knobs.
 #[derive(Clone, Debug)]
 pub struct DetectorConfig {
@@ -155,6 +168,22 @@ mod tests {
             SkewVerdict::classify(&cfg, 4096, 500.0, 900, nbins),
             SkewVerdict::Attack { .. }
         ));
+    }
+
+    #[test]
+    fn partition_by_shard_agrees_with_selector() {
+        let keys: Vec<u64> = (0..4096u64).map(|k| k.wrapping_mul(0x9e37)).collect();
+        let nshards = 8;
+        let parts = partition_by_shard(&keys, nshards);
+        assert_eq!(parts.len(), nshards);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), keys.len());
+        for (s, part) in parts.iter().enumerate() {
+            assert!(part.iter().all(|&k| crate::dhash::shard_of(k, nshards) == s));
+        }
+        // Unsharded: identity partition.
+        let one = partition_by_shard(&keys, 1);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0], keys);
     }
 
     #[test]

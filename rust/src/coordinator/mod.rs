@@ -1,7 +1,9 @@
 //! The serving-shaped L3 coordinator: a concurrent KV service built on
-//! [`DHashMap`] with request batching, worker routing, hash-collision
-//! attack detection through the AOT analytics artifacts, and automatic
-//! rebuild mitigation.
+//! the sharded DHash ([`crate::dhash::ShardedDHash`]; `shards == 1`
+//! degenerates to the paper's single `DHashMap`) with request batching,
+//! worker routing, per-shard hash-collision attack detection through the
+//! AOT analytics artifacts, and automatic *targeted* rebuild mitigation —
+//! only the attacked shard migrates.
 //!
 //! Role in the reproduction: the paper motivates dynamic hash tables with
 //! bursty / adversarial workloads reaching servers in batches (§1,
@@ -46,6 +48,7 @@ mod tests {
         CoordinatorConfig {
             nbuckets: 64,
             hash: HashFn::Seeded(7),
+            shards: 1,
             workers: 2,
             batcher: BatcherConfig {
                 max_batch: 16,
@@ -118,6 +121,31 @@ mod tests {
         }
         assert_eq!(c.stats().rebuilds, 1);
         c.shutdown();
+    }
+
+    #[test]
+    fn sharded_coordinator_serves_and_rebuilds() {
+        let mut cfg = quick_config();
+        cfg.shards = 4;
+        let c = Arc::new(Coordinator::start(cfg).unwrap());
+        for k in 0..400u64 {
+            assert_eq!(c.execute(Request::put(k, k * 2)), Response::Ok);
+        }
+        // Staggered whole-map rebuild, then everything still resolves.
+        assert!(c.force_rebuild(32, HashFn::Seeded(0x5a5a)));
+        for k in 0..400u64 {
+            assert_eq!(c.execute(Request::get(k)), Response::Value(k * 2), "key {k}");
+        }
+        assert_eq!(c.stats().rebuilds, 1);
+        assert_eq!(c.map().shards(), 4);
+        c.shutdown();
+    }
+
+    #[test]
+    fn non_pow2_shards_rejected() {
+        let mut cfg = quick_config();
+        cfg.shards = 6;
+        assert!(Coordinator::start(cfg).is_err());
     }
 
     #[test]

@@ -1,5 +1,12 @@
-//! The coordinator proper: wires batcher → workers → DHashMap, plus the
-//! analytics thread (detector engine + rebuild controller).
+//! The coordinator proper: wires batcher → workers → the sharded map,
+//! plus the analytics thread (per-shard detector verdicts + targeted
+//! rebuild mitigation).
+//!
+//! The KV workers program against the [`ConcurrentMap`] facade; only the
+//! analytics thread needs the concrete [`ShardedDHash`] (per-shard hash
+//! functions and targeted rebuilds have no trait-level surface). With
+//! `shards == 1` the sharded map degenerates to the paper's single
+//! `DHashMap` and every behavior matches the pre-sharding coordinator.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -9,15 +16,21 @@ use std::time::Instant;
 
 use super::batcher::{Batch, Batcher, BatcherConfig, Entry, Request, Response};
 use super::controller::{ControllerConfig, RebuildController};
-use super::detector::{DetectorConfig, KeySampler, SkewVerdict};
-use crate::dhash::{DHashMap, HashFn};
+use super::detector::{partition_by_shard, DetectorConfig, KeySampler, SkewVerdict};
+use crate::dhash::{HashFn, ShardedDHash};
+use crate::map::ConcurrentMap;
 use crate::rcu::RcuThread;
 use crate::runtime::{load_engine, Engine, HashKind};
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Buckets **per shard** (the total bucket budget is
+    /// `shards * nbuckets`; with `shards == 1` this is the whole table,
+    /// exactly as before sharding).
     pub nbuckets: usize,
     pub hash: HashFn,
+    /// Shard count (power of two; 1 = the paper's single table).
+    pub shards: usize,
     /// KV worker threads.
     pub workers: usize,
     pub batcher: BatcherConfig,
@@ -34,6 +47,7 @@ impl Default for CoordinatorConfig {
         Self {
             nbuckets: 4096,
             hash: HashFn::Seeded(0xD1E5_5EED),
+            shards: 1,
             workers: 2,
             batcher: BatcherConfig::default(),
             detector: DetectorConfig::default(),
@@ -48,24 +62,31 @@ impl Default for CoordinatorConfig {
 pub struct CoordinatorStats {
     pub total_requests: u64,
     pub total_batches: u64,
-    /// Mitigation + manual rebuilds completed.
+    /// Mitigation + manual rebuilds completed (a staggered whole-map
+    /// rebuild counts once).
     pub rebuilds: u64,
-    /// chi2 from the most recent detector evaluation (0 until evaluated).
+    /// Max per-shard chi2 from the most recent detector evaluation
+    /// (0 until evaluated).
     pub last_chi2: f32,
-    /// Detector evaluations performed.
+    /// chi2 per shard from the most recent evaluation (empty until
+    /// evaluated; shards with no sampled keys report 0).
+    pub last_chi2_per_shard: Vec<f32>,
+    /// Detector evaluation cycles performed.
     pub detector_runs: u64,
 }
 
 struct Shared {
-    map: DHashMap,
+    map: ShardedDHash,
     sampler: KeySampler,
     stop: AtomicBool,
     total_requests: AtomicU64,
     total_batches: AtomicU64,
     rebuilds: AtomicU64,
     detector_runs: AtomicU64,
-    /// f32 bits of the last chi2.
+    /// f32 bits of the last max-over-shards chi2.
     last_chi2: AtomicU64,
+    /// Last per-shard chi2 values.
+    shard_chi2: Mutex<Vec<f32>>,
     controller: RebuildController,
 }
 
@@ -80,8 +101,13 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> anyhow::Result<Coordinator> {
+        anyhow::ensure!(
+            cfg.shards >= 1 && cfg.shards.is_power_of_two(),
+            "shards must be a power of two, got {}",
+            cfg.shards
+        );
         let shared = Arc::new(Shared {
-            map: DHashMap::with_hash(cfg.nbuckets, cfg.hash),
+            map: ShardedDHash::with_hash(cfg.shards, cfg.nbuckets, cfg.hash),
             sampler: KeySampler::new(cfg.detector.sample_capacity),
             stop: AtomicBool::new(false),
             total_requests: AtomicU64::new(0),
@@ -89,6 +115,7 @@ impl Coordinator {
             rebuilds: AtomicU64::new(0),
             detector_runs: AtomicU64::new(0),
             last_chi2: AtomicU64::new(0),
+            shard_chi2: Mutex::new(Vec::new()),
             controller: RebuildController::new(
                 cfg.controller.clone(),
                 // Seed entropy: wall clock + ASLR'd stack address. Not
@@ -136,21 +163,30 @@ impl Coordinator {
                             else {
                                 break; // input closed: shutdown
                             };
-                            let b = match engine.as_ref() {
-                                Some(e) => {
-                                    // Hash oracle: the table's *current*
-                                    // function, evaluated through the
-                                    // engine backend.
-                                    let oracle = |keys: &[u64]| -> Option<Vec<i32>> {
-                                        let hash = shared2.map.hash_fn(&g);
-                                        let nb = shared2.map.nbuckets(&g) as u64;
-                                        let (kind, seed) = HashKind::of(hash);
-                                        e.batch_hash(keys, seed, nb, kind).ok()
-                                    };
-                                    batcher.route(entries, Some(&oracle))
+                            // Routing oracle. Sharded: the fixed shard
+                            // selector — needs no engine (per-shard
+                            // bucket ids would need one engine call per
+                            // shard once targeted mitigations diverge
+                            // the seeds, for little extra locality).
+                            // Unsharded: bucket ids under the table's
+                            // *current* hash via the engine backend;
+                            // None (engine unavailable) leaves the batch
+                            // un-routed, which `route` handles.
+                            let oracle = |keys: &[u64]| -> Option<Vec<i32>> {
+                                if shared2.map.shards() > 1 {
+                                    return Some(
+                                        keys.iter()
+                                            .map(|&k| shared2.map.shard_of(k) as i32)
+                                            .collect(),
+                                    );
                                 }
-                                None => batcher.route(entries, None),
+                                let e = engine.as_ref()?;
+                                let hash = shared2.map.shard_hash_fn(&g, 0);
+                                let nb = shared2.map.shard_nbuckets(&g, 0) as u64;
+                                let (kind, seed) = HashKind::of(hash);
+                                e.batch_hash(keys, seed, nb, kind).ok()
                             };
+                            let b = batcher.route(entries, Some(&oracle));
                             g.quiescent_state();
                             shared2.total_batches.fetch_add(1, Ordering::Relaxed);
                             if batch_tx.send(b).is_err() {
@@ -161,7 +197,7 @@ impl Coordinator {
             );
         }
 
-        // KV workers.
+        // KV workers: drive the map through the ConcurrentMap facade.
         for w in 0..cfg.workers.max(1) {
             let shared2 = shared.clone();
             let rx = batch_rx.clone();
@@ -170,6 +206,7 @@ impl Coordinator {
                     .name(format!("dhash-worker-{w}"))
                     .spawn(move || {
                         let g = RcuThread::register();
+                        let kv: &dyn ConcurrentMap = &shared2.map;
                         loop {
                             // Block offline so grace periods keep flowing
                             // while we wait for work.
@@ -180,21 +217,21 @@ impl Coordinator {
                             let Some(batch) = batch else { break };
                             for (req, reply, seq) in batch.entries {
                                 let resp = match req {
-                                    Request::Get { key } => match shared2.map.lookup(&g, key) {
+                                    Request::Get { key } => match kv.lookup(&g, key) {
                                         Some(v) => Response::Value(v),
                                         None => Response::Missing,
                                     },
                                     Request::Put { key, val } => {
                                         // Upsert: last-wins.
-                                        if shared2.map.insert(&g, key, val).is_err() {
-                                            shared2.map.delete(&g, key);
-                                            let _ = shared2.map.insert(&g, key, val);
+                                        if !kv.insert(&g, key, val) {
+                                            kv.delete(&g, key);
+                                            let _ = kv.insert(&g, key, val);
                                         }
                                         shared2.sampler.push(key);
                                         Response::Ok
                                     }
                                     Request::Del { key } => {
-                                        if shared2.map.delete(&g, key) {
+                                        if kv.delete(&g, key) {
                                             Response::Ok
                                         } else {
                                             Response::Missing
@@ -210,10 +247,10 @@ impl Coordinator {
             );
         }
 
-        // Analytics thread: detector + mitigation. Engines need not be
-        // Send (the PJRT client is thread-bound), so the engine is
-        // constructed *inside* the thread; load errors are reported back
-        // over a ready channel.
+        // Analytics thread: per-shard detector verdicts + targeted
+        // mitigation. Engines need not be Send (the PJRT client is
+        // thread-bound), so the engine is constructed *inside* the
+        // thread; load errors are reported back over a ready channel.
         if cfg.enable_analytics {
             let shared2 = shared.clone();
             let det = cfg.detector.clone();
@@ -233,6 +270,13 @@ impl Coordinator {
                             }
                         };
                         let g = RcuThread::register();
+                        let nshards = shared2.map.shards();
+                        // Verdict floor per shard: the sample splits
+                        // roughly evenly across shards, so each shard's
+                        // share of min_samples keeps the same statistical
+                        // footing the unsharded detector had.
+                        let mut per_cfg = det.clone();
+                        per_cfg.min_samples = (det.min_samples + nshards - 1) / nshards;
                         let mut detect_err_logged = false;
                         while !shared2.stop.load(Ordering::Relaxed) {
                             g.offline_while(|| std::thread::sleep(det.period));
@@ -240,56 +284,79 @@ impl Coordinator {
                             if keys.is_empty() {
                                 continue;
                             }
-                            let hash = shared2.map.hash_fn(&g);
-                            let nb = shared2.map.nbuckets(&g) as u64;
-                            let (kind, seed) = HashKind::of(hash);
-                            let d = match engine.detect(&keys, seed, nb, kind) {
-                                Ok(d) => d,
-                                Err(e) => {
-                                    // A backend that cannot evaluate (e.g.
-                                    // the pjrt backend without an XLA
-                                    // binding) means detection is dead;
-                                    // say so once instead of silently
-                                    // never mitigating.
-                                    if !detect_err_logged {
-                                        detect_err_logged = true;
-                                        eprintln!(
-                                            "dhash-analytics: detector disabled, \
-                                             engine {:?} cannot evaluate: {e:?}",
-                                            engine.name()
-                                        );
-                                    }
+                            let parts = partition_by_shard(&keys, nshards);
+                            let mut chi2s = vec![0.0f32; nshards];
+                            let mut max_chi2 = 0.0f32;
+                            let mut evaluated = false;
+                            for (s, part) in parts.iter().enumerate() {
+                                if part.is_empty() {
                                     continue;
                                 }
-                            };
-                            shared2.detector_runs.fetch_add(1, Ordering::Relaxed);
-                            shared2
-                                .last_chi2
-                                .store(d.chi2.to_bits() as u64, Ordering::Relaxed);
-                            let verdict = SkewVerdict::classify(
-                                &det,
-                                keys.len(),
-                                d.chi2,
-                                d.max_load,
-                                engine.nbins(),
-                            );
-                            if let SkewVerdict::Attack { chi2, .. } = verdict {
-                                if let Some(new_hash) =
-                                    shared2.controller.plan_mitigation(Instant::now())
-                                {
-                                    let nb = shared2
+                                let hash = shared2.map.shard_hash_fn(&g, s);
+                                let nb = shared2.map.shard_nbuckets(&g, s) as u64;
+                                let (kind, seed) = HashKind::of(hash);
+                                let d = match engine.detect(part, seed, nb, kind) {
+                                    Ok(d) => d,
+                                    Err(e) => {
+                                        // A backend that cannot evaluate
+                                        // (e.g. the pjrt backend without
+                                        // an XLA binding) means detection
+                                        // is dead; say so once instead of
+                                        // silently never mitigating.
+                                        if !detect_err_logged {
+                                            detect_err_logged = true;
+                                            eprintln!(
+                                                "dhash-analytics: detector disabled, \
+                                                 engine {:?} cannot evaluate: {e:?}",
+                                                engine.name()
+                                            );
+                                        }
+                                        continue;
+                                    }
+                                };
+                                evaluated = true;
+                                chi2s[s] = d.chi2;
+                                max_chi2 = max_chi2.max(d.chi2);
+                                let verdict = SkewVerdict::classify(
+                                    &per_cfg,
+                                    part.len(),
+                                    d.chi2,
+                                    d.max_load,
+                                    engine.nbins(),
+                                );
+                                if let SkewVerdict::Attack { chi2, .. } = verdict {
+                                    if let Some(new_hash) = shared2
                                         .controller
-                                        .buckets_for(shared2.map.nbuckets(&g));
-                                    if let Ok(stats) = shared2.map.rebuild(&g, nb, new_hash) {
-                                        shared2.rebuilds.fetch_add(1, Ordering::Relaxed);
-                                        shared2.controller.record(
-                                            chi2,
-                                            new_hash,
-                                            stats.moved,
-                                            stats.elapsed,
-                                        );
+                                        .plan_mitigation_for(s, Instant::now())
+                                    {
+                                        let nb_new = shared2
+                                            .controller
+                                            .buckets_for(shared2.map.shard_nbuckets(&g, s));
+                                        // Targeted mitigation: rebuild
+                                        // ONLY the shard whose chi2
+                                        // tripped; the other shards keep
+                                        // serving untouched.
+                                        if let Ok(stats) =
+                                            shared2.map.rebuild_shard(&g, s, nb_new, new_hash)
+                                        {
+                                            shared2.rebuilds.fetch_add(1, Ordering::Relaxed);
+                                            shared2.controller.record(
+                                                s,
+                                                chi2,
+                                                new_hash,
+                                                stats.moved,
+                                                stats.elapsed,
+                                            );
+                                        }
                                     }
                                 }
+                            }
+                            if evaluated {
+                                shared2.detector_runs.fetch_add(1, Ordering::Relaxed);
+                                shared2
+                                    .last_chi2
+                                    .store(max_chi2.to_bits() as u64, Ordering::Relaxed);
+                                *shared2.shard_chi2.lock().unwrap() = chi2s;
                             }
                             g.quiescent_state();
                         }
@@ -334,10 +401,11 @@ impl Coordinator {
         out
     }
 
-    /// Trigger a rebuild right now (ops tooling / tests).
+    /// Trigger a staggered whole-map rebuild right now (ops tooling /
+    /// tests). `nbuckets` is per shard, matching `CoordinatorConfig`.
     pub fn force_rebuild(&self, nbuckets: usize, hash: HashFn) -> bool {
         let g = RcuThread::register();
-        let ok = self.shared.map.rebuild(&g, nbuckets, hash).is_ok();
+        let ok = self.shared.map.rebuild_all(&g, nbuckets, hash).is_ok();
         if ok {
             self.shared.rebuilds.fetch_add(1, Ordering::Relaxed);
         }
@@ -345,9 +413,9 @@ impl Coordinator {
         ok
     }
 
-    /// The underlying map (shared with the service; use a registered
-    /// guard).
-    pub fn map(&self) -> &DHashMap {
+    /// The underlying sharded map (shared with the service; use a
+    /// registered guard). `shards == 1` in unsharded deployments.
+    pub fn map(&self) -> &ShardedDHash {
         &self.shared.map
     }
 
@@ -362,6 +430,7 @@ impl Coordinator {
             total_batches: self.shared.total_batches.load(Ordering::Relaxed),
             rebuilds: self.shared.rebuilds.load(Ordering::Relaxed),
             last_chi2: f32::from_bits(self.shared.last_chi2.load(Ordering::Relaxed) as u32),
+            last_chi2_per_shard: self.shared.shard_chi2.lock().unwrap().clone(),
             detector_runs: self.shared.detector_runs.load(Ordering::Relaxed),
         }
     }

@@ -23,11 +23,14 @@
 //! NULL`.
 
 mod hashfn;
+pub mod sharded;
 mod table;
 
 pub use hashfn::HashFn;
+pub use sharded::{shard_of, ShardedDHash};
 pub use table::RebuildStats;
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 
 use crate::lflist::{
@@ -392,28 +395,97 @@ impl<B: BucketSet> DHashMap<B> {
         self.table().hash
     }
 
-    /// Live node count — O(n) scan (diagnostics; racy under concurrency).
+    /// All live `(key, value)` pairs, merged across the table *chain*:
+    /// the current table, the hazard-period node, and any in-progress
+    /// rebuild's destination table(s), deduplicated by key with the same
+    /// precedence `lookup` uses (old table → hazard node → new table).
+    ///
+    /// Scanning only the current table undercounts mid-migration: nodes
+    /// already distributed to `ht_new` and the node in its hazard period
+    /// are invisible there. The walk below closes that. Why one
+    /// `rebuild_cur` sample between tables suffices: a node absent from
+    /// the scanned table was unlinked *before* our scan of its bucket,
+    /// and one absent from the next table is not yet re-inserted at the
+    /// time we scan its destination bucket — so its hazard period (set
+    /// before the unlink, cleared after the re-insert) covers every
+    /// instant between the two scans, including the sample point. Since
+    /// at most one node is in its hazard period at a time, no second
+    /// node can slip through the same gap.
+    ///
+    /// The caller must be inside a read-side critical section.
+    fn merged_pairs(&self) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        let mut seen: HashSet<u64> = HashSet::new();
+        // SAFETY: as in `table` — `cur` is never null and every table
+        // reachable from it stays alive for the duration of our read-side
+        // critical section (tables are freed a grace period after being
+        // unpublished).
+        let mut t: &Table<B> = unsafe { &*self.cur.load(Ordering::SeqCst) };
+        loop {
+            for (k, v) in t.buckets().flat_map(|b| b.collect()) {
+                if seen.insert(k) {
+                    out.push((k, v));
+                }
+            }
+            let next = t.ht_new.load(Ordering::SeqCst);
+            if next.is_null() {
+                // `ht_new` is published (SeqCst) before the first node is
+                // distributed out of `t`, so null here means the scan
+                // above saw every node still owned by this table.
+                break;
+            }
+            // A rebuild is (or was) migrating t → next: catch the unique
+            // node in its hazard period, then follow the chain (a second
+            // rebuild may have started while we were scanning).
+            let cur = self.rebuild_cur.load(Ordering::SeqCst);
+            if !cur.is_null() {
+                // SAFETY: as in `lookup` — reclaimed only after
+                // `rebuild_cur` is cleared plus a grace period.
+                let n = unsafe { &*cur };
+                if !n.logically_removed() && seen.insert(n.key) {
+                    out.push((n.key, n.val.load(Ordering::SeqCst)));
+                }
+            }
+            // SAFETY: non-null `ht_new` tables are freed only a grace
+            // period after their predecessor is unpublished; we are in a
+            // read-side section.
+            t = unsafe { &*next };
+        }
+        out
+    }
+
+    /// Live node count — O(n) scan (diagnostics; racy under concurrency,
+    /// but never transiently *undercounts* during a rebuild: the count
+    /// merges the old table, the hazard-period node, and the new table).
     pub fn len(&self, guard: &RcuThread) -> usize {
         let _g = guard.read_lock();
-        self.table().buckets().map(|b| b.len()).sum()
+        self.merged_pairs().len()
     }
 
     pub fn is_empty(&self, guard: &RcuThread) -> bool {
         self.len(guard) == 0
     }
 
-    /// Per-bucket live-node counts of the *current* table (the collision
-    /// diagnostic the coordinator's detector cross-checks).
+    /// Per-bucket live-node counts (the collision diagnostic the
+    /// coordinator's detector cross-checks), projected onto the *current*
+    /// table's geometry. Mid-rebuild, already-migrated nodes and the
+    /// hazard-period node are merged in so the loads never undercount.
     pub fn bucket_loads(&self, guard: &RcuThread) -> Vec<usize> {
         let _g = guard.read_lock();
-        self.table().buckets().map(|b| b.len()).collect()
+        let htp = self.table();
+        let mut loads = vec![0usize; htp.nbuckets];
+        for (k, _) in self.merged_pairs() {
+            loads[htp.hash.bucket(k, htp.nbuckets)] += 1;
+        }
+        loads
     }
 
     /// Sorted snapshot of all live `(key, value)` pairs (test use; racy
-    /// under concurrency).
+    /// under concurrency, but never transiently misses a key that is
+    /// logically present while a rebuild migrates — see `merged_pairs`).
     pub fn snapshot(&self, guard: &RcuThread) -> Vec<(u64, u64)> {
         let _g = guard.read_lock();
-        let mut out: Vec<(u64, u64)> = self.table().buckets().flat_map(|b| b.collect()).collect();
+        let mut out = self.merged_pairs();
         out.sort_unstable();
         out
     }

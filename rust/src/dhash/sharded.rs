@@ -1,0 +1,389 @@
+//! `ShardedDHash` — N independent [`DHashMap`] shards behind one map
+//! facade (the ROADMAP's "sharding" scaling item).
+//!
+//! Why shard: a single `DHashMap` serializes every rebuild behind one
+//! `rebuild_lock` and migrates the whole keyspace per mitigation. With N
+//! shards, each shard is an independent DHash instance that rebuilds on
+//! its own: an attack mitigation migrates 1/N of the keys, and the
+//! whole-map [`ShardedDHash::rebuild_all`] staggers shard migrations one
+//! at a time so the migration working set stays bounded.
+//!
+//! Routing: [`shard_of`] — a *fixed* pre-hash (top bits of
+//! `mix64(key ^ SHARD_SALT)`) that is deliberately independent of the
+//! per-shard [`HashFn`]. A rebuild replaces a shard's hash function but
+//! never re-routes keys across shards, so all of the per-shard Lemma-4.1
+//! reasoning carries over by composition: every key's full history
+//! happens inside one `DHashMap`.
+//!
+//! Staggered-rebuild invariant: **at most one shard is migrating at any
+//! moment.** Every rebuild path (targeted [`ShardedDHash::rebuild_shard`]
+//! and the whole-map sweep) funnels through a single migration token; the
+//! `migrating` gauge is asserted to have been 0 on every acquisition.
+//! Targeted rebuilds *trylock* the token (returning [`RebuildBusy`] like
+//! the paper's `-EBUSY`), while the sweep blocks for it between shards —
+//! offline, so a token holder's grace periods are never stalled.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{DHashMap, HashFn, KeyExists, RebuildBusy, RebuildStats};
+use crate::lflist::{BucketSet, MichaelList};
+use crate::rcu::RcuThread;
+use crate::util::rng::mix64;
+
+/// Salt for the shard-selector pre-hash. A public constant on purpose:
+/// shard routing is *not* a secret (an adversary aiming at one shard is
+/// exactly the scenario targeted mitigation handles); what matters is
+/// that routing never changes when a mitigation installs a fresh seed.
+const SHARD_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The shard for `key` among `nshards` (a power of two) shards: the top
+/// `log2(nshards)` bits of `mix64(key ^ SHARD_SALT)`. Top bits keep the
+/// selector independent of [`HashFn::Seeded`], which consumes the low
+/// bits of the same mixer through its modulo.
+#[inline(always)]
+pub fn shard_of(key: u64, nshards: usize) -> usize {
+    debug_assert!(nshards.is_power_of_two());
+    if nshards <= 1 {
+        return 0;
+    }
+    (mix64(key ^ SHARD_SALT) >> (64 - nshards.trailing_zeros())) as usize
+}
+
+/// N independent `DHashMap` shards routed by the fixed [`shard_of`]
+/// pre-hash, with per-shard and staggered whole-map rebuilds.
+pub struct ShardedDHash<B: BucketSet = MichaelList> {
+    shards: Box<[DHashMap<B>]>,
+    /// Serializes whole-map sweeps (trylock: a second `rebuild_all` gets
+    /// [`RebuildBusy`] instead of queueing behind an O(n) migration).
+    rebuild_all_lock: Mutex<()>,
+    /// Grants the right to migrate ONE shard. Both targeted rebuilds and
+    /// the sweep acquire it per migration, which is what makes the
+    /// staggered invariant map-wide rather than sweep-local.
+    migration_token: Mutex<()>,
+    /// Shards currently migrating — 0 or 1 by the invariant (asserted on
+    /// every migration start; exposed as [`ShardedDHash::migrating_shards`]
+    /// so tests can observe the staggering from outside).
+    migrating: AtomicUsize,
+}
+
+impl ShardedDHash<MichaelList> {
+    /// A sharded map with `nshards` shards of `nbuckets_per_shard` buckets
+    /// each, all hashing with the seeded default family.
+    pub fn with_buckets(nshards: usize, nbuckets_per_shard: usize, seed: u64) -> Self {
+        Self::with_hash(nshards, nbuckets_per_shard, HashFn::Seeded(seed))
+    }
+}
+
+impl<B: BucketSet> ShardedDHash<B> {
+    /// A sharded map with an explicit bucket algorithm and a shared
+    /// initial hash function. `nshards` must be a power of two (the
+    /// selector takes top bits). Mitigations re-seed shards individually
+    /// afterwards, so a shared initial seed costs nothing: shard keysets
+    /// are disjoint.
+    pub fn with_hash(nshards: usize, nbuckets_per_shard: usize, hash: HashFn) -> Self {
+        assert!(
+            nshards.is_power_of_two(),
+            "shard count must be a power of two, got {nshards}"
+        );
+        Self {
+            shards: (0..nshards)
+                .map(|_| DHashMap::with_hash(nbuckets_per_shard, hash))
+                .collect(),
+            rebuild_all_lock: Mutex::new(()),
+            migration_token: Mutex::new(()),
+            migrating: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of shards (fixed at construction).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard `key` routes to.
+    #[inline(always)]
+    pub fn shard_of(&self, key: u64) -> usize {
+        shard_of(key, self.shards.len())
+    }
+
+    /// Read access to one shard (diagnostics / tests). Rebuilding through
+    /// this handle bypasses the staggered-migration token; use
+    /// [`ShardedDHash::rebuild_shard`] instead.
+    pub fn shard(&self, s: usize) -> &DHashMap<B> {
+        &self.shards[s]
+    }
+
+    /// Shards with a migration in flight right now (0 or 1).
+    pub fn migrating_shards(&self) -> usize {
+        self.migrating.load(Ordering::SeqCst)
+    }
+
+    /// Lookup in the key's shard (per-shard Algorithm 4).
+    #[inline]
+    pub fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        self.shards[self.shard_of(key)].lookup(guard, key)
+    }
+
+    /// Insert into the key's shard (per-shard Algorithm 6).
+    #[inline]
+    pub fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> Result<(), KeyExists> {
+        self.shards[self.shard_of(key)].insert(guard, key, val)
+    }
+
+    /// Delete from the key's shard (per-shard Algorithm 5).
+    #[inline]
+    pub fn delete(&self, guard: &RcuThread, key: u64) -> bool {
+        self.shards[self.shard_of(key)].delete(guard, key)
+    }
+
+    /// Migrate one shard. The caller must hold `migration_token`.
+    fn migrate_shard(
+        &self,
+        guard: &RcuThread,
+        s: usize,
+        nbuckets: usize,
+        hash: HashFn,
+    ) -> Result<RebuildStats, RebuildBusy> {
+        let prev = self.migrating.fetch_add(1, Ordering::SeqCst);
+        assert_eq!(
+            prev, 0,
+            "staggered-rebuild invariant violated: a shard is already migrating"
+        );
+        let r = self.shards[s].rebuild(guard, nbuckets, hash);
+        self.migrating.fetch_sub(1, Ordering::SeqCst);
+        r
+    }
+
+    /// Targeted rebuild of shard `s` into `nbuckets` buckets under `hash`,
+    /// the mitigation primitive: 1/N of the keyspace migrates, the other
+    /// shards keep serving untouched. Returns [`RebuildBusy`] if any shard
+    /// (this one or another) is already migrating.
+    ///
+    /// The caller must not be inside a read-side critical section (same
+    /// contract as [`DHashMap::rebuild`]).
+    pub fn rebuild_shard(
+        &self,
+        guard: &RcuThread,
+        s: usize,
+        nbuckets: usize,
+        hash: HashFn,
+    ) -> Result<RebuildStats, RebuildBusy> {
+        let token = match self.migration_token.try_lock() {
+            Ok(t) => t,
+            Err(_) => return Err(RebuildBusy),
+        };
+        let r = self.migrate_shard(guard, s, nbuckets, hash);
+        drop(token);
+        r
+    }
+
+    /// Staggered whole-map rebuild: migrate the shards **one at a time**
+    /// into `nbuckets_per_shard` buckets each under `hash`, releasing the
+    /// migration token between shards so targeted mitigations and the
+    /// paper's concurrent lookup/insert/delete interleave freely. Returns
+    /// merged [`RebuildStats`] (`nbuckets` is the new total), or
+    /// [`RebuildBusy`] if another whole-map sweep is running.
+    ///
+    /// The caller must not be inside a read-side critical section.
+    pub fn rebuild_all(
+        &self,
+        guard: &RcuThread,
+        nbuckets_per_shard: usize,
+        hash: HashFn,
+    ) -> Result<RebuildStats, RebuildBusy> {
+        let t0 = Instant::now();
+        let _all = match self.rebuild_all_lock.try_lock() {
+            Ok(g) => g,
+            Err(_) => return Err(RebuildBusy),
+        };
+        let mut moved = 0u64;
+        let mut skipped = 0u64;
+        let mut dropped_dup = 0u64;
+        for s in 0..self.shards.len() {
+            // Blocking token acquisition, offline: a targeted rebuild may
+            // hold the token and be waiting out grace periods that need
+            // this thread to pass a quiescent state.
+            let token = guard
+                .offline_while(|| self.migration_token.lock().unwrap_or_else(|e| e.into_inner()));
+            let st = self.migrate_shard(guard, s, nbuckets_per_shard, hash)?;
+            drop(token);
+            moved += st.moved;
+            skipped += st.skipped;
+            dropped_dup += st.dropped_dup;
+        }
+        Ok(RebuildStats {
+            moved,
+            skipped,
+            dropped_dup,
+            nbuckets: nbuckets_per_shard * self.shards.len(),
+            elapsed: t0.elapsed(),
+        })
+    }
+
+    /// Completed rebuilds, summed over shards.
+    pub fn rebuild_count(&self) -> u64 {
+        self.shards.iter().map(|s| s.rebuild_count()).sum()
+    }
+
+    /// Total bucket count, summed over shards.
+    pub fn nbuckets(&self, guard: &RcuThread) -> usize {
+        self.shards.iter().map(|s| s.nbuckets(guard)).sum()
+    }
+
+    /// Current bucket count of shard `s`.
+    pub fn shard_nbuckets(&self, guard: &RcuThread, s: usize) -> usize {
+        self.shards[s].nbuckets(guard)
+    }
+
+    /// Current hash function of shard `s` (shards diverge after targeted
+    /// mitigations).
+    pub fn shard_hash_fn(&self, guard: &RcuThread, s: usize) -> HashFn {
+        self.shards[s].hash_fn(guard)
+    }
+
+    /// Live node count across all shards — O(n) scan (diagnostics; racy
+    /// under concurrency, but never undercounts during a migration — see
+    /// [`DHashMap::len`]).
+    pub fn len(&self, guard: &RcuThread) -> usize {
+        self.shards.iter().map(|s| s.len(guard)).sum()
+    }
+
+    pub fn is_empty(&self, guard: &RcuThread) -> bool {
+        self.len(guard) == 0
+    }
+
+    /// Per-bucket live-node counts, shard 0's buckets first (the detector
+    /// cross-check; each shard contributes `shard_nbuckets` entries).
+    pub fn bucket_loads(&self, guard: &RcuThread) -> Vec<usize> {
+        self.shards
+            .iter()
+            .flat_map(|s| s.bucket_loads(guard))
+            .collect()
+    }
+
+    /// Sorted snapshot of all live `(key, value)` pairs across shards
+    /// (test use; racy under concurrency).
+    pub fn snapshot(&self, guard: &RcuThread) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.snapshot(guard))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rcu::rcu_barrier;
+
+    #[test]
+    fn shard_of_is_in_range_and_stable() {
+        for nshards in [1usize, 2, 4, 16, 64] {
+            for k in [0u64, 1, 63, 1 << 40, u64::MAX - 1] {
+                let s = shard_of(k, nshards);
+                assert!(s < nshards, "shard {s} out of range for {nshards}");
+                assert_eq!(s, shard_of(k, nshards), "selector must be pure");
+            }
+        }
+        // One shard: everything routes to shard 0 (no 64-bit shift UB).
+        assert_eq!(shard_of(u64::MAX, 1), 0);
+    }
+
+    #[test]
+    fn shard_of_spreads_keys() {
+        let nshards = 8;
+        let mut loads = vec![0usize; nshards];
+        for k in 0..8000u64 {
+            loads[shard_of(k, nshards)] += 1;
+        }
+        let max = *loads.iter().max().unwrap();
+        let min = *loads.iter().min().unwrap();
+        assert!(min > 500 && max < 2000, "skewed selector: {loads:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_pow2_shards_rejected() {
+        let _ = ShardedDHash::with_buckets(3, 8, 1);
+    }
+
+    #[test]
+    fn basic_ops_route_consistently() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(4, 16, 7);
+        for k in 0..400u64 {
+            m.insert(&g, k, k + 1).unwrap();
+        }
+        assert_eq!(m.len(&g), 400);
+        assert_eq!(m.nbuckets(&g), 64);
+        for k in 0..400u64 {
+            assert_eq!(m.lookup(&g, k), Some(k + 1));
+        }
+        assert_eq!(m.insert(&g, 5, 0), Err(KeyExists));
+        assert!(m.delete(&g, 5));
+        assert!(!m.delete(&g, 5));
+        assert_eq!(m.len(&g), 399);
+        // The shard populations sum to the total and match the selector.
+        let per: Vec<usize> = (0..4).map(|s| m.shard(s).len(&g)).collect();
+        assert_eq!(per.iter().sum::<usize>(), 399);
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn targeted_rebuild_touches_only_its_shard() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(4, 16, 1);
+        for k in 0..800u64 {
+            m.insert(&g, k, k).unwrap();
+        }
+        let victim = 2;
+        let before: Vec<HashFn> = (0..4).map(|s| m.shard_hash_fn(&g, s)).collect();
+        let stats = m
+            .rebuild_shard(&g, victim, 64, HashFn::Seeded(0xfeed))
+            .unwrap();
+        assert_eq!(stats.moved as usize, m.shard(victim).len(&g));
+        for s in 0..4 {
+            if s == victim {
+                assert_eq!(m.shard_hash_fn(&g, s), HashFn::Seeded(0xfeed));
+                assert_eq!(m.shard_nbuckets(&g, s), 64);
+            } else {
+                assert_eq!(m.shard_hash_fn(&g, s), before[s], "shard {s} was touched");
+                assert_eq!(m.shard_nbuckets(&g, s), 16);
+            }
+        }
+        // Routing is independent of the per-shard hash: nothing moved
+        // across shards, every key still resolves.
+        for k in 0..800u64 {
+            assert_eq!(m.lookup(&g, k), Some(k), "key {k} lost");
+        }
+        assert_eq!(m.rebuild_count(), 1);
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn rebuild_all_merges_stats_and_preserves_contents() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(8, 8, 3);
+        let n = 1000u64;
+        for k in 0..n {
+            m.insert(&g, k * 3, k).unwrap();
+        }
+        let before = m.snapshot(&g);
+        let stats = m.rebuild_all(&g, 32, HashFn::Seeded(99)).unwrap();
+        assert_eq!(stats.moved, n);
+        assert_eq!(stats.dropped_dup, 0);
+        assert_eq!(stats.nbuckets, 8 * 32);
+        assert_eq!(m.nbuckets(&g), 8 * 32);
+        assert_eq!(m.snapshot(&g), before);
+        assert_eq!(m.rebuild_count(), 8);
+        g.quiescent_state();
+        rcu_barrier();
+    }
+}

@@ -280,6 +280,68 @@ fn concurrent_rebuild_is_busy<B: BucketSet>() {
     rcu_barrier();
 }
 
+fn snapshot_never_undercounts_during_rebuild<B: BucketSet>() {
+    // Regression: len/snapshot/bucket_loads used to scan only the current
+    // table, so during a rebuild they missed nodes already migrated to
+    // ht_new and the hazard-period node. With a stable population (no
+    // user deletes), the diagnostics must report *exactly* the logical
+    // contents at every instant of a concurrent rebuild storm.
+    let m: Arc<DHashMap<B>> = Arc::new(DHashMap::with_hash(32, HashFn::Seeded(1)));
+    let n = 600u64;
+    {
+        let g = RcuThread::register();
+        for k in 0..n {
+            m.insert(&g, k, k).unwrap();
+        }
+        g.quiescent_state();
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let m2 = m.clone();
+    let s2 = stop.clone();
+    let rebuilder = std::thread::spawn(move || {
+        let g = RcuThread::register();
+        let mut i = 0u64;
+        while !s2.load(Ordering::Relaxed) {
+            let nb = if i % 2 == 0 { 128 } else { 16 };
+            m2.rebuild(&g, nb, HashFn::Seeded(i)).unwrap();
+            i += 1;
+            g.quiescent_state();
+        }
+        g.offline();
+        i
+    });
+    let g = RcuThread::register();
+    // Keep probing until the storm has completed several rebuilds, so the
+    // probes provably raced active migrations (bounded so a wedged
+    // rebuilder fails loudly instead of spinning forever).
+    let mut round = 0u32;
+    while m.rebuild_count() < 3 {
+        assert!(round < 200_000, "rebuilder made no progress");
+        let len = m.len(&g);
+        assert_eq!(len, n as usize, "len miscount (round {round})");
+        let snap = m.snapshot(&g);
+        assert_eq!(snap.len(), n as usize, "snapshot miscount (round {round})");
+        for (i, &(k, v)) in snap.iter().enumerate() {
+            assert_eq!((k, v), (i as u64, i as u64), "snapshot content (round {round})");
+        }
+        let loads = m.bucket_loads(&g);
+        assert_eq!(
+            loads.iter().sum::<usize>(),
+            n as usize,
+            "bucket_loads miscount (round {round})"
+        );
+        round += 1;
+        g.quiescent_state();
+    }
+    stop.store(true, Ordering::Relaxed);
+    // Join OFFLINE: the rebuilder's in-flight rebuild runs
+    // synchronize_rcu, which would wait forever on this thread's
+    // online-but-blocked record.
+    let rebuilds = g.offline_while(|| rebuilder.join()).unwrap();
+    assert!(rebuilds >= 3, "rebuilder never ran");
+    rcu_barrier();
+}
+
 fn no_leaks_across_rebuilds<B: BucketSet>() {
     use crate::lflist::mem_stats;
     // Settle outstanding callbacks from other tests first.
@@ -344,6 +406,10 @@ macro_rules! dhash_suite {
             #[test]
             fn concurrent_rebuild_is_busy() {
                 super::concurrent_rebuild_is_busy::<$ty>();
+            }
+            #[test]
+            fn snapshot_never_undercounts_during_rebuild() {
+                super::snapshot_never_undercounts_during_rebuild::<$ty>();
             }
             #[test]
             fn no_leaks_across_rebuilds() {

@@ -69,9 +69,15 @@ pub mod mem_stats {
     }
 
     /// Nodes currently live (allocated - freed).
+    ///
+    /// The two counters are read with independent Relaxed loads, so a
+    /// racing thread can bump both between our loads and make FREES
+    /// appear ahead of ALLOCS (every free is preceded by an alloc, but
+    /// not in *our* observation order). Saturate instead of wrapping to
+    /// ~`u64::MAX`, which leak checks would misread as a huge leak.
     pub fn live() -> u64 {
         let (a, f) = counts();
-        a - f
+        a.saturating_sub(f)
     }
 }
 

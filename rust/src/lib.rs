@@ -42,10 +42,12 @@ pub mod baselines;
 pub mod coordinator;
 pub mod dhash;
 pub mod lflist;
+pub mod map;
 pub mod rcu;
 pub mod runtime;
 pub mod torture;
 pub mod util;
 
-pub use crate::dhash::DHashMap;
+pub use crate::dhash::{DHashMap, ShardedDHash};
+pub use crate::map::ConcurrentMap;
 pub use crate::rcu::RcuThread;

@@ -5,8 +5,8 @@
 //! dhash torture  [--table dhash|xu|rht|split] [--threads N] [--lookup-pct P]
 //!                [--alpha A] [--buckets B] [--keys U] [--secs S]
 //!                [--no-rebuild] [--repeats R]
-//! dhash serve    [--buckets B] [--workers W] [--secs S] [--attack-at T]
-//!                [--weak-hash] [--no-analytics]
+//! dhash serve    [--buckets B] [--shards N] [--workers W] [--secs S]
+//!                [--attack-at T] [--weak-hash] [--no-analytics]
 //! dhash rebuild  [--table dhash|xu|rht|split] [--nodes N] [--buckets B]
 //! ```
 
@@ -90,6 +90,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         } else {
             HashFn::Seeded(0xd1e5)
         },
+        shards: args.get_or("shards", 1usize)?,
         workers: args.get_or("workers", 2usize)?,
         enable_analytics: !args.get_bool("no-analytics"),
         ..Default::default()
@@ -177,7 +178,7 @@ fn cmd_rebuild(args: &Args) -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     const KNOWN: &[&str] = &[
         "table", "threads", "lookup-pct", "alpha", "buckets", "alt-buckets", "keys", "secs",
-        "no-rebuild", "no-pin", "repeats", "seed", "hash-seed", "workers", "attack-at",
+        "no-rebuild", "no-pin", "repeats", "seed", "hash-seed", "workers", "shards", "attack-at",
         "weak-hash", "no-analytics", "nodes",
     ];
     let args = Args::from_env(KNOWN)?;

@@ -1,0 +1,132 @@
+//! The [`ConcurrentMap`] facade: the object-safe trait every layer of the
+//! repo programs against — torture, benches, the coordinator's KV workers,
+//! and the CLI all drive tables through it, so a deployment can swap the
+//! paper's single [`DHashMap`] for the sharded [`ShardedDHash`] (or one of
+//! the §6 baselines) without touching a call site.
+//!
+//! The trait used to live in [`crate::baselines`] (which still re-exports
+//! it); it moved here when it grew the diagnostic surface
+//! (`bucket_loads` / `snapshot`) that the sharded refactor threads through
+//! the stack.
+
+use crate::dhash::{DHashMap, HashFn, ShardedDHash};
+use crate::lflist::BucketSet;
+use crate::rcu::RcuThread;
+
+/// Object-safe facade over the evaluated hash tables.
+pub trait ConcurrentMap: Send + Sync + 'static {
+    /// Display name used in bench output (`HT-DHash`, `HT-Xu`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Value for `key`, if present.
+    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64>;
+
+    /// Insert; false if the key already exists.
+    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool;
+
+    /// Delete; false if absent.
+    fn delete(&self, guard: &RcuThread, key: u64) -> bool;
+
+    /// Dynamically change the table geometry / hash function.
+    ///
+    /// For the dynamic tables this installs `hash`; for the resizable
+    /// `HtSplit`, `hash` is ignored (the paper's §6.2 protocol degrades
+    /// everyone to resizing for comparability anyway) and only the power-
+    /// of-two bucket count applies. `nbuckets` is the *total* budget: the
+    /// sharded map divides it across shards and rebuilds them one at a
+    /// time (staggered). Returns false if another rebuild is in flight.
+    fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool;
+
+    /// Live entries (O(n), diagnostic).
+    fn len(&self, guard: &RcuThread) -> usize;
+
+    /// True when no live entries exist (O(n), diagnostic).
+    fn is_empty(&self, guard: &RcuThread) -> bool {
+        self.len(guard) == 0
+    }
+
+    /// Per-bucket live-node counts under the current geometry, for tables
+    /// that expose their bucket structure (`None` otherwise — the
+    /// baselines keep their chains private). The DHash implementations
+    /// merge the mid-rebuild sources (old table, hazard node, new table)
+    /// so the counts never undercount during a migration.
+    fn bucket_loads(&self, _guard: &RcuThread) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Sorted snapshot of all live `(key, value)` pairs, for tables that
+    /// support enumeration (`None` otherwise).
+    fn snapshot(&self, _guard: &RcuThread) -> Option<Vec<(u64, u64)>> {
+        None
+    }
+}
+
+impl<B: BucketSet> ConcurrentMap for DHashMap<B> {
+    fn name(&self) -> &'static str {
+        "HT-DHash"
+    }
+
+    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        DHashMap::lookup(self, guard, key)
+    }
+
+    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        DHashMap::insert(self, guard, key, val).is_ok()
+    }
+
+    fn delete(&self, guard: &RcuThread, key: u64) -> bool {
+        DHashMap::delete(self, guard, key)
+    }
+
+    fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
+        DHashMap::rebuild(self, guard, nbuckets, hash).is_ok()
+    }
+
+    fn len(&self, guard: &RcuThread) -> usize {
+        DHashMap::len(self, guard)
+    }
+
+    fn bucket_loads(&self, guard: &RcuThread) -> Option<Vec<usize>> {
+        Some(DHashMap::bucket_loads(self, guard))
+    }
+
+    fn snapshot(&self, guard: &RcuThread) -> Option<Vec<(u64, u64)>> {
+        Some(DHashMap::snapshot(self, guard))
+    }
+}
+
+impl<B: BucketSet> ConcurrentMap for ShardedDHash<B> {
+    fn name(&self) -> &'static str {
+        "HT-DHash-Sharded"
+    }
+
+    fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        ShardedDHash::lookup(self, guard, key)
+    }
+
+    fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        ShardedDHash::insert(self, guard, key, val).is_ok()
+    }
+
+    fn delete(&self, guard: &RcuThread, key: u64) -> bool {
+        ShardedDHash::delete(self, guard, key)
+    }
+
+    fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
+        // `nbuckets` is the total budget; split it across shards.
+        let per_shard = (nbuckets / self.shards()).max(1);
+        self.rebuild_all(guard, per_shard, hash).is_ok()
+    }
+
+    fn len(&self, guard: &RcuThread) -> usize {
+        ShardedDHash::len(self, guard)
+    }
+
+    fn bucket_loads(&self, guard: &RcuThread) -> Option<Vec<usize>> {
+        Some(ShardedDHash::bucket_loads(self, guard))
+    }
+
+    fn snapshot(&self, guard: &RcuThread) -> Option<Vec<(u64, u64)>> {
+        Some(ShardedDHash::snapshot(self, guard))
+    }
+}

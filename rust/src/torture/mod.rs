@@ -15,7 +15,7 @@
 pub mod workload;
 pub mod zipf;
 
-pub use workload::{AttackGen, OpMix};
+pub use workload::{AttackGen, OpMix, ShardedAttackGen};
 pub use zipf::Zipf;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -331,6 +331,21 @@ mod tests {
         assert!(rep.rebuilds > 0, "no rebuilds completed");
         assert!(rep.mops() > 0.0);
         assert_eq!(rep.per_thread_ops.len(), 2);
+        rcu_barrier();
+    }
+
+    #[test]
+    fn run_produces_ops_and_rebuilds_sharded() {
+        // Same bucket budget as tiny_cfg, split over 4 shards; the trait
+        // rebuild path exercises the staggered rebuild_all under load.
+        let cfg = tiny_cfg();
+        let map: Arc<dyn ConcurrentMap> =
+            Arc::new(crate::dhash::ShardedDHash::with_buckets(4, cfg.nbuckets / 4, 3));
+        prefill(&*map, &cfg);
+        let rep = run(map, &cfg);
+        assert_eq!(rep.table, "HT-DHash-Sharded");
+        assert!(rep.total_ops > 1000, "ops {}", rep.total_ops);
+        assert!(rep.rebuilds > 0, "no staggered rebuilds completed");
         rcu_barrier();
     }
 

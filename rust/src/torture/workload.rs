@@ -72,6 +72,43 @@ impl Iterator for AttackGen {
     }
 }
 
+/// [`AttackGen`] restricted to keys that route to one shard of a
+/// [`crate::dhash::ShardedDHash`]: every yielded key collides under
+/// `key % nbuckets` *and* lands in the victim shard, leaving every other
+/// shard's sample clean — the targeted-mitigation experiments.
+#[derive(Clone, Debug)]
+pub struct ShardedAttackGen {
+    inner: AttackGen,
+    nshards: usize,
+    shard: usize,
+}
+
+impl ShardedAttackGen {
+    /// Attack keys ≡ `residue` (mod `nbuckets`) routed to `shard` of
+    /// `nshards` (a power of two, as the shard selector requires).
+    pub fn new(nbuckets: usize, residue: u64, nshards: usize, shard: usize) -> Self {
+        assert!(nshards.is_power_of_two(), "nshards must be a power of two");
+        assert!(shard < nshards);
+        Self {
+            inner: AttackGen::new(nbuckets, residue),
+            nshards,
+            shard,
+        }
+    }
+}
+
+impl Iterator for ShardedAttackGen {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        // The inner generator is infinite and the mix64 selector spreads
+        // its keys ~uniformly, so ~1/nshards of candidates match.
+        self.inner
+            .by_ref()
+            .find(|&k| crate::dhash::shard_of(k, self.nshards) == self.shard)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,6 +139,20 @@ mod tests {
         assert!((0..1000).all(|_| all_lookup.pick(&mut rng) == Op::Lookup));
         let no_lookup = OpMix::lookup_pct(0);
         assert!((0..1000).all(|_| no_lookup.pick(&mut rng) != Op::Lookup));
+    }
+
+    #[test]
+    fn sharded_attack_keys_collide_and_stay_in_shard() {
+        let n = 1024;
+        let (nshards, victim) = (4usize, 2usize);
+        let keys: Vec<u64> = ShardedAttackGen::new(n, 3, nshards, victim).take(200).collect();
+        assert_eq!(keys.len(), 200);
+        assert!(keys.iter().all(|k| k % n as u64 == 3));
+        assert!(keys
+            .iter()
+            .all(|&k| crate::dhash::shard_of(k, nshards) == victim));
+        let set: std::collections::HashSet<_> = keys.iter().collect();
+        assert_eq!(set.len(), 200);
     }
 
     #[test]

@@ -10,12 +10,13 @@ use dhash::coordinator::{
     Response,
 };
 use dhash::dhash::HashFn;
-use dhash::torture::AttackGen;
+use dhash::torture::{AttackGen, ShardedAttackGen};
 
 fn attack_config(nbuckets: usize) -> CoordinatorConfig {
     CoordinatorConfig {
         nbuckets,
         hash: HashFn::Modulo, // vulnerable on purpose
+        shards: 1,
         workers: 2,
         batcher: BatcherConfig {
             max_batch: 64,
@@ -78,6 +79,79 @@ fn detects_and_mitigates_collision_attack() {
     // The service still works and holds the data.
     assert_eq!(c.execute(Request::get(3)), Response::Value(0)); // attack key
     assert_eq!(c.execute(Request::get(7919)), Response::Value(1)); // benign key
+    c.shutdown();
+}
+
+#[test]
+fn targeted_mitigation_rebuilds_only_attacked_shard() {
+    // Sharded service under a collision flood aimed at ONE shard: the
+    // per-shard chi2 verdict must trip only there, and the mitigation
+    // must re-seed only that shard — the others keep their (weak) hash
+    // and never migrate.
+    let shards = 4usize;
+    let nbuckets = 1024usize; // per shard; >= detector nbins (256)
+    let mut cfg = attack_config(nbuckets);
+    cfg.shards = shards;
+    let c = Arc::new(Coordinator::start(cfg).unwrap());
+    let victim = 2usize;
+
+    // Scoped registration: the guard must be dropped before the waiting
+    // phase below, or this thread's stale quiescent state would stall the
+    // mitigation rebuild's grace periods forever.
+    let before: Vec<HashFn> = {
+        let g = dhash::rcu::RcuThread::register();
+        let v = (0..shards).map(|s| c.map().shard_hash_fn(&g, s)).collect();
+        g.quiescent_state();
+        v
+    };
+    assert!(before.iter().all(|h| *h == HashFn::Modulo));
+
+    // Flood: colliding keys that all route to the victim shard.
+    let attack: Vec<Request> = ShardedAttackGen::new(nbuckets, 3, shards, victim)
+        .take(6000)
+        .map(|k| Request::put(k, k))
+        .collect();
+    let first_key = attack[0].key();
+    for chunk in attack.chunks(512) {
+        c.execute_many(chunk.to_vec());
+    }
+    let mut waited = 0;
+    while c.stats().rebuilds == 0 && waited < 3_000 {
+        std::thread::sleep(Duration::from_millis(50));
+        waited += 50;
+    }
+    let st = c.stats();
+    assert!(
+        st.rebuilds >= 1,
+        "attack on shard {victim} was never mitigated (chi2={})",
+        st.last_chi2
+    );
+    let events = c.rebuild_events();
+    assert!(!events.is_empty());
+    assert!(
+        events.iter().all(|e| e.shard == victim),
+        "mitigation touched a non-attacked shard: {events:?}"
+    );
+
+    // Only the victim shard's hash function changed.
+    {
+        let g = dhash::rcu::RcuThread::register();
+        for s in 0..shards {
+            let now = c.map().shard_hash_fn(&g, s);
+            if s == victim {
+                assert!(
+                    matches!(now, HashFn::Seeded(_)),
+                    "victim shard still on {now:?}"
+                );
+            } else {
+                assert_eq!(now, before[s], "shard {s} was rebuilt needlessly");
+            }
+        }
+        g.quiescent_state();
+    }
+
+    // The service still works and holds the flooded data.
+    assert_eq!(c.execute(Request::get(first_key)), Response::Value(first_key));
     c.shutdown();
 }
 

@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
-use dhash::dhash::{DHashMap, HashFn};
+use dhash::dhash::{DHashMap, HashFn, ShardedDHash};
 use dhash::lflist::{CowSortedArray, MichaelList, SpinlockList};
 use dhash::rcu::{rcu_barrier, RcuThread};
 use dhash::util::prop::{check, shrink_ops, Gen};
@@ -105,6 +105,7 @@ fn fresh(table: &str) -> Arc<dyn ConcurrentMap> {
         "dhash-michael" => Arc::new(DHashMap::<MichaelList>::with_hash(16, HashFn::Seeded(1))),
         "dhash-spinlock" => Arc::new(DHashMap::<SpinlockList>::with_hash(16, HashFn::Seeded(1))),
         "dhash-cow" => Arc::new(DHashMap::<CowSortedArray>::with_hash(16, HashFn::Seeded(1))),
+        "sharded" => Arc::new(ShardedDHash::with_buckets(4, 4, 1)),
         "xu" => Arc::new(HtXu::new(16, HashFn::Seeded(1))),
         "rht" => Arc::new(HtRht::new(16, HashFn::Seeded(1))),
         "split" => Arc::new(HtSplit::new(16, 1 << 20)),
@@ -145,6 +146,11 @@ fn model_dhash_spinlock() {
 #[test]
 fn model_dhash_cow() {
     model_check("dhash-cow", 20);
+}
+
+#[test]
+fn model_sharded() {
+    model_check("sharded", 20);
 }
 
 #[test]

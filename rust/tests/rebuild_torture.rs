@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
-use dhash::dhash::{DHashMap, HashFn};
+use dhash::dhash::{DHashMap, HashFn, RebuildBusy, ShardedDHash};
 use dhash::rcu::{rcu_barrier, RcuThread};
 use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
 
@@ -28,6 +28,9 @@ fn cfg(threads: usize, lookup: u8, alpha: usize) -> TortureConfig {
 fn tables(nbuckets: usize, seed: u64) -> Vec<Arc<dyn ConcurrentMap>> {
     vec![
         Arc::new(DHashMap::with_buckets(nbuckets, seed)),
+        // Same total bucket budget, split over 4 shards: the torture
+        // rebuilder drives the staggered rebuild_all through the trait.
+        Arc::new(ShardedDHash::with_buckets(4, nbuckets / 4, seed)),
         Arc::new(HtXu::new(nbuckets, HashFn::Seeded(seed))),
         Arc::new(HtRht::new(nbuckets, HashFn::Seeded(seed))),
         Arc::new(HtSplit::new(nbuckets, 1 << 20)),
@@ -76,6 +79,60 @@ fn dhash_high_load_factor_torture() {
     let rep = torture::run(map.clone(), &c);
     assert!(rep.total_ops > 1_000);
     assert!(rep.rebuilds > 0, "no rebuild completed at alpha=200");
+    rcu_barrier();
+}
+
+#[test]
+fn staggered_rebuild_migrates_one_shard_at_a_time() {
+    // The staggered-rebuild invariant, observed from outside while a
+    // whole-map sweep races targeted rebuilds: the `migrating` gauge
+    // never exceeds 1 (the assert *inside* ShardedDHash::migrate_shard is
+    // the hard proof — tripping it aborts this test), and targeted
+    // rebuilds attempted mid-migration report RebuildBusy instead of
+    // overlapping.
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let map = Arc::new(ShardedDHash::with_buckets(8, 64, 5));
+    {
+        let g = RcuThread::register();
+        for k in 0..4_000u64 {
+            map.insert(&g, k, k).unwrap();
+        }
+        g.quiescent_state();
+    }
+    let done = Arc::new(AtomicBool::new(false));
+    let m2 = map.clone();
+    let d2 = done.clone();
+    let sweeper = std::thread::spawn(move || {
+        let g = RcuThread::register();
+        for i in 0..4u64 {
+            m2.rebuild_all(&g, 64, HashFn::Seeded(100 + i)).unwrap();
+            g.quiescent_state();
+        }
+        d2.store(true, Ordering::Relaxed);
+        g.offline();
+    });
+    let g = RcuThread::register();
+    let (mut targeted_ok, mut busy) = (0u64, 0u64);
+    while !done.load(Ordering::Relaxed) {
+        assert!(map.migrating_shards() <= 1, "two shards migrating at once");
+        match map.rebuild_shard(&g, 3, 64, HashFn::Seeded(7)) {
+            Ok(_) => targeted_ok += 1,
+            Err(RebuildBusy) => busy += 1,
+        }
+        // Back off OFFLINE between attempts: a tight try_lock loop could
+        // barge the token away from the blocked sweeper indefinitely, and
+        // sleeping online would stall its grace periods.
+        g.offline_while(|| std::thread::sleep(Duration::from_millis(1)));
+        g.quiescent_state();
+    }
+    // Join OFFLINE so a straggling grace period can never wait on this
+    // thread's online-but-blocked record.
+    g.offline_while(|| sweeper.join()).unwrap();
+    assert!(targeted_ok + busy > 0, "main thread never contended");
+    // Everything survived 4 sweeps + the targeted churn.
+    assert_eq!(map.len(&g), 4_000);
+    g.quiescent_state();
     rcu_barrier();
 }
 

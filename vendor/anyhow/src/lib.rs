@@ -176,6 +176,17 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an [`Error`] if a condition is not satisfied
+/// (crates.io-compatible subset: the message arguments are required).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +203,16 @@ mod tests {
         }
         let e = inner().unwrap_err();
         assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn ensure_returns_formatted_error() {
+        fn inner(x: u32) -> Result<u32> {
+            crate::ensure!(x % 2 == 0, "odd input {x}");
+            Ok(x / 2)
+        }
+        assert_eq!(inner(4).unwrap(), 2);
+        assert_eq!(inner(3).unwrap_err().to_string(), "odd input 3");
     }
 
     #[test]
