@@ -171,11 +171,14 @@ fn bench_distrib() {
 }
 
 fn bench_batchhash() {
-    println!("# ablation batchhash: coordinator throughput with/without batch pre-hashing");
-    for pre_hash in [false, true] {
+    println!(
+        "# ablation batchhash: coordinator throughput, batch pre-hashing x ingest lanes"
+    );
+    for (lanes, pre_hash) in [(1, false), (1, true), (4, false), (4, true)] {
         let cfg = CoordinatorConfig {
             nbuckets: 4096,
             hash: HashFn::Seeded(9),
+            lanes,
             workers: 2,
             batcher: BatcherConfig {
                 max_batch: 64,
@@ -224,7 +227,7 @@ fn bench_batchhash() {
         }
         let reqs = done.load(Ordering::Relaxed);
         println!(
-            "batchhash pre_hash={pre_hash:<5} req_per_s={:.0}",
+            "batchhash pre_hash={pre_hash:<5} lanes={lanes} req_per_s={:.0}",
             reqs as f64 / window.as_secs_f64()
         );
         c.shutdown();

@@ -55,6 +55,9 @@ fn rebuild_time(table: &str, nodes: u64, lookup_pct: u8) -> f64 {
                     dhash::torture::workload::Op::Delete => {
                         std::hint::black_box(map.delete(&g, k));
                     }
+                    dhash::torture::workload::Op::Upsert => {
+                        std::hint::black_box(map.upsert(&g, k, k));
+                    }
                 }
                 g.quiescent_state();
             }

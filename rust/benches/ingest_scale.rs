@@ -1,0 +1,125 @@
+//! §Ingest scalability: coordinator throughput through the
+//! completion-based `KvClient` API, swept over ingest lanes
+//! {1, 4, workers} × client threads. Each client pipelines batch
+//! tickets (submission depth > 1), so the sweep measures exactly what
+//! the multi-lane redesign buys: with one lane the single batcher
+//! serializes ahead of the shards (PR 2's `shard_scale` finding); with
+//! N lanes the batchers drain in parallel.
+//!
+//! Under `DHASH_SMOKE=1` the rows are also written to
+//! `BENCH_ingest.json` (see `common::BenchJson`), picked up by the CI
+//! `bench-smoke-json` artifact glob.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dhash::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use dhash::dhash::HashFn;
+use dhash::util::SplitMix64;
+
+/// KV worker threads (also the top of the lane sweep, per the lanes ∈
+/// {1, 4, workers} protocol).
+const WORKERS: usize = 2;
+/// Tickets in flight per client before the oldest is resolved.
+const PIPELINE_DEPTH: usize = 4;
+const BATCH: usize = 64;
+
+fn main() {
+    common::print_host_table1();
+    let mut json = common::BenchJson::new("ingest");
+
+    let mut lane_sweep = vec![1usize, 4, WORKERS];
+    lane_sweep.sort_unstable();
+    lane_sweep.dedup();
+
+    for &lanes in &lane_sweep {
+        for &clients in &common::thread_sweep() {
+            let cfg = CoordinatorConfig {
+                nbuckets: 1024,
+                hash: HashFn::Seeded(0x5eed),
+                shards: 4,
+                lanes,
+                workers: WORKERS,
+                batcher: BatcherConfig {
+                    max_batch: BATCH,
+                    max_wait: Duration::from_micros(200),
+                    pre_hash: false,
+                },
+                enable_analytics: false, // pure ingest-path measurement
+                ..Default::default()
+            };
+            let c = Arc::new(Coordinator::start(cfg).expect("coordinator starts"));
+
+            let stop = Arc::new(AtomicBool::new(false));
+            let done = Arc::new(AtomicU64::new(0));
+            let mut hs = Vec::new();
+            for t in 0..clients {
+                let c2 = c.clone();
+                let stop = stop.clone();
+                let done = done.clone();
+                hs.push(std::thread::spawn(move || {
+                    let kv = c2.client();
+                    let mut rng = SplitMix64::new(t as u64 + 1);
+                    let mut inflight = std::collections::VecDeque::new();
+                    while !stop.load(Ordering::Relaxed) {
+                        let reqs: Vec<Request> = (0..BATCH)
+                            .map(|_| {
+                                let k = rng.next_bounded(1_000_000);
+                                if rng.next_f64() < 0.9 {
+                                    Request::get(k)
+                                } else {
+                                    Request::put(k, k)
+                                }
+                            })
+                            .collect();
+                        let Ok(ticket) = kv.submit_batch(&reqs) else {
+                            break;
+                        };
+                        inflight.push_back(ticket);
+                        if inflight.len() >= PIPELINE_DEPTH {
+                            let oldest = inflight.pop_front().unwrap();
+                            if oldest.wait().is_ok() {
+                                done.fetch_add(BATCH as u64, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    // Drain the tail of the pipeline.
+                    for ticket in inflight {
+                        if ticket.wait().is_ok() {
+                            done.fetch_add(BATCH as u64, Ordering::Relaxed);
+                        }
+                    }
+                }));
+            }
+
+            let window = common::measure_window();
+            std::thread::sleep(window);
+            stop.store(true, Ordering::Relaxed);
+            // Snapshot before joining: the post-stop pipeline drain
+            // completes work outside the window and must not count
+            // toward the window's rate.
+            let reqs = done.load(Ordering::Relaxed);
+            for h in hs {
+                h.join().unwrap();
+            }
+            let rate = reqs as f64 / window.as_secs_f64();
+            println!(
+                "ingest_scale lanes={lanes:<3} clients={clients:<3} depth={PIPELINE_DEPTH} \
+                 req_per_s={rate:.0}"
+            );
+            json.row(
+                "throughput",
+                &[
+                    ("lanes", lanes as f64),
+                    ("clients", clients as f64),
+                    ("req_per_s", rate),
+                ],
+            );
+            c.shutdown();
+        }
+    }
+    json.flush();
+}

@@ -84,6 +84,18 @@ fn main() {
     println!("perf insert_delete ns_per_op={ns:.1} mops={:.2}", 1e3 / ns);
     json.row("insert_delete", &[("ns_per_op", ns), ("mops", 1e3 / ns)]);
 
+    // Atomic overwrite (the coordinator's Put path): an in-place value
+    // swap on the live node, cheaper than the delete+insert it replaced.
+    let mut rng = SplitMix64::new(4);
+    let ns = ns_per_op(upd_iters, || {
+        for _ in 0..upd_iters {
+            let k = rng.next_bounded(nkeys);
+            std::hint::black_box(map.upsert(&g, k, k + 1));
+        }
+    });
+    println!("perf upsert_overwrite ns_per_op={ns:.1} mops={:.2}", 1e3 / ns);
+    json.row("upsert_overwrite", &[("ns_per_op", ns), ("mops", 1e3 / ns)]);
+
     let ns = ns_per_op(iters, || {
         for _ in 0..iters {
             g.quiescent_state();

@@ -21,9 +21,15 @@
 //! 1/N of the keys migrate while the other shards serve untouched.
 //! `--shards 1` reproduces the original whole-table demo.
 //!
+//! Clients drive the completion-based ingest API: each thread takes a
+//! `KvClient` from the coordinator, submits its batch as a ticket over
+//! the `--lanes` (default 4) independent ingest lanes, and resolves the
+//! ticket — the measured latency is submit→completion.
+//!
 //! ```sh
 //! cargo run --release --example attack_mitigation -- \
-//!     [--secs 12] [--attack-at 4] [--clients 2] [--shards 4] [--no-analytics]
+//!     [--secs 12] [--attack-at 4] [--clients 2] [--shards 4] [--lanes 4] \
+//!     [--no-analytics]
 //! ```
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -44,16 +50,22 @@ fn main() -> anyhow::Result<()> {
         "attack-at",
         "clients",
         "shards",
+        "lanes",
         "no-analytics",
     ])?;
     let secs: u64 = args.get_or("secs", 12u64)?;
     let attack_at: u64 = args.get_or("attack-at", 4u64)?;
     let nclients: usize = args.get_or("clients", 2usize)?;
     let shards: usize = args.get_or("shards", 4usize)?;
+    let lanes: usize = args.get_or("lanes", 4usize)?;
     let analytics = !args.get_bool("no-analytics");
     anyhow::ensure!(
         shards >= 1 && shards.is_power_of_two(),
         "--shards must be a power of two"
+    );
+    anyhow::ensure!(
+        lanes >= 1 && lanes.is_power_of_two(),
+        "--lanes must be a power of two"
     );
     // The adversary concentrates on one shard (the targeted-mitigation
     // demo); with --shards 1 this is the whole table.
@@ -65,6 +77,7 @@ fn main() -> anyhow::Result<()> {
         // Deliberately weak: the attacker knows bucket = key % nbuckets.
         hash: HashFn::Modulo,
         shards,
+        lanes,
         workers: 2,
         batcher: BatcherConfig {
             max_batch: 64,
@@ -84,8 +97,8 @@ fn main() -> anyhow::Result<()> {
         enable_analytics: analytics,
     };
     eprintln!(
-        "attack_mitigation: {shards} shard(s) x {nbuckets} buckets, weak modulo hash, \
-         attack on shard {victim} at t={attack_at}s, analytics={analytics}"
+        "attack_mitigation: {shards} shard(s) x {nbuckets} buckets, {lanes} ingest lane(s), \
+         weak modulo hash, attack on shard {victim} at t={attack_at}s, analytics={analytics}"
     );
     let coord = Arc::new(Coordinator::start(cfg)?);
 
@@ -102,6 +115,9 @@ fn main() -> anyhow::Result<()> {
         let completed = completed.clone();
         let latencies = latencies.clone();
         clients.push(std::thread::spawn(move || {
+            // Per-thread submission handle: no lock shared with the
+            // other clients, requests fan out across the ingest lanes.
+            let kv = coord.client();
             let mut rng = SplitMix64::new(c as u64 + 1);
             // All clients aim at the same victim shard (sharded mode).
             let mut attack: Box<dyn Iterator<Item = u64>> = if shards > 1 {
@@ -129,7 +145,12 @@ fn main() -> anyhow::Result<()> {
                     .collect();
                 let t = Instant::now();
                 let n = reqs.len() as u64;
-                coord.execute_many(reqs);
+                // Submit → ticket → wait: the measured latency is the
+                // full submit-to-completion path.
+                let Ok(ticket) = kv.submit_batch(&reqs) else { break };
+                if ticket.wait().is_err() {
+                    break; // shut down mid-flight
+                }
                 let us = t.elapsed().as_secs_f64() * 1e6 / n as f64;
                 completed.fetch_add(n, Ordering::Relaxed);
                 latencies.lock().unwrap().push(us);

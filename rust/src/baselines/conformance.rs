@@ -46,6 +46,14 @@ fn crud(m: &dyn ConcurrentMap) {
             m.name()
         );
     }
+    // Upsert: last-wins overwrite-or-insert through the facade (the
+    // atomicity of the overwrite is a DHash extra; the *semantics* are
+    // part of the shared contract).
+    assert!(!m.upsert(&g, 1, 777), "{} upsert of present key", m.name());
+    assert_eq!(m.lookup(&g, 1), Some(777));
+    assert!(m.upsert(&g, 300, 301), "{} upsert of absent key", m.name());
+    assert_eq!(m.lookup(&g, 300), Some(301));
+    assert_eq!(m.len(&g), 201, "{} upsert must not duplicate", m.name());
     g.quiescent_state();
     rcu_barrier();
 }

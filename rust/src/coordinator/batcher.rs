@@ -1,12 +1,26 @@
-//! Request types and the size/time batcher.
+//! Request types, the per-lane size/time batcher, and the multi-lane
+//! ingest front end.
 //!
-//! Clients enqueue single requests; the batcher groups them into batches
-//! of up to `max_batch`, waiting at most `max_wait` for stragglers — the
-//! paper's rationale 4: update requests reach hash tables in batches, and
-//! handling them as batches is where throughput comes from.
+//! Clients enqueue requests through [`IngestLanes`] — N independent
+//! queues, the lane picked by the *fixed* shard-selector pre-hash of the
+//! key ([`crate::dhash::shard_of`]), so a key always rides the same lane
+//! (per-key FIFO into the batch stream; past that point, >1 worker may
+//! still interleave consecutive batches, as ever) and a rebuild, which
+//! only swaps per-shard [`HashFn`]s, can never re-route a key's lane.
+//! Each lane is
+//! drained by its own [`Batcher`] loop grouping entries into batches of
+//! up to `max_batch`, waiting at most `max_wait` for stragglers — the
+//! paper's rationale 4: update requests reach hash tables in batches,
+//! and handling them as batches is where throughput comes from.
+//!
+//! [`HashFn`]: crate::dhash::HashFn
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use super::client::{CompletionSet, SubmitError};
+use crate::dhash::shard_of;
 
 /// A KV operation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,15 +61,121 @@ pub enum Response {
     Missing,
 }
 
-/// One enqueued request: the op, the client's reply channel, and the
-/// client-side sequence number (so `execute_many` reassembles order).
-pub(crate) type Entry = (Request, Sender<(usize, Response)>, usize);
+/// One enqueued request: the op plus its completion slot (index into the
+/// submission's shared [`CompletionSet`]). Replaces the old
+/// `(Request, Sender<(usize, Response)>, usize)` tuple — completion is a
+/// slot write, not a channel send, and an entry dropped unexecuted
+/// (shutdown, closed lane, dead worker) fails its slot so the ticket
+/// resolves instead of hanging.
+pub(crate) struct Entry {
+    pub(crate) req: Request,
+    set: Arc<CompletionSet>,
+    slot: usize,
+    executed: bool,
+}
+
+impl Entry {
+    pub(crate) fn new(req: Request, set: Arc<CompletionSet>, slot: usize) -> Self {
+        Self {
+            req,
+            set,
+            slot,
+            executed: false,
+        }
+    }
+
+    pub(crate) fn key(&self) -> u64 {
+        self.req.key()
+    }
+
+    /// Resolve this entry's completion slot with the worker's response.
+    pub(crate) fn complete(mut self, resp: Response) {
+        self.executed = true;
+        self.set.fulfill(self.slot, resp);
+    }
+}
+
+impl Drop for Entry {
+    fn drop(&mut self) {
+        // Dropped without executing: the entry sat in a lane or batch
+        // that was discarded. Fail the slot so the ticket resolves.
+        if !self.executed {
+            self.set.fail(self.slot);
+        }
+    }
+}
+
+/// What travels down a lane: a request entry, or the shutdown marker.
+/// `Close` (sent once per lane by `Coordinator::shutdown`) lets the lane
+/// drain everything enqueued before it — mpsc order — and then exit,
+/// even while clients still hold cloned senders.
+pub(crate) enum LaneMsg {
+    Req(Entry),
+    Close,
+}
+
+/// The multi-lane ingest front end: one queue per lane, lane picked by
+/// the fixed shard-selector pre-hash of the key. Clone-cheap — a
+/// [`super::KvClient`] is a clone of this, so submission takes no shared
+/// lock.
+#[derive(Clone)]
+pub(crate) struct IngestLanes {
+    txs: Vec<Sender<LaneMsg>>,
+}
+
+impl IngestLanes {
+    pub(crate) fn new(txs: Vec<Sender<LaneMsg>>) -> Self {
+        assert!(
+            txs.len().is_power_of_two(),
+            "lane count must be a power of two, got {}",
+            txs.len()
+        );
+        Self { txs }
+    }
+
+    /// A permanently-closed front end (what post-shutdown clients get):
+    /// every dispatch fails with [`SubmitError::Shutdown`].
+    pub(crate) fn closed() -> Self {
+        Self { txs: Vec::new() }
+    }
+
+    pub(crate) fn nlanes(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// The lane `key` rides — [`shard_of`] over the lane count, the same
+    /// fixed pre-hash the sharded map routes with, independent of every
+    /// per-shard hash function.
+    pub(crate) fn lane_of(&self, key: u64) -> usize {
+        shard_of(key, self.txs.len())
+    }
+
+    /// Enqueue one entry on its key's lane.
+    pub(crate) fn dispatch(&self, entry: Entry) -> Result<(), SubmitError> {
+        if self.txs.is_empty() {
+            // `entry` drops here, failing its completion slot.
+            return Err(SubmitError::Shutdown);
+        }
+        self.txs[self.lane_of(entry.key())]
+            .send(LaneMsg::Req(entry))
+            .map_err(|_| SubmitError::Shutdown)
+    }
+
+    /// Send the shutdown marker down every lane. Entries enqueued before
+    /// the marker still drain (per-lane FIFO); later ones are dropped by
+    /// the exiting lane thread and resolve to [`SubmitError::Shutdown`].
+    pub(crate) fn close(&self) {
+        for tx in &self.txs {
+            let _ = tx.send(LaneMsg::Close);
+        }
+    }
+}
 
 /// A batch handed to a KV worker.
 pub struct Batch {
     pub(crate) entries: Vec<Entry>,
     /// Set by the batcher when pre-hashing is enabled: entries are sorted
-    /// by bucket id so a worker touches buckets in order (locality; the
+    /// by routing id so a worker touches buckets in order (locality; the
     /// `batchhash` ablation measures the effect).
     pub pre_hashed: bool,
 }
@@ -83,9 +203,9 @@ impl Default for BatcherConfig {
     }
 }
 
-/// The batching loop: runs on its own thread, draining the client channel
-/// into batches. `hash_fn` (when pre-hashing) maps keys to bucket ids via
-/// the analytics thread.
+/// The per-lane batching loop: runs on its own thread, draining one
+/// lane's channel into batches. `hash_fn` (when pre-hashing) maps keys
+/// to bucket ids via the analytics thread.
 pub struct Batcher {
     pub(crate) cfg: BatcherConfig,
 }
@@ -95,14 +215,16 @@ impl Batcher {
         Self { cfg }
     }
 
-    /// Drain one batch's entries from `rx` (BLOCKING — the caller must be
-    /// in an RCU-offline state, see `server.rs`). Returns None when the
-    /// channel is closed and empty (shutdown).
-    pub(crate) fn collect(&self, rx: &Receiver<Entry>) -> Option<Vec<Entry>> {
+    /// Drain one batch's entries from a lane (BLOCKING — the caller must
+    /// be in an RCU-offline state, see `server.rs`). Returns the batch
+    /// plus whether the lane is still open; a closed lane (its senders
+    /// dropped, or [`LaneMsg::Close`] received) still flushes whatever
+    /// preceded the close — the drain-on-close guarantee.
+    pub(crate) fn collect(&self, rx: &Receiver<LaneMsg>) -> (Vec<Entry>, bool) {
         // Block for the first entry.
         let first = match rx.recv() {
-            Ok(e) => e,
-            Err(_) => return None,
+            Ok(LaneMsg::Req(e)) => e,
+            Ok(LaneMsg::Close) | Err(_) => return (Vec::new(), false),
         };
         let mut entries = vec![first];
         let deadline = Instant::now() + self.cfg.max_wait;
@@ -112,12 +234,13 @@ impl Batcher {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(e) => entries.push(e),
+                Ok(LaneMsg::Req(e)) => entries.push(e),
+                Ok(LaneMsg::Close) => return (entries, false),
                 Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Disconnected) => return (entries, false),
             }
         }
-        Some(entries)
+        (entries, true)
     }
 
     /// Turn collected entries into a [`Batch`], pre-routing (sorting by
@@ -131,12 +254,13 @@ impl Batcher {
         let mut pre_hashed = false;
         if self.cfg.pre_hash {
             if let Some(hash_ids) = hash_ids {
-                let keys: Vec<u64> = entries.iter().map(|(r, _, _)| r.key()).collect();
+                let keys: Vec<u64> = entries.iter().map(|e| e.key()).collect();
                 match hash_ids(&keys) {
                     // Engines may return fewer ids than keys (the kernel
                     // batch caps at `Engine::batch()`); zipping a short id
-                    // vector would silently drop entries — and their reply
-                    // channels. Pre-route only on an exact-length answer.
+                    // vector would silently drop entries — and fail their
+                    // completion slots. Pre-route only on an exact-length
+                    // answer.
                     Some(ids) if ids.len() == entries.len() => {
                         // Stable sort by bucket id (preserves per-key op
                         // order within the batch).
@@ -160,10 +284,15 @@ impl Batcher {
     #[cfg(test)]
     pub(crate) fn next_batch(
         &self,
-        rx: &Receiver<Entry>,
+        rx: &Receiver<LaneMsg>,
         hash_ids: Option<&dyn Fn(&[u64]) -> Option<Vec<i32>>>,
     ) -> Option<Batch> {
-        self.collect(rx).map(|e| self.route(e, hash_ids))
+        let (entries, _open) = self.collect(rx);
+        if entries.is_empty() {
+            None
+        } else {
+            Some(self.route(entries, hash_ids))
+        }
     }
 }
 
@@ -171,6 +300,17 @@ impl Batcher {
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
+
+    /// Entries backed by one shared completion set, tuple-test style.
+    fn entries(reqs: &[Request]) -> (Arc<CompletionSet>, Vec<Entry>) {
+        let set = Arc::new(CompletionSet::new(reqs.len()));
+        let es = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Entry::new(*r, set.clone(), i))
+            .collect();
+        (set, es)
+    }
 
     #[test]
     fn batches_by_size() {
@@ -180,9 +320,10 @@ mod tests {
             pre_hash: false,
         });
         let (tx, rx) = channel();
-        let (reply, _keep) = channel();
-        for i in 0..10usize {
-            tx.send((Request::get(i as u64), reply.clone(), i)).unwrap();
+        let reqs: Vec<Request> = (0..10u64).map(Request::get).collect();
+        let (_set, es) = entries(&reqs);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
         }
         let batch = b.next_batch(&rx, None).unwrap();
         assert_eq!(batch.entries.len(), 4);
@@ -199,9 +340,10 @@ mod tests {
             pre_hash: false,
         });
         let (tx, rx) = channel();
-        let (reply, _keep) = channel();
-        tx.send((Request::get(1), reply.clone(), 0)).unwrap();
-        tx.send((Request::get(2), reply.clone(), 1)).unwrap();
+        let (_set, es) = entries(&[Request::get(1), Request::get(2)]);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
+        }
         let t0 = Instant::now();
         let batch = b.next_batch(&rx, None).unwrap();
         assert_eq!(batch.entries.len(), 2);
@@ -211,9 +353,133 @@ mod tests {
     #[test]
     fn closed_channel_ends() {
         let b = Batcher::new(BatcherConfig::default());
-        let (tx, rx) = channel::<Entry>();
+        let (tx, rx) = channel::<LaneMsg>();
         drop(tx);
         assert!(b.next_batch(&rx, None).is_none());
+    }
+
+    #[test]
+    fn close_marker_flushes_then_ends() {
+        // Drain-on-close: everything enqueued before Close comes out in
+        // one final batch, then the lane reports closed.
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(10), // would block forever sans Close
+            pre_hash: false,
+        });
+        let (tx, rx) = channel();
+        let reqs: Vec<Request> = (0..5u64).map(Request::get).collect();
+        let (set, es) = entries(&reqs);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
+        }
+        tx.send(LaneMsg::Close).unwrap();
+        let t0 = Instant::now();
+        let (batch, open) = b.collect(&rx);
+        assert_eq!(batch.len(), 5, "entries before Close must drain");
+        assert!(!open);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "Close must cut the straggler wait short"
+        );
+        let (rest, open) = b.collect(&rx);
+        assert!(rest.is_empty());
+        assert!(!open);
+        // Nothing was executed; dropping the batch fails every slot, so
+        // the abandoned tickets resolve instead of hanging.
+        drop(batch);
+        for i in 0..5 {
+            assert_eq!(set.poll_slot(i), Some(Err(SubmitError::Shutdown)));
+        }
+    }
+
+    #[test]
+    fn dropped_entries_fail_their_slots() {
+        let (set, es) = entries(&[Request::get(1), Request::get(2)]);
+        let mut es = es;
+        es.pop().unwrap().complete(Response::Missing);
+        drop(es); // entry 0 dropped unexecuted
+        // Slot 0 failed, slot 1 fulfilled: the batch resolves (to an
+        // error), never hangs.
+        assert_eq!(set.poll_slot(0), Some(Err(SubmitError::Shutdown)));
+        assert_eq!(set.poll_slot(1), Some(Ok(Response::Missing)));
+    }
+
+    #[test]
+    fn lanes_route_by_fixed_selector_and_preserve_per_key_fifo() {
+        let nlanes = 4usize;
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..nlanes {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let lanes = IngestLanes::new(txs);
+        assert_eq!(lanes.nlanes(), nlanes);
+
+        // Interleave several ops per key; values encode submission order.
+        let keys = [3u64, 17, 3, 99, 17, 3, 99, 1024, 17];
+        let reqs: Vec<Request> = keys
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| Request::put(k, i as u64))
+            .collect();
+        let (_set, es) = entries(&reqs);
+        for e in es {
+            lanes.dispatch(e).unwrap();
+        }
+        lanes.close();
+
+        // Lane routing must match the fixed selector exactly...
+        for (&k, r) in keys.iter().zip(&reqs) {
+            assert_eq!(lanes.lane_of(k), shard_of(k, nlanes));
+            assert_eq!(r.key(), k);
+        }
+        // ...and within each lane, each key's ops appear in submission
+        // order (mpsc FIFO + sticky lane choice = per-key FIFO).
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(1),
+            pre_hash: false,
+        });
+        let mut last_seq: std::collections::HashMap<u64, u64> = Default::default();
+        let mut seen = 0usize;
+        for (lane, rx) in rxs.iter().enumerate() {
+            loop {
+                let (batch, open) = b.collect(rx);
+                for e in &batch {
+                    let (k, seq) = match e.req {
+                        Request::Put { key, val } => (key, val),
+                        _ => unreachable!(),
+                    };
+                    assert_eq!(lanes.lane_of(k), lane, "key {k} on the wrong lane");
+                    if let Some(prev) = last_seq.insert(k, seq) {
+                        assert!(prev < seq, "key {k}: op {seq} overtook {prev}");
+                    }
+                    seen += 1;
+                }
+                // Entries are dropped unexecuted here; that's fine, the
+                // set is abandoned.
+                drop(batch);
+                if !open {
+                    break;
+                }
+            }
+        }
+        assert_eq!(seen, keys.len(), "every entry must drain before Close");
+    }
+
+    #[test]
+    fn closed_front_end_rejects_dispatch() {
+        let lanes = IngestLanes::closed();
+        let (set, mut es) = entries(&[Request::get(5)]);
+        assert_eq!(
+            lanes.dispatch(es.pop().unwrap()),
+            Err(SubmitError::Shutdown)
+        );
+        // The rejected entry failed its slot on drop.
+        assert_eq!(set.poll_slot(0), Some(Err(SubmitError::Shutdown)));
     }
 
     #[test]
@@ -224,15 +490,16 @@ mod tests {
             pre_hash: true,
         });
         let (tx, rx) = channel();
-        let (reply, _keep) = channel();
-        for (i, k) in [9u64, 1, 5, 3].iter().enumerate() {
-            tx.send((Request::get(*k), reply.clone(), i)).unwrap();
+        let reqs: Vec<Request> = [9u64, 1, 5, 3].iter().map(|&k| Request::get(k)).collect();
+        let (_set, es) = entries(&reqs);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
         }
         // Fake hash: bucket = key (identity).
         let hash = |keys: &[u64]| Some(keys.iter().map(|&k| k as i32).collect());
         let batch = b.next_batch(&rx, Some(&hash)).unwrap();
         assert!(batch.pre_hashed);
-        let keys: Vec<u64> = batch.entries.iter().map(|(r, _, _)| r.key()).collect();
+        let keys: Vec<u64> = batch.entries.iter().map(|e| e.key()).collect();
         assert_eq!(keys, vec![1, 3, 5, 9]);
     }
 
@@ -240,7 +507,7 @@ mod tests {
     fn pre_hash_with_short_id_vector_keeps_all_entries() {
         // An engine whose kernel batch is smaller than the request batch
         // returns fewer ids than keys; routing must keep every entry (a
-        // dropped entry would orphan its reply channel) and fall back to
+        // dropped entry would fail its completion slot) and fall back to
         // un-routed order.
         let b = Batcher::new(BatcherConfig {
             max_batch: 8,
@@ -248,9 +515,10 @@ mod tests {
             pre_hash: true,
         });
         let (tx, rx) = channel();
-        let (reply, _keep) = channel();
-        for (i, k) in [9u64, 1, 5, 3].iter().enumerate() {
-            tx.send((Request::get(*k), reply.clone(), i)).unwrap();
+        let reqs: Vec<Request> = [9u64, 1, 5, 3].iter().map(|&k| Request::get(k)).collect();
+        let (_set, es) = entries(&reqs);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
         }
         let hash = |keys: &[u64]| Some(keys.iter().take(2).map(|&k| k as i32).collect());
         let batch = b.next_batch(&rx, Some(&hash)).unwrap();

@@ -1,0 +1,373 @@
+//! The completion-based ingest client: [`KvClient`] tickets over the
+//! coordinator's multi-lane batchers.
+//!
+//! The pre-lane API (`execute` / `execute_many`) funneled every request
+//! through one `Mutex<Sender>`, allocated a fresh mpsc reply channel per
+//! call, and blocked until the reply arrived — the single blocking
+//! batcher it fed serialized ahead of the shards (ROADMAP "Async
+//! batcher"). The redesign splits submission from completion:
+//!
+//! * [`KvClient::submit`] / [`KvClient::submit_batch`] enqueue requests
+//!   on one of N independent ingest lanes and return immediately with a
+//!   [`Ticket`] / [`BatchTicket`];
+//! * a ticket is a handle onto a **shared, pre-allocated completion
+//!   buffer** ([`CompletionSet`]): one atomic slot per request, written
+//!   in place by the KV worker that executes it — no per-call channel
+//!   allocation on the hot path;
+//! * `poll` / `wait` / `wait_timeout` observe the buffer; batch
+//!   responses come back **in submission order** (slot *i* belongs to
+//!   request *i*).
+//!
+//! Clients are cheap: a `KvClient` is a clone of the lane senders, so
+//! every thread takes its own from [`Coordinator::client`] and submits
+//! without any shared lock.
+//!
+//! Shutdown safety: a request that can no longer be executed (the
+//! coordinator shut down, a lane closed, or a worker died mid-batch)
+//! resolves its slot to [`SubmitError::Shutdown`] instead of hanging —
+//! the batcher entry fails its slot on drop, so every accepted ticket
+//! resolves eventually.
+//!
+//! [`Coordinator::client`]: super::Coordinator::client
+
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batcher::{Entry, IngestLanes, Request, Response};
+
+/// Why a submission (or an accepted request) could not complete.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The coordinator is shut down (or shut down / lost its worker
+    /// while the request was pending).
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Shutdown => write!(f, "coordinator is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+// Slot states. A slot is written exactly once, by the worker that
+// executes the request (or by `Entry::drop` when the request can no
+// longer be executed), then never changes.
+const SLOT_PENDING: u8 = 0;
+const SLOT_OK: u8 = 1; // Response::Ok
+const SLOT_VALUE: u8 = 2; // Response::Value(val)
+const SLOT_MISSING: u8 = 3; // Response::Missing
+const SLOT_FAILED: u8 = 4; // SubmitError::Shutdown
+
+/// One pre-allocated completion slot: the response discriminant plus its
+/// payload. 16 bytes, written in place — the replacement for the old
+/// per-call `Sender<(usize, Response)>` reply channel.
+struct Slot {
+    kind: AtomicU8,
+    val: AtomicU64,
+}
+
+/// The shared completion buffer behind a [`Ticket`] / [`BatchTicket`]:
+/// one slot per submitted request, a remaining-count, and a condvar for
+/// blocking waits. Allocated once per submission (a single `Arc`), then
+/// only atomics are touched.
+pub(crate) struct CompletionSet {
+    slots: Box<[Slot]>,
+    /// Slots not yet resolved. The last resolver notifies the condvar.
+    remaining: AtomicUsize,
+    /// Pure wait/notify plumbing; no data lives under the lock. The
+    /// resolver takes it before notifying so a waiter can never check
+    /// `remaining` and miss the wakeup between check and sleep.
+    lock: Mutex<()>,
+    done: Condvar,
+}
+
+impl CompletionSet {
+    pub(crate) fn new(n: usize) -> Self {
+        Self {
+            slots: (0..n)
+                .map(|_| Slot {
+                    kind: AtomicU8::new(SLOT_PENDING),
+                    val: AtomicU64::new(0),
+                })
+                .collect(),
+            remaining: AtomicUsize::new(n),
+            lock: Mutex::new(()),
+            done: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Resolve slot `idx` with a worker response. Called exactly once
+    /// per slot (each `Entry` owns its slot).
+    pub(crate) fn fulfill(&self, idx: usize, resp: Response) {
+        let s = &self.slots[idx];
+        let kind = match resp {
+            Response::Ok => SLOT_OK,
+            Response::Value(v) => {
+                s.val.store(v, Ordering::Relaxed);
+                SLOT_VALUE
+            }
+            Response::Missing => SLOT_MISSING,
+        };
+        s.kind.store(kind, Ordering::Release);
+        self.finish_one();
+    }
+
+    /// Resolve slot `idx` as failed (the request was dropped without
+    /// being executed: shutdown, closed lane, dead worker).
+    pub(crate) fn fail(&self, idx: usize) {
+        self.slots[idx].kind.store(SLOT_FAILED, Ordering::Release);
+        self.finish_one();
+    }
+
+    fn finish_one(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Hold the lock across the notify: a waiter between its
+            // `remaining` check and the condvar sleep holds it, so we
+            // cannot slip a notification into that window.
+            let _g = self.lock.lock().unwrap();
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+
+    /// Decode slot `idx`; `None` while still pending.
+    pub(crate) fn poll_slot(&self, idx: usize) -> Option<Result<Response, SubmitError>> {
+        let s = &self.slots[idx];
+        match s.kind.load(Ordering::Acquire) {
+            SLOT_PENDING => None,
+            SLOT_OK => Some(Ok(Response::Ok)),
+            SLOT_VALUE => Some(Ok(Response::Value(s.val.load(Ordering::Relaxed)))),
+            SLOT_MISSING => Some(Ok(Response::Missing)),
+            _ => Some(Err(SubmitError::Shutdown)),
+        }
+    }
+
+    /// Block until every slot is resolved, or `timeout` (if given)
+    /// elapses. True = done.
+    fn wait_done(&self, timeout: Option<Duration>) -> bool {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut g = self.lock.lock().unwrap();
+        while self.remaining.load(Ordering::Acquire) != 0 {
+            match deadline {
+                None => g = self.done.wait(g).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return false;
+                    }
+                    let (g2, _) = self.done.wait_timeout(g, d - now).unwrap();
+                    g = g2;
+                }
+            }
+        }
+        true
+    }
+
+    /// All slots in submission order; `Err` if any request failed.
+    fn collect(&self) -> Result<Vec<Response>, SubmitError> {
+        debug_assert!(self.is_done());
+        (0..self.slots.len())
+            .map(|i| self.poll_slot(i).expect("completion set is done"))
+            .collect()
+    }
+}
+
+/// Completion handle for one [`KvClient::submit`]-ted request.
+pub struct Ticket {
+    set: Arc<CompletionSet>,
+}
+
+impl Ticket {
+    /// Non-blocking: the response if the request has completed.
+    pub fn poll(&self) -> Option<Result<Response, SubmitError>> {
+        self.set.poll_slot(0)
+    }
+
+    /// Block until the request completes.
+    pub fn wait(&self) -> Result<Response, SubmitError> {
+        self.set.wait_done(None);
+        self.set.poll_slot(0).expect("completion set is done")
+    }
+
+    /// Block up to `timeout`; `None` if the request is still pending.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<Response, SubmitError>> {
+        if self.set.wait_done(Some(timeout)) {
+            self.set.poll_slot(0)
+        } else {
+            None
+        }
+    }
+}
+
+/// Completion handle for one [`KvClient::submit_batch`]: `wait` returns
+/// the responses **in submission order** (slot *i* = request *i*).
+pub struct BatchTicket {
+    set: Arc<CompletionSet>,
+}
+
+impl BatchTicket {
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.len() == 0
+    }
+
+    /// Non-blocking: all responses if every request has completed.
+    pub fn poll(&self) -> Option<Result<Vec<Response>, SubmitError>> {
+        if self.set.is_done() {
+            Some(self.set.collect())
+        } else {
+            None
+        }
+    }
+
+    /// Block until every request completes; responses in submission
+    /// order. `Err` if any request was dropped by a shutdown.
+    pub fn wait(&self) -> Result<Vec<Response>, SubmitError> {
+        self.set.wait_done(None);
+        self.set.collect()
+    }
+
+    /// Block up to `timeout`; `None` if any request is still pending.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<Vec<Response>, SubmitError>> {
+        if self.set.wait_done(Some(timeout)) {
+            Some(self.set.collect())
+        } else {
+            None
+        }
+    }
+}
+
+/// Submission handle onto the coordinator's ingest lanes. Obtain one per
+/// thread from [`Coordinator::client`] (it is a clone of the lane
+/// senders — no lock is shared between clients), submit requests, and
+/// resolve the returned tickets at your own pace.
+///
+/// [`Coordinator::client`]: super::Coordinator::client
+#[derive(Clone)]
+pub struct KvClient {
+    lanes: IngestLanes,
+}
+
+impl KvClient {
+    pub(crate) fn new(lanes: IngestLanes) -> Self {
+        Self { lanes }
+    }
+
+    /// Number of ingest lanes this client submits across.
+    pub fn lanes(&self) -> usize {
+        self.lanes.nlanes()
+    }
+
+    /// Enqueue one request on its key's lane. Returns immediately with a
+    /// [`Ticket`]; [`SubmitError::Shutdown`] if the coordinator is shut
+    /// down.
+    pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
+        let set = Arc::new(CompletionSet::new(1));
+        self.lanes.dispatch(Entry::new(req, set.clone(), 0))?;
+        Ok(Ticket { set })
+    }
+
+    /// Enqueue a batch, each request on its key's lane, sharing one
+    /// pre-allocated completion buffer. Responses come back in
+    /// submission order. On [`SubmitError::Shutdown`] a prefix of the
+    /// batch may still execute (submission is per-lane, not
+    /// transactional); no ticket is returned, so nothing leaks.
+    pub fn submit_batch(&self, reqs: &[Request]) -> Result<BatchTicket, SubmitError> {
+        let set = Arc::new(CompletionSet::new(reqs.len()));
+        for (i, r) in reqs.iter().enumerate() {
+            self.lanes.dispatch(Entry::new(*r, set.clone(), i))?;
+        }
+        Ok(BatchTicket { set })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_resolve_in_submission_order() {
+        let set = Arc::new(CompletionSet::new(3));
+        assert!(!set.is_done());
+        // Resolve out of order; collect still returns slot order.
+        set.fulfill(2, Response::Missing);
+        set.fulfill(0, Response::Value(7));
+        assert!(!set.is_done());
+        assert_eq!(set.poll_slot(0), Some(Ok(Response::Value(7))));
+        assert_eq!(set.poll_slot(1), None);
+        set.fulfill(1, Response::Ok);
+        assert!(set.is_done());
+        assert_eq!(
+            set.collect().unwrap(),
+            vec![Response::Value(7), Response::Ok, Response::Missing]
+        );
+    }
+
+    #[test]
+    fn failed_slot_poisons_the_batch() {
+        let set = Arc::new(CompletionSet::new(2));
+        set.fulfill(0, Response::Ok);
+        set.fail(1);
+        assert!(set.is_done());
+        assert_eq!(set.collect(), Err(SubmitError::Shutdown));
+        // Per-slot decoding still distinguishes the good one.
+        assert_eq!(set.poll_slot(0), Some(Ok(Response::Ok)));
+        assert_eq!(set.poll_slot(1), Some(Err(SubmitError::Shutdown)));
+    }
+
+    #[test]
+    fn empty_batch_is_born_done() {
+        let set = CompletionSet::new(0);
+        assert!(set.is_done());
+        assert!(set.wait_done(Some(Duration::from_millis(1))));
+        assert_eq!(set.collect().unwrap(), Vec::<Response>::new());
+    }
+
+    #[test]
+    fn wait_blocks_until_resolution() {
+        let set = Arc::new(CompletionSet::new(1));
+        let t = Ticket { set: set.clone() };
+        assert_eq!(t.poll(), None);
+        assert_eq!(t.wait_timeout(Duration::from_millis(10)), None);
+        let s2 = set.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.fulfill(0, Response::Value(99));
+        });
+        assert_eq!(t.wait(), Ok(Response::Value(99)));
+        assert_eq!(t.poll(), Some(Ok(Response::Value(99))));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn batch_wait_timeout_returns_after_last_slot() {
+        let set = Arc::new(CompletionSet::new(2));
+        let bt = BatchTicket { set: set.clone() };
+        assert_eq!(bt.len(), 2);
+        assert!(bt.poll().is_none());
+        set.fulfill(1, Response::Ok);
+        assert!(bt.poll().is_none(), "half-done batch must not resolve");
+        assert!(bt.wait_timeout(Duration::from_millis(5)).is_none());
+        set.fulfill(0, Response::Ok);
+        assert_eq!(
+            bt.wait_timeout(Duration::from_millis(5)).unwrap().unwrap(),
+            vec![Response::Ok, Response::Ok]
+        );
+    }
+}

@@ -7,19 +7,24 @@
 //!
 //! Role in the reproduction: the paper motivates dynamic hash tables with
 //! bursty / adversarial workloads reaching servers in batches (§1,
-//! rationale 4). This module is that server:
+//! rationale 4). This module is that server. Ingest is completion-based:
+//! clients submit through [`KvClient`] and resolve [`Ticket`]s against a
+//! shared pre-allocated completion buffer — no per-call reply channel,
+//! no shared submission lock:
 //!
 //! ```text
-//!  clients ──► Batcher ──► worker queue ──► KV workers ──► DHashMap
-//!                 │ (size/time batching)         │
-//!                 │                              └─ key samples ─┐
-//!                 ▼                                              ▼
-//!            (optional batch pre-hash          Analytics thread: Engine
-//!             via the Engine backend)          detect(sample) → chi²
-//!                                                   │ chi² > threshold
-//!                                                   ▼
-//!                                            RebuildController
-//!                                            (new seed → ht_rebuild)
+//!  KvClient ──submit──► lane 0 ─► Batcher 0 ─┐
+//!   tickets  (lane =    lane 1 ─► Batcher 1 ─┼─► worker queue ─► KV
+//!   ◄─slot     fixed      ⋮    (size/time)  ─┘     workers ──► DHashMap
+//!    writes  pre-hash)  lane N-1                      │
+//!                 │                                   └─ key samples ─┐
+//!                 ▼                                                   ▼
+//!            (optional batch pre-hash            Analytics thread: Engine
+//!             via the Engine backend)            detect(sample) → chi²
+//!                                                     │ chi² > threshold
+//!                                                     ▼
+//!                                              RebuildController
+//!                                              (new seed → ht_rebuild)
 //! ```
 //!
 //! Python never runs here: the analytics thread evaluates the detector
@@ -28,11 +33,13 @@
 //! `DHASH_ENGINE=pjrt` (feature `pjrt`).
 
 mod batcher;
+mod client;
 mod controller;
 mod detector;
 mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, Request, Response};
+pub use client::{BatchTicket, KvClient, SubmitError, Ticket};
 pub use controller::{ControllerConfig, RebuildController, RebuildEvent};
 pub use detector::{DetectorConfig, KeySampler, SkewVerdict};
 pub use server::{Coordinator, CoordinatorConfig, CoordinatorStats};
@@ -49,6 +56,7 @@ mod tests {
             nbuckets: 64,
             hash: HashFn::Seeded(7),
             shards: 1,
+            lanes: 1,
             workers: 2,
             batcher: BatcherConfig {
                 max_batch: 16,
@@ -146,6 +154,138 @@ mod tests {
         let mut cfg = quick_config();
         cfg.shards = 6;
         assert!(Coordinator::start(cfg).is_err());
+    }
+
+    #[test]
+    fn non_pow2_lanes_rejected() {
+        let mut cfg = quick_config();
+        cfg.lanes = 3;
+        assert!(Coordinator::start(cfg).is_err());
+    }
+
+    #[test]
+    fn pipelined_tickets_resolve_in_submission_order() {
+        // Submit everything up front, wait afterwards: the pipelined
+        // shape execute_many can't express. Both lane configurations
+        // must reassemble responses in submission order.
+        for lanes in [1usize, 4] {
+            let mut cfg = quick_config();
+            cfg.lanes = lanes;
+            // One worker: batches drain in queue order, so the same-key
+            // op sequence below is answered in submission order (with
+            // more workers, consecutive batches may interleave — per-key
+            // FIFO is a lane/batch property, not a worker-pool one).
+            cfg.workers = 1;
+            let c = Arc::new(Coordinator::start(cfg).unwrap());
+            let client = c.client();
+            assert_eq!(client.lanes(), lanes);
+
+            let puts: Vec<Request> = (0..200u64).map(|k| Request::put(k, k * 7)).collect();
+            let pt = client.submit_batch(&puts).unwrap();
+            assert_eq!(pt.len(), 200);
+            assert!(pt.wait().unwrap().iter().all(|r| *r == Response::Ok));
+
+            // Individual tickets, waited in reverse submission order —
+            // completion order must not matter.
+            let gets: Vec<_> = (0..200u64)
+                .map(|k| client.submit(Request::get(k)).unwrap())
+                .collect();
+            for (k, t) in gets.iter().enumerate().rev() {
+                assert_eq!(
+                    t.wait().unwrap(),
+                    Response::Value(k as u64 * 7),
+                    "lanes={lanes} key {k}"
+                );
+            }
+
+            // Batch of mixed ops: slot i always answers request i.
+            let mixed = vec![
+                Request::get(3),
+                Request::del(3),
+                Request::get(3),
+                Request::put(3, 1),
+            ];
+            let resps = client.submit_batch(&mixed).unwrap().wait().unwrap();
+            assert_eq!(
+                resps,
+                vec![
+                    Response::Value(21),
+                    Response::Ok,
+                    Response::Missing,
+                    Response::Ok
+                ]
+            );
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn ticket_poll_and_wait_timeout() {
+        let c = Arc::new(Coordinator::start(quick_config()).unwrap());
+        let client = c.client();
+        let t = client.submit(Request::put(9, 90)).unwrap();
+        // Poll until resolved (the service is live, so this terminates).
+        let resp = loop {
+            if let Some(r) = t.poll() {
+                break r;
+            }
+            std::thread::yield_now();
+        };
+        assert_eq!(resp.unwrap(), Response::Ok);
+        let t = client.submit(Request::get(9)).unwrap();
+        assert_eq!(
+            t.wait_timeout(Duration::from_secs(10)).unwrap().unwrap(),
+            Response::Value(90)
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let c = Arc::new(Coordinator::start(quick_config()).unwrap());
+        let survivor = c.client(); // taken before the shutdown
+        assert_eq!(
+            survivor.submit(Request::put(1, 1)).unwrap().wait(),
+            Ok(Response::Ok)
+        );
+        c.shutdown();
+        // Clients taken after shutdown fail fast...
+        assert_eq!(
+            c.client().submit(Request::get(1)).err(),
+            Some(SubmitError::Shutdown)
+        );
+        assert_eq!(
+            c.client().submit_batch(&[Request::get(1)]).err(),
+            Some(SubmitError::Shutdown)
+        );
+        // ...and a pre-shutdown client resolves to an error instead of
+        // panicking or hanging (its send may land after the lane thread
+        // exited, or be accepted and dropped — both are Shutdown).
+        match survivor.submit(Request::get(1)) {
+            Err(SubmitError::Shutdown) => {}
+            Ok(t) => assert_eq!(t.wait(), Err(SubmitError::Shutdown)),
+        }
+    }
+
+    #[test]
+    fn shutdown_with_pending_tickets_resolves_them_all() {
+        let mut cfg = quick_config();
+        cfg.lanes = 2;
+        let c = Arc::new(Coordinator::start(cfg).unwrap());
+        let client = c.client();
+        // Pile up work and shut down immediately: every ticket must
+        // resolve — drained requests to a response, raced ones to
+        // Shutdown — and none may hang.
+        let tickets: Vec<_> = (0..500u64)
+            .filter_map(|k| client.submit(Request::put(k, k)).ok())
+            .collect();
+        c.shutdown();
+        for t in tickets {
+            match t.wait_timeout(Duration::from_secs(30)) {
+                Some(Ok(Response::Ok)) | Some(Err(SubmitError::Shutdown)) => {}
+                other => panic!("pending ticket resolved oddly: {other:?}"),
+            }
+        }
     }
 
     #[test]

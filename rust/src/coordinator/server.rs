@@ -1,6 +1,6 @@
-//! The coordinator proper: wires batcher → workers → the sharded map,
-//! plus the analytics thread (per-shard detector verdicts + targeted
-//! rebuild mitigation).
+//! The coordinator proper: wires ingest lanes → per-lane batchers →
+//! workers → the sharded map, plus the analytics thread (per-shard
+//! detector verdicts + targeted rebuild mitigation).
 //!
 //! The KV workers program against the [`ConcurrentMap`] facade; only the
 //! analytics thread needs the concrete [`ShardedDHash`] (per-shard hash
@@ -9,12 +9,13 @@
 //! `DHashMap` and every behavior matches the pre-sharding coordinator.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::batcher::{Batch, Batcher, BatcherConfig, Entry, Request, Response};
+use super::batcher::{Batch, Batcher, BatcherConfig, IngestLanes, LaneMsg, Request, Response};
+use super::client::KvClient;
 use super::controller::{ControllerConfig, RebuildController};
 use super::detector::{partition_by_shard, DetectorConfig, KeySampler, SkewVerdict};
 use crate::dhash::{HashFn, ShardedDHash};
@@ -31,6 +32,16 @@ pub struct CoordinatorConfig {
     pub hash: HashFn,
     /// Shard count (power of two; 1 = the paper's single table).
     pub shards: usize,
+    /// Independent ingest lanes (power of two; 1 = the old single
+    /// funnel). A key's lane is the fixed shard-selector pre-hash
+    /// ([`crate::dhash::shard_of`] over the lane count), so per-key
+    /// submission order is preserved into the batch stream and a
+    /// rebuild — which only swaps per-shard hash functions — never
+    /// re-routes a key's lane. Each lane is drained by its own batcher
+    /// thread. Note per-key FIFO is a lane/batch property: with
+    /// `workers > 1`, consecutive batches may still execute
+    /// concurrently (exactly as with the pre-lane single batcher).
+    pub lanes: usize,
     /// KV worker threads.
     pub workers: usize,
     pub batcher: BatcherConfig,
@@ -48,6 +59,7 @@ impl Default for CoordinatorConfig {
             nbuckets: 4096,
             hash: HashFn::Seeded(0xD1E5_5EED),
             shards: 1,
+            lanes: 1,
             workers: 2,
             batcher: BatcherConfig::default(),
             detector: DetectorConfig::default(),
@@ -90,11 +102,16 @@ struct Shared {
     controller: RebuildController,
 }
 
-/// The running service. Create with [`Coordinator::start`], stop with
+/// The running service. Create with [`Coordinator::start`], submit
+/// through [`Coordinator::client`] tickets (or the blocking
+/// `execute` / `execute_many` wrappers), stop with
 /// [`Coordinator::shutdown`].
 pub struct Coordinator {
     shared: Arc<Shared>,
-    input: Mutex<Option<Sender<Entry>>>,
+    /// The lane senders handed to clients; `None` once shut down. Only
+    /// `client()` takes this lock — submission itself runs on each
+    /// client's own sender clones.
+    ingest: Mutex<Option<IngestLanes>>,
     threads: Mutex<Vec<JoinHandle<()>>>,
     cfg: CoordinatorConfig,
 }
@@ -105,6 +122,11 @@ impl Coordinator {
             cfg.shards >= 1 && cfg.shards.is_power_of_two(),
             "shards must be a power of two, got {}",
             cfg.shards
+        );
+        anyhow::ensure!(
+            cfg.lanes >= 1 && cfg.lanes.is_power_of_two(),
+            "lanes must be a power of two, got {}",
+            cfg.lanes
         );
         let shared = Arc::new(Shared {
             map: ShardedDHash::with_hash(cfg.shards, cfg.nbuckets, cfg.hash),
@@ -131,22 +153,29 @@ impl Coordinator {
             ),
         });
 
-        let (client_tx, client_rx) = channel::<Entry>();
         let (batch_tx, batch_rx) = channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let mut threads = Vec::new();
 
-        // Batcher thread.
-        {
+        // Ingest lanes: one queue per lane, each drained by its own
+        // batcher thread into the shared worker queue. The lane channels
+        // close through `LaneMsg::Close` markers (not sender drops), so
+        // shutdown drains cleanly even while clients still hold cloned
+        // senders.
+        let mut lane_txs = Vec::with_capacity(cfg.lanes);
+        for lane in 0..cfg.lanes {
+            let (lane_tx, lane_rx) = channel::<LaneMsg>();
+            lane_txs.push(lane_tx);
             let cfg_b = cfg.batcher.clone();
             let shared2 = shared.clone();
+            let batch_tx = batch_tx.clone();
             // Pre-hashing needs its own engine (backends need not be
             // Send — the PJRT client is thread-bound — so each thread
             // that evaluates kernels owns one).
             let want_prehash = cfg_b.pre_hash && cfg.enable_analytics;
             threads.push(
                 std::thread::Builder::new()
-                    .name("dhash-batcher".into())
+                    .name(format!("dhash-batcher-{lane}"))
                     .spawn(move || {
                         let batcher = Batcher::new(cfg_b);
                         let engine: Option<Box<dyn Engine>> = if want_prehash {
@@ -158,44 +187,51 @@ impl Coordinator {
                         loop {
                             // Collect OFFLINE (blocking recv must not
                             // stall grace periods), then route online.
-                            let Some(entries) =
-                                g.offline_while(|| batcher.collect(&client_rx))
-                            else {
-                                break; // input closed: shutdown
-                            };
-                            // Routing oracle. Sharded: the fixed shard
-                            // selector — needs no engine (per-shard
-                            // bucket ids would need one engine call per
-                            // shard once targeted mitigations diverge
-                            // the seeds, for little extra locality).
-                            // Unsharded: bucket ids under the table's
-                            // *current* hash via the engine backend;
-                            // None (engine unavailable) leaves the batch
-                            // un-routed, which `route` handles.
-                            let oracle = |keys: &[u64]| -> Option<Vec<i32>> {
-                                if shared2.map.shards() > 1 {
-                                    return Some(
-                                        keys.iter()
-                                            .map(|&k| shared2.map.shard_of(k) as i32)
-                                            .collect(),
-                                    );
+                            let (entries, open) =
+                                g.offline_while(|| batcher.collect(&lane_rx));
+                            if !entries.is_empty() {
+                                // Routing oracle. Sharded: the fixed
+                                // shard selector — needs no engine
+                                // (per-shard bucket ids would need one
+                                // engine call per shard once targeted
+                                // mitigations diverge the seeds, for
+                                // little extra locality). Unsharded:
+                                // bucket ids under the table's *current*
+                                // hash via the engine backend; None
+                                // (engine unavailable) leaves the batch
+                                // un-routed, which `route` handles.
+                                let oracle = |keys: &[u64]| -> Option<Vec<i32>> {
+                                    if shared2.map.shards() > 1 {
+                                        return Some(
+                                            keys.iter()
+                                                .map(|&k| shared2.map.shard_of(k) as i32)
+                                                .collect(),
+                                        );
+                                    }
+                                    let e = engine.as_ref()?;
+                                    let hash = shared2.map.shard_hash_fn(&g, 0);
+                                    let nb = shared2.map.shard_nbuckets(&g, 0) as u64;
+                                    let (kind, seed) = HashKind::of(hash);
+                                    e.batch_hash(keys, seed, nb, kind).ok()
+                                };
+                                let b = batcher.route(entries, Some(&oracle));
+                                g.quiescent_state();
+                                shared2.total_batches.fetch_add(1, Ordering::Relaxed);
+                                if batch_tx.send(b).is_err() {
+                                    break;
                                 }
-                                let e = engine.as_ref()?;
-                                let hash = shared2.map.shard_hash_fn(&g, 0);
-                                let nb = shared2.map.shard_nbuckets(&g, 0) as u64;
-                                let (kind, seed) = HashKind::of(hash);
-                                e.batch_hash(keys, seed, nb, kind).ok()
-                            };
-                            let b = batcher.route(entries, Some(&oracle));
-                            g.quiescent_state();
-                            shared2.total_batches.fetch_add(1, Ordering::Relaxed);
-                            if batch_tx.send(b).is_err() {
-                                break;
+                            }
+                            if !open {
+                                break; // lane closed: shutdown
                             }
                         }
                     })?,
             );
         }
+        let ingest = IngestLanes::new(lane_txs);
+        // The workers' queue must close when the lane threads exit;
+        // they hold the only other clones.
+        drop(batch_tx);
 
         // KV workers: drive the map through the ConcurrentMap facade.
         for w in 0..cfg.workers.max(1) {
@@ -215,18 +251,18 @@ impl Coordinator {
                                 rx.recv().ok()
                             });
                             let Some(batch) = batch else { break };
-                            for (req, reply, seq) in batch.entries {
-                                let resp = match req {
+                            for entry in batch.entries {
+                                let resp = match entry.req {
                                     Request::Get { key } => match kv.lookup(&g, key) {
                                         Some(v) => Response::Value(v),
                                         None => Response::Missing,
                                     },
                                     Request::Put { key, val } => {
-                                        // Upsert: last-wins.
-                                        if !kv.insert(&g, key, val) {
-                                            kv.delete(&g, key);
-                                            let _ = kv.insert(&g, key, val);
-                                        }
+                                        // Atomic last-wins overwrite: the
+                                        // DHash maps swap the value in
+                                        // place, so a concurrent Get
+                                        // never sees the key absent.
+                                        kv.upsert(&g, key, val);
                                         shared2.sampler.push(key);
                                         Response::Ok
                                     }
@@ -239,7 +275,7 @@ impl Coordinator {
                                     }
                                 };
                                 shared2.total_requests.fetch_add(1, Ordering::Relaxed);
-                                let _ = reply.send((seq, resp));
+                                entry.complete(resp);
                             }
                             g.quiescent_state();
                         }
@@ -370,35 +406,48 @@ impl Coordinator {
 
         Ok(Coordinator {
             shared,
-            input: Mutex::new(Some(client_tx)),
+            ingest: Mutex::new(Some(ingest)),
             threads: Mutex::new(threads),
             cfg,
         })
     }
 
-    /// Execute one request (blocks for the reply).
-    pub fn execute(&self, req: Request) -> Response {
-        self.execute_many(vec![req]).pop().unwrap()
+    /// A submission handle onto the ingest lanes: the completion-based
+    /// API ([`KvClient::submit`] → [`super::Ticket`]). Take one per
+    /// client thread — it is a clone of the lane senders, so submission
+    /// shares no lock. A client taken after [`Coordinator::shutdown`]
+    /// (or outliving it) fails every submit with
+    /// [`super::SubmitError::Shutdown`]; it never panics or hangs.
+    pub fn client(&self) -> KvClient {
+        let lanes = self
+            .ingest
+            .lock()
+            .unwrap()
+            .clone()
+            .unwrap_or_else(IngestLanes::closed);
+        KvClient::new(lanes)
     }
 
-    /// Execute a batch of requests, returning responses in order.
+    /// Execute one request (blocks for the reply). Thin wrapper over
+    /// [`Coordinator::client`]; panics if the coordinator is shut down,
+    /// matching the pre-ticket API.
+    pub fn execute(&self, req: Request) -> Response {
+        self.client()
+            .submit(req)
+            .expect("coordinator is shut down")
+            .wait()
+            .expect("workers alive")
+    }
+
+    /// Execute a batch of requests, returning responses in submission
+    /// order. Thin wrapper over [`Coordinator::client`]; panics if the
+    /// coordinator is shut down, matching the pre-ticket API.
     pub fn execute_many(&self, reqs: Vec<Request>) -> Vec<Response> {
-        let n = reqs.len();
-        let (reply_tx, reply_rx) = channel();
-        {
-            let input = self.input.lock().unwrap();
-            let tx = input.as_ref().expect("coordinator is shut down");
-            for (i, r) in reqs.into_iter().enumerate() {
-                tx.send((r, reply_tx.clone(), i)).expect("batcher alive");
-            }
-        }
-        drop(reply_tx);
-        let mut out = vec![Response::Missing; n];
-        for _ in 0..n {
-            let (i, resp) = reply_rx.recv().expect("workers alive");
-            out[i] = resp;
-        }
-        out
+        self.client()
+            .submit_batch(&reqs)
+            .expect("coordinator is shut down")
+            .wait()
+            .expect("workers alive")
     }
 
     /// Trigger a staggered whole-map rebuild right now (ops tooling /
@@ -439,11 +488,20 @@ impl Coordinator {
         &self.cfg
     }
 
-    /// Stop all service threads and wait for them.
+    /// Stop all service threads and wait for them. Requests enqueued
+    /// before the shutdown drain first (per-lane close markers); any
+    /// submitted after it resolve their tickets to
+    /// [`super::SubmitError::Shutdown`] instead of hanging — outstanding
+    /// [`KvClient`]s keep working as error-returning stubs.
     pub fn shutdown(&self) {
         self.shared.stop.store(true, Ordering::SeqCst);
-        // Closing the input channel unwinds batcher then workers.
-        *self.input.lock().unwrap() = None;
+        // Close markers unwind the lane batchers (draining what's
+        // queued), whose exit closes the worker queue in turn. Sender
+        // clones held by stray clients can't keep the lanes alive: the
+        // threads stop at the marker, not at channel disconnect.
+        if let Some(lanes) = self.ingest.lock().unwrap().take() {
+            lanes.close();
+        }
         let mut threads = self.threads.lock().unwrap();
         for h in threads.drain(..) {
             let _ = h.join();

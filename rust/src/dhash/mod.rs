@@ -110,18 +110,17 @@ impl<B: BucketSet> DHashMap<B> {
         unsafe { &*self.cur.load(Ordering::SeqCst) }
     }
 
-    /// Lookup (paper Algorithm 4). Returns a copy of the value.
+    /// The live node holding `key`, searched in Algorithm 4's proven
+    /// order: (1) the old table, (2) the hazard-period node, (3) the new
+    /// table. Lemma 4.1: this order never misses a present key.
     ///
-    /// `u64::MAX` is reserved (bucket sentinel) and is never present.
-    pub fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
-        if key == u64::MAX {
-            return None;
-        }
-        let _g = guard.read_lock();
+    /// The caller must be inside a read-side critical section; the
+    /// reference is valid until that section ends.
+    fn live_node(&self, key: u64) -> Option<&Node> {
         let htp = self.table();
         // (1) Search the old (current) hash table.
         if let Some(n) = htp.bucket(key).find(key) {
-            return Some(n.val.load(Ordering::SeqCst));
+            return Some(n);
         }
         // (2) No rebuild in progress -> definitive miss.
         let htp_new = htp.ht_new.load(Ordering::SeqCst);
@@ -137,17 +136,55 @@ impl<B: BucketSet> DHashMap<B> {
             // passes; we are inside a read-side section.
             let n = unsafe { &*cur };
             if n.key == key && !n.logically_removed() {
-                return Some(n.val.load(Ordering::SeqCst));
+                return Some(n);
             }
         }
         // (4) Search the new hash table.
         // SAFETY: ht_new tables are freed only after replacement + grace
         // period; non-null here means it is still installed.
         let htp_new = unsafe { &*htp_new };
-        htp_new
-            .bucket(key)
-            .find(key)
-            .map(|n| n.val.load(Ordering::SeqCst))
+        htp_new.bucket(key).find(key)
+    }
+
+    /// Lookup (paper Algorithm 4). Returns a copy of the value.
+    ///
+    /// `u64::MAX` is reserved (bucket sentinel) and is never present.
+    pub fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
+        if key == u64::MAX {
+            return None;
+        }
+        let _g = guard.read_lock();
+        self.live_node(key).map(|n| n.val.load(Ordering::SeqCst))
+    }
+
+    /// Atomic last-wins upsert: overwrite the value **in place** on the
+    /// live node when the key is present (the `val` field is atomic and
+    /// travels with the node through a rebuild's re-insertion, so the
+    /// swap is safe mid-migration), insert otherwise. Returns true if a
+    /// new node was inserted, false if an existing value was replaced.
+    ///
+    /// This is what makes the coordinator's `Put` atomic: the
+    /// delete-then-insert overwrite it replaces had a window in which a
+    /// concurrent `Get` observed `Missing` for a key that always had a
+    /// value. Here an overwritten key is never absent — by Lemma 4.1 the
+    /// in-place path finds every present key even during a rebuild, and
+    /// the insert path only runs when the key is absent.
+    pub fn upsert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        assert_ne!(key, u64::MAX, "key u64::MAX is reserved (bucket sentinel)");
+        loop {
+            {
+                let _g = guard.read_lock();
+                if let Some(n) = self.live_node(key) {
+                    n.val.store(val, Ordering::SeqCst);
+                    return false;
+                }
+            }
+            if self.insert(guard, key, val).is_ok() {
+                return true;
+            }
+            // A concurrent insert won the key between our miss and the
+            // insert attempt; retry the in-place path against it.
+        }
     }
 
     /// ABLATION ONLY (bench `ablation`, row `hazard`): Algorithm 4

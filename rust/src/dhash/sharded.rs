@@ -138,6 +138,14 @@ impl<B: BucketSet> ShardedDHash<B> {
         self.shards[self.shard_of(key)].delete(guard, key)
     }
 
+    /// Atomic last-wins upsert in the key's shard (value swapped in
+    /// place on the live node — see [`DHashMap::upsert`]). Returns true
+    /// if a new node was inserted.
+    #[inline]
+    pub fn upsert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        self.shards[self.shard_of(key)].upsert(guard, key, val)
+    }
+
     /// Migrate one shard. The caller must hold `migration_token`.
     fn migrate_shard(
         &self,

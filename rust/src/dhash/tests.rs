@@ -373,6 +373,113 @@ fn no_leaks_across_rebuilds<B: BucketSet>() {
     );
 }
 
+fn upsert_semantics<B: BucketSet>() {
+    let g = RcuThread::register();
+    let m: DHashMap<B> = DHashMap::with_hash(32, HashFn::Seeded(1));
+    assert!(m.upsert(&g, 5, 50), "absent key must insert");
+    assert!(!m.upsert(&g, 5, 51), "present key must swap in place");
+    assert_eq!(m.lookup(&g, 5), Some(51));
+    assert_eq!(m.len(&g), 1, "in-place swap must not duplicate the node");
+    for k in 0..300u64 {
+        m.upsert(&g, k, k);
+    }
+    assert_eq!(m.len(&g), 300);
+    // Overwrites after a rebuild land on the migrated nodes.
+    m.rebuild(&g, 128, HashFn::Seeded(9)).unwrap();
+    for k in 0..300u64 {
+        assert!(!m.upsert(&g, k, k + 7), "key {k} lost by rebuild");
+    }
+    for k in 0..300u64 {
+        assert_eq!(m.lookup(&g, k), Some(k + 7));
+    }
+    assert_eq!(m.len(&g), 300);
+    g.quiescent_state();
+    rcu_barrier();
+}
+
+fn overwrites_never_expose_missing<B: BucketSet>() {
+    // Regression for the coordinator's old Put path (delete-then-insert,
+    // server.rs pre-PR-3): overwriting a key must never make it
+    // observably absent — not to a concurrent reader, and not while a
+    // rebuild migrates the table. `upsert` swaps the value on the live
+    // node, so a key that always had a value always resolves.
+    let m: Arc<DHashMap<B>> = Arc::new(DHashMap::with_hash(32, HashFn::Seeded(2)));
+    let nkeys = 64u64;
+    {
+        let g = RcuThread::register();
+        for k in 0..nkeys {
+            m.insert(&g, k, 1).unwrap();
+        }
+        g.quiescent_state();
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let misses = Arc::new(AtomicU64::new(0));
+    let started = Arc::new(AtomicU64::new(0));
+    let mut threads = Vec::new();
+    // Writers: continuous overwrites of every key.
+    for t in 0..2u64 {
+        let m2 = m.clone();
+        let s = stop.clone();
+        threads.push(std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let mut v = t + 2;
+            while !s.load(Ordering::Relaxed) {
+                for k in 0..nkeys {
+                    assert!(!m2.upsert(&g, k, v), "key {k} vanished under overwrite");
+                    v = v.wrapping_add(1);
+                }
+                g.quiescent_state();
+            }
+            g.offline();
+        }));
+    }
+    // Reader: every key is always present.
+    {
+        let m2 = m.clone();
+        let s = stop.clone();
+        let mi = misses.clone();
+        let st = started.clone();
+        threads.push(std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let mut ops = 0u64;
+            while !s.load(Ordering::Relaxed) {
+                for k in 0..nkeys {
+                    if m2.lookup(&g, k).is_none() {
+                        mi.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                ops += 1;
+                st.store(ops, Ordering::Relaxed);
+                g.quiescent_state();
+            }
+            g.offline();
+        }));
+    }
+    // Wait for real reader/writer overlap (single-core hosts), then
+    // churn rebuilds so overwrites also race migrations.
+    while started.load(Ordering::Relaxed) < 8 {
+        std::thread::yield_now();
+    }
+    {
+        let g = RcuThread::register();
+        for i in 0..6u64 {
+            m.rebuild(&g, if i % 2 == 0 { 128 } else { 16 }, HashFn::Seeded(40 + i))
+                .unwrap();
+        }
+        g.quiescent_state();
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in threads {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        misses.load(Ordering::Relaxed),
+        0,
+        "a reader saw Missing for a key that always had a value"
+    );
+    rcu_barrier();
+}
+
 macro_rules! dhash_suite {
     ($modname:ident, $ty:ty) => {
         mod $modname {
@@ -414,6 +521,14 @@ macro_rules! dhash_suite {
             #[test]
             fn no_leaks_across_rebuilds() {
                 super::no_leaks_across_rebuilds::<$ty>();
+            }
+            #[test]
+            fn upsert_semantics() {
+                super::upsert_semantics::<$ty>();
+            }
+            #[test]
+            fn overwrites_never_expose_missing() {
+                super::overwrites_never_expose_missing::<$ty>();
             }
         }
     };

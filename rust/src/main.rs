@@ -5,8 +5,8 @@
 //! dhash torture  [--table dhash|xu|rht|split] [--threads N] [--lookup-pct P]
 //!                [--alpha A] [--buckets B] [--keys U] [--secs S]
 //!                [--no-rebuild] [--repeats R]
-//! dhash serve    [--buckets B] [--shards N] [--workers W] [--secs S]
-//!                [--attack-at T] [--weak-hash] [--no-analytics]
+//! dhash serve    [--buckets B] [--shards N] [--lanes L] [--workers W]
+//!                [--secs S] [--attack-at T] [--weak-hash] [--no-analytics]
 //! dhash rebuild  [--table dhash|xu|rht|split] [--nodes N] [--buckets B]
 //! ```
 
@@ -91,6 +91,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             HashFn::Seeded(0xd1e5)
         },
         shards: args.get_or("shards", 1usize)?,
+        lanes: args.get_or("lanes", 1usize)?,
         workers: args.get_or("workers", 2usize)?,
         enable_analytics: !args.get_bool("no-analytics"),
         ..Default::default()
@@ -103,6 +104,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let s2 = stop.clone();
     let client = std::thread::spawn(move || {
+        let kv = c2.client();
         let mut rng = dhash::util::SplitMix64::new(1);
         let mut attack = dhash::torture::AttackGen::new(nbuckets, 7);
         let t0 = std::time::Instant::now();
@@ -122,7 +124,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     }
                 })
                 .collect();
-            c2.execute_many(reqs);
+            // Completion-based ingest: submit, then resolve the ticket.
+            match kv.submit_batch(&reqs) {
+                Ok(ticket) => {
+                    let _ = ticket.wait();
+                }
+                Err(_) => break, // shut down
+            }
         }
     });
 
@@ -178,8 +186,8 @@ fn cmd_rebuild(args: &Args) -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     const KNOWN: &[&str] = &[
         "table", "threads", "lookup-pct", "alpha", "buckets", "alt-buckets", "keys", "secs",
-        "no-rebuild", "no-pin", "repeats", "seed", "hash-seed", "workers", "shards", "attack-at",
-        "weak-hash", "no-analytics", "nodes",
+        "no-rebuild", "no-pin", "repeats", "seed", "hash-seed", "workers", "shards", "lanes",
+        "attack-at", "weak-hash", "no-analytics", "nodes",
     ];
     let args = Args::from_env(KNOWN)?;
     match args.positional().first().map(|s| s.as_str()) {

@@ -27,6 +27,24 @@ pub trait ConcurrentMap: Send + Sync + 'static {
     /// Delete; false if absent.
     fn delete(&self, guard: &RcuThread, key: u64) -> bool;
 
+    /// Last-wins overwrite-or-insert. Returns true if the key was newly
+    /// inserted, false if an existing entry was overwritten.
+    ///
+    /// Default: delete-then-insert, which is what the baselines can do —
+    /// NOT atomic: a concurrent reader can observe a transient miss
+    /// between the delete and the re-insert. The DHash implementations
+    /// override this with an in-place value swap on the live node, so a
+    /// key being overwritten is never absent (the coordinator's `Put`
+    /// relies on this).
+    fn upsert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        if self.insert(guard, key, val) {
+            return true;
+        }
+        self.delete(guard, key);
+        let _ = self.insert(guard, key, val);
+        false
+    }
+
     /// Dynamically change the table geometry / hash function.
     ///
     /// For the dynamic tables this installs `hash`; for the resizable
@@ -78,6 +96,10 @@ impl<B: BucketSet> ConcurrentMap for DHashMap<B> {
         DHashMap::delete(self, guard, key)
     }
 
+    fn upsert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        DHashMap::upsert(self, guard, key, val)
+    }
+
     fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
         DHashMap::rebuild(self, guard, nbuckets, hash).is_ok()
     }
@@ -110,6 +132,10 @@ impl<B: BucketSet> ConcurrentMap for ShardedDHash<B> {
 
     fn delete(&self, guard: &RcuThread, key: u64) -> bool {
         ShardedDHash::delete(self, guard, key)
+    }
+
+    fn upsert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
+        ShardedDHash::upsert(self, guard, key, val)
     }
 
     fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {

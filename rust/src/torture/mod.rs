@@ -200,6 +200,9 @@ pub fn run(map: Arc<dyn ConcurrentMap>, cfg: &TortureConfig) -> TortureReport {
                         workload::Op::Delete => {
                             std::hint::black_box(map.delete(&g, key));
                         }
+                        workload::Op::Upsert => {
+                            std::hint::black_box(map.upsert(&g, key, key));
+                        }
                     }
                     local += 1;
                 }
@@ -346,6 +349,23 @@ mod tests {
         assert_eq!(rep.table, "HT-DHash-Sharded");
         assert!(rep.total_ops > 1000, "ops {}", rep.total_ops);
         assert!(rep.rebuilds > 0, "no staggered rebuilds completed");
+        rcu_barrier();
+    }
+
+    #[test]
+    fn run_with_upsert_mix() {
+        // The serving-shaped mix: part of the read share becomes
+        // last-wins upserts, exercising the atomic overwrite path under
+        // continuous rebuilds.
+        let cfg = TortureConfig {
+            mix: OpMix::with_upserts(80, 30),
+            duration: Duration::from_millis(100),
+            ..tiny_cfg()
+        };
+        let map: Arc<dyn ConcurrentMap> = Arc::new(DHashMap::with_buckets(cfg.nbuckets, 3));
+        prefill(&*map, &cfg);
+        let rep = run(map, &cfg);
+        assert!(rep.total_ops > 500, "ops {}", rep.total_ops);
         rcu_barrier();
     }
 

@@ -9,21 +9,40 @@ pub enum Op {
     Lookup,
     Insert,
     Delete,
+    /// Last-wins overwrite-or-insert ([`crate::map::ConcurrentMap::upsert`]):
+    /// the serving-shaped write the coordinator's `Put` issues. Population-
+    /// neutral for keys already present, so it composes with the paper's
+    /// stationary insert==delete protocol.
+    Upsert,
 }
 
 /// The paper's operation mix `m`: a lookup percentage, with the remainder
 /// split evenly between inserts and deletes (keeping the population
-/// stationary, §6.1).
+/// stationary, §6.1). Optionally a slice of the lookup share can be
+/// re-dedicated to upserts ([`OpMix::with_upserts`]) to model overwrite-
+/// heavy serving traffic; inserts still equal deletes, so the population
+/// stays stationary.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct OpMix {
     /// Lookup share in percent (0..=100).
     pub lookup: u8,
+    /// Upsert share in percent, carved out of the lookup share
+    /// (`upsert <= lookup`; 0 = the paper's original mix).
+    pub upsert: u8,
 }
 
 impl OpMix {
     pub fn lookup_pct(lookup: u8) -> Self {
         assert!(lookup <= 100);
-        Self { lookup }
+        Self { lookup, upsert: 0 }
+    }
+
+    /// The paper's mix with `upsert` points of the lookup share issued as
+    /// last-wins upserts instead (read-mostly serving traffic with
+    /// overwrites).
+    pub fn with_upserts(lookup: u8, upsert: u8) -> Self {
+        assert!(lookup <= 100 && upsert <= lookup);
+        Self { lookup, upsert }
     }
 
     /// Sample an operation.
@@ -31,7 +50,11 @@ impl OpMix {
     pub fn pick(&self, rng: &mut SplitMix64) -> Op {
         let r = rng.next_bounded(100) as u8;
         if r < self.lookup {
-            Op::Lookup
+            if r < self.upsert {
+                Op::Upsert
+            } else {
+                Op::Lookup
+            }
         } else if (r - self.lookup) % 2 == 0 {
             Op::Insert
         } else {
@@ -113,23 +136,41 @@ impl Iterator for ShardedAttackGen {
 mod tests {
     use super::*;
 
-    #[test]
-    fn mix_respects_ratios() {
-        let mix = OpMix::lookup_pct(90);
-        let mut rng = SplitMix64::new(1);
-        let mut counts = [0u32; 3];
+    fn count_ops(mix: OpMix, seed: u64) -> [u32; 4] {
+        let mut rng = SplitMix64::new(seed);
+        let mut counts = [0u32; 4];
         for _ in 0..100_000 {
             match mix.pick(&mut rng) {
                 Op::Lookup => counts[0] += 1,
                 Op::Insert => counts[1] += 1,
                 Op::Delete => counts[2] += 1,
+                Op::Upsert => counts[3] += 1,
             }
         }
+        counts
+    }
+
+    #[test]
+    fn mix_respects_ratios() {
+        let counts = count_ops(OpMix::lookup_pct(90), 1);
         let l = counts[0] as f64 / 1e5;
         assert!((l - 0.90).abs() < 0.01, "lookup share {l}");
-        // insert ~= delete.
+        // insert ~= delete; the plain mix never upserts.
         let ratio = counts[1] as f64 / counts[2] as f64;
         assert!((0.8..1.25).contains(&ratio), "ins/del ratio {ratio}");
+        assert_eq!(counts[3], 0, "lookup_pct mix must not upsert");
+    }
+
+    #[test]
+    fn mix_with_upserts_carves_the_lookup_share() {
+        let counts = count_ops(OpMix::with_upserts(90, 20), 3);
+        let l = counts[0] as f64 / 1e5;
+        let u = counts[3] as f64 / 1e5;
+        assert!((u - 0.20).abs() < 0.01, "upsert share {u}");
+        assert!((l - 0.70).abs() < 0.01, "lookup share {l}");
+        // The update halves are untouched: insert ~= delete ~= 5%.
+        let i = counts[1] as f64 / 1e5;
+        assert!((i - 0.05).abs() < 0.01, "insert share {i}");
     }
 
     #[test]

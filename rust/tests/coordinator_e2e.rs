@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use dhash::coordinator::{
     BatcherConfig, ControllerConfig, Coordinator, CoordinatorConfig, DetectorConfig, Request,
-    Response,
+    Response, SubmitError,
 };
 use dhash::dhash::HashFn;
 use dhash::torture::{AttackGen, ShardedAttackGen};
@@ -17,6 +17,7 @@ fn attack_config(nbuckets: usize) -> CoordinatorConfig {
         nbuckets,
         hash: HashFn::Modulo, // vulnerable on purpose
         shards: 1,
+        lanes: 1,
         workers: 2,
         batcher: BatcherConfig {
             max_batch: 64,
@@ -153,6 +154,60 @@ fn targeted_mitigation_rebuilds_only_attacked_shard() {
     // The service still works and holds the flooded data.
     assert_eq!(c.execute(Request::get(first_key)), Response::Value(first_key));
     c.shutdown();
+}
+
+#[test]
+fn pipelined_tickets_end_to_end() {
+    // The completion-based ingest path under the full service (analytics
+    // on): submit a pipeline of tickets without waiting, then resolve
+    // them all — responses must come back in submission order — through
+    // both the single-lane and multi-lane (sharded) configurations.
+    for (lanes, shards) in [(1usize, 1usize), (4, 4)] {
+        let mut cfg = attack_config(1024);
+        cfg.hash = HashFn::Seeded(0xfeed); // benign service
+        cfg.lanes = lanes;
+        cfg.shards = shards;
+        let c = Arc::new(Coordinator::start(cfg).unwrap());
+        let n = 3000u64;
+
+        // Phase 1: a wave of puts, all in flight at once.
+        let client = c.client();
+        let puts: Vec<Request> = (0..n).map(|k| Request::put(k, k ^ 0xabcd)).collect();
+        let mut batches = Vec::new();
+        for chunk in puts.chunks(256) {
+            batches.push(client.submit_batch(chunk).unwrap());
+        }
+        for bt in &batches {
+            assert!(bt.wait().unwrap().iter().all(|r| *r == Response::Ok));
+        }
+
+        // Phase 2: concurrent clients pipeline gets; each thread's
+        // responses must line up with its own submission order.
+        let mut threads = Vec::new();
+        for t in 0..3u64 {
+            let c2 = c.clone();
+            threads.push(std::thread::spawn(move || {
+                let client = c2.client();
+                let keys: Vec<u64> = (0..n).filter(|k| k % 3 == t).collect();
+                let gets: Vec<Request> = keys.iter().map(|&k| Request::get(k)).collect();
+                let bt = client.submit_batch(&gets).unwrap();
+                let resps = bt.wait().unwrap();
+                assert_eq!(resps.len(), keys.len());
+                for (k, r) in keys.iter().zip(resps) {
+                    assert_eq!(r, Response::Value(k ^ 0xabcd), "lanes={lanes} key {k}");
+                }
+            }));
+        }
+        for h in threads {
+            h.join().unwrap();
+        }
+        c.shutdown();
+        // Post-shutdown submissions fail cleanly.
+        assert_eq!(
+            c.client().submit(Request::get(0)).err(),
+            Some(SubmitError::Shutdown)
+        );
+    }
 }
 
 #[test]

@@ -20,16 +20,18 @@ enum Op {
     Insert(u64, u64),
     Delete(u64),
     Lookup(u64),
+    Upsert(u64, u64),
     Rebuild(usize, u64),
 }
 
 fn gen_ops(g: &mut Gen, max_len: usize, key_space: u64) -> Vec<Op> {
     g.vec(max_len, |g| {
         let k = g.range(0, key_space);
-        match g.usize_in(0, 10) {
+        match g.usize_in(0, 12) {
             0..=3 => Op::Insert(k, g.u64() >> 1),
             4..=6 => Op::Delete(k),
             7..=8 => Op::Lookup(k),
+            9..=10 => Op::Upsert(k, g.u64() >> 1),
             _ => Op::Rebuild(g.usize_in(1, 6) * 16, g.u64()),
         }
     })
@@ -65,6 +67,16 @@ fn run_against_model(map: &dyn ConcurrentMap, ops: &[Op]) -> Result<(), String> 
                 if got != want {
                     return Err(format!("op {i} {op:?}: lookup {got:?}, model {want:?}"));
                 }
+            }
+            Op::Upsert(k, v) => {
+                // Last-wins overwrite-or-insert: returns whether the key
+                // was newly inserted; the model afterwards holds v.
+                let want = !model.contains_key(&k);
+                let got = map.upsert(&g, k, v);
+                if got != want {
+                    return Err(format!("op {i} {op:?}: upsert returned {got}, model {want}"));
+                }
+                model.insert(k, v);
             }
             Op::Rebuild(nb, seed) => {
                 // Single-threaded: a rebuild must always succeed and
