@@ -25,6 +25,23 @@ def batch_hash_ref(keys: np.ndarray, seed: int, nbuckets: int, kind: int) -> np.
     return out
 
 
+def batch_hash_multi_ref(keys: np.ndarray, shard_ids, shard_params) -> np.ndarray:
+    """Oracle for the vectorized multi-shard routing kernel
+    (rust ``runtime::Engine::batch_hash_multi``): one composite
+    ``(shard << 32) | bucket`` routing id per key, each key hashed with
+    its shard's ``(seed, nbuckets, kind)`` from ``shard_params``."""
+    assert len(shard_ids) == keys.shape[0]
+    out = np.empty(keys.shape[0], dtype=np.int64)
+    for i, (k, s) in enumerate(zip(keys.tolist(), list(shard_ids))):
+        seed, nbuckets, kind = shard_params[int(s)]
+        if kind == 0:
+            bucket = k % nbuckets
+        else:
+            bucket = mix64_py(k ^ seed) % nbuckets
+        out[i] = (int(s) << 32) | bucket
+    return out
+
+
 def bucket_histogram_ref(ids: np.ndarray, nbins: int, block: int) -> np.ndarray:
     """Oracle for hist_kernel.bucket_histogram (per-block partials)."""
     b = ids.shape[0]

@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 
 use common::{full_mode, make_table, measure_window, repeats};
 use dhash::baselines::ConcurrentMap;
-use dhash::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use dhash::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, PreRoute, Request};
 use dhash::dhash::{DHashMap, HashFn};
 use dhash::lflist::{CowSortedArray, MichaelList, SpinlockList};
 use dhash::rcu::{rcu_barrier, RcuThread};
@@ -171,19 +171,26 @@ fn bench_distrib() {
 }
 
 fn bench_batchhash() {
-    println!(
-        "# ablation batchhash: coordinator throughput, batch pre-hashing x ingest lanes"
-    );
-    for (lanes, pre_hash) in [(1, false), (1, true), (4, false), (4, true)] {
+    println!("# ablation batchhash: coordinator throughput, pre-route mode x ingest lanes");
+    // Sharded rows separate the shard-order baseline from the full
+    // (shard, bucket) composite order one batch_hash_multi call buys.
+    for (lanes, shards, pre_route) in [
+        (1, 1, PreRoute::Off),
+        (1, 1, PreRoute::Bucket),
+        (4, 4, PreRoute::Off),
+        (4, 4, PreRoute::Shard),
+        (4, 4, PreRoute::Bucket),
+    ] {
         let cfg = CoordinatorConfig {
             nbuckets: 4096,
             hash: HashFn::Seeded(9),
+            shards,
             lanes,
             workers: 2,
             batcher: BatcherConfig {
                 max_batch: 64,
                 max_wait: Duration::from_micros(200),
-                pre_hash,
+                pre_route,
             },
             enable_analytics: true,
             ..Default::default()
@@ -225,12 +232,24 @@ fn bench_batchhash() {
         for cl in clients {
             cl.join().unwrap();
         }
-        let reqs = done.load(Ordering::Relaxed);
-        println!(
-            "batchhash pre_hash={pre_hash:<5} lanes={lanes} req_per_s={:.0}",
-            reqs as f64 / window.as_secs_f64()
-        );
         c.shutdown();
+        let reqs = done.load(Ordering::Relaxed);
+        let st = c.stats();
+        println!(
+            "batchhash pre_route={:<6} lanes={lanes} shards={shards} req_per_s={:.0} \
+             routed={} fb_len={} fb_eng={}",
+            pre_route.label(),
+            reqs as f64 / window.as_secs_f64(),
+            st.pre_routed_batches,
+            st.pre_route_fallbacks_length,
+            st.pre_route_fallbacks_engine
+        );
+        if common::smoke_mode() && pre_route != PreRoute::Off {
+            // The native engine serves every pre-route: a fallback here
+            // means the silent-degradation bug is back.
+            assert_eq!(st.pre_route_fallbacks_engine, 0, "engine fallbacks in smoke run");
+            assert_eq!(st.pre_route_fallbacks_length, 0, "length fallbacks in smoke run");
+        }
     }
 }
 

@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use dhash::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use dhash::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, PreRoute, Request};
 use dhash::dhash::HashFn;
 use dhash::util::SplitMix64;
 
@@ -46,7 +46,7 @@ fn main() {
                 batcher: BatcherConfig {
                     max_batch: BATCH,
                     max_wait: Duration::from_micros(200),
-                    pre_hash: false,
+                    pre_route: PreRoute::Off,
                 },
                 enable_analytics: false, // pure ingest-path measurement
                 ..Default::default()

@@ -5,20 +5,136 @@
 //! at a time), so the sweep measures exactly what sharding buys: smaller
 //! migration working sets and rebuild/update parallelism across shards.
 //!
+//! A second sweep drives the sharded *coordinator* over the pre-route
+//! axis (off | shard | bucket): the locality win of sorting batches by
+//! the full `(shard, bucket)` composite id from one `batch_hash_multi`
+//! engine call, vs shard-id order, vs arrival order.
+//!
 //! Under `DHASH_SMOKE=1` the rows are also written to
-//! `BENCH_shard_scale.json` (see `common::BenchJson`).
+//! `BENCH_shard_scale.json` (see `common::BenchJson`), and the smoke run
+//! asserts the sharded bucket-order path reports zero engine fallbacks.
 
 mod common;
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
+use dhash::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, CoordinatorStats, PreRoute, Request,
+};
+use dhash::dhash::HashFn;
 use dhash::map::ConcurrentMap;
 use dhash::rcu::rcu_barrier;
 use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
-use dhash::util::Summary;
+use dhash::util::{SplitMix64, Summary};
 
 const TOTAL_BUCKETS: usize = 1024;
 const SHARD_SWEEP: [usize; 3] = [1, 4, 16];
+
+/// Coordinator ingest throughput for one (shards, pre_route) cell, plus
+/// the run's routing counters.
+fn pre_route_cell(shards: usize, pre_route: PreRoute) -> (f64, CoordinatorStats) {
+    let cfg = CoordinatorConfig {
+        // >= detector nbins per shard, so analytics (which Bucket mode
+        // needs for its engine) reads healthy chi2 on benign load.
+        nbuckets: 1024,
+        hash: HashFn::Seeded(0x5eed),
+        shards,
+        lanes: shards.min(4),
+        workers: 2,
+        batcher: BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            pre_route,
+        },
+        enable_analytics: true,
+        ..Default::default()
+    };
+    let c = Arc::new(Coordinator::start(cfg).expect("default engine"));
+    let stop = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for t in 0..2u64 {
+        let c2 = c.clone();
+        let s2 = stop.clone();
+        let d2 = done.clone();
+        clients.push(std::thread::spawn(move || {
+            let kv = c2.client();
+            let mut rng = SplitMix64::new(t + 1);
+            while !s2.load(Ordering::Relaxed) {
+                let reqs: Vec<Request> = (0..64)
+                    .map(|_| {
+                        let k = rng.next_bounded(1_000_000);
+                        if rng.next_f64() < 0.9 {
+                            Request::get(k)
+                        } else {
+                            Request::put(k, k)
+                        }
+                    })
+                    .collect();
+                let n = reqs.len() as u64;
+                match kv.submit_batch(&reqs) {
+                    Ok(ticket) => {
+                        let _ = ticket.wait();
+                        d2.fetch_add(n, Ordering::Relaxed);
+                    }
+                    Err(_) => break,
+                }
+            }
+        }));
+    }
+    let window = common::measure_window();
+    std::thread::sleep(window);
+    stop.store(true, Ordering::Relaxed);
+    for cl in clients {
+        cl.join().unwrap();
+    }
+    c.shutdown();
+    let req_per_s = done.load(Ordering::Relaxed) as f64 / window.as_secs_f64();
+    (req_per_s, c.stats())
+}
+
+fn bench_pre_route(json: &mut common::BenchJson) {
+    println!("# shard_scale pre-route axis: coordinator ingest, off|shard|bucket");
+    for &shards in &[1usize, 4] {
+        for pre_route in [PreRoute::Off, PreRoute::Shard, PreRoute::Bucket] {
+            let (req_per_s, st) = pre_route_cell(shards, pre_route);
+            println!(
+                "shard_scale shards={shards:<3} pre_route={:<6} req_per_s={req_per_s:<10.0} \
+                 routed={} fb_len={} fb_eng={}",
+                pre_route.label(),
+                st.pre_routed_batches,
+                st.pre_route_fallbacks_length,
+                st.pre_route_fallbacks_engine
+            );
+            json.row(
+                "ingest",
+                &[
+                    ("shards", shards as f64),
+                    ("pre_route", pre_route.code() as f64),
+                    ("req_per_s", req_per_s),
+                    ("pre_routed_batches", st.pre_routed_batches as f64),
+                    ("fallbacks_engine", st.pre_route_fallbacks_engine as f64),
+                ],
+            );
+            if common::smoke_mode() && pre_route != PreRoute::Off {
+                // The CI gate for the silent-degradation bug: on the
+                // native engine, every sharded pre-route must succeed.
+                assert_eq!(
+                    st.pre_route_fallbacks_engine, 0,
+                    "shards={shards} {}: engine fallbacks in smoke run",
+                    pre_route.label()
+                );
+                assert_eq!(
+                    st.pre_route_fallbacks_length, 0,
+                    "shards={shards} {}: length fallbacks in smoke run",
+                    pre_route.label()
+                );
+            }
+        }
+    }
+}
 
 fn main() {
     common::print_host_table1();
@@ -60,6 +176,7 @@ fn main() {
             );
         }
     }
+    bench_pre_route(&mut json);
     json.flush();
     rcu_barrier();
 }

@@ -37,7 +37,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use dhash::coordinator::{
-    BatcherConfig, ControllerConfig, Coordinator, CoordinatorConfig, DetectorConfig, Request,
+    BatcherConfig, ControllerConfig, Coordinator, CoordinatorConfig, DetectorConfig, PreRoute,
+    Request,
 };
 use dhash::dhash::HashFn;
 use dhash::torture::{AttackGen, ShardedAttackGen};
@@ -82,7 +83,7 @@ fn main() -> anyhow::Result<()> {
         batcher: BatcherConfig {
             max_batch: 64,
             max_wait: Duration::from_micros(200),
-            pre_hash: false,
+            pre_route: PreRoute::Off,
         },
         detector: DetectorConfig {
             sample_capacity: 4096,

@@ -171,13 +171,77 @@ impl IngestLanes {
     }
 }
 
+/// How (and whether) the batcher pre-sorts each batch by routing id
+/// before handing it to a worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreRoute {
+    /// No pre-routing: batches stay in arrival order.
+    Off,
+    /// Sort by shard id only — the pre-`batch_hash_multi` behavior, kept
+    /// as an ablation baseline. Needs no engine; a worker walks shards
+    /// in order but touches each shard's buckets in arrival order.
+    Shard,
+    /// Sort by the full `(shard << 32) | bucket` composite id, computed
+    /// by ONE vectorized [`crate::runtime::Engine::batch_hash_multi`]
+    /// call over every shard's current geometry. Requires the engine
+    /// (`enable_analytics`); without it every batch counts an
+    /// engine-fallback and is delivered un-routed.
+    Bucket,
+}
+
+impl PreRoute {
+    /// Stable label for bench rows and logs.
+    pub fn label(self) -> &'static str {
+        match self {
+            PreRoute::Off => "off",
+            PreRoute::Shard => "shard",
+            PreRoute::Bucket => "bucket",
+        }
+    }
+
+    /// Numeric code for JSON bench rows (off=0, shard=1, bucket=2).
+    pub fn code(self) -> u8 {
+        match self {
+            PreRoute::Off => 0,
+            PreRoute::Shard => 1,
+            PreRoute::Bucket => 2,
+        }
+    }
+}
+
+/// What happened to one batch's pre-route attempt. Everything but
+/// `Routed`/`Unrouted` is a *fallback*: the batch is still delivered in
+/// arrival order, and the server counts the cause in
+/// [`super::CoordinatorStats`] — routing degradation is never silent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteOutcome {
+    /// Entries were sorted by routing id.
+    Routed,
+    /// Pre-routing is off (or no oracle was supplied): arrival order by
+    /// design, not a failure.
+    Unrouted,
+    /// The oracle answered with the wrong number of ids (exact-length
+    /// guard: a short answer would drop entries and fail their
+    /// completion slots, so the batch keeps arrival order instead).
+    FallbackLength,
+    /// The oracle's engine failed or was unavailable.
+    FallbackEngine,
+}
+
 /// A batch handed to a KV worker.
 pub struct Batch {
     pub(crate) entries: Vec<Entry>,
-    /// Set by the batcher when pre-hashing is enabled: entries are sorted
-    /// by routing id so a worker touches buckets in order (locality; the
-    /// `batchhash` ablation measures the effect).
-    pub pre_hashed: bool,
+    /// Why (or why not) this batch was pre-routed.
+    pub outcome: RouteOutcome,
+}
+
+impl Batch {
+    /// True when entries are sorted by routing id so a worker touches
+    /// shards and buckets in order (locality; the `batchhash` ablation
+    /// and `shard_scale` pre-route axis measure the effect).
+    pub fn pre_hashed(&self) -> bool {
+        self.outcome == RouteOutcome::Routed
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -186,11 +250,9 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Max time to wait filling a batch once it has at least one entry.
     pub max_wait: Duration,
-    /// Sort each batch by routing id (requires analytics; no-op without
-    /// it). Unsharded: bucket id via the AOT batch-hash artifact.
-    /// Sharded: the fixed shard-selector id, so a worker walks shards in
-    /// order (the per-shard hash may diverge after targeted mitigations).
-    pub pre_hash: bool,
+    /// Pre-route mode: sort each batch by routing id before it reaches a
+    /// worker (see [`PreRoute`]).
+    pub pre_route: PreRoute,
 }
 
 impl Default for BatcherConfig {
@@ -198,14 +260,14 @@ impl Default for BatcherConfig {
         Self {
             max_batch: 64,
             max_wait: Duration::from_micros(200),
-            pre_hash: false,
+            pre_route: PreRoute::Off,
         }
     }
 }
 
 /// The per-lane batching loop: runs on its own thread, draining one
-/// lane's channel into batches. `hash_fn` (when pre-hashing) maps keys
-/// to bucket ids via the analytics thread.
+/// lane's channel into batches. `route`'s oracle (when pre-routing)
+/// maps keys to i64 routing ids via the lane's own engine.
 pub struct Batcher {
     pub(crate) cfg: BatcherConfig,
 }
@@ -244,40 +306,40 @@ impl Batcher {
     }
 
     /// Turn collected entries into a [`Batch`], pre-routing (sorting by
-    /// bucket id) when enabled and the hash oracle is available. Runs
-    /// RCU-online (it may read the table's current hash function).
+    /// the i64 routing id the oracle computes — composite
+    /// `(shard, bucket)` ids under [`PreRoute::Bucket`]) when enabled.
+    /// Runs RCU-online (the oracle reads the shards' current geometry).
+    /// Every non-`Routed` path delivers the batch in arrival order and
+    /// says why in [`Batch::outcome`] — no invisible fallback arm.
     pub(crate) fn route(
         &self,
         mut entries: Vec<Entry>,
-        hash_ids: Option<&dyn Fn(&[u64]) -> Option<Vec<i32>>>,
+        hash_ids: Option<&dyn Fn(&[u64]) -> Option<Vec<i64>>>,
     ) -> Batch {
-        let mut pre_hashed = false;
-        if self.cfg.pre_hash {
-            if let Some(hash_ids) = hash_ids {
-                let keys: Vec<u64> = entries.iter().map(|e| e.key()).collect();
-                match hash_ids(&keys) {
-                    // Engines may return fewer ids than keys (the kernel
-                    // batch caps at `Engine::batch()`); zipping a short id
-                    // vector would silently drop entries — and fail their
-                    // completion slots. Pre-route only on an exact-length
-                    // answer.
-                    Some(ids) if ids.len() == entries.len() => {
-                        // Stable sort by bucket id (preserves per-key op
-                        // order within the batch).
-                        let mut tagged: Vec<(i32, Entry)> =
-                            ids.into_iter().zip(entries).collect();
-                        tagged.sort_by_key(|(id, _)| *id);
-                        entries = tagged.into_iter().map(|(_, e)| e).collect();
-                        pre_hashed = true;
-                    }
-                    _ => {}
+        let outcome = if self.cfg.pre_route == PreRoute::Off {
+            RouteOutcome::Unrouted
+        } else if let Some(hash_ids) = hash_ids {
+            let keys: Vec<u64> = entries.iter().map(|e| e.key()).collect();
+            match hash_ids(&keys) {
+                // Exact-length guard: zipping a short id vector would
+                // silently drop entries — and fail their completion
+                // slots. Engines chunk internally now, so a mismatch is
+                // an oracle bug; it is counted, not swallowed.
+                Some(ids) if ids.len() == entries.len() => {
+                    // Stable sort by routing id (preserves per-key op
+                    // order within the batch).
+                    let mut tagged: Vec<(i64, Entry)> = ids.into_iter().zip(entries).collect();
+                    tagged.sort_by_key(|(id, _)| *id);
+                    entries = tagged.into_iter().map(|(_, e)| e).collect();
+                    RouteOutcome::Routed
                 }
+                Some(_) => RouteOutcome::FallbackLength,
+                None => RouteOutcome::FallbackEngine,
             }
-        }
-        Batch {
-            entries,
-            pre_hashed,
-        }
+        } else {
+            RouteOutcome::Unrouted
+        };
+        Batch { entries, outcome }
     }
 
     /// collect + route in one call (tests / simple drivers).
@@ -285,7 +347,7 @@ impl Batcher {
     pub(crate) fn next_batch(
         &self,
         rx: &Receiver<LaneMsg>,
-        hash_ids: Option<&dyn Fn(&[u64]) -> Option<Vec<i32>>>,
+        hash_ids: Option<&dyn Fn(&[u64]) -> Option<Vec<i64>>>,
     ) -> Option<Batch> {
         let (entries, _open) = self.collect(rx);
         if entries.is_empty() {
@@ -317,7 +379,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch: 4,
             max_wait: Duration::from_secs(1),
-            pre_hash: false,
+            pre_route: PreRoute::Off,
         });
         let (tx, rx) = channel();
         let reqs: Vec<Request> = (0..10u64).map(Request::get).collect();
@@ -327,7 +389,7 @@ mod tests {
         }
         let batch = b.next_batch(&rx, None).unwrap();
         assert_eq!(batch.entries.len(), 4);
-        assert!(!batch.pre_hashed);
+        assert!(!batch.pre_hashed());
         let batch = b.next_batch(&rx, None).unwrap();
         assert_eq!(batch.entries.len(), 4);
     }
@@ -337,7 +399,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch: 1000,
             max_wait: Duration::from_millis(10),
-            pre_hash: false,
+            pre_route: PreRoute::Off,
         });
         let (tx, rx) = channel();
         let (_set, es) = entries(&[Request::get(1), Request::get(2)]);
@@ -365,7 +427,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch: 100,
             max_wait: Duration::from_secs(10), // would block forever sans Close
-            pre_hash: false,
+            pre_route: PreRoute::Off,
         });
         let (tx, rx) = channel();
         let reqs: Vec<Request> = (0..5u64).map(Request::get).collect();
@@ -441,7 +503,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(1),
-            pre_hash: false,
+            pre_route: PreRoute::Off,
         });
         let mut last_seq: std::collections::HashMap<u64, u64> = Default::default();
         let mut seen = 0usize;
@@ -487,7 +549,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
-            pre_hash: true,
+            pre_route: PreRoute::Bucket,
         });
         let (tx, rx) = channel();
         let reqs: Vec<Request> = [9u64, 1, 5, 3].iter().map(|&k| Request::get(k)).collect();
@@ -495,24 +557,95 @@ mod tests {
         for e in es {
             tx.send(LaneMsg::Req(e)).unwrap();
         }
-        // Fake hash: bucket = key (identity).
-        let hash = |keys: &[u64]| Some(keys.iter().map(|&k| k as i32).collect());
+        // Fake hash: routing id = key (identity).
+        let hash = |keys: &[u64]| Some(keys.iter().map(|&k| k as i64).collect());
         let batch = b.next_batch(&rx, Some(&hash)).unwrap();
-        assert!(batch.pre_hashed);
+        assert!(batch.pre_hashed());
+        assert_eq!(batch.outcome, RouteOutcome::Routed);
         let keys: Vec<u64> = batch.entries.iter().map(|e| e.key()).collect();
         assert_eq!(keys, vec![1, 3, 5, 9]);
     }
 
     #[test]
-    fn pre_hash_with_short_id_vector_keeps_all_entries() {
-        // An engine whose kernel batch is smaller than the request batch
-        // returns fewer ids than keys; routing must keep every entry (a
-        // dropped entry would fail its completion slot) and fall back to
-        // un-routed order.
+    fn composite_ids_sort_shard_major_bucket_minor() {
+        // Composite (shard << 32) | bucket ids: the sort must group by
+        // shard first, then bucket — full bucket-order locality, not the
+        // old shard-id-only order.
+        use crate::runtime::composite_route_id;
         let b = Batcher::new(BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
-            pre_hash: true,
+            pre_route: PreRoute::Bucket,
+        });
+        let (tx, rx) = channel();
+        // key encodes (shard, bucket) as shard*100 + bucket.
+        let reqs: Vec<Request> = [102u64, 3, 105, 201, 7, 104]
+            .iter()
+            .map(|&k| Request::get(k))
+            .collect();
+        let (_set, es) = entries(&reqs);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
+        }
+        let hash = |keys: &[u64]| {
+            Some(
+                keys.iter()
+                    .map(|&k| composite_route_id((k / 100) as u32, (k % 100) as u32))
+                    .collect(),
+            )
+        };
+        let batch = b.next_batch(&rx, Some(&hash)).unwrap();
+        assert_eq!(batch.outcome, RouteOutcome::Routed);
+        let keys: Vec<u64> = batch.entries.iter().map(|e| e.key()).collect();
+        assert_eq!(keys, vec![3, 7, 102, 104, 105, 201]);
+    }
+
+    #[test]
+    fn pre_route_with_small_kernel_batch_still_sorts() {
+        // Regression for the silent-truncation bug: an engine whose
+        // kernel batch (8) is smaller than max_batch (64) used to answer
+        // with a truncated id vector, fail the exact-length check, and
+        // deliver every batch un-routed through an invisible `_ => {}`
+        // arm. batch_hash now chunks internally, so the real engine
+        // pre-routes oversized batches.
+        use crate::runtime::{Engine, HashKind, NativeEngine};
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(1),
+            pre_route: PreRoute::Bucket,
+        });
+        let (tx, rx) = channel();
+        let reqs: Vec<Request> = (0..64u64).rev().map(Request::get).collect();
+        let (_set, es) = entries(&reqs);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
+        }
+        let engine = NativeEngine::with_shape(8, 4);
+        assert!(b.cfg.max_batch > engine.batch());
+        let oracle = |keys: &[u64]| -> Option<Vec<i64>> {
+            let ids = engine.batch_hash(keys, 1, 16, HashKind::Seeded).ok()?;
+            Some(ids.into_iter().map(i64::from).collect())
+        };
+        let batch = b.next_batch(&rx, Some(&oracle)).unwrap();
+        assert!(
+            batch.pre_hashed(),
+            "a kernel batch below max_batch must no longer kill pre-routing"
+        );
+        assert_eq!(batch.outcome, RouteOutcome::Routed);
+        assert_eq!(batch.entries.len(), 64);
+        let ids: Vec<i64> = batch.entries.iter().map(|e| oracle(&[e.key()]).unwrap()[0]).collect();
+        assert!(ids.windows(2).all(|w| w[0] <= w[1]), "not bucket-sorted");
+    }
+
+    #[test]
+    fn pre_hash_with_short_id_vector_keeps_all_entries() {
+        // A buggy oracle answering with fewer ids than keys must keep
+        // every entry (a dropped entry would fail its completion slot),
+        // fall back to arrival order, and report the length cause.
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            pre_route: PreRoute::Bucket,
         });
         let (tx, rx) = channel();
         let reqs: Vec<Request> = [9u64, 1, 5, 3].iter().map(|&k| Request::get(k)).collect();
@@ -520,10 +653,52 @@ mod tests {
         for e in es {
             tx.send(LaneMsg::Req(e)).unwrap();
         }
-        let hash = |keys: &[u64]| Some(keys.iter().take(2).map(|&k| k as i32).collect());
+        let hash = |keys: &[u64]| Some(keys.iter().take(2).map(|&k| k as i64).collect());
         let batch = b.next_batch(&rx, Some(&hash)).unwrap();
-        assert!(!batch.pre_hashed);
+        assert!(!batch.pre_hashed());
+        assert_eq!(batch.outcome, RouteOutcome::FallbackLength);
         assert_eq!(batch.entries.len(), 4);
+        let keys: Vec<u64> = batch.entries.iter().map(|e| e.key()).collect();
+        assert_eq!(keys, vec![9, 1, 5, 3], "fallback must keep arrival order");
+    }
+
+    #[test]
+    fn failing_oracle_falls_back_with_engine_cause() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            pre_route: PreRoute::Bucket,
+        });
+        let (tx, rx) = channel();
+        let (_set, es) = entries(&[Request::get(4), Request::get(2)]);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
+        }
+        let hash = |_keys: &[u64]| -> Option<Vec<i64>> { None };
+        let batch = b.next_batch(&rx, Some(&hash)).unwrap();
+        assert!(!batch.pre_hashed());
+        assert_eq!(batch.outcome, RouteOutcome::FallbackEngine);
+        assert_eq!(batch.entries.len(), 2);
+        // Off mode never consults the oracle: Unrouted, not a fallback.
+        let b_off = Batcher::new(BatcherConfig::default());
+        let (tx, rx) = channel();
+        let (_set, es) = entries(&[Request::get(1)]);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
+        }
+        let batch = b_off.next_batch(&rx, Some(&hash)).unwrap();
+        assert_eq!(batch.outcome, RouteOutcome::Unrouted);
+    }
+
+    #[test]
+    fn pre_route_labels_and_codes() {
+        assert_eq!(PreRoute::Off.label(), "off");
+        assert_eq!(PreRoute::Shard.label(), "shard");
+        assert_eq!(PreRoute::Bucket.label(), "bucket");
+        assert_eq!(
+            [PreRoute::Off.code(), PreRoute::Shard.code(), PreRoute::Bucket.code()],
+            [0, 1, 2]
+        );
     }
 
     #[test]

@@ -157,7 +157,10 @@ impl CompletionSet {
     /// Block until every slot is resolved, or `timeout` (if given)
     /// elapses. True = done.
     fn wait_done(&self, timeout: Option<Duration>) -> bool {
-        let deadline = timeout.map(|t| Instant::now() + t);
+        // `Instant + Duration` panics on overflow, which a huge timeout
+        // (`Duration::MAX` as "effectively forever") would hit; overflow
+        // means the deadline is unreachable, so treat it as no deadline.
+        let deadline = timeout.and_then(|t| Instant::now().checked_add(t));
         let mut g = self.lock.lock().unwrap();
         while self.remaining.load(Ordering::Acquire) != 0 {
             match deadline {
@@ -353,6 +356,30 @@ mod tests {
         assert_eq!(t.wait(), Ok(Response::Value(99)));
         assert_eq!(t.poll(), Some(Ok(Response::Value(99))));
         h.join().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_duration_max_means_forever_not_panic() {
+        // Regression: the deadline used to be `Instant::now() + t`,
+        // which panics on overflow for Duration::MAX. It must behave
+        // like an untimed wait instead.
+        let set = Arc::new(CompletionSet::new(1));
+        let t = Ticket { set: set.clone() };
+        let s2 = set.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            s2.fulfill(0, Response::Value(5));
+        });
+        assert_eq!(t.wait_timeout(Duration::MAX), Some(Ok(Response::Value(5))));
+        h.join().unwrap();
+        // Already-done sets resolve immediately under the same timeout.
+        let set = Arc::new(CompletionSet::new(1));
+        set.fulfill(0, Response::Ok);
+        let bt = BatchTicket { set };
+        assert_eq!(
+            bt.wait_timeout(Duration::MAX).unwrap().unwrap(),
+            vec![Response::Ok]
+        );
     }
 
     #[test]

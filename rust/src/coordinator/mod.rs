@@ -38,7 +38,7 @@ mod controller;
 mod detector;
 mod server;
 
-pub use batcher::{Batch, Batcher, BatcherConfig, Request, Response};
+pub use batcher::{Batch, Batcher, BatcherConfig, PreRoute, Request, Response, RouteOutcome};
 pub use client::{BatchTicket, KvClient, SubmitError, Ticket};
 pub use controller::{ControllerConfig, RebuildController, RebuildEvent};
 pub use detector::{DetectorConfig, KeySampler, SkewVerdict};
@@ -61,7 +61,7 @@ mod tests {
             batcher: BatcherConfig {
                 max_batch: 16,
                 max_wait: Duration::from_micros(200),
-                pre_hash: false,
+                pre_route: PreRoute::Off,
             },
             detector: DetectorConfig {
                 sample_capacity: 1024,
@@ -147,6 +147,52 @@ mod tests {
         assert_eq!(c.stats().rebuilds, 1);
         assert_eq!(c.map().shards(), 4);
         c.shutdown();
+    }
+
+    #[test]
+    fn failing_oracle_counts_engine_fallbacks_but_still_serves() {
+        // Bucket pre-routing without analytics has no engine: every
+        // batch's pre-route attempt must fail *visibly* (the old code
+        // swallowed this in a `_ => {}` arm) while the batch is still
+        // delivered and every request answered.
+        let mut cfg = quick_config();
+        cfg.shards = 4;
+        cfg.batcher.pre_route = PreRoute::Bucket;
+        assert!(!cfg.enable_analytics, "test needs the engine absent");
+        let c = Arc::new(Coordinator::start(cfg).unwrap());
+        let reqs: Vec<Request> = (0..200u64).map(|k| Request::put(k, k + 1)).collect();
+        let resps = c.execute_many(reqs);
+        assert!(resps.iter().all(|r| *r == Response::Ok));
+        for k in 0..200u64 {
+            assert_eq!(c.execute(Request::get(k)), Response::Value(k + 1));
+        }
+        c.shutdown();
+        let st = c.stats();
+        assert!(st.total_batches >= 1);
+        assert_eq!(
+            st.pre_route_fallbacks_engine, st.total_batches,
+            "every batch must count its failed pre-route attempt"
+        );
+        assert_eq!(st.pre_routed_batches, 0);
+        assert_eq!(st.pre_route_fallbacks_length, 0);
+    }
+
+    #[test]
+    fn shard_order_pre_route_needs_no_engine() {
+        // PreRoute::Shard uses the fixed selector: it must route (and
+        // count as routed) even with analytics off.
+        let mut cfg = quick_config();
+        cfg.shards = 4;
+        cfg.batcher.pre_route = PreRoute::Shard;
+        let c = Arc::new(Coordinator::start(cfg).unwrap());
+        let reqs: Vec<Request> = (0..200u64).map(|k| Request::put(k, k)).collect();
+        assert!(c.execute_many(reqs).iter().all(|r| *r == Response::Ok));
+        c.shutdown();
+        let st = c.stats();
+        assert!(st.total_batches >= 1);
+        assert_eq!(st.pre_routed_batches, st.total_batches);
+        assert_eq!(st.pre_route_fallbacks_engine, 0);
+        assert_eq!(st.pre_route_fallbacks_length, 0);
     }
 
     #[test]

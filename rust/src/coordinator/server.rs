@@ -14,14 +14,16 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::batcher::{Batch, Batcher, BatcherConfig, IngestLanes, LaneMsg, Request, Response};
+use super::batcher::{
+    Batch, Batcher, BatcherConfig, IngestLanes, LaneMsg, PreRoute, Request, Response, RouteOutcome,
+};
 use super::client::KvClient;
 use super::controller::{ControllerConfig, RebuildController};
 use super::detector::{partition_by_shard, DetectorConfig, KeySampler, SkewVerdict};
 use crate::dhash::{HashFn, ShardedDHash};
 use crate::map::ConcurrentMap;
 use crate::rcu::RcuThread;
-use crate::runtime::{load_engine, Engine, HashKind};
+use crate::runtime::{load_engine, Engine, HashKind, ShardParams};
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -74,6 +76,16 @@ impl Default for CoordinatorConfig {
 pub struct CoordinatorStats {
     pub total_requests: u64,
     pub total_batches: u64,
+    /// Batches pre-route-sorted by routing id (composite `(shard,
+    /// bucket)` order under [`PreRoute::Bucket`]).
+    pub pre_routed_batches: u64,
+    /// Pre-route attempts abandoned because the oracle answered with the
+    /// wrong number of ids (the exact-length guard; a truncating engine
+    /// surfaces here instead of silently dropping entries).
+    pub pre_route_fallbacks_length: u64,
+    /// Pre-route attempts abandoned because the routing engine failed or
+    /// was unavailable (e.g. `pre_route: Bucket` without analytics).
+    pub pre_route_fallbacks_engine: u64,
     /// Mitigation + manual rebuilds completed (a staggered whole-map
     /// rebuild counts once).
     pub rebuilds: u64,
@@ -93,6 +105,9 @@ struct Shared {
     stop: AtomicBool,
     total_requests: AtomicU64,
     total_batches: AtomicU64,
+    pre_routed_batches: AtomicU64,
+    pre_route_fallbacks_length: AtomicU64,
+    pre_route_fallbacks_engine: AtomicU64,
     rebuilds: AtomicU64,
     detector_runs: AtomicU64,
     /// f32 bits of the last max-over-shards chi2.
@@ -134,6 +149,9 @@ impl Coordinator {
             stop: AtomicBool::new(false),
             total_requests: AtomicU64::new(0),
             total_batches: AtomicU64::new(0),
+            pre_routed_batches: AtomicU64::new(0),
+            pre_route_fallbacks_length: AtomicU64::new(0),
+            pre_route_fallbacks_engine: AtomicU64::new(0),
             rebuilds: AtomicU64::new(0),
             detector_runs: AtomicU64::new(0),
             last_chi2: AtomicU64::new(0),
@@ -169,16 +187,17 @@ impl Coordinator {
             let cfg_b = cfg.batcher.clone();
             let shared2 = shared.clone();
             let batch_tx = batch_tx.clone();
-            // Pre-hashing needs its own engine (backends need not be
-            // Send — the PJRT client is thread-bound — so each thread
-            // that evaluates kernels owns one).
-            let want_prehash = cfg_b.pre_hash && cfg.enable_analytics;
+            // Bucket-order pre-routing needs its own engine (backends
+            // need not be Send — the PJRT client is thread-bound — so
+            // each thread that evaluates kernels owns one). Shard-order
+            // pre-routing is the fixed selector: no engine.
+            let want_engine = cfg_b.pre_route == PreRoute::Bucket && cfg.enable_analytics;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("dhash-batcher-{lane}"))
                     .spawn(move || {
                         let batcher = Batcher::new(cfg_b);
-                        let engine: Option<Box<dyn Engine>> = if want_prehash {
+                        let engine: Option<Box<dyn Engine>> = if want_engine {
                             load_engine().ok()
                         } else {
                             None
@@ -190,33 +209,61 @@ impl Coordinator {
                             let (entries, open) =
                                 g.offline_while(|| batcher.collect(&lane_rx));
                             if !entries.is_empty() {
-                                // Routing oracle. Sharded: the fixed
-                                // shard selector — needs no engine
-                                // (per-shard bucket ids would need one
-                                // engine call per shard once targeted
-                                // mitigations diverge the seeds, for
-                                // little extra locality). Unsharded:
-                                // bucket ids under the table's *current*
-                                // hash via the engine backend; None
-                                // (engine unavailable) leaves the batch
-                                // un-routed, which `route` handles.
-                                let oracle = |keys: &[u64]| -> Option<Vec<i32>> {
-                                    if shared2.map.shards() > 1 {
-                                        return Some(
+                                // Routing oracle: i64 routing ids in the
+                                // shard-major composite id space. Bucket
+                                // mode captures every shard's (hash,
+                                // nbuckets) geometry under this thread's
+                                // guard and hashes the whole mixed-shard
+                                // batch in ONE batch_hash_multi call;
+                                // None (engine failed or unavailable)
+                                // leaves the batch un-routed and is
+                                // counted below as an engine-fallback.
+                                let oracle = |keys: &[u64]| -> Option<Vec<i64>> {
+                                    match batcher.cfg.pre_route {
+                                        PreRoute::Off => None,
+                                        PreRoute::Shard => Some(
                                             keys.iter()
-                                                .map(|&k| shared2.map.shard_of(k) as i32)
+                                                .map(|&k| (shared2.map.shard_of(k) as i64) << 32)
                                                 .collect(),
-                                        );
+                                        ),
+                                        PreRoute::Bucket => {
+                                            let e = engine.as_ref()?;
+                                            let params: Vec<ShardParams> = shared2
+                                                .map
+                                                .route_snapshot(&g)
+                                                .into_iter()
+                                                .map(|(hash, nb)| {
+                                                    let (kind, seed) = HashKind::of(hash);
+                                                    (seed, nb as u64, kind)
+                                                })
+                                                .collect();
+                                            let shard_ids: Vec<u32> = keys
+                                                .iter()
+                                                .map(|&k| shared2.map.shard_of(k) as u32)
+                                                .collect();
+                                            e.batch_hash_multi(keys, &shard_ids, &params).ok()
+                                        }
                                     }
-                                    let e = engine.as_ref()?;
-                                    let hash = shared2.map.shard_hash_fn(&g, 0);
-                                    let nb = shared2.map.shard_nbuckets(&g, 0) as u64;
-                                    let (kind, seed) = HashKind::of(hash);
-                                    e.batch_hash(keys, seed, nb, kind).ok()
                                 };
                                 let b = batcher.route(entries, Some(&oracle));
                                 g.quiescent_state();
                                 shared2.total_batches.fetch_add(1, Ordering::Relaxed);
+                                match b.outcome {
+                                    RouteOutcome::Routed => {
+                                        shared2.pre_routed_batches.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    RouteOutcome::FallbackLength => {
+                                        shared2
+                                            .pre_route_fallbacks_length
+                                            .fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    RouteOutcome::FallbackEngine => {
+                                        shared2
+                                            .pre_route_fallbacks_engine
+                                            .fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    RouteOutcome::Unrouted => {}
+                                }
                                 if batch_tx.send(b).is_err() {
                                     break;
                                 }
@@ -477,6 +524,15 @@ impl Coordinator {
         CoordinatorStats {
             total_requests: self.shared.total_requests.load(Ordering::Relaxed),
             total_batches: self.shared.total_batches.load(Ordering::Relaxed),
+            pre_routed_batches: self.shared.pre_routed_batches.load(Ordering::Relaxed),
+            pre_route_fallbacks_length: self
+                .shared
+                .pre_route_fallbacks_length
+                .load(Ordering::Relaxed),
+            pre_route_fallbacks_engine: self
+                .shared
+                .pre_route_fallbacks_engine
+                .load(Ordering::Relaxed),
             rebuilds: self.shared.rebuilds.load(Ordering::Relaxed),
             last_chi2: f32::from_bits(self.shared.last_chi2.load(Ordering::Relaxed) as u32),
             last_chi2_per_shard: self.shared.shard_chi2.lock().unwrap().clone(),

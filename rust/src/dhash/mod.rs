@@ -432,6 +432,17 @@ impl<B: BucketSet> DHashMap<B> {
         self.table().hash
     }
 
+    /// Current `(hash, nbuckets)` geometry, both read from ONE table
+    /// pointer inside one read-side section. Back-to-back
+    /// [`DHashMap::hash_fn`] + [`DHashMap::nbuckets`] calls sample the
+    /// table twice and can straddle a rebuild's table swap, pairing the
+    /// old hash with the new bucket count; this accessor cannot.
+    pub fn geometry(&self, guard: &RcuThread) -> (HashFn, usize) {
+        let _g = guard.read_lock();
+        let t = self.table();
+        (t.hash, t.nbuckets)
+    }
+
     /// All live `(key, value)` pairs, merged across the table *chain*:
     /// the current table, the hazard-period node, and any in-progress
     /// rebuild's destination table(s), deduplicated by key with the same

@@ -251,6 +251,21 @@ impl<B: BucketSet> ShardedDHash<B> {
         self.shards[s].hash_fn(guard)
     }
 
+    /// Every shard's routing geometry `(hash, nbuckets)`, captured under
+    /// one RCU guard — the routing oracle's input for the vectorized
+    /// `batch_hash_multi` pre-sort. Each shard's pair comes from a
+    /// single table pointer ([`DHashMap::geometry`]), so the snapshot
+    /// never pairs a shard's old hash with its new bucket count, even
+    /// mid-staggered-rebuild. Across shards the view is coherent enough
+    /// by construction: at most one shard is migrating (the staggered
+    /// invariant), the fixed selector means a just-superseded geometry
+    /// can never route a key to the wrong *shard*, and a batch sorted
+    /// with a stale bucket geometry merely loses bucket-order locality
+    /// for that one shard — the same cost as an un-routed batch.
+    pub fn route_snapshot(&self, guard: &RcuThread) -> Vec<(HashFn, usize)> {
+        self.shards.iter().map(|s| s.geometry(guard)).collect()
+    }
+
     /// Live node count across all shards — O(n) scan (diagnostics; racy
     /// under concurrency, but never undercounts during a migration — see
     /// [`DHashMap::len`]).
@@ -371,6 +386,29 @@ mod tests {
             assert_eq!(m.lookup(&g, k), Some(k), "key {k} lost");
         }
         assert_eq!(m.rebuild_count(), 1);
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn route_snapshot_tracks_targeted_rebuilds() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(4, 16, 9);
+        let snap = m.route_snapshot(&g);
+        assert_eq!(snap.len(), 4);
+        assert!(snap.iter().all(|&(h, nb)| h == HashFn::Seeded(9) && nb == 16));
+
+        // A targeted rebuild diverges exactly one shard's geometry.
+        m.rebuild_shard(&g, 2, 64, HashFn::Seeded(0xbeef)).unwrap();
+        let snap = m.route_snapshot(&g);
+        assert_eq!(snap[2], (HashFn::Seeded(0xbeef), 64));
+        for s in [0usize, 1, 3] {
+            assert_eq!(snap[s], (HashFn::Seeded(9), 16), "shard {s} drifted");
+        }
+        // The snapshot agrees with the per-shard accessors.
+        for s in 0..4 {
+            assert_eq!(snap[s], (m.shard_hash_fn(&g, s), m.shard_nbuckets(&g, s)));
+        }
         g.quiescent_state();
         rcu_barrier();
     }

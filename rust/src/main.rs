@@ -6,7 +6,8 @@
 //!                [--alpha A] [--buckets B] [--keys U] [--secs S]
 //!                [--no-rebuild] [--repeats R]
 //! dhash serve    [--buckets B] [--shards N] [--lanes L] [--workers W]
-//!                [--secs S] [--attack-at T] [--weak-hash] [--no-analytics]
+//!                [--pre-route off|shard|bucket] [--secs S] [--attack-at T]
+//!                [--weak-hash] [--no-analytics]
 //! dhash rebuild  [--table dhash|xu|rht|split] [--nodes N] [--buckets B]
 //! ```
 
@@ -14,7 +15,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
-use dhash::coordinator::{Coordinator, CoordinatorConfig, Request};
+use dhash::coordinator::{Coordinator, CoordinatorConfig, PreRoute, Request};
 use dhash::dhash::{DHashMap, HashFn};
 use dhash::rcu::RcuThread;
 use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
@@ -83,7 +84,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let secs = args.get_or("secs", 10u64)?;
     let attack_at = args.get_or("attack-at", secs / 2)?;
     let nbuckets = args.get_or("buckets", 4096usize)?;
-    let cfg = CoordinatorConfig {
+    let pre_route = match args.get("pre-route").unwrap_or("off") {
+        "off" => PreRoute::Off,
+        "shard" => PreRoute::Shard,
+        "bucket" => PreRoute::Bucket,
+        other => anyhow::bail!("unknown --pre-route {other:?} (want off|shard|bucket)"),
+    };
+    let mut cfg = CoordinatorConfig {
         nbuckets,
         hash: if args.get_bool("weak-hash") {
             HashFn::Modulo
@@ -96,6 +103,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         enable_analytics: !args.get_bool("no-analytics"),
         ..Default::default()
     };
+    cfg.batcher.pre_route = pre_route;
     eprintln!("serve: {cfg:?} for {secs}s, attack at {attack_at}s");
     let c = Arc::new(Coordinator::start(cfg)?);
 
@@ -138,10 +146,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         std::thread::sleep(Duration::from_secs(1));
         let st = c.stats();
         println!(
-            "t={:>3}s requests={:>9} batches={:>7} chi2={:>10.1} rebuilds={}",
+            "t={:>3}s requests={:>9} batches={:>7} routed={:>7} fb_len={} fb_eng={} \
+             chi2={:>10.1} rebuilds={}",
             sec + 1,
             st.total_requests,
             st.total_batches,
+            st.pre_routed_batches,
+            st.pre_route_fallbacks_length,
+            st.pre_route_fallbacks_engine,
             st.last_chi2,
             st.rebuilds
         );
@@ -187,7 +199,7 @@ fn main() -> anyhow::Result<()> {
     const KNOWN: &[&str] = &[
         "table", "threads", "lookup-pct", "alpha", "buckets", "alt-buckets", "keys", "secs",
         "no-rebuild", "no-pin", "repeats", "seed", "hash-seed", "workers", "shards", "lanes",
-        "attack-at", "weak-hash", "no-analytics", "nodes",
+        "pre-route", "attack-at", "weak-hash", "no-analytics", "nodes",
     ];
     let args = Args::from_env(KNOWN)?;
     match args.positional().first().map(|s| s.as_str()) {

@@ -1,8 +1,9 @@
 //! The detector engine: batched keyed hashing + bucket-skew statistics
 //! behind one [`Engine`] trait, with pluggable backends.
 //!
-//! The coordinator's analytics path (batch pre-hashing and the chi-square
-//! collision detector) is expressed as two kernels — `batch_hash` and
+//! The coordinator's analytics path (batch pre-hashing, vectorized
+//! multi-shard routing, and the chi-square collision detector) is
+//! expressed as three kernels — `batch_hash`, `batch_hash_multi`, and
 //! `detect` — whose reference semantics live in
 //! `python/compile/kernels/ref.py`. Two backends implement them:
 //!
@@ -73,7 +74,46 @@ impl HashKind {
     }
 }
 
-/// A detector backend: the two analytics kernels plus the shape constants
+/// Per-shard hash geometry for [`Engine::batch_hash_multi`]:
+/// `(seed, nbuckets, kind)`, one entry per shard, indexed by shard id.
+pub type ShardParams = (u64, u64, HashKind);
+
+/// Compose a `(shard, bucket)` pair into the i64 routing id the
+/// batcher's pre-routing sort orders by: `(shard << 32) | bucket`.
+/// Sorting these ids walks shards in order and, within a shard, buckets
+/// in order — the full locality order the coordinator batches for.
+#[inline]
+pub fn composite_route_id(shard: u32, bucket: u32) -> i64 {
+    ((shard as i64) << 32) | bucket as i64
+}
+
+/// Shared argument validation for [`Engine::batch_hash_multi`] backends:
+/// one shard id per key, every id in range, and every shard's bucket
+/// count positive and small enough for the composite id's 32-bit bucket
+/// field.
+pub(crate) fn check_multi_args(
+    keys: &[u64],
+    shard_ids: &[u32],
+    shard_params: &[ShardParams],
+) -> Result<()> {
+    if shard_ids.len() != keys.len() {
+        bail!("shard_ids length {} != keys length {}", shard_ids.len(), keys.len());
+    }
+    for (s, &(_, nbuckets, _)) in shard_params.iter().enumerate() {
+        if nbuckets == 0 {
+            bail!("shard {s}: nbuckets must be positive");
+        }
+        if nbuckets > u32::MAX as u64 {
+            bail!("shard {s}: nbuckets {nbuckets} exceeds the 32-bit bucket field");
+        }
+    }
+    if let Some(&s) = shard_ids.iter().find(|&&s| s as usize >= shard_params.len()) {
+        bail!("shard id {s} out of range ({} shards)", shard_params.len());
+    }
+    Ok(())
+}
+
+/// A detector backend: the analytics kernels plus the shape constants
 /// policy code needs. Backends are constructed on the thread that uses
 /// them (the PJRT client is not `Send`), so the trait does not require
 /// `Send`.
@@ -81,15 +121,18 @@ pub trait Engine {
     /// Backend name for logs and bench rows.
     fn name(&self) -> &'static str;
 
-    /// Keys per kernel execution. The native backend processes samples of
-    /// any size up to this; the artifact backend pads shorter samples.
+    /// Keys per kernel execution. Hash kernels chunk larger inputs over
+    /// this internally; the artifact backend pads shorter samples.
     fn batch(&self) -> usize;
 
     /// Detector histogram bins (bucket ids are folded modulo this).
     fn nbins(&self) -> usize;
 
-    /// Bucket ids for up to [`Engine::batch`] keys. Returns exactly
-    /// `keys.len().min(self.batch())` ids.
+    /// Bucket ids for `keys` under one hash geometry. The answer always
+    /// has exactly `keys.len()` entries: inputs larger than
+    /// [`Engine::batch`] are chunked internally, never truncated (a
+    /// short answer would make the batcher's exact-length guard fail and
+    /// the batch silently lose its pre-routing).
     fn batch_hash(
         &self,
         keys: &[u64],
@@ -97,6 +140,22 @@ pub trait Engine {
         nbuckets: u64,
         kind: HashKind,
     ) -> Result<Vec<i32>>;
+
+    /// Composite routing ids ([`composite_route_id`]: `(shard << 32) |
+    /// bucket`) for a mixed-shard batch in ONE engine call: key `i` is
+    /// hashed with `shard_params[shard_ids[i] as usize]`. Like
+    /// [`Engine::batch_hash`], the answer always has exactly
+    /// `keys.len()` entries — larger inputs are chunked over
+    /// [`Engine::batch`] internally. Errors if `shard_ids.len() !=
+    /// keys.len()`, a shard id is out of range, or any shard's
+    /// `nbuckets` is 0 or exceeds `u32::MAX` (the composite id keeps
+    /// the bucket in 32 bits).
+    fn batch_hash_multi(
+        &self,
+        keys: &[u64],
+        shard_ids: &[u32],
+        shard_params: &[ShardParams],
+    ) -> Result<Vec<i64>>;
 
     /// Skew statistics for a key sample.
     fn detect(&self, keys: &[u64], seed: u64, nbuckets: u64, kind: HashKind) -> Result<Detection>;
@@ -159,6 +218,33 @@ mod tests {
         let t = engine.chi2_threshold(8.0);
         assert!(t > dof && t < 3.0 * dof);
         assert!(engine.chi2_threshold(4.0) < t);
+    }
+
+    #[test]
+    fn composite_route_id_layout() {
+        assert_eq!(composite_route_id(0, 0), 0);
+        assert_eq!(composite_route_id(0, 7), 7);
+        assert_eq!(composite_route_id(1, 0), 1 << 32);
+        assert_eq!(composite_route_id(3, 9), (3 << 32) | 9);
+        // The full u32 bucket range fits without sign contamination.
+        assert_eq!(composite_route_id(2, u32::MAX), (2i64 << 32) | 0xffff_ffff);
+        // Sort order is shard-major, bucket-minor.
+        assert!(composite_route_id(0, u32::MAX) < composite_route_id(1, 0));
+    }
+
+    #[test]
+    fn multi_args_are_validated() {
+        let p: Vec<ShardParams> = vec![(1, 16, HashKind::Seeded), (2, 8, HashKind::Modulo)];
+        assert!(check_multi_args(&[1, 2], &[0, 1], &p).is_ok());
+        assert!(check_multi_args(&[], &[], &p).is_ok());
+        // One shard id per key.
+        assert!(check_multi_args(&[1, 2], &[0], &p).is_err());
+        // Shard ids must be in range.
+        assert!(check_multi_args(&[1], &[2], &p).is_err());
+        // Zero buckets and >32-bit bucket counts are rejected.
+        assert!(check_multi_args(&[1], &[0], &[(0, 0, HashKind::Seeded)]).is_err());
+        let wide = [(0, u32::MAX as u64 + 1, HashKind::Seeded)];
+        assert!(check_multi_args(&[1], &[0], &wide).is_err());
     }
 
     #[test]

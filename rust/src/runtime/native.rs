@@ -7,6 +7,11 @@
 //!   `mix64(key ^ seed) % nbuckets` (the splitmix64 finalizer shared with
 //!   [`crate::util::rng::mix64`] and the Pallas kernel — pinned vectors on
 //!   all three sides).
+//! * `batch_hash_multi`: the same placement rule dispatched per key
+//!   through a vector of per-shard `(seed, nbuckets, kind)` geometries,
+//!   emitting composite `(shard << 32) | bucket` routing ids
+//!   ([`crate::runtime::composite_route_id`]) for the batcher's
+//!   mixed-shard pre-sort.
 //! * `detect`: fold bucket ids modulo `nbins`, histogram, Pearson
 //!   chi-square against the uniform expectation `n / nbins`, max load.
 //!
@@ -19,7 +24,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{Detection, Engine, HashKind};
+use super::{check_multi_args, composite_route_id, Detection, Engine, HashKind, ShardParams};
 use crate::util::rng::mix64;
 
 /// Pure-Rust detector engine. Construction is free; the struct only
@@ -90,11 +95,38 @@ impl Engine for NativeEngine {
         if nbuckets == 0 {
             bail!("nbuckets must be positive");
         }
-        Ok(keys
-            .iter()
-            .take(self.batch)
-            .map(|&k| Self::bucket(k, seed, nbuckets, kind) as i32)
-            .collect())
+        // Chunked over the kernel batch: the caller always gets exactly
+        // `keys.len()` ids. (This used to `.take(self.batch)`, silently
+        // truncating oversized inputs — which made the batcher's
+        // exact-length guard fail and every such batch lose its
+        // pre-routing with no trace.)
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(self.batch) {
+            out.extend(chunk.iter().map(|&k| Self::bucket(k, seed, nbuckets, kind) as i32));
+        }
+        Ok(out)
+    }
+
+    fn batch_hash_multi(
+        &self,
+        keys: &[u64],
+        shard_ids: &[u32],
+        shard_params: &[ShardParams],
+    ) -> Result<Vec<i64>> {
+        check_multi_args(keys, shard_ids, shard_params)?;
+        // One call for the whole mixed-shard batch: per-key geometry
+        // dispatch, chunked over the kernel batch like `batch_hash` so
+        // the exact-length contract holds at any input size.
+        let mut out = Vec::with_capacity(keys.len());
+        for (kc, sc) in keys.chunks(self.batch).zip(shard_ids.chunks(self.batch)) {
+            for (&k, &s) in kc.iter().zip(sc) {
+                let (seed, nbuckets, kind) = shard_params[s as usize];
+                // bucket < nbuckets <= u32::MAX (checked above).
+                let b = Self::bucket(k, seed, nbuckets, kind) as u32;
+                out.push(composite_route_id(s, b));
+            }
+        }
+        Ok(out)
     }
 
     fn detect(&self, keys: &[u64], seed: u64, nbuckets: u64, kind: HashKind) -> Result<Detection> {
@@ -153,13 +185,65 @@ mod tests {
     }
 
     #[test]
-    fn batch_hash_truncates_to_batch() {
+    fn batch_hash_chunks_instead_of_truncating() {
+        // Regression: inputs larger than the kernel batch used to come
+        // back truncated to `batch` ids; they must now chunk to an
+        // exact-length answer with per-key results unchanged.
         let e = NativeEngine::with_shape(8, 4);
-        let keys: Vec<u64> = (0..32).collect();
+        let keys: Vec<u64> = (0..37).map(|i| i * 7919).collect();
         let ids = e.batch_hash(&keys, 1, 16, HashKind::Seeded).unwrap();
-        assert_eq!(ids.len(), 8);
+        assert_eq!(ids.len(), keys.len());
+        for (k, id) in keys.iter().zip(&ids) {
+            assert_eq!(*id as usize, HashFn::Seeded(1).bucket(*k, 16));
+        }
         assert!(e.batch_hash(&[], 1, 16, HashKind::Seeded).unwrap().is_empty());
         assert!(e.batch_hash(&keys, 1, 0, HashKind::Seeded).is_err());
+    }
+
+    #[test]
+    fn batch_hash_multi_matches_per_shard_batch_hash() {
+        use crate::runtime::{composite_route_id, ShardParams};
+        let e = NativeEngine::new();
+        let params: Vec<ShardParams> = vec![
+            (0xd1e5, 1024, HashKind::Seeded),
+            (0xfeed, 2048, HashKind::Seeded),
+            (0, 97, HashKind::Modulo),
+        ];
+        let mut rng = SplitMix64::new(41);
+        let keys: Vec<u64> = (0..512).map(|_| rng.next_u64()).collect();
+        let shard_ids: Vec<u32> = keys.iter().map(|&k| (k % 3) as u32).collect();
+        let multi = e.batch_hash_multi(&keys, &shard_ids, &params).unwrap();
+        assert_eq!(multi.len(), keys.len());
+        for (i, (&k, &s)) in keys.iter().zip(&shard_ids).enumerate() {
+            let (seed, nb, kind) = params[s as usize];
+            let bucket = e.batch_hash(&[k], seed, nb, kind).unwrap()[0];
+            assert_eq!(multi[i], composite_route_id(s, bucket as u32));
+            // Composite layout: shard in the high half, bucket low.
+            assert_eq!((multi[i] >> 32) as u32, s);
+            assert_eq!((multi[i] & 0xffff_ffff) as i32, bucket);
+        }
+    }
+
+    #[test]
+    fn batch_hash_multi_chunks_and_validates() {
+        use crate::runtime::ShardParams;
+        let e = NativeEngine::with_shape(8, 4);
+        let params: Vec<ShardParams> = vec![(7, 16, HashKind::Seeded), (9, 32, HashKind::Seeded)];
+        // Input far beyond the kernel batch: exact-length answer, same
+        // per-key ids as one-key calls.
+        let keys: Vec<u64> = (0..100).map(|i| i * 2_654_435_761).collect();
+        let shard_ids: Vec<u32> = keys.iter().map(|&k| (k & 1) as u32).collect();
+        let multi = e.batch_hash_multi(&keys, &shard_ids, &params).unwrap();
+        assert_eq!(multi.len(), keys.len());
+        for (i, (&k, &s)) in keys.iter().zip(&shard_ids).enumerate() {
+            let one = e.batch_hash_multi(&[k], &[s], &params).unwrap();
+            assert_eq!(multi[i], one[0], "chunking changed key {k:#x}");
+        }
+        // Argument validation (shared with every backend).
+        assert!(e.batch_hash_multi(&keys, &shard_ids[..5], &params).is_err());
+        assert!(e.batch_hash_multi(&[1], &[2], &params).is_err());
+        assert!(e.batch_hash_multi(&[1], &[0], &[(0, 0, HashKind::Seeded)]).is_err());
+        assert!(e.batch_hash_multi(&[], &[], &params).unwrap().is_empty());
     }
 
     #[test]

@@ -17,14 +17,19 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use super::{Detection, Engine, HashKind};
+use super::{check_multi_args, Detection, Engine, HashKind, ShardParams};
 
 /// The loaded artifact bundle: manifest constants plus the HLO module
-/// text of both kernels, shape-checked and ready for a PJRT compile.
+/// text of the kernels, shape-checked and ready for a PJRT compile.
 pub struct PjrtEngine {
     dir: PathBuf,
     batch_hash_hlo: String,
     detector_hlo: String,
+    /// The vectorized multi-shard routing kernel is newer than some
+    /// artifact bundles, so its HLO is optional: absent means
+    /// `batch_hash_multi` reports the artifact missing instead of the
+    /// whole bundle failing to load.
+    batch_hash_multi_hlo: Option<String>,
     batch: usize,
     nbins: usize,
 }
@@ -49,10 +54,16 @@ impl PjrtEngine {
             }
             Ok(text)
         };
+        let batch_hash_multi_hlo = if dir.join("batch_hash_multi.hlo.txt").exists() {
+            Some(load("batch_hash_multi.hlo.txt")?)
+        } else {
+            None
+        };
         Ok(PjrtEngine {
             dir: dir.to_path_buf(),
             batch_hash_hlo: load("batch_hash.hlo.txt")?,
             detector_hlo: load("detector.hlo.txt")?,
+            batch_hash_multi_hlo,
             batch,
             nbins,
         })
@@ -74,6 +85,7 @@ impl PjrtEngine {
     pub fn hlo_text(&self, kernel: &str) -> Option<&str> {
         match kernel {
             "batch_hash" => Some(&self.batch_hash_hlo),
+            "batch_hash_multi" => self.batch_hash_multi_hlo.as_deref(),
             "detector" => Some(&self.detector_hlo),
             _ => None,
         }
@@ -123,8 +135,42 @@ impl Engine for PjrtEngine {
         self.check_args(keys, nbuckets)?;
         // Argument marshalling parity with the lowered graph signature:
         // (keys u64[batch], seed u64[1], nbuckets u64[1], kind u64[1]).
+        // Oversized inputs would loop this per `batch`-sized chunk — the
+        // exact-length contract is chunking, never truncation.
         let _args = (self.pad_keys(keys), [seed], [nbuckets], [kind.tag()]);
         Err(self.execute_unavailable("batch_hash"))
+    }
+
+    fn batch_hash_multi(
+        &self,
+        keys: &[u64],
+        shard_ids: &[u32],
+        shard_params: &[ShardParams],
+    ) -> Result<Vec<i64>> {
+        check_multi_args(keys, shard_ids, shard_params)?;
+        if keys.is_empty() {
+            bail!("empty key sample");
+        }
+        if self.batch_hash_multi_hlo.is_none() {
+            bail!(
+                "artifact bundle in {} predates the batch_hash_multi kernel \
+                 (re-run `python -m compile.aot`)",
+                self.dir.display()
+            );
+        }
+        // Marshalling parity with the lowered graph signature: keys and
+        // shard ids pad to the fixed [batch] shape (chunked per `batch`
+        // for oversized inputs), per-shard params ride as [nshards]
+        // vectors: (keys u64[batch], shard_ids u32[batch],
+        // seeds u64[nshards], nbuckets u64[nshards], kinds u64[nshards]).
+        let padded_ids: Vec<u32> = (0..self.batch)
+            .map(|i| shard_ids[i % shard_ids.len()])
+            .collect();
+        let seeds: Vec<u64> = shard_params.iter().map(|p| p.0).collect();
+        let nbuckets: Vec<u64> = shard_params.iter().map(|p| p.1).collect();
+        let kinds: Vec<u64> = shard_params.iter().map(|p| p.2.tag()).collect();
+        let _args = (self.pad_keys(keys), padded_ids, seeds, nbuckets, kinds);
+        Err(self.execute_unavailable("batch_hash_multi"))
     }
 
     fn detect(&self, keys: &[u64], seed: u64, nbuckets: u64, kind: HashKind) -> Result<Detection> {
@@ -170,10 +216,25 @@ mod tests {
         assert_eq!(e.name(), "pjrt");
         assert!(e.hlo_text("detector").unwrap().contains("HloModule"));
         assert!(e.hlo_text("nope").is_none());
+        // The multi kernel's HLO is optional (older bundles lack it).
+        assert!(e.hlo_text("batch_hash_multi").is_none());
         assert_eq!(e.pad_keys(&[1, 2, 3]).len(), 2048);
         // Execution is stubbed offline: a descriptive error, not a panic.
         assert!(e.batch_hash(&[1], 0, 16, HashKind::Modulo).is_err());
+        assert!(e.batch_hash_multi(&[1], &[0], &[(0, 16, HashKind::Modulo)]).is_err());
         assert!(e.detect(&[1], 0, 16, HashKind::Seeded).is_err());
+
+        // With the multi artifact present, its HLO loads and the execute
+        // path still reports the offline stub (not a missing artifact).
+        std::fs::write(
+            dir.join("batch_hash_multi.hlo.txt"),
+            "HloModule batch_hash_multi\n",
+        )
+        .unwrap();
+        let e = PjrtEngine::load(&dir).unwrap();
+        assert!(e.hlo_text("batch_hash_multi").unwrap().contains("HloModule"));
+        let err = e.batch_hash_multi(&[1], &[0], &[(0, 16, HashKind::Modulo)]).unwrap_err();
+        assert!(err.to_string().contains("cannot execute"), "{err}");
 
         std::fs::remove_dir_all(&dir).ok();
     }

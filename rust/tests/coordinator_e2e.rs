@@ -6,8 +6,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dhash::coordinator::{
-    BatcherConfig, ControllerConfig, Coordinator, CoordinatorConfig, DetectorConfig, Request,
-    Response, SubmitError,
+    BatcherConfig, ControllerConfig, Coordinator, CoordinatorConfig, DetectorConfig, PreRoute,
+    Request, Response, SubmitError,
 };
 use dhash::dhash::HashFn;
 use dhash::torture::{AttackGen, ShardedAttackGen};
@@ -22,7 +22,7 @@ fn attack_config(nbuckets: usize) -> CoordinatorConfig {
         batcher: BatcherConfig {
             max_batch: 64,
             max_wait: Duration::from_micros(100),
-            pre_hash: false,
+            pre_route: PreRoute::Off,
         },
         detector: DetectorConfig {
             sample_capacity: 4096,
@@ -208,6 +208,64 @@ fn pipelined_tickets_end_to_end() {
             Some(SubmitError::Shutdown)
         );
     }
+}
+
+#[test]
+fn sharded_bucket_pre_route_serves_with_zero_fallbacks() {
+    // The tentpole path end to end: a sharded service with composite
+    // (shard, bucket) pre-routing on the native engine. Every batch must
+    // pre-route via one batch_hash_multi call (no fallbacks of either
+    // cause), the service must answer correctly, and routing must
+    // survive a targeted rebuild diverging one shard's geometry.
+    let mut cfg = attack_config(1024);
+    cfg.hash = HashFn::Seeded(0xfeed);
+    cfg.shards = 4;
+    cfg.lanes = 2;
+    cfg.batcher.pre_route = PreRoute::Bucket;
+    let c = Arc::new(Coordinator::start(cfg).unwrap());
+    let n = 3000u64;
+    let client = c.client();
+    let puts: Vec<Request> = (0..n).map(|k| Request::put(k, k * 3)).collect();
+    for chunk in puts.chunks(256) {
+        assert!(client
+            .submit_batch(chunk)
+            .unwrap()
+            .wait()
+            .unwrap()
+            .iter()
+            .all(|r| *r == Response::Ok));
+    }
+
+    // Diverge ONE shard mid-service (what a targeted mitigation does),
+    // then keep routing traffic through the now-mixed geometry. Scoped
+    // guard: it must drop before the remaining service traffic, or this
+    // thread's stale quiescent state would stall worker grace periods.
+    {
+        let g = dhash::rcu::RcuThread::register();
+        c.map()
+            .rebuild_shard(&g, 1, 2048, HashFn::Seeded(0xd00d))
+            .unwrap();
+        g.quiescent_state();
+    }
+    let gets: Vec<Request> = (0..n).map(Request::get).collect();
+    for chunk in gets.chunks(256) {
+        let resps = client.submit_batch(chunk).unwrap().wait().unwrap();
+        for (r, req) in resps.iter().zip(chunk) {
+            assert_eq!(*r, Response::Value(req.key() * 3), "key {}", req.key());
+        }
+    }
+    c.shutdown();
+    let st = c.stats();
+    assert!(st.total_batches >= 1);
+    assert_eq!(
+        st.pre_route_fallbacks_engine, 0,
+        "the native engine must never fall back"
+    );
+    assert_eq!(st.pre_route_fallbacks_length, 0);
+    assert_eq!(
+        st.pre_routed_batches, st.total_batches,
+        "every batch must pre-route in (shard, bucket) order"
+    );
 }
 
 #[test]

@@ -39,11 +39,29 @@ fn kind_of(tag: u64) -> HashKind {
 fn native_engine_matches_python_reference() {
     let mut lines = GOLDEN.lines().filter(|l| !l.starts_with('#'));
     let mut batch_cases = 0;
+    let mut multi_cases = 0;
     let mut detector_cases = 0;
 
     while let Some(header) = lines.next() {
         let mut toks = header.split_whitespace();
         match toks.next() {
+            Some("batch_hash_multi") => {
+                let nshards = kv(toks.next().unwrap(), "nshards") as usize;
+                let seeds: Vec<u64> = numbers(lines.next().unwrap(), "seeds ");
+                let nbuckets: Vec<u64> = numbers(lines.next().unwrap(), "nbuckets ");
+                let kinds: Vec<u64> = numbers(lines.next().unwrap(), "kinds ");
+                let keys: Vec<u64> = numbers(lines.next().unwrap(), "keys ");
+                let shard_ids: Vec<u32> = numbers(lines.next().unwrap(), "shard_ids ");
+                let want: Vec<i64> = numbers(lines.next().unwrap(), "ids ");
+                assert_eq!(seeds.len(), nshards, "bad multi header: {header}");
+                let params: Vec<_> = (0..nshards)
+                    .map(|s| (seeds[s], nbuckets[s], kind_of(kinds[s])))
+                    .collect();
+                let engine = NativeEngine::new();
+                let got = engine.batch_hash_multi(&keys, &shard_ids, &params).unwrap();
+                assert_eq!(got, want, "batch_hash_multi mismatch: {header}");
+                multi_cases += 1;
+            }
             Some("batch_hash") => {
                 let kind = kind_of(kv(toks.next().unwrap(), "kind"));
                 let seed = kv(toks.next().unwrap(), "seed");
@@ -84,5 +102,6 @@ fn native_engine_matches_python_reference() {
         }
     }
     assert!(batch_cases >= 10, "only {batch_cases} batch_hash cases");
+    assert!(multi_cases >= 2, "only {multi_cases} batch_hash_multi cases");
     assert!(detector_cases >= 3, "only {detector_cases} detector cases");
 }

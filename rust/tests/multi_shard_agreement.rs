@@ -1,0 +1,109 @@
+//! Multi-shard cross-layer agreement, mirroring `hash_agreement.rs`:
+//! the vectorized `batch_hash_multi` kernel must place every key of a
+//! mixed-shard batch exactly where (a) a per-shard `batch_hash` loop
+//! and (b) the data path's `HashFn` put it — including after targeted
+//! `rebuild_shard`s diverge individual shards' geometry, which is the
+//! state the routing oracle faces after a mitigation.
+
+use dhash::dhash::{HashFn, ShardedDHash};
+use dhash::rcu::{rcu_barrier, RcuThread};
+use dhash::runtime::{
+    composite_route_id, load_engine, Engine, HashKind, NativeEngine, ShardParams,
+};
+use dhash::util::SplitMix64;
+
+/// Engine-side params for a map's routing snapshot.
+fn params_of(snapshot: &[(HashFn, usize)]) -> Vec<ShardParams> {
+    snapshot
+        .iter()
+        .map(|&(hash, nb)| {
+            let (kind, seed) = HashKind::of(hash);
+            (seed, nb as u64, kind)
+        })
+        .collect()
+}
+
+/// Pin `batch_hash_multi` against both references for `keys` under the
+/// map's current per-shard geometry.
+fn check_agreement(engine: &dyn Engine, map: &ShardedDHash, g: &RcuThread, keys: &[u64]) {
+    let snapshot = map.route_snapshot(g);
+    let params = params_of(&snapshot);
+    let shard_ids: Vec<u32> = keys.iter().map(|&k| map.shard_of(k) as u32).collect();
+    let multi = engine.batch_hash_multi(keys, &shard_ids, &params).unwrap();
+    assert_eq!(multi.len(), keys.len(), "exact-length contract");
+
+    // (a) One batch_hash call per shard over that shard's keys must give
+    // the same buckets the single multi call gave.
+    for s in 0..map.shards() {
+        let (seed, nb, kind) = params[s];
+        let shard_keys: Vec<u64> = keys
+            .iter()
+            .copied()
+            .filter(|&k| map.shard_of(k) == s)
+            .collect();
+        if shard_keys.is_empty() {
+            continue;
+        }
+        let per_shard = engine.batch_hash(&shard_keys, seed, nb, kind).unwrap();
+        let mut ids = per_shard.iter();
+        for (i, &k) in keys.iter().enumerate() {
+            if map.shard_of(k) == s {
+                let bucket = *ids.next().unwrap();
+                assert_eq!(
+                    multi[i],
+                    composite_route_id(s as u32, bucket as u32),
+                    "key {k:#x}: multi call disagrees with per-shard batch_hash"
+                );
+            }
+        }
+    }
+
+    // (b) The data path's HashFn must place every key in the bucket the
+    // composite id encodes — the invariant that makes pre-routed batch
+    // order equal the worker's actual memory-access order.
+    for (i, &k) in keys.iter().enumerate() {
+        let s = map.shard_of(k);
+        let (hash, nb) = snapshot[s];
+        assert_eq!(
+            multi[i],
+            composite_route_id(s as u32, hash.bucket(k, nb) as u32),
+            "key {k:#x} shard {s}: kernel and data path disagree"
+        );
+    }
+}
+
+#[test]
+fn multi_shard_routing_agrees_across_layers_and_rebuilds() {
+    let engine = load_engine().expect("default engine always loads");
+    let g = RcuThread::register();
+    let map = ShardedDHash::with_buckets(8, 1024, 0xd1e5);
+    let mut rng = SplitMix64::new(2026);
+    let keys: Vec<u64> = (0..4096).map(|_| rng.next_u64()).collect();
+    check_agreement(engine.as_ref(), &map, &g, &keys);
+
+    // Targeted rebuild: one shard's seed AND bucket count diverge, as
+    // after a mitigation. Agreement must hold on the mixed geometry.
+    map.rebuild_shard(&g, 3, 2048, HashFn::Seeded(0xfeed_f00d)).unwrap();
+    check_agreement(engine.as_ref(), &map, &g, &keys);
+
+    // A second divergence, to the other hash family.
+    map.rebuild_shard(&g, 5, 512, HashFn::Modulo).unwrap();
+    check_agreement(engine.as_ref(), &map, &g, &keys);
+
+    g.quiescent_state();
+    rcu_barrier();
+}
+
+#[test]
+fn multi_kernel_chunks_past_its_batch_cap() {
+    // An input far beyond the kernel batch must still come back
+    // exact-length and key-for-key identical to the references — the
+    // truncation regression, at the multi-kernel level.
+    let engine = NativeEngine::with_shape(16, 4);
+    let g = RcuThread::register();
+    let map = ShardedDHash::with_buckets(4, 64, 7);
+    let keys: Vec<u64> = (0..1000).map(|i| i * 2_654_435_761).collect();
+    check_agreement(&engine, &map, &g, &keys);
+    g.quiescent_state();
+    rcu_barrier();
+}
