@@ -10,9 +10,16 @@
 //! the full `(shard, bucket)` composite id from one `batch_hash_multi`
 //! engine call, vs shard-id order, vs arrival order.
 //!
+//! A third sweep drives the **elastic axis**: the same Bucket-pre-routed
+//! ingest with a shard split + merge landing mid-window vs a fixed
+//! layout, measuring what an online resize costs the request path.
+//!
 //! Under `DHASH_SMOKE=1` the rows are also written to
-//! `BENCH_shard_scale.json` (see `common::BenchJson`), and the smoke run
-//! asserts the sharded bucket-order path reports zero engine fallbacks.
+//! `BENCH_shard_scale.json` / `BENCH_elastic.json` (see
+//! `common::BenchJson`), and the smoke run asserts the sharded
+//! bucket-order path reports zero engine/length fallbacks — on the
+//! elastic axis too, where only the counted epoch fallback inside the
+//! resize window is tolerated.
 
 mod common;
 
@@ -136,6 +143,141 @@ fn bench_pre_route(json: &mut common::BenchJson) {
     }
 }
 
+/// One elastic-axis cell: coordinator ingest throughput with Bucket
+/// pre-routing, either at a fixed shard count or with a split + merge
+/// landing mid-window (what the elastic policy does under a load swing).
+/// Returns req/s plus the run's routing + resize counters.
+fn elastic_cell(resize_mid_run: bool) -> (f64, CoordinatorStats) {
+    let cfg = CoordinatorConfig {
+        nbuckets: 1024,
+        hash: HashFn::Seeded(0x5eed),
+        shards: 4,
+        lanes: 2,
+        workers: 2,
+        batcher: BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            pre_route: PreRoute::Bucket,
+        },
+        enable_analytics: true,
+        ..Default::default()
+    };
+    let c = Arc::new(Coordinator::start(cfg).expect("default engine"));
+    let stop = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for t in 0..2u64 {
+        let c2 = c.clone();
+        let s2 = stop.clone();
+        let d2 = done.clone();
+        clients.push(std::thread::spawn(move || {
+            let kv = c2.client();
+            let mut rng = SplitMix64::new(t + 1);
+            while !s2.load(Ordering::Relaxed) {
+                let reqs: Vec<Request> = (0..64)
+                    .map(|_| {
+                        let k = rng.next_bounded(1_000_000);
+                        if rng.next_f64() < 0.9 {
+                            Request::get(k)
+                        } else {
+                            Request::put(k, k)
+                        }
+                    })
+                    .collect();
+                let n = reqs.len() as u64;
+                match kv.submit_batch(&reqs) {
+                    Ok(ticket) => {
+                        let _ = ticket.wait();
+                        d2.fetch_add(n, Ordering::Relaxed);
+                    }
+                    Err(_) => break,
+                }
+            }
+        }));
+    }
+    let window = common::measure_window();
+    if resize_mid_run {
+        // Resize in the middle of the measured window: one split, then
+        // the inverse merge, exactly the swing the elastic policy makes.
+        // Sleeps go OFFLINE — an online-but-idle registered thread would
+        // stall every grace period (and all deferred reclamation) for
+        // the rest of the window, skewing the resize cell.
+        let g = dhash::rcu::RcuThread::register();
+        g.offline_while(|| std::thread::sleep(window / 3));
+        c.map()
+            .split_shard(&g, 1, 1024, HashFn::Seeded(0xe1a5))
+            .expect("bench split");
+        g.offline_while(|| std::thread::sleep(window / 3));
+        c.map()
+            .merge_shard(&g, 1, 2048, HashFn::Seeded(0xe1a6))
+            .expect("bench merge");
+        g.quiescent_state();
+        g.offline_while(|| std::thread::sleep(window / 3));
+    } else {
+        std::thread::sleep(window);
+    }
+    stop.store(true, Ordering::Relaxed);
+    for cl in clients {
+        cl.join().unwrap();
+    }
+    c.shutdown();
+    let req_per_s = done.load(Ordering::Relaxed) as f64 / window.as_secs_f64();
+    (req_per_s, c.stats())
+}
+
+fn bench_elastic() {
+    println!("# elastic axis: Bucket-pre-routed ingest, fixed vs split+merge mid-run");
+    let mut json = common::BenchJson::new("elastic");
+    for resize in [false, true] {
+        let (req_per_s, st) = elastic_cell(resize);
+        println!(
+            "elastic resize_mid_run={:<5} req_per_s={req_per_s:<10.0} routed={} fb_len={} \
+             fb_eng={} fb_ep={} splits={} merges={} epoch={}",
+            resize,
+            st.pre_routed_batches,
+            st.pre_route_fallbacks_length,
+            st.pre_route_fallbacks_engine,
+            st.pre_route_fallbacks_epoch,
+            st.splits,
+            st.merges,
+            st.epoch
+        );
+        json.row(
+            "ingest",
+            &[
+                ("elastic", resize as u64 as f64),
+                ("req_per_s", req_per_s),
+                ("pre_routed_batches", st.pre_routed_batches as f64),
+                ("fallbacks_engine", st.pre_route_fallbacks_engine as f64),
+                ("fallbacks_length", st.pre_route_fallbacks_length as f64),
+                ("fallbacks_epoch", st.pre_route_fallbacks_epoch as f64),
+                ("splits", st.splits as f64),
+                ("merges", st.merges as f64),
+            ],
+        );
+        if common::smoke_mode() {
+            // The CI gate: on the native engine, a settled split must
+            // leave routing fully healthy — the only tolerated fallback
+            // cause is the (counted) epoch race inside the resize window.
+            assert_eq!(
+                st.pre_route_fallbacks_engine, 0,
+                "elastic resize={resize}: engine fallbacks in smoke run"
+            );
+            assert_eq!(
+                st.pre_route_fallbacks_length, 0,
+                "elastic resize={resize}: length fallbacks in smoke run"
+            );
+            if resize {
+                assert_eq!(st.splits, 1);
+                assert_eq!(st.merges, 1);
+            } else {
+                assert_eq!(st.pre_route_fallbacks_epoch, 0, "epoch fallback without a resize");
+            }
+        }
+    }
+    json.flush();
+}
+
 fn main() {
     common::print_host_table1();
     let mut json = common::BenchJson::new("shard_scale");
@@ -178,5 +320,6 @@ fn main() {
     }
     bench_pre_route(&mut json);
     json.flush();
+    bench_elastic();
     rcu_barrier();
 }

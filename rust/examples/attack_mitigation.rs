@@ -95,6 +95,7 @@ fn main() -> anyhow::Result<()> {
             cooldown: Duration::from_secs(2),
             rebuild_buckets: None,
         },
+        elastic: None,
         enable_analytics: analytics,
     };
     eprintln!(

@@ -220,3 +220,192 @@ map_suite!(sharded, "sharded");
 map_suite!(xu, "xu");
 map_suite!(rht, "rht");
 map_suite!(split, "split");
+
+/// `ShardedDHash` **with online resizes**: the full `ConcurrentMap`
+/// contract must hold while the shard count itself moves (splits and
+/// merges through the directory), not just across per-shard rebuilds.
+/// The trait has no resize surface, so these drive ops through the
+/// facade and resizes through the concrete handle — exactly how the
+/// coordinator composes them.
+mod sharded_elastic {
+    use super::*;
+
+    #[test]
+    fn crud_holds_across_split_and_merge() {
+        let m = ShardedDHash::with_buckets(2, 8, 1);
+        let g = RcuThread::register();
+        for k in 0..300u64 {
+            assert!(ConcurrentMap::insert(&m, &g, k, k + 1), "insert {k}");
+        }
+        m.split_shard(&g, 0, 16, HashFn::Seeded(7)).unwrap();
+        m.split_shard(&g, 2, 16, HashFn::Seeded(8)).unwrap();
+        assert_eq!(m.shards(), 4);
+        // The facade's view is unchanged by the resizes.
+        assert_eq!(ConcurrentMap::len(&m, &g), 300);
+        assert!(!ConcurrentMap::insert(&m, &g, 10, 99), "dup insert");
+        for k in (0..300u64).step_by(3) {
+            assert!(ConcurrentMap::delete(&m, &g, k), "delete {k}");
+        }
+        assert!(!ConcurrentMap::upsert(&m, &g, 1, 777), "upsert present");
+        assert_eq!(ConcurrentMap::lookup(&m, &g, 1), Some(777));
+        // Merge everything back down to one shard; semantics unchanged.
+        while m.shards() > 1 {
+            let mut merged = false;
+            for s in 0..m.shards() {
+                if m.buddy_of(&g, s).is_some() {
+                    m.merge_shard(&g, s, 32, HashFn::Seeded(9)).unwrap();
+                    merged = true;
+                    break;
+                }
+            }
+            assert!(merged, "no mergeable pair above one shard");
+        }
+        assert_eq!(ConcurrentMap::len(&m, &g), 200);
+        for k in 0..300u64 {
+            assert_eq!(
+                ConcurrentMap::lookup(&m, &g, k).is_some(),
+                k % 3 != 0,
+                "post-merge lookup {k}"
+            );
+        }
+        let snap = ConcurrentMap::snapshot(&m, &g).unwrap();
+        assert_eq!(snap.len(), 200);
+        assert!(snap.windows(2).all(|w| w[0].0 < w[1].0), "unsorted");
+        let loads = ConcurrentMap::bucket_loads(&m, &g).unwrap();
+        assert_eq!(loads.iter().sum::<usize>(), 200);
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn lookups_never_miss_during_resizes() {
+        // The conformance reader-vs-rebuild race, with the geometry
+        // change being the shard count itself: a reader hammering
+        // always-present keys must never observe a miss while shards
+        // split and merge under it.
+        let m = Arc::new(ShardedDHash::with_buckets(2, 32, 3));
+        let n = 800u64;
+        {
+            let g = RcuThread::register();
+            for k in 0..n {
+                m.insert(&g, k, k).unwrap();
+            }
+            g.quiescent_state();
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let misses = Arc::new(AtomicU64::new(0));
+        let started = Arc::new(AtomicU64::new(0));
+        let m2 = m.clone();
+        let s2 = stop.clone();
+        let mi = misses.clone();
+        let st2 = started.clone();
+        let reader = std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let mut rng = crate::util::SplitMix64::new(11);
+            let mut ops = 0u64;
+            while !s2.load(Ordering::Relaxed) {
+                let k = rng.next_bounded(n);
+                if m2.lookup(&g, k).is_none() {
+                    mi.fetch_add(1, Ordering::Relaxed);
+                }
+                ops += 1;
+                st2.store(ops, Ordering::Relaxed);
+                g.quiescent_state();
+            }
+            ops
+        });
+        while started.load(Ordering::Relaxed) < 16 {
+            std::thread::yield_now();
+        }
+        {
+            let g = RcuThread::register();
+            for i in 0..3u64 {
+                m.split_shard(&g, 0, 32, HashFn::Seeded(i)).unwrap();
+                m.split_shard(&g, 1, 32, HashFn::Seeded(i + 5)).unwrap();
+                while m.shards() > 2 {
+                    let s = (0..m.shards())
+                        .find(|&s| m.buddy_of(&g, s).is_some())
+                        .expect("a mergeable pair exists above the base depth");
+                    m.merge_shard(&g, s, 32, HashFn::Seeded(i + 9)).unwrap();
+                }
+            }
+            g.quiescent_state();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let ops = reader.join().unwrap();
+        assert!(ops > 0);
+        assert_eq!(
+            misses.load(Ordering::Relaxed),
+            0,
+            "lookups missed present keys during split/merge"
+        );
+        rcu_barrier();
+    }
+
+    #[test]
+    fn concurrent_update_churn_across_resizes() {
+        // The toggle-pattern writers from the shared suite, racing a
+        // split/merge storm instead of plain rebuilds: inserts of absent
+        // keys and deletes of present keys must keep their outcome
+        // guarantees across every epoch.
+        let m = Arc::new(ShardedDHash::with_buckets(2, 16, 5));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut hs = Vec::new();
+        for t in 0..3u64 {
+            let m2 = m.clone();
+            let s2 = stop.clone();
+            hs.push(std::thread::spawn(move || {
+                let g = RcuThread::register();
+                let base = t * 1000;
+                let mut present = vec![false; 200];
+                let mut rng = crate::util::SplitMix64::new(t + 50);
+                let mut iters = 0u64;
+                while !s2.load(Ordering::Relaxed) {
+                    let i = rng.next_bounded(200) as usize;
+                    let k = base + i as u64;
+                    if present[i] {
+                        assert!(m2.lookup(&g, k).is_some(), "present key {k} missed");
+                        assert!(m2.delete(&g, k), "delete of present {k}");
+                        present[i] = false;
+                    } else {
+                        assert!(m2.insert(&g, k, k).is_ok(), "insert of absent {k}");
+                        present[i] = true;
+                    }
+                    g.quiescent_state();
+                    iters += 1;
+                }
+                g.offline();
+                (iters, present.iter().filter(|&&p| p).count())
+            }));
+        }
+        let mut resizes = 0u64;
+        {
+            let g = RcuThread::register();
+            for i in 0..4u64 {
+                m.split_shard(&g, (i % 2) as usize, 16, HashFn::Seeded(i)).unwrap();
+                resizes += 1;
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                while m.shards() > 2 {
+                    let s = (0..m.shards())
+                        .find(|&s| m.buddy_of(&g, s).is_some())
+                        .expect("mergeable pair");
+                    m.merge_shard(&g, s, 16, HashFn::Seeded(i + 31)).unwrap();
+                    resizes += 1;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            g.quiescent_state();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let results: Vec<(u64, usize)> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        let total: u64 = results.iter().map(|r| r.0).sum();
+        assert!(total > 100, "too few iterations {total}");
+        assert!(resizes >= 8, "resize storm too small: {resizes}");
+        // Final audit: the map holds exactly what the writers believe.
+        let g = RcuThread::register();
+        let expect: usize = results.iter().map(|r| r.1).sum();
+        assert_eq!(m.len(&g), expect, "population diverged from writers' view");
+        g.quiescent_state();
+        rcu_barrier();
+    }
+}

@@ -209,6 +209,19 @@ impl PreRoute {
     }
 }
 
+/// Why a routing oracle could not answer with usable ids. The batch is
+/// still delivered (arrival order); the cause is surfaced through
+/// [`RouteOutcome`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OracleError {
+    /// The routing engine failed or was unavailable.
+    Engine,
+    /// The directory epoch changed while the ids were being computed:
+    /// they describe a shard layout a split/merge has since retired, so
+    /// sorting by them would order the batch for the wrong shards.
+    Epoch,
+}
+
 /// What happened to one batch's pre-route attempt. Everything but
 /// `Routed`/`Unrouted` is a *fallback*: the batch is still delivered in
 /// arrival order, and the server counts the cause in
@@ -226,6 +239,10 @@ pub enum RouteOutcome {
     FallbackLength,
     /// The oracle's engine failed or was unavailable.
     FallbackEngine,
+    /// A split/merge moved the directory epoch mid-computation
+    /// ([`OracleError::Epoch`]); expected (and rare) while a resize is
+    /// in flight, never silent.
+    FallbackEpoch,
 }
 
 /// A batch handed to a KV worker.
@@ -314,7 +331,7 @@ impl Batcher {
     pub(crate) fn route(
         &self,
         mut entries: Vec<Entry>,
-        hash_ids: Option<&dyn Fn(&[u64]) -> Option<Vec<i64>>>,
+        hash_ids: Option<&dyn Fn(&[u64]) -> Result<Vec<i64>, OracleError>>,
     ) -> Batch {
         let outcome = if self.cfg.pre_route == PreRoute::Off {
             RouteOutcome::Unrouted
@@ -325,7 +342,7 @@ impl Batcher {
                 // silently drop entries — and fail their completion
                 // slots. Engines chunk internally now, so a mismatch is
                 // an oracle bug; it is counted, not swallowed.
-                Some(ids) if ids.len() == entries.len() => {
+                Ok(ids) if ids.len() == entries.len() => {
                     // Stable sort by routing id (preserves per-key op
                     // order within the batch).
                     let mut tagged: Vec<(i64, Entry)> = ids.into_iter().zip(entries).collect();
@@ -333,8 +350,9 @@ impl Batcher {
                     entries = tagged.into_iter().map(|(_, e)| e).collect();
                     RouteOutcome::Routed
                 }
-                Some(_) => RouteOutcome::FallbackLength,
-                None => RouteOutcome::FallbackEngine,
+                Ok(_) => RouteOutcome::FallbackLength,
+                Err(OracleError::Engine) => RouteOutcome::FallbackEngine,
+                Err(OracleError::Epoch) => RouteOutcome::FallbackEpoch,
             }
         } else {
             RouteOutcome::Unrouted
@@ -347,7 +365,7 @@ impl Batcher {
     pub(crate) fn next_batch(
         &self,
         rx: &Receiver<LaneMsg>,
-        hash_ids: Option<&dyn Fn(&[u64]) -> Option<Vec<i64>>>,
+        hash_ids: Option<&dyn Fn(&[u64]) -> Result<Vec<i64>, OracleError>>,
     ) -> Option<Batch> {
         let (entries, _open) = self.collect(rx);
         if entries.is_empty() {
@@ -558,7 +576,7 @@ mod tests {
             tx.send(LaneMsg::Req(e)).unwrap();
         }
         // Fake hash: routing id = key (identity).
-        let hash = |keys: &[u64]| Some(keys.iter().map(|&k| k as i64).collect());
+        let hash = |keys: &[u64]| Ok(keys.iter().map(|&k| k as i64).collect());
         let batch = b.next_batch(&rx, Some(&hash)).unwrap();
         assert!(batch.pre_hashed());
         assert_eq!(batch.outcome, RouteOutcome::Routed);
@@ -588,11 +606,10 @@ mod tests {
             tx.send(LaneMsg::Req(e)).unwrap();
         }
         let hash = |keys: &[u64]| {
-            Some(
-                keys.iter()
-                    .map(|&k| composite_route_id((k / 100) as u32, (k % 100) as u32))
-                    .collect(),
-            )
+            Ok(keys
+                .iter()
+                .map(|&k| composite_route_id((k / 100) as u32, (k % 100) as u32))
+                .collect())
         };
         let batch = b.next_batch(&rx, Some(&hash)).unwrap();
         assert_eq!(batch.outcome, RouteOutcome::Routed);
@@ -622,9 +639,11 @@ mod tests {
         }
         let engine = NativeEngine::with_shape(8, 4);
         assert!(b.cfg.max_batch > engine.batch());
-        let oracle = |keys: &[u64]| -> Option<Vec<i64>> {
-            let ids = engine.batch_hash(keys, 1, 16, HashKind::Seeded).ok()?;
-            Some(ids.into_iter().map(i64::from).collect())
+        let oracle = |keys: &[u64]| -> Result<Vec<i64>, OracleError> {
+            let ids = engine
+                .batch_hash(keys, 1, 16, HashKind::Seeded)
+                .map_err(|_| OracleError::Engine)?;
+            Ok(ids.into_iter().map(i64::from).collect())
         };
         let batch = b.next_batch(&rx, Some(&oracle)).unwrap();
         assert!(
@@ -653,7 +672,7 @@ mod tests {
         for e in es {
             tx.send(LaneMsg::Req(e)).unwrap();
         }
-        let hash = |keys: &[u64]| Some(keys.iter().take(2).map(|&k| k as i64).collect());
+        let hash = |keys: &[u64]| Ok(keys.iter().take(2).map(|&k| k as i64).collect());
         let batch = b.next_batch(&rx, Some(&hash)).unwrap();
         assert!(!batch.pre_hashed());
         assert_eq!(batch.outcome, RouteOutcome::FallbackLength);
@@ -674,7 +693,7 @@ mod tests {
         for e in es {
             tx.send(LaneMsg::Req(e)).unwrap();
         }
-        let hash = |_keys: &[u64]| -> Option<Vec<i64>> { None };
+        let hash = |_keys: &[u64]| -> Result<Vec<i64>, OracleError> { Err(OracleError::Engine) };
         let batch = b.next_batch(&rx, Some(&hash)).unwrap();
         assert!(!batch.pre_hashed());
         assert_eq!(batch.outcome, RouteOutcome::FallbackEngine);
@@ -688,6 +707,31 @@ mod tests {
         }
         let batch = b_off.next_batch(&rx, Some(&hash)).unwrap();
         assert_eq!(batch.outcome, RouteOutcome::Unrouted);
+    }
+
+    #[test]
+    fn stale_epoch_falls_back_with_epoch_cause() {
+        // An oracle that detects its ids were computed against a retired
+        // directory (a split/merge landed mid-computation) must keep
+        // every entry in arrival order and report the epoch cause — the
+        // mid-resize analogue of the engine fallback.
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            pre_route: PreRoute::Bucket,
+        });
+        let (tx, rx) = channel();
+        let reqs: Vec<Request> = [8u64, 2, 6].iter().map(|&k| Request::get(k)).collect();
+        let (_set, es) = entries(&reqs);
+        for e in es {
+            tx.send(LaneMsg::Req(e)).unwrap();
+        }
+        let hash = |_keys: &[u64]| -> Result<Vec<i64>, OracleError> { Err(OracleError::Epoch) };
+        let batch = b.next_batch(&rx, Some(&hash)).unwrap();
+        assert!(!batch.pre_hashed());
+        assert_eq!(batch.outcome, RouteOutcome::FallbackEpoch);
+        let keys: Vec<u64> = batch.entries.iter().map(|e| e.key()).collect();
+        assert_eq!(keys, vec![8, 2, 6], "fallback must keep arrival order");
     }
 
     #[test]

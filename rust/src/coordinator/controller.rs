@@ -1,8 +1,17 @@
 //! The rebuild controller: turns attack verdicts into rebuild calls with
-//! a fresh random seed, rate-limited by a **per-shard** cooldown so a
-//! sustained attack cannot make the service thrash on back-to-back
-//! rebuilds — while an attack on one shard never blocks mitigating a
-//! different shard (targeted mitigation).
+//! a fresh random seed, rate-limited by a cooldown keyed per **stable
+//! shard uid** so a sustained attack cannot make the service thrash on
+//! back-to-back rebuilds — while an attack on one shard never blocks
+//! mitigating a different shard (targeted mitigation). Uids (from
+//! `RouteSnapshot::uids`) are assigned at shard creation and never
+//! reused: a shard born from a split/merge starts cold instead of
+//! inheriting a dead shard's clock, and a surviving shard keeps its
+//! clock across unrelated resizes even though its *ordinal* shifts.
+//!
+//! It also owns the **elastic policy**: given per-shard occupancy and
+//! chi² pressure, decide whether to split a hot shard or merge a cold
+//! buddy pair ([`RebuildController::plan_resize`]), bounded by
+//! `max_shards` and its own resize cooldown.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -13,7 +22,8 @@ use crate::util::rng::mix64;
 
 #[derive(Clone, Debug)]
 pub struct ControllerConfig {
-    /// Minimum spacing between mitigation rebuilds of the *same* shard.
+    /// Minimum spacing between mitigation rebuilds of the *same* shard
+    /// (identified by its stable uid).
     pub cooldown: Duration,
     /// Bucket count for mitigation rebuilds (None = keep current).
     pub rebuild_buckets: Option<usize>,
@@ -28,6 +38,46 @@ impl Default for ControllerConfig {
     }
 }
 
+/// Knobs for the elastic (split/merge) policy. `None` in
+/// [`super::CoordinatorConfig`] keeps the shard count fixed.
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// Hard cap on the shard count; a split is never planned past it.
+    pub max_shards: usize,
+    /// Split a shard when its pressure (load factor, inflated by chi²
+    /// skew — see [`RebuildController::plan_resize`]) exceeds this.
+    pub split_load_factor: f64,
+    /// Merge a buddy pair when BOTH load factors sit below this. Keep it
+    /// well under half of `split_load_factor` or the policy thrashes.
+    pub merge_load_factor: f64,
+    /// Weight of chi² pressure in the split score: a shard at the
+    /// detector threshold counts as `1 + chi2_weight` times its load.
+    pub chi2_weight: f64,
+    /// Minimum spacing between planned resizes (splits or merges).
+    pub cooldown: Duration,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        Self {
+            max_shards: 16,
+            split_load_factor: 16.0,
+            merge_load_factor: 2.0,
+            chi2_weight: 1.0,
+            cooldown: Duration::from_millis(500),
+        }
+    }
+}
+
+/// What the elastic policy decided for one evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResizeAction {
+    /// Split this shard ordinal in two.
+    Split(usize),
+    /// Merge this shard ordinal with its buddy.
+    Merge(usize),
+}
+
 /// Record of one mitigation rebuild.
 #[derive(Clone, Debug)]
 pub struct RebuildEvent {
@@ -35,6 +85,9 @@ pub struct RebuildEvent {
     pub at: Duration,
     /// The shard that was rebuilt (0 in unsharded deployments).
     pub shard: usize,
+    /// Directory epoch the verdict (and the shard ordinal) was observed
+    /// under.
+    pub epoch: u64,
     /// chi2 that triggered the rebuild.
     pub chi2: f32,
     /// The hash function installed.
@@ -45,6 +98,24 @@ pub struct RebuildEvent {
     pub elapsed: Duration,
 }
 
+/// Record of one completed elastic resize (split or merge).
+#[derive(Clone, Debug)]
+pub struct ResizeEvent {
+    /// Offset from coordinator start.
+    pub at: Duration,
+    /// What happened.
+    pub action: ResizeAction,
+    /// Directory epoch the decision was made under (the epoch *before*
+    /// the resize; the resize bumped it).
+    pub epoch: u64,
+    /// Shard count after the resize completed.
+    pub shards_after: usize,
+    /// Nodes migrated.
+    pub moved: u64,
+    /// Resize wall time (including its grace periods).
+    pub elapsed: Duration,
+}
+
 pub struct RebuildController {
     cfg: ControllerConfig,
     start: Instant,
@@ -52,11 +123,18 @@ pub struct RebuildController {
 }
 
 struct CtlState {
-    /// Per-shard cooldown clocks (shard 0 doubles as the whole-map clock
-    /// for unsharded deployments).
-    last_rebuild: HashMap<usize, Instant>,
+    /// Per-shard cooldown clocks, keyed by stable shard uid (never
+    /// reused): a shard created by a split/merge starts cold, and a
+    /// surviving shard keeps its clock across unrelated resizes.
+    /// Expired entries (older than the cooldown — permissive anyway)
+    /// are purged on every plan call, so retired shards cannot
+    /// accumulate clocks forever.
+    last_rebuild: HashMap<u64, Instant>,
+    /// Last planned resize (split or merge), for the elastic cooldown.
+    last_resize: Option<Instant>,
     seed_state: u64,
     events: Vec<RebuildEvent>,
+    resize_events: Vec<ResizeEvent>,
 }
 
 impl RebuildController {
@@ -66,37 +144,48 @@ impl RebuildController {
             start: Instant::now(),
             state: Mutex::new(CtlState {
                 last_rebuild: HashMap::new(),
+                last_resize: None,
                 seed_state: entropy,
                 events: Vec::new(),
+                resize_events: Vec::new(),
             }),
         }
     }
 
-    /// [`RebuildController::plan_mitigation_for`] on shard 0 — the
-    /// whole-map path for unsharded deployments.
+    /// [`RebuildController::plan_mitigation_for`] on shard uid 0 — the
+    /// whole-map path for unsharded deployments (whose single shard
+    /// keeps uid 0 forever).
     pub fn plan_mitigation(&self, now: Instant) -> Option<HashFn> {
         self.plan_mitigation_for(0, now)
     }
 
-    /// If `shard`'s cooldown allows, pick a fresh hash function for a
-    /// targeted mitigation of that shard. Cooldowns are independent per
+    /// If the shard's cooldown allows, pick a fresh hash function for a
+    /// targeted mitigation of the shard with stable uid `shard_uid`
+    /// (`RouteSnapshot::uids[ordinal]`). Cooldowns are independent per
     /// shard: a hot shard being in cooldown must not block mitigating a
-    /// freshly-attacked one. The attacker cannot predict the next seed:
-    /// it chains the previous seed state through mix64 with the current
-    /// monotonic clock (and the shard id, so two shards mitigated in the
-    /// same instant never share a seed).
-    pub fn plan_mitigation_for(&self, shard: usize, now: Instant) -> Option<HashFn> {
+    /// freshly-attacked one, and — because uids survive resizes while
+    /// ordinals do not — a split of shard A can neither reset nor
+    /// transplant shard B's clock. The attacker cannot predict the next
+    /// seed: it chains the previous seed state through mix64 with the
+    /// current monotonic clock (and the shard uid, so two shards
+    /// mitigated in the same instant never share a seed).
+    pub fn plan_mitigation_for(&self, shard_uid: u64, now: Instant) -> Option<HashFn> {
         let mut st = self.state.lock().unwrap();
-        if let Some(&last) = st.last_rebuild.get(&shard) {
-            if now.duration_since(last) < self.cfg.cooldown {
+        // Expired clocks are permissive anyway; purge them so uids of
+        // long-retired shards cannot accumulate.
+        let cooldown = self.cfg.cooldown;
+        st.last_rebuild
+            .retain(|_, &mut t| now.saturating_duration_since(t) < cooldown);
+        if let Some(&last) = st.last_rebuild.get(&shard_uid) {
+            if now.duration_since(last) < cooldown {
                 return None;
             }
         }
-        st.last_rebuild.insert(shard, now);
+        st.last_rebuild.insert(shard_uid, now);
         st.seed_state = mix64(
             st.seed_state
                 ^ self.start.elapsed().as_nanos() as u64
-                ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                ^ shard_uid.wrapping_mul(0x9E37_79B9_7F4A_7C15),
         );
         Some(HashFn::Seeded(st.seed_state))
     }
@@ -106,12 +195,90 @@ impl RebuildController {
         self.cfg.rebuild_buckets.unwrap_or(current)
     }
 
-    /// Record a completed mitigation of `shard`.
-    pub fn record(&self, shard: usize, chi2: f32, new_hash: HashFn, moved: u64, elapsed: Duration) {
+    /// The elastic policy: decide whether to split or merge, given one
+    /// coherent observation of the directory. `profile[s]` is shard
+    /// `s`'s `(live nodes, nbuckets)`, `chi2s[s]` its latest detector
+    /// statistic (0 when unevaluated), `splittable[s]` whether a split
+    /// of `s` can succeed right now (depth headroom — see
+    /// `ShardedDHash::splittable`), `buddies[s]` its mergeable buddy
+    /// ordinal (None when it cannot merge right now).
+    ///
+    /// Split pressure is load factor inflated by chi² skew — a shard
+    /// both hot *and* skewed splits first, which also halves what the
+    /// next targeted mitigation has to migrate. Only splittable shards
+    /// compete, so a shard pinned at the directory's depth cap cannot
+    /// burn the resize cooldown on doomed split plans and starve the
+    /// merge branch. Merges require BOTH buddies cold, so a cold shard
+    /// never drags its hot buddy into a merged shard that would
+    /// immediately re-split.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_resize(
+        &self,
+        cfg: &ElasticConfig,
+        profile: &[(usize, usize)],
+        chi2s: &[f32],
+        chi2_threshold: f32,
+        splittable: &[bool],
+        buddies: &[Option<usize>],
+        now: Instant,
+    ) -> Option<ResizeAction> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(last) = st.last_resize {
+            if now.duration_since(last) < cfg.cooldown {
+                return None;
+            }
+        }
+        let lf = |s: usize| profile[s].0 as f64 / profile[s].1.max(1) as f64;
+        let pressure = |s: usize| {
+            let skew = chi2s.get(s).copied().unwrap_or(0.0) as f64 / chi2_threshold.max(1.0) as f64;
+            lf(s) * (1.0 + cfg.chi2_weight * skew.clamp(0.0, 4.0))
+        };
+        let nshards = profile.len();
+        // Split the highest-pressure shard that can split, capacity
+        // permitting.
+        if nshards < cfg.max_shards {
+            if let Some(hot) = (0..nshards)
+                .filter(|&s| splittable.get(s).copied().unwrap_or(false))
+                .max_by(|&a, &b| pressure(a).total_cmp(&pressure(b)))
+            {
+                if pressure(hot) > cfg.split_load_factor {
+                    st.last_resize = Some(now);
+                    return Some(ResizeAction::Split(hot));
+                }
+            }
+        }
+        // Merge the coldest mergeable pair.
+        let mut cold: Vec<usize> = (0..nshards).collect();
+        cold.sort_by(|&a, &b| lf(a).total_cmp(&lf(b)));
+        for s in cold {
+            if lf(s) >= cfg.merge_load_factor {
+                break; // sorted: nothing colder remains
+            }
+            if let Some(b) = buddies.get(s).copied().flatten() {
+                if b < nshards && lf(b) < cfg.merge_load_factor {
+                    st.last_resize = Some(now);
+                    return Some(ResizeAction::Merge(s));
+                }
+            }
+        }
+        None
+    }
+
+    /// Record a completed mitigation of `shard` (observed under `epoch`).
+    pub fn record(
+        &self,
+        epoch: u64,
+        shard: usize,
+        chi2: f32,
+        new_hash: HashFn,
+        moved: u64,
+        elapsed: Duration,
+    ) {
         let mut st = self.state.lock().unwrap();
         st.events.push(RebuildEvent {
             at: self.start.elapsed(),
             shard,
+            epoch,
             chi2,
             new_hash,
             moved,
@@ -119,8 +286,32 @@ impl RebuildController {
         });
     }
 
+    /// Record a completed elastic resize.
+    pub fn record_resize(
+        &self,
+        action: ResizeAction,
+        epoch: u64,
+        shards_after: usize,
+        moved: u64,
+        elapsed: Duration,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        st.resize_events.push(ResizeEvent {
+            at: self.start.elapsed(),
+            action,
+            epoch,
+            shards_after,
+            moved,
+            elapsed,
+        });
+    }
+
     pub fn events(&self) -> Vec<RebuildEvent> {
         self.state.lock().unwrap().events.clone()
+    }
+
+    pub fn resize_events(&self) -> Vec<ResizeEvent> {
+        self.state.lock().unwrap().resize_events.clone()
     }
 }
 
@@ -160,13 +351,44 @@ mod tests {
         let t0 = Instant::now();
         let a = c.plan_mitigation_for(0, t0);
         assert!(a.is_some());
-        // Shard 0 is cooling down, but shard 3 is independent.
+        // Shard uid 0 is cooling down, but uid 3 is independent.
         assert!(c.plan_mitigation_for(0, t0 + Duration::from_millis(10)).is_none());
         let b = c.plan_mitigation_for(3, t0 + Duration::from_millis(10));
         assert!(b.is_some());
         assert_ne!(a, b, "distinct shards must get distinct seeds");
-        // And shard 3 now cools down on its own clock.
+        // And uid 3 now cools down on its own clock.
         assert!(c.plan_mitigation_for(3, t0 + Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn reborn_shards_start_cold_and_survivors_keep_their_clocks() {
+        // Resizes shift shard *ordinals* but never reuse *uids*: a shard
+        // born from a split/merge (fresh uid) must start cold, while an
+        // untouched shard's clock survives the epoch change untouched —
+        // and expired clocks are purged so retired uids don't pile up.
+        let c = RebuildController::new(
+            ControllerConfig {
+                cooldown: Duration::from_millis(100),
+                rebuild_buckets: None,
+            },
+            5,
+        );
+        let t0 = Instant::now();
+        assert!(c.plan_mitigation_for(2, t0).is_some());
+        // Same uid: cooling down — even if a resize of OTHER shards
+        // bumped the directory epoch meanwhile (uid keying makes that
+        // invisible here, which is the point).
+        assert!(c.plan_mitigation_for(2, t0 + Duration::from_millis(10)).is_none());
+        // A freshly created shard (new uid, e.g. a split child): cold.
+        assert!(c.plan_mitigation_for(9, t0 + Duration::from_millis(10)).is_some());
+        assert_eq!(c.state.lock().unwrap().last_rebuild.len(), 2);
+        // Past the cooldown, expired clocks are purged on the next plan.
+        assert!(c.plan_mitigation_for(4, t0 + Duration::from_millis(500)).is_some());
+        assert_eq!(
+            c.state.lock().unwrap().last_rebuild.len(),
+            1,
+            "expired uids must be purged"
+        );
     }
 
     #[test]
@@ -195,11 +417,135 @@ mod tests {
     #[test]
     fn events_recorded() {
         let c = RebuildController::new(ControllerConfig::default(), 9);
-        c.record(2, 777.0, HashFn::Seeded(1), 100, Duration::from_millis(3));
+        c.record(4, 2, 777.0, HashFn::Seeded(1), 100, Duration::from_millis(3));
         let ev = c.events();
         assert_eq!(ev.len(), 1);
         assert_eq!(ev[0].shard, 2);
+        assert_eq!(ev[0].epoch, 4);
         assert_eq!(ev[0].chi2, 777.0);
         assert_eq!(ev[0].moved, 100);
+        c.record_resize(ResizeAction::Split(2), 4, 3, 50, Duration::from_millis(1));
+        let rv = c.resize_events();
+        assert_eq!(rv.len(), 1);
+        assert_eq!(rv[0].action, ResizeAction::Split(2));
+        assert_eq!(rv[0].shards_after, 3);
+    }
+
+    #[test]
+    fn elastic_policy_splits_hot_and_merges_cold() {
+        let c = RebuildController::new(ControllerConfig::default(), 11);
+        let el = ElasticConfig {
+            max_shards: 4,
+            split_load_factor: 8.0,
+            merge_load_factor: 2.0,
+            chi2_weight: 0.0,
+            cooldown: Duration::ZERO,
+        };
+        let thr = 400.0;
+        let t0 = Instant::now();
+        let all = &[true, true][..];
+        let buddies = &[Some(1), Some(0)][..];
+        // Shard 1 is hot (lf 16), shard 0 cold-ish (lf 4): split 1.
+        let prof = [(64usize, 16usize), (256, 16)];
+        assert_eq!(
+            c.plan_resize(&el, &prof, &[0.0, 0.0], thr, all, buddies, t0),
+            Some(ResizeAction::Split(1))
+        );
+        // Both cold: merge the colder one with its buddy.
+        let prof = [(8usize, 16usize), (4, 16)];
+        assert_eq!(
+            c.plan_resize(&el, &prof, &[0.0, 0.0], thr, all, buddies, t0),
+            Some(ResizeAction::Merge(1))
+        );
+        // Cold shard whose buddy is hot: no merge (hysteresis), no split
+        // (below the cutoff).
+        let prof = [(4usize, 16usize), (100, 16)];
+        assert_eq!(
+            c.plan_resize(&el, &prof, &[0.0, 0.0], thr, all, buddies, t0),
+            None
+        );
+        // In-between load on every shard: steady state.
+        let prof = [(64usize, 16usize), (64, 16)];
+        assert_eq!(
+            c.plan_resize(&el, &prof, &[0.0, 0.0], thr, all, buddies, t0),
+            None
+        );
+        // The hot shard pinned at the depth cap cannot split; the policy
+        // must fall through to the merge scan instead of planning a
+        // doomed split (and burning the cooldown on it) — here the cold
+        // pair merges even though shard 1 screams.
+        let prof = [(8usize, 16usize), (512, 16), (4, 16)];
+        assert_eq!(
+            c.plan_resize(
+                &el,
+                &prof,
+                &[0.0, 0.0, 0.0],
+                thr,
+                &[true, false, true],
+                &[None, None, Some(0)],
+                t0
+            ),
+            Some(ResizeAction::Merge(2))
+        );
+    }
+
+    #[test]
+    fn elastic_policy_respects_caps_and_cooldown() {
+        let c = RebuildController::new(ControllerConfig::default(), 13);
+        let el = ElasticConfig {
+            max_shards: 2,
+            split_load_factor: 8.0,
+            merge_load_factor: 2.0,
+            chi2_weight: 0.0,
+            cooldown: Duration::from_millis(100),
+        };
+        let t0 = Instant::now();
+        let all = &[true, true][..];
+        let none = &[None, None][..];
+        // At capacity: the hot shard cannot split.
+        let prof = [(512usize, 16usize), (512, 16)];
+        assert_eq!(c.plan_resize(&el, &prof, &[], 400.0, all, none, t0), None);
+        // Below capacity it can — once; the cooldown gates the next.
+        let el2 = ElasticConfig { max_shards: 4, ..el };
+        assert!(matches!(
+            c.plan_resize(&el2, &prof, &[], 400.0, all, none, t0),
+            Some(ResizeAction::Split(_))
+        ));
+        assert_eq!(
+            c.plan_resize(&el2, &prof, &[], 400.0, all, none, t0 + Duration::from_millis(10)),
+            None,
+            "resize cooldown must gate back-to-back resizes"
+        );
+        assert!(c
+            .plan_resize(&el2, &prof, &[], 400.0, all, none, t0 + Duration::from_millis(150))
+            .is_some());
+    }
+
+    #[test]
+    fn elastic_policy_weighs_chi2_pressure() {
+        let c = RebuildController::new(ControllerConfig::default(), 17);
+        let el = ElasticConfig {
+            max_shards: 4,
+            split_load_factor: 8.0,
+            merge_load_factor: 1.0,
+            chi2_weight: 1.0,
+            cooldown: Duration::ZERO,
+        };
+        let t0 = Instant::now();
+        // Equal load (lf 6, below the cutoff), but shard 1 is at 2x the
+        // detector threshold: pressure 6 * (1 + 2) = 18 > 8 -> split 1.
+        let prof = [(96usize, 16usize), (96, 16)];
+        assert_eq!(
+            c.plan_resize(
+                &el,
+                &prof,
+                &[0.0, 800.0],
+                400.0,
+                &[true, true],
+                &[None, None],
+                t0
+            ),
+            Some(ResizeAction::Split(1))
+        );
     }
 }

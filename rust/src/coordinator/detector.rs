@@ -45,15 +45,21 @@ impl KeySampler {
     }
 }
 
-/// Split a key sample by destination shard, using the same fixed
-/// shard-selector pre-hash a [`crate::dhash::ShardedDHash`] routes with.
-/// The analytics thread evaluates chi² per shard from the partitions, so
-/// a collision flood aimed at one shard trips only that shard's verdict
-/// (targeted mitigation). With `nshards == 1` this is the identity.
-pub fn partition_by_shard(keys: &[u64], nshards: usize) -> Vec<Vec<u64>> {
-    let mut parts = vec![Vec::new(); nshards];
+/// Split a key sample by destination shard under ONE epoch-stamped
+/// [`RouteSnapshot`](crate::dhash::RouteSnapshot) — the same directory
+/// view a [`crate::dhash::ShardedDHash`] routes with. The analytics
+/// thread evaluates chi² per shard from the partitions, so a collision
+/// flood aimed at one shard trips only that shard's verdict (targeted
+/// mitigation). Keying the partition by the snapshot (shard ordinal +
+/// epoch) instead of a bare shard count is what keeps verdicts
+/// attributable across splits/merges: a partition computed under epoch
+/// `e` can never be read as shard ids of a later layout, because the
+/// caller checks `snap.epoch` before acting on it. With one shard this
+/// is the identity partition.
+pub fn partition_by_shard(keys: &[u64], snap: &crate::dhash::RouteSnapshot) -> Vec<Vec<u64>> {
+    let mut parts = vec![Vec::new(); snap.nshards()];
     for &k in keys {
-        parts[crate::dhash::shard_of(k, nshards)].push(k);
+        parts[snap.shard_of(k) as usize].push(k);
     }
     parts
 }
@@ -172,18 +178,42 @@ mod tests {
 
     #[test]
     fn partition_by_shard_agrees_with_selector() {
+        use crate::dhash::{HashFn, RouteSnapshot};
         let keys: Vec<u64> = (0..4096u64).map(|k| k.wrapping_mul(0x9e37)).collect();
         let nshards = 8;
-        let parts = partition_by_shard(&keys, nshards);
+        let snap = RouteSnapshot::uniform(nshards, (HashFn::Seeded(1), 64));
+        let parts = partition_by_shard(&keys, &snap);
         assert_eq!(parts.len(), nshards);
         assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), keys.len());
+        // A uniform snapshot partitions exactly like the fixed selector.
         for (s, part) in parts.iter().enumerate() {
             assert!(part.iter().all(|&k| crate::dhash::shard_of(k, nshards) == s));
         }
         // Unsharded: identity partition.
-        let one = partition_by_shard(&keys, 1);
+        let one = partition_by_shard(&keys, &RouteSnapshot::uniform(1, (HashFn::Seeded(1), 64)));
         assert_eq!(one.len(), 1);
         assert_eq!(one[0], keys);
+    }
+
+    #[test]
+    fn partition_by_shard_follows_the_live_directory() {
+        // After a split, the partition must track the directory (five
+        // shards at mixed depths), not any uniform selector.
+        use crate::dhash::{HashFn, ShardedDHash};
+        use crate::rcu::{rcu_barrier, RcuThread};
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(4, 16, 3);
+        m.split_shard(&g, 2, 16, HashFn::Seeded(9)).unwrap();
+        let snap = m.route_snapshot(&g);
+        let keys: Vec<u64> = (0..2048u64).map(|k| k.wrapping_mul(0x9e37)).collect();
+        let parts = partition_by_shard(&keys, &snap);
+        assert_eq!(parts.len(), 5);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), keys.len());
+        for (s, part) in parts.iter().enumerate() {
+            assert!(part.iter().all(|&k| m.shard_of(&g, k) == s), "shard {s}");
+        }
+        g.quiescent_state();
+        rcu_barrier();
     }
 
     #[test]

@@ -38,9 +38,13 @@ mod controller;
 mod detector;
 mod server;
 
-pub use batcher::{Batch, Batcher, BatcherConfig, PreRoute, Request, Response, RouteOutcome};
+pub use batcher::{
+    Batch, Batcher, BatcherConfig, OracleError, PreRoute, Request, Response, RouteOutcome,
+};
 pub use client::{BatchTicket, KvClient, SubmitError, Ticket};
-pub use controller::{ControllerConfig, RebuildController, RebuildEvent};
+pub use controller::{
+    ControllerConfig, ElasticConfig, RebuildController, RebuildEvent, ResizeAction, ResizeEvent,
+};
 pub use detector::{DetectorConfig, KeySampler, SkewVerdict};
 pub use server::{Coordinator, CoordinatorConfig, CoordinatorStats};
 
@@ -73,6 +77,7 @@ mod tests {
                 cooldown: Duration::from_millis(50),
                 rebuild_buckets: None,
             },
+            elastic: None,
             // These tests use 64 buckets — fewer than the detector's 256
             // bins, which the folding histogram would misread as skew (the
             // detector assumes nbuckets >= nbins; see runtime::native).
@@ -207,6 +212,41 @@ mod tests {
         let mut cfg = quick_config();
         cfg.lanes = 3;
         assert!(Coordinator::start(cfg).is_err());
+    }
+
+    #[test]
+    fn elastic_without_analytics_rejected() {
+        // The split/merge policy runs on the analytics thread; asking
+        // for elasticity with analytics off would silently never resize.
+        let mut cfg = quick_config();
+        cfg.elastic = Some(ElasticConfig::default());
+        assert!(!cfg.enable_analytics);
+        assert!(Coordinator::start(cfg).is_err());
+    }
+
+    #[test]
+    fn stats_surface_directory_shape() {
+        let mut cfg = quick_config();
+        cfg.shards = 4;
+        let c = Arc::new(Coordinator::start(cfg).unwrap());
+        let st = c.stats();
+        assert_eq!(st.shards, 4);
+        assert_eq!(st.epoch, 0);
+        assert_eq!(st.splits, 0);
+        assert_eq!(st.merges, 0);
+        // A split driven directly through the map surfaces in the stats.
+        {
+            let g = crate::rcu::RcuThread::register();
+            c.map()
+                .split_shard(&g, 1, 64, crate::dhash::HashFn::Seeded(5))
+                .unwrap();
+            g.quiescent_state();
+        }
+        let st = c.stats();
+        assert_eq!(st.shards, 5);
+        assert_eq!(st.epoch, 1);
+        assert_eq!(st.splits, 1);
+        c.shutdown();
     }
 
     #[test]

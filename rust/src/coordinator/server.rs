@@ -1,12 +1,15 @@
 //! The coordinator proper: wires ingest lanes → per-lane batchers →
 //! workers → the sharded map, plus the analytics thread (per-shard
-//! detector verdicts + targeted rebuild mitigation).
+//! detector verdicts, targeted rebuild mitigation, and — when
+//! [`CoordinatorConfig::elastic`] is set — the load-based online shard
+//! split/merge policy).
 //!
 //! The KV workers program against the [`ConcurrentMap`] facade; only the
 //! analytics thread needs the concrete [`ShardedDHash`] (per-shard hash
-//! functions and targeted rebuilds have no trait-level surface). With
-//! `shards == 1` the sharded map degenerates to the paper's single
-//! `DHashMap` and every behavior matches the pre-sharding coordinator.
+//! functions, targeted rebuilds, and splits/merges have no trait-level
+//! surface). With `shards == 1` the sharded map degenerates to the
+//! paper's single `DHashMap` and every behavior matches the pre-sharding
+//! coordinator.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
@@ -15,10 +18,11 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::batcher::{
-    Batch, Batcher, BatcherConfig, IngestLanes, LaneMsg, PreRoute, Request, Response, RouteOutcome,
+    Batch, Batcher, BatcherConfig, IngestLanes, LaneMsg, OracleError, PreRoute, Request, Response,
+    RouteOutcome,
 };
 use super::client::KvClient;
-use super::controller::{ControllerConfig, RebuildController};
+use super::controller::{ControllerConfig, ElasticConfig, RebuildController, ResizeAction};
 use super::detector::{partition_by_shard, DetectorConfig, KeySampler, SkewVerdict};
 use crate::dhash::{HashFn, ShardedDHash};
 use crate::map::ConcurrentMap;
@@ -32,23 +36,31 @@ pub struct CoordinatorConfig {
     /// exactly as before sharding).
     pub nbuckets: usize,
     pub hash: HashFn,
-    /// Shard count (power of two; 1 = the paper's single table).
+    /// Initial shard count (power of two; 1 = the paper's single table).
+    /// With [`CoordinatorConfig::elastic`] set, the count then moves
+    /// online between 1 and `max_shards` as load demands.
     pub shards: usize,
     /// Independent ingest lanes (power of two; 1 = the old single
     /// funnel). A key's lane is the fixed shard-selector pre-hash
     /// ([`crate::dhash::shard_of`] over the lane count), so per-key
-    /// submission order is preserved into the batch stream and a
-    /// rebuild — which only swaps per-shard hash functions — never
-    /// re-routes a key's lane. Each lane is drained by its own batcher
-    /// thread. Note per-key FIFO is a lane/batch property: with
-    /// `workers > 1`, consecutive batches may still execute
-    /// concurrently (exactly as with the pre-lane single batcher).
+    /// submission order is preserved into the batch stream and neither a
+    /// rebuild (which only swaps per-shard hash functions) nor a shard
+    /// split/merge (which only extends/retracts *selector* bits — the
+    /// selector input never changes) can ever re-route a key's lane.
+    /// Each lane is drained by its own batcher thread. Note per-key FIFO
+    /// is a lane/batch property: with `workers > 1`, consecutive batches
+    /// may still execute concurrently (exactly as with the pre-lane
+    /// single batcher).
     pub lanes: usize,
     /// KV worker threads.
     pub workers: usize,
     pub batcher: BatcherConfig,
     pub detector: DetectorConfig,
     pub controller: ControllerConfig,
+    /// Online shard split/merge policy (None = the shard count stays
+    /// fixed at `shards`). Evaluated by the analytics thread, so it
+    /// requires `enable_analytics`.
+    pub elastic: Option<ElasticConfig>,
     /// Run the detector/mitigation loop on the configured engine backend
     /// ([`crate::runtime::load_engine`]; the native backend by default,
     /// `DHASH_ENGINE=pjrt` for the AOT-artifact backend).
@@ -66,6 +78,7 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             detector: DetectorConfig::default(),
             controller: ControllerConfig::default(),
+            elastic: None,
             enable_analytics: true,
         }
     }
@@ -86,9 +99,21 @@ pub struct CoordinatorStats {
     /// Pre-route attempts abandoned because the routing engine failed or
     /// was unavailable (e.g. `pre_route: Bucket` without analytics).
     pub pre_route_fallbacks_engine: u64,
+    /// Pre-route attempts abandoned because a shard split/merge moved
+    /// the directory epoch while the ids were being computed — expected
+    /// (and rare) while a resize is in flight, never silent.
+    pub pre_route_fallbacks_epoch: u64,
     /// Mitigation + manual rebuilds completed (a staggered whole-map
     /// rebuild counts once).
     pub rebuilds: u64,
+    /// Completed online shard splits.
+    pub splits: u64,
+    /// Completed online shard merges.
+    pub merges: u64,
+    /// Current shard count (moves when `elastic` is set).
+    pub shards: u64,
+    /// Current directory epoch (bumped once per split/merge).
+    pub epoch: u64,
     /// Max per-shard chi2 from the most recent detector evaluation
     /// (0 until evaluated).
     pub last_chi2: f32,
@@ -108,6 +133,7 @@ struct Shared {
     pre_routed_batches: AtomicU64,
     pre_route_fallbacks_length: AtomicU64,
     pre_route_fallbacks_engine: AtomicU64,
+    pre_route_fallbacks_epoch: AtomicU64,
     rebuilds: AtomicU64,
     detector_runs: AtomicU64,
     /// f32 bits of the last max-over-shards chi2.
@@ -143,6 +169,17 @@ impl Coordinator {
             "lanes must be a power of two, got {}",
             cfg.lanes
         );
+        anyhow::ensure!(
+            cfg.elastic.is_none() || cfg.enable_analytics,
+            "the elastic split/merge policy runs on the analytics thread; \
+             enable_analytics must be set"
+        );
+        if let Some(el) = &cfg.elastic {
+            anyhow::ensure!(
+                el.max_shards >= 1,
+                "elastic max_shards must be at least 1"
+            );
+        }
         let shared = Arc::new(Shared {
             map: ShardedDHash::with_hash(cfg.shards, cfg.nbuckets, cfg.hash),
             sampler: KeySampler::new(cfg.detector.sample_capacity),
@@ -152,6 +189,7 @@ impl Coordinator {
             pre_routed_batches: AtomicU64::new(0),
             pre_route_fallbacks_length: AtomicU64::new(0),
             pre_route_fallbacks_engine: AtomicU64::new(0),
+            pre_route_fallbacks_epoch: AtomicU64::new(0),
             rebuilds: AtomicU64::new(0),
             detector_runs: AtomicU64::new(0),
             last_chi2: AtomicU64::new(0),
@@ -190,7 +228,8 @@ impl Coordinator {
             // Bucket-order pre-routing needs its own engine (backends
             // need not be Send — the PJRT client is thread-bound — so
             // each thread that evaluates kernels owns one). Shard-order
-            // pre-routing is the fixed selector: no engine.
+            // pre-routing is the fixed selector through the directory:
+            // no engine.
             let want_engine = cfg_b.pre_route == PreRoute::Bucket && cfg.enable_analytics;
             threads.push(
                 std::thread::Builder::new()
@@ -210,41 +249,75 @@ impl Coordinator {
                                 g.offline_while(|| batcher.collect(&lane_rx));
                             if !entries.is_empty() {
                                 // Routing oracle: i64 routing ids in the
-                                // shard-major composite id space. Bucket
-                                // mode captures every shard's (hash,
-                                // nbuckets) geometry under this thread's
-                                // guard and hashes the whole mixed-shard
-                                // batch in ONE batch_hash_multi call;
-                                // None (engine failed or unavailable)
-                                // leaves the batch un-routed and is
-                                // counted below as an engine-fallback.
-                                let oracle = |keys: &[u64]| -> Option<Vec<i64>> {
-                                    match batcher.cfg.pre_route {
-                                        PreRoute::Off => None,
-                                        PreRoute::Shard => Some(
-                                            keys.iter()
-                                                .map(|&k| (shared2.map.shard_of(k) as i64) << 32)
-                                                .collect(),
-                                        ),
-                                        PreRoute::Bucket => {
-                                            let e = engine.as_ref()?;
-                                            let params: Vec<ShardParams> = shared2
-                                                .map
-                                                .route_snapshot(&g)
-                                                .into_iter()
-                                                .map(|(hash, nb)| {
-                                                    let (kind, seed) = HashKind::of(hash);
-                                                    (seed, nb as u64, kind)
-                                                })
-                                                .collect();
-                                            let shard_ids: Vec<u32> = keys
-                                                .iter()
-                                                .map(|&k| shared2.map.shard_of(k) as u32)
-                                                .collect();
-                                            e.batch_hash_multi(keys, &shard_ids, &params).ok()
+                                // shard-major composite id space, computed
+                                // against ONE epoch-stamped RouteSnapshot
+                                // (shard mapping + every shard's (hash,
+                                // nbuckets), read from one directory
+                                // pointer). Bucket mode hashes the whole
+                                // mixed-shard batch in ONE batch_hash_multi
+                                // call. If a split/merge moves the epoch
+                                // mid-computation the ids describe a
+                                // retired layout: the oracle reports
+                                // Epoch and the batch ships un-routed —
+                                // counted below, like every fallback.
+                                let oracle =
+                                    |keys: &[u64]| -> Result<Vec<i64>, OracleError> {
+                                        let (ids, epoch) = match batcher.cfg.pre_route {
+                                            PreRoute::Off => return Err(OracleError::Engine),
+                                            // Shard order needs only the
+                                            // selector→shard mapping: read
+                                            // it per key, with each key's
+                                            // epoch taken from the SAME
+                                            // directory pointer as its
+                                            // mapping (no snapshot
+                                            // allocations on this path) —
+                                            // a resize straddling the batch
+                                            // shows up as an epoch change
+                                            // between keys, or against the
+                                            // live epoch re-checked below.
+                                            PreRoute::Shard => {
+                                                let mut epoch0 = None;
+                                                let mut ids = Vec::with_capacity(keys.len());
+                                                for &k in keys {
+                                                    let (e, s) =
+                                                        shared2.map.epoch_shard_of(&g, k);
+                                                    if *epoch0.get_or_insert(e) != e {
+                                                        return Err(OracleError::Epoch);
+                                                    }
+                                                    ids.push((s as i64) << 32);
+                                                }
+                                                let epoch = epoch0
+                                                    .unwrap_or_else(|| shared2.map.epoch());
+                                                (ids, epoch)
+                                            }
+                                            PreRoute::Bucket => {
+                                                let e = engine
+                                                    .as_ref()
+                                                    .ok_or(OracleError::Engine)?;
+                                                let snap = shared2.map.route_snapshot(&g);
+                                                let params: Vec<ShardParams> = snap
+                                                    .shards
+                                                    .iter()
+                                                    .map(|&(hash, nb)| {
+                                                        let (kind, seed) = HashKind::of(hash);
+                                                        (seed, nb as u64, kind)
+                                                    })
+                                                    .collect();
+                                                let shard_ids: Vec<u32> = keys
+                                                    .iter()
+                                                    .map(|&k| snap.shard_of(k))
+                                                    .collect();
+                                                let ids = e
+                                                    .batch_hash_multi(keys, &shard_ids, &params)
+                                                    .map_err(|_| OracleError::Engine)?;
+                                                (ids, snap.epoch)
+                                            }
+                                        };
+                                        if shared2.map.epoch() != epoch {
+                                            return Err(OracleError::Epoch);
                                         }
-                                    }
-                                };
+                                        Ok(ids)
+                                    };
                                 let b = batcher.route(entries, Some(&oracle));
                                 g.quiescent_state();
                                 shared2.total_batches.fetch_add(1, Ordering::Relaxed);
@@ -260,6 +333,11 @@ impl Coordinator {
                                     RouteOutcome::FallbackEngine => {
                                         shared2
                                             .pre_route_fallbacks_engine
+                                            .fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    RouteOutcome::FallbackEpoch => {
+                                        shared2
+                                            .pre_route_fallbacks_epoch
                                             .fetch_add(1, Ordering::Relaxed);
                                     }
                                     RouteOutcome::Unrouted => {}
@@ -331,12 +409,14 @@ impl Coordinator {
         }
 
         // Analytics thread: per-shard detector verdicts + targeted
-        // mitigation. Engines need not be Send (the PJRT client is
-        // thread-bound), so the engine is constructed *inside* the
-        // thread; load errors are reported back over a ready channel.
+        // mitigation + the elastic split/merge policy. Engines need not
+        // be Send (the PJRT client is thread-bound), so the engine is
+        // constructed *inside* the thread; load errors are reported back
+        // over a ready channel.
         if cfg.enable_analytics {
             let shared2 = shared.clone();
             let det = cfg.detector.clone();
+            let elastic = cfg.elastic.clone();
             let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
             threads.push(
                 std::thread::Builder::new()
@@ -353,93 +433,183 @@ impl Coordinator {
                             }
                         };
                         let g = RcuThread::register();
-                        let nshards = shared2.map.shards();
-                        // Verdict floor per shard: the sample splits
-                        // roughly evenly across shards, so each shard's
-                        // share of min_samples keeps the same statistical
-                        // footing the unsharded detector had.
-                        let mut per_cfg = det.clone();
-                        per_cfg.min_samples = (det.min_samples + nshards - 1) / nshards;
                         let mut detect_err_logged = false;
                         while !shared2.stop.load(Ordering::Relaxed) {
                             g.offline_while(|| std::thread::sleep(det.period));
-                            let keys = shared2.sampler.snapshot();
-                            if keys.is_empty() {
-                                continue;
-                            }
-                            let parts = partition_by_shard(&keys, nshards);
+                            // ONE epoch-stamped directory observation per
+                            // cycle: the partition, every per-shard
+                            // geometry, the verdict attribution, and the
+                            // resize decision all speak (epoch, ordinal)
+                            // of this snapshot — a split/merge landing
+                            // mid-cycle invalidates the epoch check
+                            // instead of misattributing a verdict.
+                            let snap = shared2.map.route_snapshot(&g);
+                            let nshards = snap.nshards();
+                            // Verdict floor per shard: the sample splits
+                            // roughly evenly across shards, so each
+                            // shard's share of min_samples keeps the same
+                            // statistical footing the unsharded detector
+                            // had. Recomputed per cycle — the shard count
+                            // moves under the elastic policy.
+                            let mut per_cfg = det.clone();
+                            per_cfg.min_samples = (det.min_samples + nshards - 1) / nshards;
                             let mut chi2s = vec![0.0f32; nshards];
-                            let mut max_chi2 = 0.0f32;
-                            let mut evaluated = false;
-                            for (s, part) in parts.iter().enumerate() {
-                                if part.is_empty() {
-                                    continue;
-                                }
-                                let hash = shared2.map.shard_hash_fn(&g, s);
-                                let nb = shared2.map.shard_nbuckets(&g, s) as u64;
-                                let (kind, seed) = HashKind::of(hash);
-                                let d = match engine.detect(part, seed, nb, kind) {
-                                    Ok(d) => d,
-                                    Err(e) => {
-                                        // A backend that cannot evaluate
-                                        // (e.g. the pjrt backend without
-                                        // an XLA binding) means detection
-                                        // is dead; say so once instead of
-                                        // silently never mitigating.
-                                        if !detect_err_logged {
-                                            detect_err_logged = true;
-                                            eprintln!(
-                                                "dhash-analytics: detector disabled, \
-                                                 engine {:?} cannot evaluate: {e:?}",
-                                                engine.name()
-                                            );
-                                        }
+                            let keys = shared2.sampler.snapshot();
+                            if !keys.is_empty() {
+                                let parts = partition_by_shard(&keys, &snap);
+                                let mut max_chi2 = 0.0f32;
+                                let mut evaluated = false;
+                                for (s, part) in parts.iter().enumerate() {
+                                    if part.is_empty() {
                                         continue;
                                     }
-                                };
-                                evaluated = true;
-                                chi2s[s] = d.chi2;
-                                max_chi2 = max_chi2.max(d.chi2);
-                                let verdict = SkewVerdict::classify(
-                                    &per_cfg,
-                                    part.len(),
-                                    d.chi2,
-                                    d.max_load,
-                                    engine.nbins(),
-                                );
-                                if let SkewVerdict::Attack { chi2, .. } = verdict {
-                                    if let Some(new_hash) = shared2
-                                        .controller
-                                        .plan_mitigation_for(s, Instant::now())
-                                    {
-                                        let nb_new = shared2
+                                    let (hash, nb) = snap.shards[s];
+                                    let (kind, seed) = HashKind::of(hash);
+                                    let d = match engine.detect(part, seed, nb as u64, kind) {
+                                        Ok(d) => d,
+                                        Err(e) => {
+                                            // A backend that cannot evaluate
+                                            // (e.g. the pjrt backend without
+                                            // an XLA binding) means detection
+                                            // is dead; say so once instead of
+                                            // silently never mitigating.
+                                            if !detect_err_logged {
+                                                detect_err_logged = true;
+                                                eprintln!(
+                                                    "dhash-analytics: detector disabled, \
+                                                     engine {:?} cannot evaluate: {e:?}",
+                                                    engine.name()
+                                                );
+                                            }
+                                            continue;
+                                        }
+                                    };
+                                    evaluated = true;
+                                    chi2s[s] = d.chi2;
+                                    max_chi2 = max_chi2.max(d.chi2);
+                                    let verdict = SkewVerdict::classify(
+                                        &per_cfg,
+                                        part.len(),
+                                        d.chi2,
+                                        d.max_load,
+                                        engine.nbins(),
+                                    );
+                                    if let SkewVerdict::Attack { chi2, .. } = verdict {
+                                        // Cooldown keyed by the shard's
+                                        // stable uid: resizes shift
+                                        // ordinals, never uids.
+                                        if let Some(new_hash) = shared2
                                             .controller
-                                            .buckets_for(shared2.map.shard_nbuckets(&g, s));
-                                        // Targeted mitigation: rebuild
-                                        // ONLY the shard whose chi2
-                                        // tripped; the other shards keep
-                                        // serving untouched.
-                                        if let Ok(stats) =
-                                            shared2.map.rebuild_shard(&g, s, nb_new, new_hash)
+                                            .plan_mitigation_for(snap.uids[s], Instant::now())
                                         {
-                                            shared2.rebuilds.fetch_add(1, Ordering::Relaxed);
-                                            shared2.controller.record(
+                                            let nb_new = shared2.controller.buckets_for(nb);
+                                            // Targeted mitigation, pinned to
+                                            // the epoch the verdict was
+                                            // computed under: if a split or
+                                            // merge moved the directory
+                                            // meanwhile, the rebuild is
+                                            // refused instead of migrating
+                                            // whichever shard inherited the
+                                            // ordinal.
+                                            if let Ok(stats) = shared2.map.rebuild_shard_at(
+                                                &g,
+                                                Some(snap.epoch),
                                                 s,
-                                                chi2,
+                                                nb_new,
                                                 new_hash,
-                                                stats.moved,
-                                                stats.elapsed,
-                                            );
+                                            ) {
+                                                shared2.rebuilds.fetch_add(1, Ordering::Relaxed);
+                                                shared2.controller.record(
+                                                    snap.epoch,
+                                                    s,
+                                                    chi2,
+                                                    new_hash,
+                                                    stats.moved,
+                                                    stats.elapsed,
+                                                );
+                                            }
                                         }
                                     }
                                 }
+                                if evaluated {
+                                    shared2.detector_runs.fetch_add(1, Ordering::Relaxed);
+                                    shared2
+                                        .last_chi2
+                                        .store(max_chi2.to_bits() as u64, Ordering::Relaxed);
+                                    *shared2.shard_chi2.lock().unwrap() = chi2s.clone();
+                                }
                             }
-                            if evaluated {
-                                shared2.detector_runs.fetch_add(1, Ordering::Relaxed);
-                                shared2
-                                    .last_chi2
-                                    .store(max_chi2.to_bits() as u64, Ordering::Relaxed);
-                                *shared2.shard_chi2.lock().unwrap() = chi2s;
+                            // Elastic policy: occupancy (+ chi² pressure)
+                            // decides splits/merges, evaluated under the
+                            // same epoch as everything above.
+                            if let Some(el) = &elastic {
+                                let (ep, profile) = shared2.map.load_profile(&g);
+                                if ep == snap.epoch && profile.len() == nshards {
+                                    let splittable: Vec<bool> = (0..nshards)
+                                        .map(|s| shared2.map.splittable(&g, s))
+                                        .collect();
+                                    let buddies: Vec<Option<usize>> = (0..nshards)
+                                        .map(|s| shared2.map.buddy_of(&g, s))
+                                        .collect();
+                                    let action = shared2.controller.plan_resize(
+                                        el,
+                                        &profile,
+                                        &chi2s,
+                                        engine.chi2_threshold(det.sigma),
+                                        &splittable,
+                                        &buddies,
+                                        Instant::now(),
+                                    );
+                                    match action {
+                                        Some(ResizeAction::Split(s)) => {
+                                            // Children keep the parent's
+                                            // geometry: capacity doubles,
+                                            // per-shard load halves.
+                                            // Epoch-pinned, like the
+                                            // mitigation path: a resize
+                                            // that raced the scoring makes
+                                            // this refuse, not mistarget.
+                                            let (hash, nb) = snap.shards[s];
+                                            if let Ok(st) = shared2.map.split_shard_at(
+                                                &g,
+                                                Some(snap.epoch),
+                                                s,
+                                                nb.max(1),
+                                                hash,
+                                            ) {
+                                                shared2.controller.record_resize(
+                                                    ResizeAction::Split(s),
+                                                    snap.epoch,
+                                                    shared2.map.shards(),
+                                                    st.moved,
+                                                    st.elapsed,
+                                                );
+                                            }
+                                        }
+                                        Some(ResizeAction::Merge(s)) => {
+                                            // The merged shard absorbs both
+                                            // buddies' budgets. Epoch-pinned
+                                            // like the split arm.
+                                            let (hash, nb) = snap.shards[s];
+                                            if let Ok(st) = shared2.map.merge_shard_at(
+                                                &g,
+                                                Some(snap.epoch),
+                                                s,
+                                                (nb * 2).max(1),
+                                                hash,
+                                            ) {
+                                                shared2.controller.record_resize(
+                                                    ResizeAction::Merge(s),
+                                                    snap.epoch,
+                                                    shared2.map.shards(),
+                                                    st.moved,
+                                                    st.elapsed,
+                                                );
+                                            }
+                                        }
+                                        None => {}
+                                    }
+                                }
                             }
                             g.quiescent_state();
                         }
@@ -520,6 +690,14 @@ impl Coordinator {
         self.shared.controller.events()
     }
 
+    /// Elastic split/merge history (empty unless
+    /// [`CoordinatorConfig::elastic`] is set; splits/merges driven
+    /// directly through [`Coordinator::map`] count in
+    /// [`CoordinatorStats`] but not here).
+    pub fn resize_events(&self) -> Vec<super::ResizeEvent> {
+        self.shared.controller.resize_events()
+    }
+
     pub fn stats(&self) -> CoordinatorStats {
         CoordinatorStats {
             total_requests: self.shared.total_requests.load(Ordering::Relaxed),
@@ -533,7 +711,15 @@ impl Coordinator {
                 .shared
                 .pre_route_fallbacks_engine
                 .load(Ordering::Relaxed),
+            pre_route_fallbacks_epoch: self
+                .shared
+                .pre_route_fallbacks_epoch
+                .load(Ordering::Relaxed),
             rebuilds: self.shared.rebuilds.load(Ordering::Relaxed),
+            splits: self.shared.map.split_count(),
+            merges: self.shared.map.merge_count(),
+            shards: self.shared.map.shards() as u64,
+            epoch: self.shared.map.epoch(),
             last_chi2: f32::from_bits(self.shared.last_chi2.load(Ordering::Relaxed) as u32),
             last_chi2_per_shard: self.shared.shard_chi2.lock().unwrap().clone(),
             detector_runs: self.shared.detector_runs.load(Ordering::Relaxed),

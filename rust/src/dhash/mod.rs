@@ -27,7 +27,7 @@ pub mod sharded;
 mod table;
 
 pub use hashfn::HashFn;
-pub use sharded::{shard_of, ShardedDHash};
+pub use sharded::{shard_of, ResizeError, RouteSnapshot, ShardedDHash};
 pub use table::RebuildStats;
 
 use std::collections::HashSet;

@@ -1,5 +1,7 @@
-//! `ShardedDHash` — N independent [`DHashMap`] shards behind one map
-//! facade (the ROADMAP's "sharding" scaling item).
+//! `ShardedDHash` — independent [`DHashMap`] shards behind one map
+//! facade, with an **elastic shard count**: shards split and merge online
+//! through an epoch-stamped routing directory (the ROADMAP's "sharding"
+//! and "elastic shard count" scaling items).
 //!
 //! Why shard: a single `DHashMap` serializes every rebuild behind one
 //! `rebuild_lock` and migrates the whole keyspace per mitigation. With N
@@ -8,28 +10,42 @@
 //! whole-map [`ShardedDHash::rebuild_all`] staggers shard migrations one
 //! at a time so the migration working set stays bounded.
 //!
-//! Routing: [`shard_of`] — a *fixed* pre-hash (top bits of
-//! `mix64(key ^ SHARD_SALT)`) that is deliberately independent of the
-//! per-shard [`HashFn`]. A rebuild replaces a shard's hash function but
-//! never re-routes keys across shards, so all of the per-shard Lemma-4.1
-//! reasoning carries over by composition: every key's full history
-//! happens inside one `DHashMap`.
+//! Routing: a *fixed* pre-hash (`mix64(key ^ SHARD_SALT)`) that is
+//! deliberately independent of the per-shard [`HashFn`]. The top `depth`
+//! bits of the pre-hash index an immutable, RCU-published [`Directory`]
+//! of slots, each naming the shard serving that selector range. A
+//! rebuild replaces a shard's hash function but never re-routes keys
+//! across shards, so all of the per-shard Lemma-4.1 reasoning carries
+//! over by composition; a **split/merge extends or retracts selector
+//! bits** (consistent-hashing style), so the selector *input* never
+//! changes either — per-key lane routing upstream stays fixed forever.
 //!
-//! Staggered-rebuild invariant: **at most one shard is migrating at any
-//! moment.** Every rebuild path (targeted [`ShardedDHash::rebuild_shard`]
-//! and the whole-map sweep) funnels through a single migration token; the
-//! `migrating` gauge is asserted to have been 0 on every acquisition.
-//! Targeted rebuilds *trylock* the token (returning [`RebuildBusy`] like
-//! the paper's `-EBUSY`), while the sweep blocks for it between shards —
-//! offline, so a token holder's grace periods are never stalled.
+//! Elasticity: [`ShardedDHash::split_shard`] migrates one shard's keys
+//! into two children (each child serves one more selector bit);
+//! [`ShardedDHash::merge_shard`] is the inverse, folding a buddy pair
+//! into one shard. Both run concurrently with lookup / insert / delete /
+//! upsert using the same hazard-period protocol as `DHashMap::rebuild`:
+//! during a migration, the affected slots carry a `prev` pointer to the
+//! source shard, and ops check **source → hazard node → destination** in
+//! that order (the cross-shard Lemma 4.1 — see `lookup`).
+//!
+//! Staggered-migration invariant: **at most one migration (split, merge,
+//! or rebuild) is in flight at any moment.** Every migration path
+//! funnels through a single token; the `migrating` gauge is asserted to
+//! have been 0 on every acquisition. Targeted operations *trylock* the
+//! token (returning [`RebuildBusy`] / [`ResizeError::Busy`] like the
+//! paper's `-EBUSY`), while the whole-map sweep blocks for it between
+//! shards — offline, so a token holder's grace periods are never
+//! stalled.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::{DHashMap, HashFn, KeyExists, RebuildBusy, RebuildStats};
-use crate::lflist::{BucketSet, MichaelList};
-use crate::rcu::RcuThread;
+use crate::lflist::{BucketSet, MichaelList, Node, LOGICALLY_REMOVED};
+use crate::rcu::{synchronize_rcu, RcuThread};
 use crate::util::rng::mix64;
 
 /// Salt for the shard-selector pre-hash. A public constant on purpose:
@@ -38,10 +54,22 @@ use crate::util::rng::mix64;
 /// that routing never changes when a mitigation installs a fresh seed.
 const SHARD_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
 
+/// Directory depth cap: a split that would need more than `2^MAX_DEPTH`
+/// slots fails with [`ResizeError::AtMaxDepth`]. 4096 slots is far past
+/// any shard count this crate targets; the cap exists so a runaway
+/// split loop cannot allocate unbounded directories.
+const MAX_DEPTH: u32 = 12;
+
 /// The shard for `key` among `nshards` (a power of two) shards: the top
 /// `log2(nshards)` bits of `mix64(key ^ SHARD_SALT)`. Top bits keep the
 /// selector independent of [`HashFn::Seeded`], which consumes the low
 /// bits of the same mixer through its modulo.
+///
+/// This is the *uniform* selector: ingest lanes and the attack
+/// generators use it over a fixed count. The map itself routes through
+/// its directory ([`ShardedDHash::shard_of`]), which agrees with this
+/// function whenever every shard sits at the same depth — and is a pure
+/// bit-extension of it otherwise.
 #[inline(always)]
 pub fn shard_of(key: u64, nshards: usize) -> usize {
     debug_assert!(nshards.is_power_of_two());
@@ -51,21 +79,264 @@ pub fn shard_of(key: u64, nshards: usize) -> usize {
     (mix64(key ^ SHARD_SALT) >> (64 - nshards.trailing_zeros())) as usize
 }
 
-/// N independent `DHashMap` shards routed by the fixed [`shard_of`]
-/// pre-hash, with per-shard and staggered whole-map rebuilds.
+/// The directory slot for `key` at `depth` (top `depth` selector bits).
+#[inline(always)]
+fn slot_index(key: u64, depth: u32) -> usize {
+    if depth == 0 {
+        return 0;
+    }
+    (mix64(key ^ SHARD_SALT) >> (64 - depth)) as usize
+}
+
+/// Error from [`ShardedDHash::split_shard`] / [`ShardedDHash::merge_shard`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResizeError {
+    /// Another migration (split, merge, or rebuild) holds the token.
+    Busy,
+    /// The shard ordinal does not exist under the current directory.
+    NoSuchShard,
+    /// Split: the directory is at its depth cap ([`MAX_DEPTH`] selector
+    /// bits).
+    AtMaxDepth,
+    /// Merge: the shard has no mergeable buddy (single shard, or the
+    /// buddy range is split deeper).
+    Unmergeable,
+}
+
+impl std::fmt::Display for ResizeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResizeError::Busy => write!(f, "a migration is already in progress"),
+            ResizeError::NoSuchShard => write!(f, "no such shard ordinal"),
+            ResizeError::AtMaxDepth => write!(f, "directory is at its depth cap"),
+            ResizeError::Unmergeable => write!(f, "shard has no mergeable buddy"),
+        }
+    }
+}
+
+impl std::error::Error for ResizeError {}
+
+/// One selector range's routing entry.
+struct Slot<B: BucketSet> {
+    /// The shard serving this range (the *destination* during a
+    /// migration).
+    map: Arc<DHashMap<B>>,
+    /// During a split/merge, the shard this range's keys are migrating
+    /// *from*; checked before `map` (the cross-shard Lemma-4.1 order).
+    prev: Option<Arc<DHashMap<B>>>,
+    /// Dense ordinal of `map` in slot order (the shard id every
+    /// shard-indexed API speaks). Reassigned on every directory build.
+    shard: usize,
+    /// Stable identity of `map`, assigned once when the shard is
+    /// created and never reused: ordinals shift when the directory
+    /// changes shape, uids don't. Controller state (mitigation
+    /// cooldowns) keys on this, so a shard born from a resize starts
+    /// cold while untouched shards keep their clocks across epochs.
+    uid: u64,
+}
+
+impl<B: BucketSet> Clone for Slot<B> {
+    fn clone(&self) -> Self {
+        Slot {
+            map: self.map.clone(),
+            prev: self.prev.clone(),
+            shard: self.shard,
+            uid: self.uid,
+        }
+    }
+}
+
+/// Scoped holder of the migration gauge: increments on entry (asserting
+/// the staggered invariant: it was 0), decrements on drop — the single
+/// owner of the invariant for every migration path (rebuild, sweep
+/// step, split, merge).
+struct MigrationGauge<'a>(&'a AtomicUsize);
+
+impl<'a> MigrationGauge<'a> {
+    fn enter(gauge: &'a AtomicUsize) -> Self {
+        let prev = gauge.fetch_add(1, Ordering::SeqCst);
+        assert_eq!(
+            prev, 0,
+            "staggered-migration invariant violated: a migration is already in flight"
+        );
+        Self(gauge)
+    }
+}
+
+impl Drop for MigrationGauge<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The epoch-stamped routing directory: an immutable snapshot of the
+/// shard layout, RCU-published like a `Table` (readers deref it inside a
+/// read-side section; split/merge swap the pointer and free the old
+/// directory a grace period later). `2^depth` slots; several contiguous
+/// slots may alias one shard (its selector prefix is shorter than
+/// `depth`).
+struct Directory<B: BucketSet> {
+    /// Monotone stamp, bumped once per split/merge. Routing decisions
+    /// cached outside a read-side section (the batcher's pre-route ids)
+    /// carry the epoch so staleness is detectable, never silent.
+    epoch: u64,
+    /// Selector depth: slot = top `depth` bits of the pre-hash.
+    depth: u32,
+    slots: Box<[Slot<B>]>,
+    /// Ordinal -> first slot index of that shard (distinct maps appear
+    /// as contiguous slot runs by construction).
+    shard_slots: Box<[usize]>,
+}
+
+impl<B: BucketSet> Directory<B> {
+    /// Renumber `slots` ordinals densely in slot order and box the
+    /// directory up for publication. Asserts the contiguity invariant.
+    fn build(epoch: u64, depth: u32, mut slots: Vec<Slot<B>>) -> *mut Directory<B> {
+        assert_eq!(slots.len(), 1usize << depth);
+        let mut shard_slots = Vec::new();
+        for i in 0..slots.len() {
+            let fresh = i == 0 || !Arc::ptr_eq(&slots[i].map, &slots[i - 1].map);
+            if fresh {
+                shard_slots.push(i);
+            }
+            slots[i].shard = shard_slots.len() - 1;
+            debug_assert!(
+                fresh || slots[i].shard == slots[i - 1].shard,
+                "aliased slots must be contiguous"
+            );
+        }
+        Box::into_raw(Box::new(Directory {
+            epoch,
+            depth,
+            slots: slots.into_boxed_slice(),
+            shard_slots: shard_slots.into_boxed_slice(),
+        }))
+    }
+
+    #[inline(always)]
+    fn slot_of(&self, key: u64) -> &Slot<B> {
+        &self.slots[slot_index(key, self.depth)]
+    }
+
+    fn nshards(&self) -> usize {
+        self.shard_slots.len()
+    }
+
+    fn shard_map(&self, s: usize) -> &Arc<DHashMap<B>> {
+        &self.slots[self.shard_slots[s]].map
+    }
+
+    /// The slot range `[lo, hi)` shard `s` serves.
+    fn shard_range(&self, s: usize) -> (usize, usize) {
+        let lo = self.shard_slots[s];
+        let hi = self
+            .shard_slots
+            .get(s + 1)
+            .copied()
+            .unwrap_or(self.slots.len());
+        (lo, hi)
+    }
+
+    /// The ordinal of shard `s`'s merge buddy, if the buddy serves
+    /// exactly the sibling selector range at the same depth.
+    fn buddy_of(&self, s: usize) -> Option<usize> {
+        if self.nshards() <= 1 {
+            return None;
+        }
+        let (lo, hi) = self.shard_range(s);
+        let size = hi - lo;
+        let blo = lo ^ size; // sibling prefix: flip the last prefix bit
+        let b = self.slots[blo].shard;
+        if b == s {
+            return None;
+        }
+        let (b_lo, b_hi) = self.shard_range(b);
+        (b_lo == blo && b_hi - b_lo == size).then_some(b)
+    }
+}
+
+/// A coherent routing observation of the whole directory, read from ONE
+/// directory pointer: the epoch, every shard's `(HashFn, nbuckets)`
+/// geometry, and the selector→shard mapping. This is the routing
+/// oracle's input for the vectorized `batch_hash_multi` pre-sort — the
+/// epoch lets a consumer detect that ids it computed describe a retired
+/// layout (a split/merge landed meanwhile) instead of silently sorting
+/// by them.
+#[derive(Clone, Debug)]
+pub struct RouteSnapshot {
+    /// Directory epoch this snapshot describes.
+    pub epoch: u64,
+    /// Shard ordinal -> routing geometry, each pair read from a single
+    /// table pointer ([`DHashMap::geometry`]), so a shard's old hash is
+    /// never paired with its new bucket count, even mid-rebuild.
+    pub shards: Vec<(HashFn, usize)>,
+    /// Shard ordinal -> stable shard uid (never reused across resizes).
+    /// Per-shard state that must survive epoch changes — the
+    /// controller's mitigation cooldowns — keys on this, not on the
+    /// ordinal.
+    pub uids: Vec<u64>,
+    depth: u32,
+    slot_shard: Box<[u32]>,
+}
+
+impl RouteSnapshot {
+    /// A snapshot of a uniform layout (every shard at the same depth)
+    /// with identical geometry — what a freshly constructed map reports.
+    /// Test/diagnostic use.
+    pub fn uniform(nshards: usize, geometry: (HashFn, usize)) -> RouteSnapshot {
+        assert!(nshards >= 1 && nshards.is_power_of_two());
+        RouteSnapshot {
+            epoch: 0,
+            shards: vec![geometry; nshards],
+            uids: (0..nshards as u64).collect(),
+            depth: nshards.trailing_zeros(),
+            slot_shard: (0..nshards as u32).collect(),
+        }
+    }
+
+    /// The shard ordinal `key` routes to under this snapshot.
+    #[inline(always)]
+    pub fn shard_of(&self, key: u64) -> u32 {
+        self.slot_shard[slot_index(key, self.depth)]
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// Independent `DHashMap` shards routed by the fixed selector pre-hash
+/// through an epoch-stamped directory, with per-shard rebuilds, a
+/// staggered whole-map rebuild, and online shard [`split`] / [`merge`].
+///
+/// [`split`]: ShardedDHash::split_shard
+/// [`merge`]: ShardedDHash::merge_shard
 pub struct ShardedDHash<B: BucketSet = MichaelList> {
-    shards: Box<[DHashMap<B>]>,
+    /// The routing directory (RCU-published; replaced only by split and
+    /// merge, which hold the migration token).
+    dir: AtomicPtr<Directory<B>>,
     /// Serializes whole-map sweeps (trylock: a second `rebuild_all` gets
     /// [`RebuildBusy`] instead of queueing behind an O(n) migration).
     rebuild_all_lock: Mutex<()>,
-    /// Grants the right to migrate ONE shard. Both targeted rebuilds and
-    /// the sweep acquire it per migration, which is what makes the
-    /// staggered invariant map-wide rather than sweep-local.
+    /// Grants the right to run ONE migration (a shard rebuild, a split,
+    /// or a merge), which is what makes the staggered invariant map-wide.
     migration_token: Mutex<()>,
-    /// Shards currently migrating — 0 or 1 by the invariant (asserted on
-    /// every migration start; exposed as [`ShardedDHash::migrating_shards`]
-    /// so tests can observe the staggering from outside).
+    /// Migrations in flight — 0 or 1 by the invariant (asserted on every
+    /// migration start; exposed as [`ShardedDHash::migrating_shards`] so
+    /// tests can observe the staggering from outside).
     migrating: AtomicUsize,
+    /// The node in its *cross-shard* hazard period (split/merge moves),
+    /// or null. One pointer map-wide: the token admits one migration at
+    /// a time, and a migration moves one node at a time.
+    moving: AtomicPtr<Node>,
+    /// Guard-free mirrors of the directory's shape, for diagnostics that
+    /// must not require a registered RCU thread.
+    nshards: AtomicUsize,
+    cur_epoch: AtomicU64,
+    splits: AtomicU64,
+    merges: AtomicU64,
+    /// Next stable shard uid (see [`Slot`]); monotone, never reused.
+    next_uid: AtomicU64,
 }
 
 impl ShardedDHash<MichaelList> {
@@ -87,87 +358,234 @@ impl<B: BucketSet> ShardedDHash<B> {
             nshards.is_power_of_two(),
             "shard count must be a power of two, got {nshards}"
         );
+        let depth = nshards.trailing_zeros();
+        assert!(depth <= MAX_DEPTH, "shard count exceeds the directory cap");
+        let slots: Vec<Slot<B>> = (0..nshards)
+            .map(|i| Slot {
+                map: Arc::new(DHashMap::with_hash(nbuckets_per_shard, hash)),
+                prev: None,
+                shard: 0,
+                uid: i as u64,
+            })
+            .collect();
         Self {
-            shards: (0..nshards)
-                .map(|_| DHashMap::with_hash(nbuckets_per_shard, hash))
-                .collect(),
+            dir: AtomicPtr::new(Directory::build(0, depth, slots)),
             rebuild_all_lock: Mutex::new(()),
             migration_token: Mutex::new(()),
             migrating: AtomicUsize::new(0),
+            moving: AtomicPtr::new(std::ptr::null_mut()),
+            nshards: AtomicUsize::new(nshards),
+            cur_epoch: AtomicU64::new(0),
+            splits: AtomicU64::new(0),
+            merges: AtomicU64::new(0),
+            next_uid: AtomicU64::new(nshards as u64),
         }
     }
 
-    /// Number of shards (fixed at construction).
-    pub fn shards(&self) -> usize {
-        self.shards.len()
-    }
-
-    /// The shard `key` routes to.
+    /// The current directory.
+    ///
+    /// Safety contract (not enforceable by the signature): the caller
+    /// must either be inside an RCU read-side critical section, or hold
+    /// the migration token (the only writer of `dir`).
     #[inline(always)]
-    pub fn shard_of(&self, key: u64) -> usize {
-        shard_of(key, self.shards.len())
+    fn dir(&self) -> &Directory<B> {
+        // SAFETY: `dir` is never null; a directory is freed only a grace
+        // period after being unpublished, and the publisher holds the
+        // migration token — covered by either half of the caller
+        // contract above.
+        unsafe { &*self.dir.load(Ordering::SeqCst) }
     }
 
-    /// Read access to one shard (diagnostics / tests). Rebuilding through
+    /// Current number of shards. Guard-free: a racy-but-safe mirror (the
+    /// true value lives in the directory), exact whenever no split/merge
+    /// is concurrently publishing.
+    pub fn shards(&self) -> usize {
+        self.nshards.load(Ordering::SeqCst)
+    }
+
+    /// Current directory epoch (bumped once per completed or in-flight
+    /// split/merge publication). Guard-free mirror, like
+    /// [`ShardedDHash::shards`].
+    pub fn epoch(&self) -> u64 {
+        self.cur_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Completed splits.
+    pub fn split_count(&self) -> u64 {
+        self.splits.load(Ordering::Relaxed)
+    }
+
+    /// Completed merges.
+    pub fn merge_count(&self) -> u64 {
+        self.merges.load(Ordering::Relaxed)
+    }
+
+    /// The shard ordinal `key` routes to under the current directory.
+    #[inline]
+    pub fn shard_of(&self, guard: &RcuThread, key: u64) -> usize {
+        let _g = guard.read_lock();
+        self.dir().slot_of(key).shard
+    }
+
+    /// `(directory epoch, shard ordinal)` for `key`, both read from ONE
+    /// directory pointer. The shard-order pre-route uses this
+    /// allocation-free read so every routing id carries the epoch of
+    /// the exact layout that produced it — ids straddling a resize are
+    /// detectable (and fall back) instead of silently mixing layouts,
+    /// which a separate `epoch()` + `shard_of()` pair could not
+    /// guarantee.
+    #[inline]
+    pub fn epoch_shard_of(&self, guard: &RcuThread, key: u64) -> (u64, usize) {
+        let _g = guard.read_lock();
+        let d = self.dir();
+        (d.epoch, d.slot_of(key).shard)
+    }
+
+    /// Handle to one shard (diagnostics / tests). Rebuilding through
     /// this handle bypasses the staggered-migration token; use
     /// [`ShardedDHash::rebuild_shard`] instead.
-    pub fn shard(&self, s: usize) -> &DHashMap<B> {
-        &self.shards[s]
+    pub fn shard(&self, guard: &RcuThread, s: usize) -> Arc<DHashMap<B>> {
+        let _g = guard.read_lock();
+        self.dir().shard_map(s).clone()
     }
 
-    /// Shards with a migration in flight right now (0 or 1).
+    /// Migrations in flight right now (0 or 1).
     pub fn migrating_shards(&self) -> usize {
         self.migrating.load(Ordering::SeqCst)
     }
 
-    /// Lookup in the key's shard (per-shard Algorithm 4).
+    /// The ordinal of shard `s`'s merge buddy — the shard serving the
+    /// sibling selector range at the same depth — or `None` when `s`
+    /// cannot merge right now (single shard, buddy split deeper, or `s`
+    /// out of range).
+    pub fn buddy_of(&self, guard: &RcuThread, s: usize) -> Option<usize> {
+        let _g = guard.read_lock();
+        let d = self.dir();
+        (s < d.nshards()).then(|| d.buddy_of(s)).flatten()
+    }
+
+    /// Lookup in the key's shard (per-shard Algorithm 4), extended with
+    /// the cross-shard migration order: during a split/merge of the
+    /// key's range, check (1) the migration *source*, (2) the node in
+    /// its cross-shard hazard period, (3) the destination. The same
+    /// argument as Lemma 4.1 applies: a node is published in `moving`
+    /// *before* it is deleted from the source and unpublished only
+    /// *after* it is inserted into the destination, so its hazard period
+    /// covers every instant it is absent from both shards.
     #[inline]
     pub fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
-        self.shards[self.shard_of(key)].lookup(guard, key)
+        if key == u64::MAX {
+            return None;
+        }
+        let _g = guard.read_lock();
+        let slot = self.dir().slot_of(key);
+        if let Some(prev) = &slot.prev {
+            if let Some(n) = prev.live_node(key) {
+                return Some(n.val.load(Ordering::SeqCst));
+            }
+            let cur = self.moving.load(Ordering::SeqCst);
+            if !cur.is_null() {
+                // SAFETY: a node reachable through `moving` is reclaimed
+                // only after `moving` is cleared *and* a grace period
+                // passes; we are inside a read-side section.
+                let n = unsafe { &*cur };
+                if n.key == key && !n.logically_removed() {
+                    return Some(n.val.load(Ordering::SeqCst));
+                }
+            }
+        }
+        slot.map.lookup(guard, key)
     }
 
-    /// Insert into the key's shard (per-shard Algorithm 6).
+    /// Insert into the key's shard (per-shard Algorithm 6). During a
+    /// split/merge of the key's range, inserts go to the *destination*
+    /// shard only — the same discipline as `DHashMap::insert` during a
+    /// rebuild (Lemma 4.3): the directory swap is followed by a grace
+    /// period before any node moves, and a racing duplicate is resolved
+    /// when the migration's re-insert fails and drops the source copy.
     #[inline]
     pub fn insert(&self, guard: &RcuThread, key: u64, val: u64) -> Result<(), KeyExists> {
-        self.shards[self.shard_of(key)].insert(guard, key, val)
+        assert_ne!(key, u64::MAX, "key u64::MAX is reserved (bucket sentinel)");
+        let _g = guard.read_lock();
+        self.dir().slot_of(key).map.insert(guard, key, val)
     }
 
-    /// Delete from the key's shard (per-shard Algorithm 5).
+    /// Delete from the key's shard (per-shard Algorithm 5), extended
+    /// with the cross-shard migration order: source shard, then the
+    /// hazard-period node (marked deleted in place — the flag travels
+    /// with the node through the re-insert, so it is born dead in the
+    /// destination), then the destination shard.
     #[inline]
     pub fn delete(&self, guard: &RcuThread, key: u64) -> bool {
-        self.shards[self.shard_of(key)].delete(guard, key)
+        if key == u64::MAX {
+            return false;
+        }
+        let _g = guard.read_lock();
+        let slot = self.dir().slot_of(key);
+        if let Some(prev) = &slot.prev {
+            if prev.delete(guard, key) {
+                return true;
+            }
+            let cur = self.moving.load(Ordering::SeqCst);
+            if !cur.is_null() {
+                // SAFETY: as in lookup.
+                let n = unsafe { &*cur };
+                if n.key == key {
+                    let prev_flags = n.set_flag(LOGICALLY_REMOVED);
+                    if prev_flags & LOGICALLY_REMOVED == 0 {
+                        // We won the logical deletion.
+                        return true;
+                    }
+                }
+            }
+        }
+        slot.map.delete(guard, key)
     }
 
     /// Atomic last-wins upsert in the key's shard (value swapped in
-    /// place on the live node — see [`DHashMap::upsert`]). Returns true
-    /// if a new node was inserted.
-    #[inline]
+    /// place on the live node — see [`DHashMap::upsert`]), searching the
+    /// cross-shard migration order when the key's range is mid-split/
+    /// merge. Returns true if a new node was inserted.
     pub fn upsert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
-        self.shards[self.shard_of(key)].upsert(guard, key, val)
-    }
-
-    /// Migrate one shard. The caller must hold `migration_token`.
-    fn migrate_shard(
-        &self,
-        guard: &RcuThread,
-        s: usize,
-        nbuckets: usize,
-        hash: HashFn,
-    ) -> Result<RebuildStats, RebuildBusy> {
-        let prev = self.migrating.fetch_add(1, Ordering::SeqCst);
-        assert_eq!(
-            prev, 0,
-            "staggered-rebuild invariant violated: a shard is already migrating"
-        );
-        let r = self.shards[s].rebuild(guard, nbuckets, hash);
-        self.migrating.fetch_sub(1, Ordering::SeqCst);
-        r
+        assert_ne!(key, u64::MAX, "key u64::MAX is reserved (bucket sentinel)");
+        loop {
+            {
+                let _g = guard.read_lock();
+                let slot = self.dir().slot_of(key);
+                if let Some(prev) = &slot.prev {
+                    if let Some(n) = prev.live_node(key) {
+                        n.val.store(val, Ordering::SeqCst);
+                        return false;
+                    }
+                    let cur = self.moving.load(Ordering::SeqCst);
+                    if !cur.is_null() {
+                        // SAFETY: as in lookup.
+                        let n = unsafe { &*cur };
+                        if n.key == key && !n.logically_removed() {
+                            n.val.store(val, Ordering::SeqCst);
+                            return false;
+                        }
+                    }
+                }
+                if let Some(n) = slot.map.live_node(key) {
+                    n.val.store(val, Ordering::SeqCst);
+                    return false;
+                }
+            }
+            if self.insert(guard, key, val).is_ok() {
+                return true;
+            }
+            // A concurrent insert won the key between our miss and the
+            // insert attempt; retry the in-place path against it.
+        }
     }
 
     /// Targeted rebuild of shard `s` into `nbuckets` buckets under `hash`,
     /// the mitigation primitive: 1/N of the keyspace migrates, the other
-    /// shards keep serving untouched. Returns [`RebuildBusy`] if any shard
-    /// (this one or another) is already migrating.
+    /// shards keep serving untouched. Returns [`RebuildBusy`] if any
+    /// migration (rebuild, split, or merge) is already in flight, or if
+    /// `s` is not a current shard ordinal (the directory may have changed
+    /// since the caller observed it).
     ///
     /// The caller must not be inside a read-side critical section (same
     /// contract as [`DHashMap::rebuild`]).
@@ -178,11 +596,36 @@ impl<B: BucketSet> ShardedDHash<B> {
         nbuckets: usize,
         hash: HashFn,
     ) -> Result<RebuildStats, RebuildBusy> {
+        self.rebuild_shard_at(guard, None, s, nbuckets, hash)
+    }
+
+    /// [`ShardedDHash::rebuild_shard`], additionally refusing (with
+    /// [`RebuildBusy`]) when the directory epoch no longer matches
+    /// `epoch` — the analytics path uses this so a verdict computed
+    /// under one shard layout can never rebuild a *different* shard that
+    /// inherited the ordinal after a split/merge.
+    pub fn rebuild_shard_at(
+        &self,
+        guard: &RcuThread,
+        epoch: Option<u64>,
+        s: usize,
+        nbuckets: usize,
+        hash: HashFn,
+    ) -> Result<RebuildStats, RebuildBusy> {
         let token = match self.migration_token.try_lock() {
             Ok(t) => t,
             Err(_) => return Err(RebuildBusy),
         };
-        let r = self.migrate_shard(guard, s, nbuckets, hash);
+        // Under the token the directory is stable (only migrations
+        // replace it, and we hold the only migration right).
+        let d = self.dir();
+        if s >= d.nshards() || epoch.map_or(false, |e| e != d.epoch) {
+            return Err(RebuildBusy);
+        }
+        let map = d.shard_map(s).clone();
+        let mig = MigrationGauge::enter(&self.migrating);
+        let r = map.rebuild(guard, nbuckets, hash);
+        drop(mig);
         drop(token);
         r
     }
@@ -193,6 +636,12 @@ impl<B: BucketSet> ShardedDHash<B> {
     /// paper's concurrent lookup/insert/delete interleave freely. Returns
     /// merged [`RebuildStats`] (`nbuckets` is the new total), or
     /// [`RebuildBusy`] if another whole-map sweep is running.
+    ///
+    /// The shard set is captured when the sweep starts; a split/merge
+    /// interleaving the sweep may retire a captured shard mid-sweep
+    /// (rebuilding it is wasted work, never wrong — its keys migrate out
+    /// through the directory regardless) and shards born mid-sweep are
+    /// not swept.
     ///
     /// The caller must not be inside a read-side critical section.
     pub fn rebuild_all(
@@ -206,17 +655,26 @@ impl<B: BucketSet> ShardedDHash<B> {
             Ok(g) => g,
             Err(_) => return Err(RebuildBusy),
         };
+        let maps: Vec<Arc<DHashMap<B>>> = {
+            let _g = guard.read_lock();
+            let d = self.dir();
+            (0..d.nshards()).map(|s| d.shard_map(s).clone()).collect()
+        };
         let mut moved = 0u64;
         let mut skipped = 0u64;
         let mut dropped_dup = 0u64;
-        for s in 0..self.shards.len() {
+        let nshards = maps.len();
+        for map in maps {
             // Blocking token acquisition, offline: a targeted rebuild may
             // hold the token and be waiting out grace periods that need
             // this thread to pass a quiescent state.
             let token = guard
                 .offline_while(|| self.migration_token.lock().unwrap_or_else(|e| e.into_inner()));
-            let st = self.migrate_shard(guard, s, nbuckets_per_shard, hash)?;
+            let mig = MigrationGauge::enter(&self.migrating);
+            let r = map.rebuild(guard, nbuckets_per_shard, hash);
+            drop(mig);
             drop(token);
+            let st = r?;
             moved += st.moved;
             skipped += st.skipped;
             dropped_dup += st.dropped_dup;
@@ -225,52 +683,510 @@ impl<B: BucketSet> ShardedDHash<B> {
             moved,
             skipped,
             dropped_dup,
-            nbuckets: nbuckets_per_shard * self.shards.len(),
+            nbuckets: nbuckets_per_shard * nshards,
             elapsed: t0.elapsed(),
         })
     }
 
-    /// Completed rebuilds, summed over shards.
-    pub fn rebuild_count(&self) -> u64 {
-        self.shards.iter().map(|s| s.rebuild_count()).sum()
+    /// Drain every node of `src` into the destination the (already
+    /// published and grace-period-settled) directory routes its key to,
+    /// publishing each node in the map-wide `moving` hazard pointer
+    /// across its delete→insert window. The caller holds the migration
+    /// token. Mirrors the distribution loop of `DHashMap::rebuild`
+    /// (Alg. 3 lines 24-39) with the destination chosen per key.
+    fn drain_into(&self, src: &DHashMap<B>, new_dir: &Directory<B>) -> (u64, u64) {
+        let mut moved = 0u64;
+        let mut dropped_dup = 0u64;
+        // SAFETY: we hold the migration token, so `src` cannot be
+        // mid-rebuild (its `cur` is stable and its `ht_new` is null).
+        let src_table = unsafe { &*src.cur.load(Ordering::SeqCst) };
+        for bucket in src_table.buckets() {
+            loop {
+                let popped = bucket.take_first_for_distribution(&mut |cand| {
+                    // Publish the hazard-period pointer for every
+                    // candidate BEFORE its logical delete (the paper's
+                    // ordering, Alg. 3 lines 26-29).
+                    self.moving.store(cand, Ordering::Release);
+                });
+                match popped {
+                    None => {
+                        // A raced candidate may linger in `moving`; clear
+                        // before leaving the bucket (same hole as the
+                        // rebuild loop — see DESIGN.md §Deviations).
+                        self.moving.store(std::ptr::null_mut(), Ordering::Release);
+                        break;
+                    }
+                    Some(n) => {
+                        // SAFETY: unlinked by the pop; owned by us.
+                        let key = unsafe { (*n).key };
+                        let dest = &new_dir.slot_of(key).map;
+                        match dest.table().bucket(key).insert(n) {
+                            Ok(()) => {
+                                moved += 1;
+                                // Leave the hazard period (Release = the
+                                // paper's smp_wmb).
+                                self.moving.store(std::ptr::null_mut(), Ordering::Release);
+                            }
+                            Err(n) => {
+                                // A concurrent insert won the destination;
+                                // clear `moving` BEFORE the deferred free
+                                // (the rebuild loop's ordering fix).
+                                self.moving.store(std::ptr::null_mut(), Ordering::SeqCst);
+                                // SAFETY: not in any table; unreachable
+                                // once `moving` is cleared.
+                                unsafe { Node::defer_free(n) };
+                                dropped_dup += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (moved, dropped_dup)
+    }
+
+    /// Publish a freshly built directory (the caller holds the migration
+    /// token and frees superseded directories itself, after the grace
+    /// periods its protocol already waits out).
+    fn install_dir(&self, new_dir: *mut Directory<B>) {
+        // SAFETY: `new_dir` was just built and is never null.
+        let d = unsafe { &*new_dir };
+        // Mirrors first, directory second: anyone who can already route
+        // through the new directory is guaranteed to read the new epoch,
+        // so epoch re-checks (the pre-route oracle, `len`'s fast path)
+        // can only err toward the conservative fallback.
+        self.nshards.store(d.nshards(), Ordering::SeqCst);
+        self.cur_epoch.store(d.epoch, Ordering::SeqCst);
+        self.dir.store(new_dir, Ordering::SeqCst);
+    }
+
+    /// Split shard `s` online: its keys migrate to two child shards,
+    /// each serving one more selector bit (`nbuckets` buckets each,
+    /// hashing with `hash`), concurrently with lookup / insert / delete
+    /// / upsert. The split publishes an intermediate directory whose
+    /// affected slots carry `prev = parent`, waits a grace period so
+    /// every thread routes through it, drains the parent (one node at a
+    /// time through the `moving` hazard pointer), then publishes the
+    /// final directory and retires the parent — the directory-level
+    /// analogue of Algorithm 3's three-barrier rebuild.
+    ///
+    /// The caller must not be inside a read-side critical section.
+    pub fn split_shard(
+        &self,
+        guard: &RcuThread,
+        s: usize,
+        nbuckets: usize,
+        hash: HashFn,
+    ) -> Result<RebuildStats, ResizeError> {
+        self.split_shard_at(guard, None, s, nbuckets, hash)
+    }
+
+    /// [`ShardedDHash::split_shard`], additionally refusing (with
+    /// [`ResizeError::Busy`]) when the directory epoch no longer matches
+    /// `epoch` — the elastic policy uses this so a decision scored under
+    /// one shard layout can never split whichever shard inherited the
+    /// ordinal after a concurrent resize (the same pinning
+    /// [`ShardedDHash::rebuild_shard_at`] gives mitigations).
+    pub fn split_shard_at(
+        &self,
+        guard: &RcuThread,
+        epoch: Option<u64>,
+        s: usize,
+        nbuckets: usize,
+        hash: HashFn,
+    ) -> Result<RebuildStats, ResizeError> {
+        let t0 = Instant::now();
+        let token = match self.migration_token.try_lock() {
+            Ok(t) => t,
+            Err(_) => return Err(ResizeError::Busy),
+        };
+        let d0 = self.dir();
+        if epoch.map_or(false, |e| e != d0.epoch) {
+            return Err(ResizeError::Busy);
+        }
+        if s >= d0.nshards() {
+            return Err(ResizeError::NoSuchShard);
+        }
+        let (lo, hi) = d0.shard_range(s);
+        let local_size = hi - lo;
+        if local_size == 1 && d0.depth >= MAX_DEPTH {
+            return Err(ResizeError::AtMaxDepth);
+        }
+        let d0_ptr = self.dir.load(Ordering::SeqCst);
+        let mig = MigrationGauge::enter(&self.migrating);
+        let parent = d0.shard_map(s).clone();
+        let c0 = Arc::new(DHashMap::with_hash(nbuckets, hash));
+        let c1 = Arc::new(DHashMap::with_hash(nbuckets, hash));
+        let uid0 = self.next_uid.fetch_add(2, Ordering::Relaxed);
+        let child_slot =
+            |child: &Arc<DHashMap<B>>, uid: u64, prev: Option<&Arc<DHashMap<B>>>| Slot {
+                map: child.clone(),
+                prev: prev.cloned(),
+                shard: 0,
+                uid,
+            };
+
+        // Intermediate directory D1: the parent's range routes to the
+        // children with `prev = parent`. If the parent owns a single
+        // slot the directory doubles (each old slot i becomes 2i and
+        // 2i+1 — a pure selector-bit extension); otherwise the range
+        // halves in place.
+        let build = |with_prev: bool| -> *mut Directory<B> {
+            let prev0 = with_prev.then_some(&parent);
+            if local_size == 1 {
+                let mut slots = Vec::with_capacity(d0.slots.len() * 2);
+                for (i, old) in d0.slots.iter().enumerate() {
+                    if i == lo {
+                        slots.push(child_slot(&c0, uid0, prev0));
+                        slots.push(child_slot(&c1, uid0 + 1, prev0));
+                    } else {
+                        debug_assert!(old.prev.is_none(), "token held: no other migration");
+                        slots.push(old.clone());
+                        slots.push(old.clone());
+                    }
+                }
+                Directory::build(d0.epoch + 1, d0.depth + 1, slots)
+            } else {
+                let mid = lo + local_size / 2;
+                let slots: Vec<Slot<B>> = d0
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .map(|(i, old)| {
+                        if (lo..mid).contains(&i) {
+                            child_slot(&c0, uid0, prev0)
+                        } else if (mid..hi).contains(&i) {
+                            child_slot(&c1, uid0 + 1, prev0)
+                        } else {
+                            old.clone()
+                        }
+                    })
+                    .collect();
+                Directory::build(d0.epoch + 1, d0.depth, slots)
+            }
+        };
+
+        // Barrier 1: publish D1 and wait; afterwards every op routes
+        // through it (inserts to the children, reads checking parent →
+        // moving → child), so the drain below can never race an insert
+        // into an already-drained parent bucket. D0 is unreachable from
+        // here on but stays allocated until the end (build(false) still
+        // reads its slots).
+        let d1_ptr = build(true);
+        self.install_dir(d1_ptr);
+        guard.offline_while(synchronize_rcu);
+        // SAFETY: just built, never null; we are the only dir writer.
+        let d1 = unsafe { &*d1_ptr };
+
+        let (moved, dropped_dup) = self.drain_into(&parent, d1);
+
+        // Barrier 2: wait for ops still traversing parent buckets.
+        guard.offline_while(synchronize_rcu);
+
+        // Barrier 3: publish the final directory (prev cleared) and wait,
+        // then free the superseded directories — dropping the last
+        // directory references to the (now empty) parent.
+        self.install_dir(build(false));
+        guard.offline_while(synchronize_rcu);
+        // SAFETY: both unpublished for at least a full grace period.
+        unsafe {
+            drop(Box::from_raw(d0_ptr));
+            drop(Box::from_raw(d1_ptr));
+        }
+
+        self.splits.fetch_add(1, Ordering::Relaxed);
+        drop(mig);
+        drop(token);
+        Ok(RebuildStats {
+            moved,
+            skipped: 0,
+            dropped_dup,
+            nbuckets: nbuckets * 2,
+            elapsed: t0.elapsed(),
+        })
+    }
+
+    /// Merge shard `s` with its buddy online: both shards' keys migrate
+    /// into one new shard (`nbuckets` buckets, hashing with `hash`)
+    /// serving one selector bit less, concurrently with lookup / insert
+    /// / delete / upsert — the exact inverse of
+    /// [`ShardedDHash::split_shard`], using the same intermediate
+    /// directory + hazard-pointer protocol. The final directory halves
+    /// its depth when every slot pair has collapsed.
+    ///
+    /// The caller must not be inside a read-side critical section.
+    pub fn merge_shard(
+        &self,
+        guard: &RcuThread,
+        s: usize,
+        nbuckets: usize,
+        hash: HashFn,
+    ) -> Result<RebuildStats, ResizeError> {
+        self.merge_shard_at(guard, None, s, nbuckets, hash)
+    }
+
+    /// [`ShardedDHash::merge_shard`] pinned to a directory epoch, like
+    /// [`ShardedDHash::split_shard_at`]: refuses with
+    /// [`ResizeError::Busy`] when the layout the decision was scored
+    /// under is gone.
+    pub fn merge_shard_at(
+        &self,
+        guard: &RcuThread,
+        epoch: Option<u64>,
+        s: usize,
+        nbuckets: usize,
+        hash: HashFn,
+    ) -> Result<RebuildStats, ResizeError> {
+        let t0 = Instant::now();
+        let token = match self.migration_token.try_lock() {
+            Ok(t) => t,
+            Err(_) => return Err(ResizeError::Busy),
+        };
+        let d0 = self.dir();
+        if epoch.map_or(false, |e| e != d0.epoch) {
+            return Err(ResizeError::Busy);
+        }
+        if s >= d0.nshards() {
+            return Err(ResizeError::NoSuchShard);
+        }
+        let Some(b) = d0.buddy_of(s) else {
+            return Err(ResizeError::Unmergeable);
+        };
+        let d0_ptr = self.dir.load(Ordering::SeqCst);
+        let mig = MigrationGauge::enter(&self.migrating);
+        let src_s = d0.shard_map(s).clone();
+        let src_b = d0.shard_map(b).clone();
+        let merged = Arc::new(DHashMap::with_hash(nbuckets, hash));
+        let merged_uid = self.next_uid.fetch_add(1, Ordering::Relaxed);
+
+        let build = |with_prev: bool| -> *mut Directory<B> {
+            let mut slots: Vec<Slot<B>> = d0
+                .slots
+                .iter()
+                .map(|old| {
+                    if old.shard == s || old.shard == b {
+                        Slot {
+                            map: merged.clone(),
+                            prev: with_prev.then(|| old.map.clone()),
+                            shard: 0,
+                            uid: merged_uid,
+                        }
+                    } else {
+                        old.clone()
+                    }
+                })
+                .collect();
+            let mut depth = d0.depth;
+            if !with_prev {
+                // Opportunistic halving: fold the directory while every
+                // even/odd slot pair aliases one shard.
+                while depth > 0 && slots.chunks(2).all(|p| Arc::ptr_eq(&p[0].map, &p[1].map)) {
+                    slots = slots.into_iter().step_by(2).collect();
+                    depth -= 1;
+                }
+            }
+            Directory::build(d0.epoch + 1, depth, slots)
+        };
+
+        // Barrier 1 (see split_shard): route everything through the
+        // intermediate directory before any node moves.
+        let d1_ptr = build(true);
+        self.install_dir(d1_ptr);
+        guard.offline_while(synchronize_rcu);
+        // SAFETY: just built, never null; we are the only dir writer.
+        let d1 = unsafe { &*d1_ptr };
+
+        let (moved_s, dup_s) = self.drain_into(&src_s, d1);
+        let (moved_b, dup_b) = self.drain_into(&src_b, d1);
+
+        // Barrier 2: ops still traversing source buckets.
+        guard.offline_while(synchronize_rcu);
+
+        // Barrier 3: final directory; then free the superseded ones,
+        // retiring both sources.
+        self.install_dir(build(false));
+        guard.offline_while(synchronize_rcu);
+        // SAFETY: both unpublished for at least a full grace period.
+        unsafe {
+            drop(Box::from_raw(d0_ptr));
+            drop(Box::from_raw(d1_ptr));
+        }
+
+        self.merges.fetch_add(1, Ordering::Relaxed);
+        drop(mig);
+        drop(token);
+        Ok(RebuildStats {
+            moved: moved_s + moved_b,
+            skipped: 0,
+            dropped_dup: dup_s + dup_b,
+            nbuckets,
+            elapsed: t0.elapsed(),
+        })
+    }
+
+    /// Completed rebuilds, summed over current shards (rebuilds of
+    /// shards since retired by a split/merge are not counted).
+    pub fn rebuild_count(&self, guard: &RcuThread) -> u64 {
+        let _g = guard.read_lock();
+        let d = self.dir();
+        (0..d.nshards()).map(|s| d.shard_map(s).rebuild_count()).sum()
     }
 
     /// Total bucket count, summed over shards.
     pub fn nbuckets(&self, guard: &RcuThread) -> usize {
-        self.shards.iter().map(|s| s.nbuckets(guard)).sum()
+        let _g = guard.read_lock();
+        let d = self.dir();
+        (0..d.nshards()).map(|s| d.shard_map(s).nbuckets(guard)).sum()
     }
 
     /// Current bucket count of shard `s`.
     pub fn shard_nbuckets(&self, guard: &RcuThread, s: usize) -> usize {
-        self.shards[s].nbuckets(guard)
+        let _g = guard.read_lock();
+        self.dir().shard_map(s).nbuckets(guard)
     }
 
     /// Current hash function of shard `s` (shards diverge after targeted
     /// mitigations).
     pub fn shard_hash_fn(&self, guard: &RcuThread, s: usize) -> HashFn {
-        self.shards[s].hash_fn(guard)
+        let _g = guard.read_lock();
+        self.dir().shard_map(s).hash_fn(guard)
     }
 
-    /// Every shard's routing geometry `(hash, nbuckets)`, captured under
-    /// one RCU guard — the routing oracle's input for the vectorized
-    /// `batch_hash_multi` pre-sort. Each shard's pair comes from a
+    /// Every shard's routing geometry plus the selector→shard mapping,
+    /// captured from ONE directory pointer under one RCU guard — the
+    /// routing oracle's input for the vectorized `batch_hash_multi`
+    /// pre-sort. Each shard's `(hash, nbuckets)` pair comes from a
     /// single table pointer ([`DHashMap::geometry`]), so the snapshot
     /// never pairs a shard's old hash with its new bucket count, even
-    /// mid-staggered-rebuild. Across shards the view is coherent enough
-    /// by construction: at most one shard is migrating (the staggered
-    /// invariant), the fixed selector means a just-superseded geometry
-    /// can never route a key to the wrong *shard*, and a batch sorted
-    /// with a stale bucket geometry merely loses bucket-order locality
-    /// for that one shard — the same cost as an un-routed batch.
-    pub fn route_snapshot(&self, guard: &RcuThread) -> Vec<(HashFn, usize)> {
-        self.shards.iter().map(|s| s.geometry(guard)).collect()
+    /// mid-staggered-rebuild; the embedded epoch lets a consumer detect
+    /// (and count, instead of silently absorbing) ids computed against a
+    /// layout a split/merge has since retired. A batch sorted with a
+    /// stale-but-detected geometry merely loses bucket-order locality —
+    /// the same cost as an un-routed batch — because per-op routing
+    /// always goes through the live directory.
+    pub fn route_snapshot(&self, guard: &RcuThread) -> RouteSnapshot {
+        let _g = guard.read_lock();
+        let d = self.dir();
+        RouteSnapshot {
+            epoch: d.epoch,
+            shards: (0..d.nshards())
+                .map(|s| d.shard_map(s).geometry(guard))
+                .collect(),
+            uids: (0..d.nshards())
+                .map(|s| d.slots[d.shard_slots[s]].uid)
+                .collect(),
+            depth: d.depth,
+            slot_shard: d.slots.iter().map(|sl| sl.shard as u32).collect(),
+        }
+    }
+
+    /// True when shard `s` can split right now: its selector range spans
+    /// more than one slot, or the directory has depth headroom. The
+    /// elastic policy consults this so it never keeps planning a split
+    /// that [`ShardedDHash::split_shard`] would refuse with
+    /// [`ResizeError::AtMaxDepth`] (starving merges of the cooldown).
+    pub fn splittable(&self, guard: &RcuThread, s: usize) -> bool {
+        let _g = guard.read_lock();
+        let d = self.dir();
+        if s >= d.nshards() {
+            return false;
+        }
+        let (lo, hi) = d.shard_range(s);
+        hi - lo > 1 || d.depth < MAX_DEPTH
+    }
+
+    /// Per-shard `(live nodes, nbuckets)` occupancy plus the epoch it
+    /// was observed under — the elastic controller's input. O(n) scan.
+    pub fn load_profile(&self, guard: &RcuThread) -> (u64, Vec<(usize, usize)>) {
+        let (epoch, maps): (u64, Vec<Arc<DHashMap<B>>>) = {
+            let _g = guard.read_lock();
+            let d = self.dir();
+            (
+                d.epoch,
+                (0..d.nshards()).map(|s| d.shard_map(s).clone()).collect(),
+            )
+        };
+        let prof = maps
+            .iter()
+            .map(|m| (m.len(guard), m.nbuckets(guard)))
+            .collect();
+        (epoch, prof)
+    }
+
+    /// All live `(key, value)` pairs, merged across the directory:
+    /// migration sources first, then the cross-shard hazard node, then
+    /// destination shards — the same precedence `lookup` uses —
+    /// deduplicated by key. Each shard contributes its own
+    /// rebuild-chain-merged pairs (see `DHashMap::merged_pairs`), so the
+    /// walk never undercounts during any migration: a node absent from
+    /// both its source scan and its destination scan must have its
+    /// cross-shard hazard period spanning the gap between them, and at
+    /// most one node is in that period at a time (single `moving`
+    /// pointer, single migration by the token).
+    ///
+    /// The caller must be inside a read-side critical section.
+    fn merged_pairs_dir(&self, d: &Directory<B>) -> Vec<(u64, u64)> {
+        let mut seen: HashSet<u64> = HashSet::new();
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        // (1) Migration sources (dedup by map identity: a split's parent
+        // backs two slot ranges, a merge has one source per range).
+        let mut scanned: Vec<*const DHashMap<B>> = Vec::new();
+        for slot in d.slots.iter() {
+            if let Some(prev) = &slot.prev {
+                let p = Arc::as_ptr(prev);
+                if !scanned.contains(&p) {
+                    scanned.push(p);
+                    for (k, v) in prev.merged_pairs() {
+                        if seen.insert(k) {
+                            out.push((k, v));
+                        }
+                    }
+                }
+            }
+        }
+        // (2) The cross-shard hazard node.
+        let cur = self.moving.load(Ordering::SeqCst);
+        if !cur.is_null() {
+            // SAFETY: as in lookup.
+            let n = unsafe { &*cur };
+            if !n.logically_removed() && seen.insert(n.key) {
+                out.push((n.key, n.val.load(Ordering::SeqCst)));
+            }
+        }
+        // (3) Destination shards.
+        for s in 0..d.nshards() {
+            for (k, v) in d.shard_map(s).merged_pairs() {
+                if seen.insert(k) {
+                    out.push((k, v));
+                }
+            }
+        }
+        out
     }
 
     /// Live node count across all shards — O(n) scan (diagnostics; racy
-    /// under concurrency, but never undercounts during a migration — see
-    /// [`DHashMap::len`]).
+    /// under concurrency, but never undercounts during a rebuild *or* a
+    /// split/merge — see `merged_pairs_dir`).
+    ///
+    /// Fast path: with no migration in flight (no slot carries `prev`,
+    /// no hazard node) shard keysets are disjoint, so the per-shard
+    /// lengths simply sum — no whole-map key-set materialization. A
+    /// resize cannot *start* draining while this thread scans (its first
+    /// grace period waits on us), but it can publish a new directory;
+    /// the epoch re-check catches that and falls back to the coherent
+    /// merged walk.
     pub fn len(&self, guard: &RcuThread) -> usize {
-        self.shards.iter().map(|s| s.len(guard)).sum()
+        let _g = guard.read_lock();
+        let d = self.dir();
+        if self.moving.load(Ordering::SeqCst).is_null()
+            && d.slots.iter().all(|sl| sl.prev.is_none())
+        {
+            let n = (0..d.nshards()).map(|s| d.shard_map(s).len(guard)).sum();
+            if self.epoch() == d.epoch {
+                return n;
+            }
+        }
+        self.merged_pairs_dir(self.dir()).len()
     }
 
     pub fn is_empty(&self, guard: &RcuThread) -> bool {
@@ -279,23 +1195,45 @@ impl<B: BucketSet> ShardedDHash<B> {
 
     /// Per-bucket live-node counts, shard 0's buckets first (the detector
     /// cross-check; each shard contributes `shard_nbuckets` entries).
+    /// Mid-migration, pairs still held by a source shard are projected
+    /// onto their *destination* shard's geometry — where the directory
+    /// says the key belongs.
     pub fn bucket_loads(&self, guard: &RcuThread) -> Vec<usize> {
-        self.shards
-            .iter()
-            .flat_map(|s| s.bucket_loads(guard))
-            .collect()
+        let _g = guard.read_lock();
+        let d = self.dir();
+        let geoms: Vec<(HashFn, usize)> = (0..d.nshards())
+            .map(|s| d.shard_map(s).geometry(guard))
+            .collect();
+        let mut loads: Vec<Vec<usize>> = geoms.iter().map(|&(_, nb)| vec![0; nb]).collect();
+        for (k, _) in self.merged_pairs_dir(d) {
+            let s = d.slot_of(k).shard;
+            let (h, nb) = geoms[s];
+            loads[s][h.bucket(k, nb)] += 1;
+        }
+        loads.concat()
     }
 
     /// Sorted snapshot of all live `(key, value)` pairs across shards
-    /// (test use; racy under concurrency).
+    /// (test use; racy under concurrency, but coherent across directory
+    /// epochs — see `merged_pairs_dir`).
     pub fn snapshot(&self, guard: &RcuThread) -> Vec<(u64, u64)> {
-        let mut out: Vec<(u64, u64)> = self
-            .shards
-            .iter()
-            .flat_map(|s| s.snapshot(guard))
-            .collect();
+        let _g = guard.read_lock();
+        let d = self.dir();
+        let mut out = self.merged_pairs_dir(d);
         out.sort_unstable();
         out
+    }
+}
+
+impl<B: BucketSet> Drop for ShardedDHash<B> {
+    fn drop(&mut self) {
+        // Exclusive access: no concurrent ops, no migration in flight.
+        let d = self.dir.load(Ordering::SeqCst);
+        if !d.is_null() {
+            // SAFETY: exclusive; dropping the directory drops its shard
+            // Arcs, and each last-referenced DHashMap drains itself.
+            unsafe { drop(Box::from_raw(d)) };
+        }
     }
 }
 
@@ -330,6 +1268,22 @@ mod tests {
     }
 
     #[test]
+    fn directory_agrees_with_uniform_selector() {
+        // A freshly constructed map's directory is a uniform layout: its
+        // routing must equal the free-function selector bit for bit.
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(8, 8, 1);
+        for k in (0..4000u64).map(|i| i.wrapping_mul(0x9e37)) {
+            assert_eq!(m.shard_of(&g, k), shard_of(k, 8));
+            // The coherent pair read agrees with the separate reads
+            // (single-threaded: no resize can interleave them).
+            assert_eq!(m.epoch_shard_of(&g, k), (m.epoch(), m.shard_of(&g, k)));
+        }
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
     #[should_panic(expected = "power of two")]
     fn non_pow2_shards_rejected() {
         let _ = ShardedDHash::with_buckets(3, 8, 1);
@@ -352,7 +1306,7 @@ mod tests {
         assert!(!m.delete(&g, 5));
         assert_eq!(m.len(&g), 399);
         // The shard populations sum to the total and match the selector.
-        let per: Vec<usize> = (0..4).map(|s| m.shard(s).len(&g)).collect();
+        let per: Vec<usize> = (0..4).map(|s| m.shard(&g, s).len(&g)).collect();
         assert_eq!(per.iter().sum::<usize>(), 399);
         g.quiescent_state();
         rcu_barrier();
@@ -370,7 +1324,7 @@ mod tests {
         let stats = m
             .rebuild_shard(&g, victim, 64, HashFn::Seeded(0xfeed))
             .unwrap();
-        assert_eq!(stats.moved as usize, m.shard(victim).len(&g));
+        assert_eq!(stats.moved as usize, m.shard(&g, victim).len(&g));
         for s in 0..4 {
             if s == victim {
                 assert_eq!(m.shard_hash_fn(&g, s), HashFn::Seeded(0xfeed));
@@ -385,7 +1339,7 @@ mod tests {
         for k in 0..800u64 {
             assert_eq!(m.lookup(&g, k), Some(k), "key {k} lost");
         }
-        assert_eq!(m.rebuild_count(), 1);
+        assert_eq!(m.rebuild_count(&g), 1);
         g.quiescent_state();
         rcu_barrier();
     }
@@ -395,19 +1349,31 @@ mod tests {
         let g = RcuThread::register();
         let m = ShardedDHash::with_buckets(4, 16, 9);
         let snap = m.route_snapshot(&g);
-        assert_eq!(snap.len(), 4);
-        assert!(snap.iter().all(|&(h, nb)| h == HashFn::Seeded(9) && nb == 16));
+        assert_eq!(snap.nshards(), 4);
+        assert_eq!(snap.epoch, 0);
+        assert!(snap
+            .shards
+            .iter()
+            .all(|&(h, nb)| h == HashFn::Seeded(9) && nb == 16));
 
-        // A targeted rebuild diverges exactly one shard's geometry.
+        // A targeted rebuild diverges exactly one shard's geometry (and
+        // does not bump the directory epoch — routing did not change).
         m.rebuild_shard(&g, 2, 64, HashFn::Seeded(0xbeef)).unwrap();
         let snap = m.route_snapshot(&g);
-        assert_eq!(snap[2], (HashFn::Seeded(0xbeef), 64));
+        assert_eq!(snap.epoch, 0);
+        assert_eq!(snap.shards[2], (HashFn::Seeded(0xbeef), 64));
         for s in [0usize, 1, 3] {
-            assert_eq!(snap[s], (HashFn::Seeded(9), 16), "shard {s} drifted");
+            assert_eq!(snap.shards[s], (HashFn::Seeded(9), 16), "shard {s} drifted");
         }
-        // The snapshot agrees with the per-shard accessors.
+        // The snapshot agrees with the per-shard accessors and selector.
         for s in 0..4 {
-            assert_eq!(snap[s], (m.shard_hash_fn(&g, s), m.shard_nbuckets(&g, s)));
+            assert_eq!(
+                snap.shards[s],
+                (m.shard_hash_fn(&g, s), m.shard_nbuckets(&g, s))
+            );
+        }
+        for k in 0..1000u64 {
+            assert_eq!(snap.shard_of(k) as usize, m.shard_of(&g, k));
         }
         g.quiescent_state();
         rcu_barrier();
@@ -428,8 +1394,306 @@ mod tests {
         assert_eq!(stats.nbuckets, 8 * 32);
         assert_eq!(m.nbuckets(&g), 8 * 32);
         assert_eq!(m.snapshot(&g), before);
-        assert_eq!(m.rebuild_count(), 8);
+        assert_eq!(m.rebuild_count(&g), 8);
         g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn split_moves_every_key_to_the_right_child() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(2, 16, 5);
+        for k in 0..600u64 {
+            m.insert(&g, k, k * 2).unwrap();
+        }
+        let before = m.snapshot(&g);
+        assert_eq!(m.shards(), 2);
+        assert_eq!(m.epoch(), 0);
+
+        let stats = m.split_shard(&g, 1, 32, HashFn::Seeded(0xc0de)).unwrap();
+        assert_eq!(m.shards(), 3);
+        assert_eq!(m.epoch(), 1, "one epoch bump per split");
+        assert_eq!(m.split_count(), 1);
+        assert_eq!(stats.dropped_dup, 0);
+        // Everything still resolves, contents identical.
+        assert_eq!(m.snapshot(&g), before);
+        for k in 0..600u64 {
+            assert_eq!(m.lookup(&g, k), Some(k * 2), "key {k} lost in split");
+        }
+        // The split children hold exactly the parent's keys, partitioned
+        // by the extended selector (shard 0 kept the other half-space).
+        let moved_total: usize = (1..3).map(|s| m.shard(&g, s).len(&g)).sum();
+        assert_eq!(stats.moved as usize, moved_total);
+        // Every key lives in the shard the directory names, and each
+        // child serves a disjoint selector range.
+        for k in 0..600u64 {
+            let s = m.shard_of(&g, k);
+            assert_eq!(m.shard(&g, s).lookup(&g, k), Some(k * 2));
+        }
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn merge_is_the_inverse_of_split() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(4, 16, 11);
+        for k in 0..800u64 {
+            m.insert(&g, k, k + 7).unwrap();
+        }
+        let before = m.snapshot(&g);
+        m.split_shard(&g, 3, 16, HashFn::Seeded(1)).unwrap();
+        assert_eq!(m.shards(), 5);
+        // The two children are each other's buddies.
+        assert_eq!(m.buddy_of(&g, 3), Some(4));
+        assert_eq!(m.buddy_of(&g, 4), Some(3));
+        // A shard at the base depth cannot merge with the deeper pair.
+        assert_eq!(m.buddy_of(&g, 2), None);
+
+        let stats = m.merge_shard(&g, 3, 32, HashFn::Seeded(2)).unwrap();
+        assert_eq!(m.shards(), 4);
+        assert_eq!(m.merge_count(), 1);
+        assert_eq!(stats.dropped_dup, 0);
+        assert_eq!(m.snapshot(&g), before);
+        for k in 0..800u64 {
+            assert_eq!(m.lookup(&g, k), Some(k + 7), "key {k} lost in merge");
+        }
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn merge_folds_the_directory_back_to_one_shard() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(2, 8, 3);
+        for k in 0..300u64 {
+            m.insert(&g, k, k).unwrap();
+        }
+        let before = m.snapshot(&g);
+        let stats = m.merge_shard(&g, 0, 16, HashFn::Seeded(9)).unwrap();
+        assert_eq!(stats.moved, 300);
+        assert_eq!(m.shards(), 1);
+        assert_eq!(m.nbuckets(&g), 16);
+        assert_eq!(m.snapshot(&g), before);
+        // A single shard has no buddy.
+        assert_eq!(m.buddy_of(&g, 0), None);
+        assert_eq!(
+            m.merge_shard(&g, 0, 16, HashFn::Seeded(10)),
+            Err(ResizeError::Unmergeable)
+        );
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn resize_errors_are_reported() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(1, 8, 1);
+        assert_eq!(
+            m.split_shard(&g, 5, 8, HashFn::Seeded(1)),
+            Err(ResizeError::NoSuchShard)
+        );
+        assert_eq!(
+            m.merge_shard(&g, 5, 8, HashFn::Seeded(1)),
+            Err(ResizeError::NoSuchShard)
+        );
+        // Epoch-pinned operations refuse a stale epoch — rebuilds and
+        // resizes alike (the analytics path relies on this to never
+        // mistarget an ordinal a concurrent resize reassigned).
+        m.split_shard(&g, 0, 8, HashFn::Seeded(2)).unwrap();
+        assert!(m
+            .rebuild_shard_at(&g, Some(0), 0, 8, HashFn::Seeded(3))
+            .is_err());
+        assert_eq!(
+            m.split_shard_at(&g, Some(0), 0, 8, HashFn::Seeded(3)),
+            Err(ResizeError::Busy)
+        );
+        assert_eq!(
+            m.merge_shard_at(&g, Some(0), 0, 8, HashFn::Seeded(3)),
+            Err(ResizeError::Busy)
+        );
+        assert!(m
+            .rebuild_shard_at(&g, Some(m.epoch()), 0, 8, HashFn::Seeded(3))
+            .is_ok());
+        assert!(m
+            .merge_shard_at(&g, Some(m.epoch()), 0, 16, HashFn::Seeded(4))
+            .is_ok());
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn uids_are_stable_across_resizes_and_never_reused() {
+        // Ordinals shift when the directory changes shape; uids don't.
+        // Controller cooldowns key on uids, so this is what makes a
+        // mitigation clock survive an unrelated resize.
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(4, 8, 1);
+        let before = m.route_snapshot(&g).uids;
+        assert_eq!(before, vec![0, 1, 2, 3]);
+
+        m.split_shard(&g, 1, 8, HashFn::Seeded(2)).unwrap();
+        let after = m.route_snapshot(&g).uids;
+        // Shards 0, 2, 3 keep their uids (at shifted ordinals); the
+        // children get fresh ones.
+        assert_eq!(after[0], 0);
+        assert_eq!(&after[3..], &[2, 3]);
+        assert!(after[1] >= 4 && after[2] >= 4 && after[1] != after[2]);
+
+        m.merge_shard(&g, 1, 16, HashFn::Seeded(3)).unwrap();
+        let merged = m.route_snapshot(&g).uids;
+        assert_eq!(merged.len(), 4);
+        assert_eq!(merged[0], 0);
+        assert_eq!(&merged[2..], &[2, 3]);
+        // The merged shard is a NEW shard: none of the retired uids.
+        assert!(!before.contains(&merged[1]) && !after.contains(&merged[1]));
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn splittable_reflects_depth_headroom() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(1, 4, 1);
+        assert!(m.splittable(&g, 0));
+        assert!(!m.splittable(&g, 9), "out of range is not splittable");
+        for i in 0..MAX_DEPTH {
+            assert!(m.splittable(&g, 0), "headroom at depth {i}");
+            m.split_shard(&g, 0, 4, HashFn::Seeded(i as u64)).unwrap();
+        }
+        // At the cap: single-slot shards can no longer split...
+        assert!(!m.splittable(&g, 0));
+        assert_eq!(
+            m.split_shard(&g, 0, 4, HashFn::Seeded(99)),
+            Err(ResizeError::AtMaxDepth)
+        );
+        // ...but a shard still spanning several slots can halve in place.
+        let wide = m.shards() - 1; // the never-split right half-space
+        assert!(m.splittable(&g, wide));
+        m.split_shard(&g, wide, 4, HashFn::Seeded(100)).unwrap();
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn split_respects_the_depth_cap() {
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(1, 4, 1);
+        m.insert(&g, 1, 1).unwrap();
+        let mut splits = 0u32;
+        loop {
+            match m.split_shard(&g, 0, 4, HashFn::Seeded(splits as u64)) {
+                Ok(_) => splits += 1,
+                Err(ResizeError::AtMaxDepth) => break,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+            assert!(splits <= MAX_DEPTH, "cap never reached");
+        }
+        assert_eq!(splits, MAX_DEPTH);
+        assert_eq!(m.lookup(&g, 1), Some(1));
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn uneven_directory_routes_and_snapshots_coherently() {
+        // Split one shard of four: five shards at mixed depths. Routing,
+        // the snapshot, and per-key placement must all agree.
+        let g = RcuThread::register();
+        let m = ShardedDHash::with_buckets(4, 8, 13);
+        for k in 0..500u64 {
+            m.insert(&g, k, k).unwrap();
+        }
+        m.split_shard(&g, 1, 8, HashFn::Seeded(0xaa)).unwrap();
+        assert_eq!(m.shards(), 5);
+        let snap = m.route_snapshot(&g);
+        assert_eq!(snap.nshards(), 5);
+        assert_eq!(snap.epoch, m.epoch());
+        let mut per = vec![0usize; 5];
+        for k in 0..500u64 {
+            let s = snap.shard_of(k) as usize;
+            assert_eq!(s, m.shard_of(&g, k));
+            assert_eq!(m.shard(&g, s).lookup(&g, k), Some(k));
+            per[s] += 1;
+        }
+        assert_eq!(per.iter().sum::<usize>(), 500);
+        // bucket_loads shape matches the per-shard geometry concatenation
+        // and sums to the population.
+        let loads = m.bucket_loads(&g);
+        assert_eq!(loads.len(), m.nbuckets(&g));
+        assert_eq!(loads.iter().sum::<usize>(), 500);
+        g.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn lookups_never_miss_pinned_keys_during_split_and_merge() {
+        // The elastic headline: always-present keys must never read
+        // Missing while their shard splits or merges under them.
+        use std::sync::atomic::AtomicBool;
+        let m = Arc::new(ShardedDHash::with_buckets(2, 32, 17));
+        let pinned: Vec<u64> = (0..512u64).collect();
+        {
+            let g = RcuThread::register();
+            for &k in &pinned {
+                m.insert(&g, k, k ^ 0xF00D).unwrap();
+            }
+            g.quiescent_state();
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for t in 0..2u64 {
+            let m2 = m.clone();
+            let s2 = stop.clone();
+            let keys = pinned.clone();
+            readers.push(std::thread::spawn(move || {
+                let g = RcuThread::register();
+                let mut rng = crate::util::SplitMix64::new(t + 1);
+                let mut ops = 0u64;
+                while !s2.load(Ordering::Relaxed) {
+                    let k = keys[rng.next_bounded(keys.len() as u64) as usize];
+                    assert_eq!(
+                        m2.lookup(&g, k),
+                        Some(k ^ 0xF00D),
+                        "pinned key {k} went missing mid-resize"
+                    );
+                    ops += 1;
+                    g.quiescent_state();
+                }
+                g.offline();
+                ops
+            }));
+        }
+        {
+            let g = RcuThread::register();
+            for round in 0..3u64 {
+                m.split_shard(&g, 0, 32, HashFn::Seeded(round)).unwrap();
+                assert!(m.migrating_shards() <= 1);
+                m.split_shard(&g, (round as usize) % m.shards(), 32, HashFn::Seeded(round + 9))
+                    .unwrap();
+                // Merge back what is mergeable until we return to 2.
+                while m.shards() > 2 {
+                    let mut merged = false;
+                    for s in 0..m.shards() {
+                        if m.buddy_of(&g, s).is_some() {
+                            m.merge_shard(&g, s, 32, HashFn::Seeded(round + 77)).unwrap();
+                            merged = true;
+                            break;
+                        }
+                    }
+                    assert!(merged, "no mergeable pair while above target");
+                }
+            }
+            g.quiescent_state();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = readers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 0);
+        {
+            let g = RcuThread::register();
+            assert_eq!(m.len(&g), pinned.len());
+            g.quiescent_state();
+        }
         rcu_barrier();
     }
 }

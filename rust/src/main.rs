@@ -5,9 +5,13 @@
 //! dhash torture  [--table dhash|xu|rht|split] [--threads N] [--lookup-pct P]
 //!                [--alpha A] [--buckets B] [--keys U] [--secs S]
 //!                [--no-rebuild] [--repeats R]
-//! dhash serve    [--buckets B] [--shards N] [--lanes L] [--workers W]
-//!                [--pre-route off|shard|bucket] [--secs S] [--attack-at T]
-//!                [--weak-hash] [--no-analytics]
+//! dhash serve    [--buckets B] [--shards N] [--max-shards M] [--lanes L]
+//!                [--workers W] [--pre-route off|shard|bucket] [--secs S]
+//!                [--attack-at T] [--weak-hash] [--no-analytics]
+//!
+//! `--max-shards M` (M > 0) turns on the elastic policy: the analytics
+//! thread splits hot shards and merges cold buddy pairs online, up to M
+//! shards; 0 (the default) keeps the shard count fixed at `--shards`.
 //! dhash rebuild  [--table dhash|xu|rht|split] [--nodes N] [--buckets B]
 //! ```
 
@@ -15,7 +19,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
-use dhash::coordinator::{Coordinator, CoordinatorConfig, PreRoute, Request};
+use dhash::coordinator::{Coordinator, CoordinatorConfig, ElasticConfig, PreRoute, Request};
 use dhash::dhash::{DHashMap, HashFn};
 use dhash::rcu::RcuThread;
 use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
@@ -90,6 +94,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "bucket" => PreRoute::Bucket,
         other => anyhow::bail!("unknown --pre-route {other:?} (want off|shard|bucket)"),
     };
+    let max_shards = args.get_or("max-shards", 0usize)?;
     let mut cfg = CoordinatorConfig {
         nbuckets,
         hash: if args.get_bool("weak-hash") {
@@ -100,6 +105,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         shards: args.get_or("shards", 1usize)?,
         lanes: args.get_or("lanes", 1usize)?,
         workers: args.get_or("workers", 2usize)?,
+        elastic: (max_shards > 0).then(|| ElasticConfig {
+            max_shards,
+            ..Default::default()
+        }),
         enable_analytics: !args.get_bool("no-analytics"),
         ..Default::default()
     };
@@ -146,14 +155,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         std::thread::sleep(Duration::from_secs(1));
         let st = c.stats();
         println!(
-            "t={:>3}s requests={:>9} batches={:>7} routed={:>7} fb_len={} fb_eng={} \
-             chi2={:>10.1} rebuilds={}",
+            "t={:>3}s requests={:>9} batches={:>7} routed={:>7} fb_len={} fb_eng={} fb_ep={} \
+             shards={} epoch={} splits={} merges={} chi2={:>10.1} rebuilds={}",
             sec + 1,
             st.total_requests,
             st.total_batches,
             st.pre_routed_batches,
             st.pre_route_fallbacks_length,
             st.pre_route_fallbacks_engine,
+            st.pre_route_fallbacks_epoch,
+            st.shards,
+            st.epoch,
+            st.splits,
+            st.merges,
             st.last_chi2,
             st.rebuilds
         );
@@ -162,8 +176,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     client.join().unwrap();
     for ev in c.rebuild_events() {
         println!(
-            "mitigation at {:?}: chi2={:.1} -> {:?} ({} nodes in {:?})",
-            ev.at, ev.chi2, ev.new_hash, ev.moved, ev.elapsed
+            "mitigation at {:?}: shard {} (epoch {}) chi2={:.1} -> {:?} ({} nodes in {:?})",
+            ev.at, ev.shard, ev.epoch, ev.chi2, ev.new_hash, ev.moved, ev.elapsed
+        );
+    }
+    for ev in c.resize_events() {
+        println!(
+            "resize at {:?}: {:?} (epoch {} -> {} shards, {} nodes in {:?})",
+            ev.at, ev.action, ev.epoch, ev.shards_after, ev.moved, ev.elapsed
         );
     }
     c.shutdown();
@@ -198,8 +218,8 @@ fn cmd_rebuild(args: &Args) -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     const KNOWN: &[&str] = &[
         "table", "threads", "lookup-pct", "alpha", "buckets", "alt-buckets", "keys", "secs",
-        "no-rebuild", "no-pin", "repeats", "seed", "hash-seed", "workers", "shards", "lanes",
-        "pre-route", "attack-at", "weak-hash", "no-analytics", "nodes",
+        "no-rebuild", "no-pin", "repeats", "seed", "hash-seed", "workers", "shards", "max-shards",
+        "lanes", "pre-route", "attack-at", "weak-hash", "no-analytics", "nodes",
     ];
     let args = Args::from_env(KNOWN)?;
     match args.positional().first().map(|s| s.as_str()) {

@@ -150,6 +150,14 @@ pub trait Engine {
     /// keys.len()`, a shard id is out of range, or any shard's
     /// `nbuckets` is 0 or exceeds `u32::MAX` (the composite id keeps
     /// the bucket in 32 bits).
+    ///
+    /// The kernel itself is layout-agnostic: `shard_ids` and
+    /// `shard_params` must come from ONE epoch-stamped
+    /// `ShardedDHash::route_snapshot`, and the caller (the batcher's
+    /// routing oracle) re-checks the live directory epoch afterwards —
+    /// under elastic sharding the shard *set* moves, and ids computed
+    /// against a retired epoch are discarded (counted as an epoch
+    /// fallback) rather than sorted by.
     fn batch_hash_multi(
         &self,
         keys: &[u64],

@@ -15,7 +15,9 @@
 pub mod workload;
 pub mod zipf;
 
-pub use workload::{AttackGen, OpMix, ShardedAttackGen};
+pub use workload::{
+    run_elastic, AttackGen, ElasticReport, ElasticTortureConfig, OpMix, ShardedAttackGen,
+};
 pub use zipf::Zipf;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

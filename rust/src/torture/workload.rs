@@ -1,6 +1,15 @@
-//! Workload building blocks: the operation mix `m` and the adversarial
-//! key generator used by the attack-mitigation experiments.
+//! Workload building blocks: the operation mix `m`, the adversarial
+//! key generators used by the attack-mitigation experiments, and the
+//! **elastic torture mode** — concurrent workers under a zipf-skewed
+//! toggle mix while a resizer thread splits and merges shards online,
+//! with directory-coherence invariants checked at every epoch.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::dhash::{HashFn, ShardedDHash};
+use crate::rcu::RcuThread;
 use crate::util::SplitMix64;
 
 /// One hash-table operation kind.
@@ -130,6 +139,264 @@ impl Iterator for ShardedAttackGen {
             .by_ref()
             .find(|&k| crate::dhash::shard_of(k, self.nshards) == self.shard)
     }
+}
+
+/// Configuration for [`run_elastic`]: the elastic torture mode.
+#[derive(Clone, Debug)]
+pub struct ElasticTortureConfig {
+    /// Toggle-worker thread count.
+    pub threads: usize,
+    /// Measurement window.
+    pub duration: Duration,
+    /// How long the resizer idles between split/merge bursts.
+    pub resize_every: Duration,
+    /// Keys each worker toggles (disjoint per worker, zipf-skewed).
+    pub keys_per_thread: u64,
+    /// Always-present keys inserted up front and never deleted: every
+    /// worker asserts they resolve on every probe — the "Missing is
+    /// never observed for a present key mid-split" invariant, under
+    /// real concurrency.
+    pub pinned: u64,
+    /// Zipf exponent for the toggle-index skew (hot keys churn most).
+    pub zipf_theta: f64,
+    /// Target shard count the resizer grows to before merging back.
+    pub grow_to: usize,
+    pub seed: u64,
+}
+
+impl Default for ElasticTortureConfig {
+    fn default() -> Self {
+        Self {
+            threads: 3,
+            duration: Duration::from_millis(400),
+            resize_every: Duration::from_millis(5),
+            keys_per_thread: 256,
+            pinned: 256,
+            zipf_theta: 1.2,
+            grow_to: 8,
+            seed: 0xe1a5_71c5,
+        }
+    }
+}
+
+impl ElasticTortureConfig {
+    /// Clamp for the CI smoke gate (no-op unless `DHASH_SMOKE=1`, like
+    /// [`super::TortureConfig::clamped_for_smoke`]).
+    pub fn clamped_for_smoke(mut self) -> Self {
+        if super::smoke_mode() {
+            self.threads = self.threads.min(2);
+            self.duration = self.duration.min(Duration::from_millis(60));
+            self.grow_to = self.grow_to.min(4);
+        }
+        self
+    }
+}
+
+/// Result of one elastic torture run.
+#[derive(Clone, Debug)]
+pub struct ElasticReport {
+    /// Completed worker operations.
+    pub total_ops: u64,
+    /// Splits / merges the resizer completed.
+    pub splits: u64,
+    pub merges: u64,
+    /// Shard count and directory epoch at the end of the run.
+    pub final_shards: usize,
+    pub final_epoch: u64,
+}
+
+/// Run the elastic torture: `threads` workers toggle disjoint zipf-hot
+/// key ranges (insert-if-absent / delete-if-present, asserting every
+/// outcome) and probe the pinned always-present set, while the calling
+/// thread splits shards up to `grow_to` and merges them back down,
+/// checking after every resize that the directory-merged diagnostics
+/// stay coherent: `snapshot` holds every pinned key, `bucket_loads`
+/// matches the live geometry and never undercounts the pinned
+/// population, and the migration gauge never exceeds one.
+///
+/// Returns the report; panics (failing the caller's test) on any
+/// invariant violation. The final state is audited exactly: the map
+/// holds precisely the pinned keys plus what the workers believe they
+/// left behind.
+pub fn run_elastic(map: Arc<ShardedDHash>, cfg: &ElasticTortureConfig) -> ElasticReport {
+    const PIN_BASE: u64 = 1 << 50;
+    const PIN_XOR: u64 = 0xF00D;
+    {
+        let g = RcuThread::register();
+        for i in 0..cfg.pinned {
+            map.insert(&g, PIN_BASE + i, (PIN_BASE + i) ^ PIN_XOR).unwrap();
+        }
+        g.quiescent_state();
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let ops = Arc::new(AtomicU64::new(0));
+    let mut workers = Vec::new();
+    for t in 0..cfg.threads {
+        let map = map.clone();
+        let stop = stop.clone();
+        let ops = ops.clone();
+        let cfg = cfg.clone();
+        workers.push(std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let zipf = super::Zipf::new(cfg.keys_per_thread, cfg.zipf_theta);
+            let mut rng = SplitMix64::new(cfg.seed.wrapping_add(t as u64 * 0x9e37));
+            let base = (t as u64 + 1) << 40; // disjoint from PIN_BASE
+            let mut present = vec![false; cfg.keys_per_thread as usize];
+            let mut local = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                for _ in 0..32 {
+                    // Zipf-hot toggle on the worker's own range: single
+                    // ownership per key makes every outcome exact.
+                    let i = (zipf.sample(&mut rng) - 1) as usize;
+                    let k = base + i as u64;
+                    if present[i] {
+                        assert!(
+                            map.lookup(&g, k).is_some(),
+                            "own present key {k} missed mid-resize"
+                        );
+                        assert!(map.delete(&g, k), "delete of present {k} failed");
+                        present[i] = false;
+                        assert!(map.lookup(&g, k).is_none(), "deleted key {k} resurrected");
+                    } else {
+                        assert!(map.insert(&g, k, k).is_ok(), "insert of absent {k} failed");
+                        present[i] = true;
+                    }
+                    // Pinned probe: an always-present key must resolve,
+                    // with its exact value, at every epoch.
+                    if cfg.pinned > 0 {
+                        let p = PIN_BASE + rng.next_bounded(cfg.pinned);
+                        assert_eq!(
+                            map.lookup(&g, p),
+                            Some(p ^ PIN_XOR),
+                            "pinned key {p} went missing mid-resize"
+                        );
+                    }
+                    local += 2;
+                }
+                g.quiescent_state();
+            }
+            g.offline();
+            ops.fetch_add(local, Ordering::Relaxed);
+            present.iter().filter(|&&p| p).count()
+        }));
+    }
+
+    // Adversarial stream: colliding keys (all ≡ 7 mod 64) aimed at one
+    // selector region, churned net-zero (insert → probe → delete), so a
+    // split/merge always migrates under same-bucket pressure. The
+    // selector is a fixed bit-extension, so the flood keeps landing in
+    // the attacked region's descendants as it splits.
+    {
+        let map = map.clone();
+        let stop = stop.clone();
+        let ops = ops.clone();
+        let nshards0 = map.shards().max(2);
+        workers.push(std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let mut gen = ShardedAttackGen::new(64, 7, nshards0, 0);
+            let mut local = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                for _ in 0..16 {
+                    let k = gen.next().unwrap();
+                    assert!(map.insert(&g, k, k).is_ok(), "attack key {k} collided");
+                    assert_eq!(map.lookup(&g, k), Some(k), "attack key {k} missed");
+                    assert!(map.delete(&g, k), "attack key {k} undeletable");
+                    local += 3;
+                }
+                g.quiescent_state();
+            }
+            g.offline();
+            ops.fetch_add(local, Ordering::Relaxed);
+            0usize // net-zero churn leaves nothing behind
+        }));
+    }
+
+    // The calling thread is the resizer: grow to `grow_to` shards, then
+    // merge back down, checking invariants at every step.
+    let g = RcuThread::register();
+    let (mut splits, mut merges) = (0u64, 0u64);
+    let t0 = Instant::now();
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x5eed);
+    let mut growing = true;
+    // Run for the window, but never report before at least one split
+    // AND one merge completed (each loop turn performs exactly one
+    // resize, so this tail is bounded by one grow/shrink cycle).
+    while t0.elapsed() < cfg.duration || splits == 0 || merges == 0 {
+        g.offline_while(|| std::thread::sleep(cfg.resize_every));
+        assert!(map.migrating_shards() <= 1, "two migrations in flight");
+        if growing {
+            let s = (rng.next_bounded(map.shards() as u64)) as usize;
+            match map.split_shard(&g, s, 32, HashFn::Seeded(rng.next_u64())) {
+                Ok(_) => splits += 1,
+                Err(e) => panic!("split of shard {s} failed: {e:?}"),
+            }
+            if map.shards() >= cfg.grow_to {
+                growing = false;
+            }
+        } else {
+            let s = (0..map.shards())
+                .find(|&s| map.buddy_of(&g, s).is_some())
+                .expect("a mergeable pair exists above one shard");
+            match map.merge_shard(&g, s, 64, HashFn::Seeded(rng.next_u64())) {
+                Ok(_) => merges += 1,
+                Err(e) => panic!("merge of shard {s} failed: {e:?}"),
+            }
+            if map.shards() <= 2 {
+                growing = true;
+            }
+        }
+        // Directory-coherence invariants, checked under concurrency:
+        // these scans merge sources, the hazard node, and destinations
+        // across the current epoch, so the pinned population can never
+        // transiently vanish from them.
+        let snap_pairs = map.snapshot(&g);
+        let mut missing = 0u64;
+        for i in 0..cfg.pinned {
+            let k = PIN_BASE + i;
+            // Binary search: snapshot is key-sorted.
+            if snap_pairs.binary_search_by_key(&k, |&(k, _)| k).is_err() {
+                missing += 1;
+            }
+        }
+        assert_eq!(missing, 0, "snapshot lost pinned keys at epoch {}", map.epoch());
+        let loads = map.bucket_loads(&g);
+        assert_eq!(
+            loads.len(),
+            map.nbuckets(&g),
+            "bucket_loads shape diverged from the live geometry"
+        );
+        assert!(
+            loads.iter().sum::<usize>() as u64 >= cfg.pinned,
+            "bucket_loads undercounts the pinned population"
+        );
+        g.quiescent_state();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let leftover: usize = workers
+        .into_iter()
+        .map(|h| g.offline_while(|| h.join()).unwrap())
+        .sum();
+
+    // Exact final audit: pinned + whatever the workers left toggled on.
+    assert_eq!(
+        map.len(&g),
+        cfg.pinned as usize + leftover,
+        "final population diverged from the workers' view"
+    );
+    for i in 0..cfg.pinned {
+        let k = PIN_BASE + i;
+        assert_eq!(map.lookup(&g, k), Some(k ^ PIN_XOR), "pinned key {k} lost");
+    }
+    let report = ElasticReport {
+        total_ops: ops.load(Ordering::Relaxed),
+        splits,
+        merges,
+        final_shards: map.shards(),
+        final_epoch: map.epoch(),
+    };
+    g.quiescent_state();
+    report
 }
 
 #[cfg(test)]

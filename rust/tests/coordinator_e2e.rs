@@ -6,8 +6,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dhash::coordinator::{
-    BatcherConfig, ControllerConfig, Coordinator, CoordinatorConfig, DetectorConfig, PreRoute,
-    Request, Response, SubmitError,
+    BatcherConfig, ControllerConfig, Coordinator, CoordinatorConfig, DetectorConfig, ElasticConfig,
+    PreRoute, Request, Response, SubmitError,
 };
 use dhash::dhash::HashFn;
 use dhash::torture::{AttackGen, ShardedAttackGen};
@@ -34,6 +34,7 @@ fn attack_config(nbuckets: usize) -> CoordinatorConfig {
             cooldown: Duration::from_millis(100),
             rebuild_buckets: None,
         },
+        elastic: None,
         enable_analytics: true,
     }
 }
@@ -266,6 +267,149 @@ fn sharded_bucket_pre_route_serves_with_zero_fallbacks() {
         st.pre_routed_batches, st.total_batches,
         "every batch must pre-route in (shard, bucket) order"
     );
+}
+
+#[test]
+fn bucket_pre_routed_stream_crosses_split_and_merge_without_losing_responses() {
+    // The elastic tentpole end to end: a sharded service with composite
+    // (shard, bucket) pre-routing, with a shard split (and then a merge)
+    // landing in the MIDDLE of a pre-routed batch stream. Zero lost or
+    // wrong responses; every batch's pre-route attempt is accounted for
+    // (routed, or an epoch fallback from ids computed against the
+    // retired layout) — never silent; and the native engine never
+    // contributes engine/length fallbacks.
+    let mut cfg = attack_config(1024);
+    cfg.hash = HashFn::Seeded(0xfeed);
+    cfg.shards = 4;
+    cfg.lanes = 2;
+    cfg.batcher.pre_route = PreRoute::Bucket;
+    let c = Arc::new(Coordinator::start(cfg).unwrap());
+    let n = 4000u64;
+    let client = c.client();
+    let puts: Vec<Request> = (0..n).map(|k| Request::put(k, k * 3)).collect();
+    for chunk in puts.chunks(256) {
+        assert!(client
+            .submit_batch(chunk)
+            .unwrap()
+            .wait()
+            .unwrap()
+            .iter()
+            .all(|r| *r == Response::Ok));
+    }
+
+    // Stream get batches from a second thread while the main thread
+    // splits a shard and merges it back mid-stream.
+    let c2 = c.clone();
+    let streamer = std::thread::spawn(move || {
+        let client = c2.client();
+        for round in 0..6u64 {
+            let gets: Vec<Request> = (0..n).map(Request::get).collect();
+            for chunk in gets.chunks(128) {
+                let resps = client.submit_batch(chunk).unwrap().wait().unwrap();
+                for (r, req) in resps.iter().zip(chunk) {
+                    assert_eq!(
+                        *r,
+                        Response::Value(req.key() * 3),
+                        "round {round} key {} lost or wrong across the resize",
+                        req.key()
+                    );
+                }
+            }
+        }
+    });
+    {
+        let g = dhash::rcu::RcuThread::register();
+        // Let the stream get going, then resize under it. The resizes
+        // themselves assert the migration-token gauge (at most one
+        // migration in flight) internally.
+        std::thread::sleep(Duration::from_millis(20));
+        c.map().split_shard(&g, 2, 1024, HashFn::Seeded(0xd00d)).unwrap();
+        assert_eq!(c.map().shards(), 5);
+        std::thread::sleep(Duration::from_millis(20));
+        c.map().merge_shard(&g, 2, 2048, HashFn::Seeded(0xd00e)).unwrap();
+        assert_eq!(c.map().shards(), 4);
+        g.quiescent_state();
+    }
+    streamer.join().unwrap();
+    c.shutdown();
+    let st = c.stats();
+    assert!(st.total_batches >= 1);
+    assert_eq!(st.splits, 1);
+    assert_eq!(st.merges, 1);
+    assert_eq!(st.shards, 4);
+    assert_eq!(
+        st.pre_route_fallbacks_engine, 0,
+        "the native engine must never fall back"
+    );
+    assert_eq!(st.pre_route_fallbacks_length, 0);
+    // Full accounting: every batch either pre-routed or counted an
+    // epoch fallback — resize-window degradation is visible, not silent.
+    assert_eq!(
+        st.pre_routed_batches + st.pre_route_fallbacks_epoch,
+        st.total_batches,
+        "unaccounted pre-route outcome: {st:?}"
+    );
+}
+
+#[test]
+fn elastic_policy_splits_under_load_and_merges_when_it_drains() {
+    // The controller's load-based policy end to end on the native
+    // engine: sustained occupancy on a 1-shard service must trigger an
+    // online split (recorded + visible in the stats), and draining the
+    // keyspace must merge back down.
+    let mut cfg = attack_config(512);
+    cfg.hash = HashFn::Seeded(0xfeed);
+    cfg.shards = 1;
+    cfg.detector.period = Duration::from_millis(10);
+    cfg.elastic = Some(ElasticConfig {
+        max_shards: 4,
+        split_load_factor: 4.0,
+        merge_load_factor: 1.0,
+        chi2_weight: 0.0,
+        cooldown: Duration::from_millis(20),
+    });
+    let c = Arc::new(Coordinator::start(cfg).unwrap());
+
+    // Load: 512 buckets * lf 4 = 2048 nodes trips the split threshold.
+    let puts: Vec<Request> = (0..6000u64).map(|k| Request::put(k, k)).collect();
+    for chunk in puts.chunks(512) {
+        c.execute_many(chunk.to_vec());
+    }
+    let mut waited = 0;
+    while c.stats().splits == 0 && waited < 5_000 {
+        std::thread::sleep(Duration::from_millis(25));
+        waited += 25;
+    }
+    let st = c.stats();
+    assert!(st.splits >= 1, "sustained load never split: {st:?}");
+    assert!(st.shards > 1);
+    assert!(st.shards <= 4, "split past max_shards: {st:?}");
+    let events = c.resize_events();
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e.action, dhash::coordinator::ResizeAction::Split(_))),
+        "no split event recorded: {events:?}"
+    );
+
+    // Every key still resolves on the grown directory.
+    for k in (0..6000u64).step_by(17) {
+        assert_eq!(c.execute(Request::get(k)), Response::Value(k));
+    }
+
+    // Drain: occupancy collapses below the merge threshold -> merge.
+    let dels: Vec<Request> = (0..6000u64).map(Request::del).collect();
+    for chunk in dels.chunks(512) {
+        c.execute_many(chunk.to_vec());
+    }
+    let mut waited = 0;
+    while c.stats().merges == 0 && waited < 5_000 {
+        std::thread::sleep(Duration::from_millis(25));
+        waited += 25;
+    }
+    let st = c.stats();
+    assert!(st.merges >= 1, "drained service never merged: {st:?}");
+    c.shutdown();
 }
 
 #[test]

@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
-use dhash::dhash::{DHashMap, HashFn, ShardedDHash};
+use dhash::dhash::{DHashMap, HashFn, ResizeError, ShardedDHash};
 use dhash::lflist::{CowSortedArray, MichaelList, SpinlockList};
 use dhash::rcu::{rcu_barrier, RcuThread};
 use dhash::util::prop::{check, shrink_ops, Gen};
@@ -22,6 +22,10 @@ enum Op {
     Lookup(u64),
     Upsert(u64, u64),
     Rebuild(usize, u64),
+    /// Split shard `pick % shards` online (elastic sharded runs only).
+    Split(u64),
+    /// Merge shard `pick % shards` with its buddy (elastic runs only).
+    Merge(u64),
 }
 
 fn gen_ops(g: &mut Gen, max_len: usize, key_space: u64) -> Vec<Op> {
@@ -37,11 +41,52 @@ fn gen_ops(g: &mut Gen, max_len: usize, key_space: u64) -> Vec<Op> {
     })
 }
 
+/// `gen_ops` plus interleaved online splits and merges — the elastic
+/// sharded sequences.
+fn gen_elastic_ops(g: &mut Gen, max_len: usize, key_space: u64) -> Vec<Op> {
+    g.vec(max_len, |g| {
+        let k = g.range(0, key_space);
+        match g.usize_in(0, 14) {
+            0..=3 => Op::Insert(k, g.u64() >> 1),
+            4..=6 => Op::Delete(k),
+            7..=8 => Op::Lookup(k),
+            9..=10 => Op::Upsert(k, g.u64() >> 1),
+            11 => Op::Rebuild(g.usize_in(1, 6) * 16, g.u64()),
+            12 => Op::Split(g.u64()),
+            _ => Op::Merge(g.u64()),
+        }
+    })
+}
+
 /// Run `ops` against both the real table and the model; return the first
-/// divergence as Err.
-fn run_against_model(map: &dyn ConcurrentMap, ops: &[Op]) -> Result<(), String> {
+/// divergence as Err. `elastic` supplies the concrete sharded handle
+/// (plus the key space, for full-sweep audits) that `Op::Split` /
+/// `Op::Merge` need; without it those ops are skipped.
+fn run_against_model(
+    map: &dyn ConcurrentMap,
+    ops: &[Op],
+    elastic: Option<(&ShardedDHash, u64)>,
+) -> Result<(), String> {
     let g = RcuThread::register();
     let mut model: HashMap<u64, u64> = HashMap::new();
+    // Audit the whole key space against the model: every present key
+    // resolves to its model value (no lost keys), every absent key reads
+    // Missing (no resurrected deletes).
+    let audit = |model: &HashMap<u64, u64>, i: usize, op: &Op| -> Result<(), String> {
+        let Some((m, key_space)) = elastic else {
+            return Ok(());
+        };
+        for k in 0..key_space {
+            let want = model.get(&k).copied();
+            let got = m.lookup(&g, k);
+            if got != want {
+                return Err(format!(
+                    "op {i} {op:?}: post-resize key {k} -> {got:?}, model {want:?}"
+                ));
+            }
+        }
+        Ok(())
+    };
     for (i, op) in ops.iter().enumerate() {
         match *op {
             Op::Insert(k, v) => {
@@ -92,6 +137,45 @@ fn run_against_model(map: &dyn ConcurrentMap, ops: &[Op]) -> Result<(), String> 
                     ));
                 }
             }
+            Op::Split(pick) => {
+                let Some((m, _)) = elastic else { continue };
+                if m.shards() >= 32 {
+                    continue; // keep generated sequences shy of the cap
+                }
+                let s = (pick % m.shards() as u64) as usize;
+                match m.split_shard(&g, s, 16, HashFn::Seeded(pick)) {
+                    Ok(_) | Err(ResizeError::AtMaxDepth) => {}
+                    Err(e) => {
+                        return Err(format!("op {i} {op:?}: split of shard {s} failed: {e:?}"))
+                    }
+                }
+                if m.len(&g) != model.len() {
+                    return Err(format!(
+                        "op {i} {op:?}: len {} != model {} after split",
+                        m.len(&g),
+                        model.len()
+                    ));
+                }
+                audit(&model, i, op)?;
+            }
+            Op::Merge(pick) => {
+                let Some((m, _)) = elastic else { continue };
+                let s = (pick % m.shards() as u64) as usize;
+                match m.merge_shard(&g, s, 16, HashFn::Seeded(pick ^ 1)) {
+                    Ok(_) | Err(ResizeError::Unmergeable) => {}
+                    Err(e) => {
+                        return Err(format!("op {i} {op:?}: merge of shard {s} failed: {e:?}"))
+                    }
+                }
+                if m.len(&g) != model.len() {
+                    return Err(format!(
+                        "op {i} {op:?}: len {} != model {} after merge",
+                        m.len(&g),
+                        model.len()
+                    ));
+                }
+                audit(&model, i, op)?;
+            }
         }
     }
     // Final audit: every model key present with the right value; len agrees.
@@ -129,12 +213,13 @@ fn model_check(table: &'static str, cases: usize) {
     check(table, cases, |g| {
         let ops = gen_ops(g, 400, 64);
         let map = fresh(table);
-        match run_against_model(&*map, &ops) {
+        match run_against_model(&*map, &ops, None) {
             Ok(()) => Ok(()),
             Err(first_err) => {
                 // Shrink to a minimal failing sequence for the report.
-                let minimal = shrink_ops(&ops, |xs| run_against_model(&*fresh(table), xs).is_err());
-                let final_err = run_against_model(&*fresh(table), &minimal).unwrap_err();
+                let minimal =
+                    shrink_ops(&ops, |xs| run_against_model(&*fresh(table), xs, None).is_err());
+                let final_err = run_against_model(&*fresh(table), &minimal, None).unwrap_err();
                 Err(format!(
                     "{first_err}\nshrunk to {} ops: {minimal:?}\n-> {final_err}",
                     minimal.len()
@@ -143,6 +228,15 @@ fn model_check(table: &'static str, cases: usize) {
         }
     });
     rcu_barrier();
+}
+
+/// The elastic variant: the sharded map checked with online splits and
+/// merges interleaved into the op stream, the ops running through the
+/// same `ConcurrentMap` surface and the resizes through the concrete
+/// handle.
+fn run_elastic_case(key_space: u64, ops: &[Op]) -> Result<(), String> {
+    let map = ShardedDHash::with_buckets(2, 8, 1);
+    run_against_model(&map, ops, Some((&map, key_space)))
 }
 
 #[test]
@@ -181,12 +275,62 @@ fn model_split() {
 }
 
 #[test]
+fn model_sharded_elastic() {
+    // Splits and merges interleaved with get/insert/delete/upsert and
+    // staggered rebuilds: linearizable against the sequential model at
+    // every step — no lost keys, no resurrected deletes, and the
+    // full-sweep audit after every resize pins "Missing is never
+    // observed for a present key" in the single-threaded setting (the
+    // concurrent counterpart lives in the conformance + torture suites).
+    check("sharded-elastic", 15, |g| {
+        let key_space = 64;
+        let ops = gen_elastic_ops(g, 300, key_space);
+        match run_elastic_case(key_space, &ops) {
+            Ok(()) => Ok(()),
+            Err(first_err) => {
+                let minimal = shrink_ops(&ops, |xs| run_elastic_case(key_space, xs).is_err());
+                let final_err = run_elastic_case(key_space, &minimal).unwrap_err();
+                Err(format!(
+                    "{first_err}\nshrunk to {} ops: {minimal:?}\n-> {final_err}",
+                    minimal.len()
+                ))
+            }
+        }
+    });
+    rcu_barrier();
+}
+
+#[test]
+fn model_elastic_resize_heavy() {
+    // Resize-dominated sequences: every few ops the directory splits or
+    // merges, with inserts keeping the population non-trivial.
+    check("resize heavy", 8, |g| {
+        let key_space = 48;
+        let ops: Vec<Op> = (0..160)
+            .map(|i| match i % 6 {
+                4 => {
+                    if g.bool(0.5) {
+                        Op::Split(g.u64())
+                    } else {
+                        Op::Merge(g.u64())
+                    }
+                }
+                5 => Op::Delete(g.range(0, key_space)),
+                _ => Op::Insert(g.range(0, key_space), i as u64),
+            })
+            .collect();
+        run_elastic_case(key_space, &ops)
+    });
+    rcu_barrier();
+}
+
+#[test]
 fn model_dense_key_collisions() {
     // Tiny key space (8 keys) forces constant insert/delete collisions
     // and same-bucket churn.
     check("dense keys", 20, |g| {
         let ops = gen_ops(g, 600, 8);
-        run_against_model(&*fresh("dhash-michael"), &ops)
+        run_against_model(&*fresh("dhash-michael"), &ops, None)
     });
     rcu_barrier();
 }
@@ -205,7 +349,7 @@ fn model_rebuild_heavy() {
                 }
             })
             .collect();
-        run_against_model(&*map, &ops)
+        run_against_model(&*map, &ops, None)
     });
     rcu_barrier();
 }

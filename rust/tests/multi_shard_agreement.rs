@@ -2,8 +2,10 @@
 //! the vectorized `batch_hash_multi` kernel must place every key of a
 //! mixed-shard batch exactly where (a) a per-shard `batch_hash` loop
 //! and (b) the data path's `HashFn` put it — including after targeted
-//! `rebuild_shard`s diverge individual shards' geometry, which is the
-//! state the routing oracle faces after a mitigation.
+//! `rebuild_shard`s diverge individual shards' geometry (the state the
+//! routing oracle faces after a mitigation) and after `split_shard` /
+//! `merge_shard` reshape the directory itself (the state it faces under
+//! the elastic policy).
 
 use dhash::dhash::{HashFn, ShardedDHash};
 use dhash::rcu::{rcu_barrier, RcuThread};
@@ -24,22 +26,27 @@ fn params_of(snapshot: &[(HashFn, usize)]) -> Vec<ShardParams> {
 }
 
 /// Pin `batch_hash_multi` against both references for `keys` under the
-/// map's current per-shard geometry.
+/// map's current epoch-stamped routing snapshot.
 fn check_agreement(engine: &dyn Engine, map: &ShardedDHash, g: &RcuThread, keys: &[u64]) {
-    let snapshot = map.route_snapshot(g);
-    let params = params_of(&snapshot);
-    let shard_ids: Vec<u32> = keys.iter().map(|&k| map.shard_of(k) as u32).collect();
+    let snap = map.route_snapshot(g);
+    let params = params_of(&snap.shards);
+    let shard_ids: Vec<u32> = keys.iter().map(|&k| snap.shard_of(k)).collect();
     let multi = engine.batch_hash_multi(keys, &shard_ids, &params).unwrap();
     assert_eq!(multi.len(), keys.len(), "exact-length contract");
+    // The snapshot's mapping is the live directory's mapping (no resize
+    // ran between the two reads in this single-threaded test).
+    for &k in keys {
+        assert_eq!(snap.shard_of(k) as usize, map.shard_of(g, k));
+    }
 
     // (a) One batch_hash call per shard over that shard's keys must give
     // the same buckets the single multi call gave.
-    for s in 0..map.shards() {
+    for s in 0..snap.nshards() {
         let (seed, nb, kind) = params[s];
         let shard_keys: Vec<u64> = keys
             .iter()
             .copied()
-            .filter(|&k| map.shard_of(k) == s)
+            .filter(|&k| snap.shard_of(k) as usize == s)
             .collect();
         if shard_keys.is_empty() {
             continue;
@@ -47,7 +54,7 @@ fn check_agreement(engine: &dyn Engine, map: &ShardedDHash, g: &RcuThread, keys:
         let per_shard = engine.batch_hash(&shard_keys, seed, nb, kind).unwrap();
         let mut ids = per_shard.iter();
         for (i, &k) in keys.iter().enumerate() {
-            if map.shard_of(k) == s {
+            if snap.shard_of(k) as usize == s {
                 let bucket = *ids.next().unwrap();
                 assert_eq!(
                     multi[i],
@@ -62,8 +69,8 @@ fn check_agreement(engine: &dyn Engine, map: &ShardedDHash, g: &RcuThread, keys:
     // composite id encodes — the invariant that makes pre-routed batch
     // order equal the worker's actual memory-access order.
     for (i, &k) in keys.iter().enumerate() {
-        let s = map.shard_of(k);
-        let (hash, nb) = snapshot[s];
+        let s = snap.shard_of(k) as usize;
+        let (hash, nb) = snap.shards[s];
         assert_eq!(
             multi[i],
             composite_route_id(s as u32, hash.bucket(k, nb) as u32),
@@ -88,6 +95,34 @@ fn multi_shard_routing_agrees_across_layers_and_rebuilds() {
 
     // A second divergence, to the other hash family.
     map.rebuild_shard(&g, 5, 512, HashFn::Modulo).unwrap();
+    check_agreement(engine.as_ref(), &map, &g, &keys);
+
+    g.quiescent_state();
+    rcu_barrier();
+}
+
+#[test]
+fn multi_shard_routing_agrees_across_splits_and_merges() {
+    // The elastic state: an uneven directory (shards at mixed selector
+    // depths) after online splits, then again after a merge folds it
+    // back. The composite-id contract must hold at every epoch.
+    let engine = load_engine().expect("default engine always loads");
+    let g = RcuThread::register();
+    let map = ShardedDHash::with_buckets(4, 512, 0xe1a5);
+    let mut rng = SplitMix64::new(77);
+    let keys: Vec<u64> = (0..4096).map(|_| rng.next_u64()).collect();
+
+    map.split_shard(&g, 1, 256, HashFn::Seeded(0xab)).unwrap();
+    assert_eq!(map.shards(), 5);
+    check_agreement(engine.as_ref(), &map, &g, &keys);
+
+    // Diverge one child's geometry on top of the uneven layout.
+    map.rebuild_shard(&g, 2, 1024, HashFn::Seeded(0xcd)).unwrap();
+    check_agreement(engine.as_ref(), &map, &g, &keys);
+
+    // Merge the pair back and re-check on the folded directory.
+    map.merge_shard(&g, 1, 512, HashFn::Seeded(0xef)).unwrap();
+    assert_eq!(map.shards(), 4);
     check_agreement(engine.as_ref(), &map, &g, &keys);
 
     g.quiescent_state();
