@@ -1,0 +1,87 @@
+//! §Network front end: wire-protocol serving throughput over loopback,
+//! swept connections × pipeline depth. Each client pipelines `depth`
+//! requests over its own TCP connection against a `NetServer` running
+//! on an ephemeral port, so the sweep measures the full path: framing →
+//! epoll workers → one `submit_batch` per drain → completion-driven
+//! response writes.
+//!
+//! Under `DHASH_SMOKE=1` the rows are also written to `BENCH_net.json`
+//! (see `common::BenchJson`), picked up by the CI `bench-smoke-json`
+//! artifact glob.
+
+mod common;
+
+#[cfg(target_os = "linux")]
+fn main() {
+    use dhash::coordinator::{Coordinator, CoordinatorConfig};
+    use dhash::net::{bench, BenchReport, NetConfig, NetServer};
+
+    common::print_host_table1();
+    let mut json = common::BenchJson::new("net");
+
+    let conn_sweep: Vec<usize> = if common::smoke_mode() {
+        vec![1, 4]
+    } else if common::full_mode() {
+        vec![1, 4, 16, 64]
+    } else {
+        vec![1, 8]
+    };
+    let depth_sweep: Vec<usize> = if common::smoke_mode() {
+        vec![1, 8]
+    } else {
+        vec![1, 8, 32]
+    };
+
+    for &conns in &conn_sweep {
+        for &depth in &depth_sweep {
+            let cfg = CoordinatorConfig {
+                shards: 4,
+                lanes: 2,
+                enable_analytics: false, // pure serving-path measurement
+                ..Default::default()
+            };
+            let c = Coordinator::start(cfg).expect("coordinator starts");
+            let net = NetServer::start(&NetConfig::default(), c.client()).expect("listener binds");
+            let addr = net.local_addr().expect("bound address");
+
+            let window = common::measure_window();
+            let hs: Vec<_> = (0..conns)
+                .map(|i| {
+                    std::thread::spawn(move || {
+                        bench::throughput_run(addr, window, depth, 65_536, 1 + i as u64)
+                    })
+                })
+                .collect();
+            let mut report = BenchReport::default();
+            for h in hs {
+                report.merge(&h.join().expect("client panicked").expect("client io"));
+            }
+            let stats = net.shutdown();
+            c.shutdown();
+
+            let rate = report.received as f64 / window.as_secs_f64();
+            println!(
+                "netbench conns={conns:<3} depth={depth:<3} req_per_s={rate:.0} sheds={} \
+                 proto_errs={}",
+                report.sheds, stats.protocol_errors
+            );
+            json.row(
+                "throughput",
+                &[
+                    ("conns", conns as f64),
+                    ("depth", depth as f64),
+                    ("req_per_s", rate),
+                    ("sheds", report.sheds as f64),
+                ],
+            );
+        }
+    }
+    json.flush();
+}
+
+#[cfg(not(target_os = "linux"))]
+fn main() {
+    // The epoll backend is Linux-only; keep the bench target compiling
+    // everywhere so `cargo bench` stays green on other platforms.
+    println!("netbench: skipped (no epoll backend on this platform)");
+}

@@ -22,44 +22,9 @@ use std::time::{Duration, Instant};
 use super::client::{CompletionSet, SubmitError};
 use crate::dhash::shard_of;
 
-/// A KV operation.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Request {
-    Get { key: u64 },
-    Put { key: u64, val: u64 },
-    Del { key: u64 },
-}
-
-impl Request {
-    pub fn get(key: u64) -> Self {
-        Request::Get { key }
-    }
-
-    pub fn put(key: u64, val: u64) -> Self {
-        Request::Put { key, val }
-    }
-
-    pub fn del(key: u64) -> Self {
-        Request::Del { key }
-    }
-
-    pub fn key(&self) -> u64 {
-        match *self {
-            Request::Get { key } | Request::Put { key, .. } | Request::Del { key } => key,
-        }
-    }
-}
-
-/// Reply to a [`Request`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Response {
-    /// Put/Del succeeded.
-    Ok,
-    /// Get hit.
-    Value(u64),
-    /// Get/Del miss.
-    Missing,
-}
+// The model types moved to the wire-protocol module (they ARE the wire
+// vocabulary now); re-exported here so in-process users are unaffected.
+pub use crate::net::proto::{Request, Response};
 
 /// One enqueued request: the op plus its completion slot (index into the
 /// submission's shared [`CompletionSet`]). Replaces the old
@@ -221,6 +186,17 @@ pub enum OracleError {
     /// sorting by them would order the batch for the wrong shards.
     Epoch,
 }
+
+impl std::fmt::Display for OracleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OracleError::Engine => write!(f, "routing engine failed or unavailable"),
+            OracleError::Epoch => write!(f, "directory epoch moved mid-computation"),
+        }
+    }
+}
+
+impl std::error::Error for OracleError {}
 
 /// What happened to one batch's pre-route attempt. Everything but
 /// `Routed`/`Unrouted` is a *fallback*: the batch is still delivered in
@@ -743,12 +719,5 @@ mod tests {
             [PreRoute::Off.code(), PreRoute::Shard.code(), PreRoute::Bucket.code()],
             [0, 1, 2]
         );
-    }
-
-    #[test]
-    fn request_accessors() {
-        assert_eq!(Request::put(3, 4).key(), 3);
-        assert_eq!(Request::del(5).key(), 5);
-        assert_eq!(Request::get(6).key(), 6);
     }
 }

@@ -239,6 +239,24 @@ impl BatchTicket {
         }
     }
 
+    /// Non-blocking, per-slot: the outcome of every request once all
+    /// have completed, in submission order. Unlike [`poll`], a failed
+    /// slot does not mask its batch-mates — the network front end needs
+    /// the good responses even when a shutdown failed the rest.
+    ///
+    /// [`poll`]: BatchTicket::poll
+    pub fn poll_each(&self) -> Option<Vec<Result<Response, SubmitError>>> {
+        if self.set.is_done() {
+            Some(
+                (0..self.set.len())
+                    .map(|i| self.set.poll_slot(i).expect("completion set is done"))
+                    .collect(),
+            )
+        } else {
+            None
+        }
+    }
+
     /// Block until every request completes; responses in submission
     /// order. `Err` if any request was dropped by a shutdown.
     pub fn wait(&self) -> Result<Vec<Response>, SubmitError> {
@@ -380,6 +398,26 @@ mod tests {
             bt.wait_timeout(Duration::MAX).unwrap().unwrap(),
             vec![Response::Ok]
         );
+    }
+
+    #[test]
+    fn poll_each_surfaces_good_slots_beside_failures() {
+        let set = Arc::new(CompletionSet::new(3));
+        let bt = BatchTicket { set: set.clone() };
+        set.fulfill(0, Response::Value(4));
+        set.fail(1);
+        assert_eq!(bt.poll_each(), None, "incomplete batch must not resolve");
+        set.fulfill(2, Response::Missing);
+        assert_eq!(
+            bt.poll_each().unwrap(),
+            vec![
+                Ok(Response::Value(4)),
+                Err(SubmitError::Shutdown),
+                Ok(Response::Missing),
+            ]
+        );
+        // The batch-level view still reports the poisoning error.
+        assert_eq!(bt.poll(), Some(Err(SubmitError::Shutdown)));
     }
 
     #[test]

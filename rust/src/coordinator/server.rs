@@ -122,6 +122,11 @@ pub struct CoordinatorStats {
     pub last_chi2_per_shard: Vec<f32>,
     /// Detector evaluation cycles performed.
     pub detector_runs: u64,
+    /// Network front-end counters, folded in by
+    /// [`crate::net::server::NetServer::fold_stats`] when the
+    /// coordinator serves over the wire (`None` for in-process-only
+    /// deployments).
+    pub net: Option<crate::net::NetStats>,
 }
 
 struct Shared {
@@ -723,6 +728,7 @@ impl Coordinator {
             last_chi2: f32::from_bits(self.shared.last_chi2.load(Ordering::Relaxed) as u32),
             last_chi2_per_shard: self.shared.shard_chi2.lock().unwrap().clone(),
             detector_runs: self.shared.detector_runs.load(Ordering::Relaxed),
+            net: None,
         }
     }
 

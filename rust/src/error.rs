@@ -1,0 +1,253 @@
+//! The unified public error surface.
+//!
+//! Before this module every layer grew its own ad-hoc error type —
+//! [`SubmitError`] in the client, [`ResizeError`] in the sharded map,
+//! [`OracleError`] in the batcher, stringly `anyhow` in the CLI — with
+//! no common vocabulary and no stable numeric identity. [`KvError`]
+//! unifies them: every public error converts into it, every variant
+//! carries a **stable numeric code** ([`KvError::code`]), and the wire
+//! protocol's error byte is *defined as* that code
+//! ([`crate::net::proto::ResponseFrame::error`]), so an in-process
+//! error and its on-wire representation can never drift apart.
+//!
+//! ## Code table
+//!
+//! | code | error |
+//! |------|-------|
+//! | 0x01 | [`KvError::Shutdown`] — coordinator shut down |
+//! | 0x02 | [`KvError::Overloaded`] — per-connection inflight window full, request shed |
+//! | 0x10 | [`ResizeError::Busy`] |
+//! | 0x11 | [`ResizeError::NoSuchShard`] |
+//! | 0x12 | [`ResizeError::AtMaxDepth`] |
+//! | 0x13 | [`ResizeError::Unmergeable`] |
+//! | 0x20 | [`OracleError::Engine`] |
+//! | 0x21 | [`OracleError::Epoch`] |
+//! | 0x30 | [`ProtoError::BadMagic`] |
+//! | 0x31 | [`ProtoError::BadVersion`] |
+//! | 0x32 | [`ProtoError::BadOpCode`] |
+//! | 0x33 | [`ProtoError::BadStatus`] |
+//! | 0x34 | [`ProtoError::ValueTooLong`] |
+//! | 0x35 | [`ProtoError::BadValueLen`] |
+//! | 0x36 | [`ProtoError::BadReserved`] |
+//!
+//! Codes are append-only: new variants take new numbers, existing
+//! numbers are never reassigned (they are the wire contract).
+
+use std::error::Error;
+use std::fmt;
+
+pub use crate::coordinator::{OracleError, SubmitError};
+pub use crate::dhash::ResizeError;
+pub use crate::util::cli::CliError;
+
+/// A wire frame that cannot be (or have been) produced by a conforming
+/// peer. Framing is byte-exact, so any of these means the stream
+/// position is no longer trustworthy and the connection must be failed
+/// (after an error frame carrying the code, where possible).
+#[non_exhaustive]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtoError {
+    /// First byte of a frame is not the expected magic.
+    BadMagic(u8),
+    /// Unsupported protocol version byte.
+    BadVersion(u8),
+    /// Unknown request op-code byte.
+    BadOpCode(u8),
+    /// Unknown response status byte.
+    BadStatus(u8),
+    /// Value-length field exceeds [`crate::net::proto::MAX_VALUE_LEN`];
+    /// rejected straight from the header, before any allocation.
+    ValueTooLong(u32),
+    /// Value length inconsistent with the op/status byte (`op` holds
+    /// the wire op or status byte the length disagreed with).
+    BadValueLen { op: u8, len: u32 },
+    /// A reserved byte was not zero.
+    BadReserved(u8),
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::BadMagic(b) => write!(f, "bad frame magic {b:#04x}"),
+            ProtoError::BadVersion(b) => write!(f, "unsupported protocol version {b}"),
+            ProtoError::BadOpCode(b) => write!(f, "unknown op code {b}"),
+            ProtoError::BadStatus(b) => write!(f, "unknown response status {b}"),
+            ProtoError::ValueTooLong(n) => write!(f, "value length {n} exceeds the cap"),
+            ProtoError::BadValueLen { op, len } => {
+                write!(f, "value length {len} inconsistent with op/status {op}")
+            }
+            ProtoError::BadReserved(b) => write!(f, "reserved byte {b:#04x} must be 0"),
+        }
+    }
+}
+
+impl Error for ProtoError {}
+
+/// The crate-wide error: everything a KV request (in-process or on the
+/// wire) can fail with. See the module docs for the stable code table.
+#[non_exhaustive]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvError {
+    /// The coordinator is shut down (or shut down while the request was
+    /// pending) — [`SubmitError::Shutdown`].
+    Shutdown,
+    /// The per-connection inflight window was full and the request was
+    /// shed. The *request* failed; the connection stays open.
+    Overloaded,
+    /// The peer sent bytes that are not a valid frame.
+    Protocol(ProtoError),
+    /// An online shard split/merge/rebuild was refused.
+    Resize(ResizeError),
+    /// The batch routing oracle could not answer.
+    Oracle(OracleError),
+}
+
+impl KvError {
+    /// The stable numeric code — the byte the wire protocol carries in
+    /// error responses. Append-only; never renumbered.
+    pub const fn code(&self) -> u8 {
+        match self {
+            KvError::Shutdown => 0x01,
+            KvError::Overloaded => 0x02,
+            KvError::Resize(ResizeError::Busy) => 0x10,
+            KvError::Resize(ResizeError::NoSuchShard) => 0x11,
+            KvError::Resize(ResizeError::AtMaxDepth) => 0x12,
+            KvError::Resize(ResizeError::Unmergeable) => 0x13,
+            KvError::Oracle(OracleError::Engine) => 0x20,
+            KvError::Oracle(OracleError::Epoch) => 0x21,
+            KvError::Protocol(ProtoError::BadMagic(_)) => 0x30,
+            KvError::Protocol(ProtoError::BadVersion(_)) => 0x31,
+            KvError::Protocol(ProtoError::BadOpCode(_)) => 0x32,
+            KvError::Protocol(ProtoError::BadStatus(_)) => 0x33,
+            KvError::Protocol(ProtoError::ValueTooLong(_)) => 0x34,
+            KvError::Protocol(ProtoError::BadValueLen { .. }) => 0x35,
+            KvError::Protocol(ProtoError::BadReserved(_)) => 0x36,
+        }
+    }
+
+    /// Human name for a wire code byte (diagnostics on the client side,
+    /// where only the code survives the trip).
+    pub fn code_name(code: u8) -> &'static str {
+        match code {
+            0x01 => "shutdown",
+            0x02 => "overloaded",
+            0x10 => "resize-busy",
+            0x11 => "resize-no-such-shard",
+            0x12 => "resize-at-max-depth",
+            0x13 => "resize-unmergeable",
+            0x20 => "oracle-engine",
+            0x21 => "oracle-epoch",
+            0x30 => "proto-bad-magic",
+            0x31 => "proto-bad-version",
+            0x32 => "proto-bad-op",
+            0x33 => "proto-bad-status",
+            0x34 => "proto-value-too-long",
+            0x35 => "proto-bad-value-len",
+            0x36 => "proto-bad-reserved",
+            _ => "unknown",
+        }
+    }
+}
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvError::Shutdown => write!(f, "coordinator is shut down"),
+            KvError::Overloaded => write!(f, "inflight window full; request shed"),
+            KvError::Protocol(e) => write!(f, "protocol error: {e}"),
+            KvError::Resize(e) => write!(f, "resize refused: {e}"),
+            KvError::Oracle(e) => write!(f, "routing oracle failed: {e}"),
+        }
+    }
+}
+
+impl Error for KvError {
+    fn source(&self) -> Option<&(dyn Error + 'static)> {
+        match self {
+            KvError::Protocol(e) => Some(e),
+            KvError::Resize(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SubmitError> for KvError {
+    fn from(e: SubmitError) -> Self {
+        match e {
+            SubmitError::Shutdown => KvError::Shutdown,
+        }
+    }
+}
+
+impl From<ResizeError> for KvError {
+    fn from(e: ResizeError) -> Self {
+        KvError::Resize(e)
+    }
+}
+
+impl From<OracleError> for KvError {
+    fn from(e: OracleError) -> Self {
+        KvError::Oracle(e)
+    }
+}
+
+impl From<ProtoError> for KvError {
+    fn from(e: ProtoError) -> Self {
+        KvError::Protocol(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_distinct() {
+        let all = [
+            KvError::Shutdown,
+            KvError::Overloaded,
+            KvError::Resize(ResizeError::Busy),
+            KvError::Resize(ResizeError::NoSuchShard),
+            KvError::Resize(ResizeError::AtMaxDepth),
+            KvError::Resize(ResizeError::Unmergeable),
+            KvError::Oracle(OracleError::Engine),
+            KvError::Oracle(OracleError::Epoch),
+            KvError::Protocol(ProtoError::BadMagic(0)),
+            KvError::Protocol(ProtoError::BadVersion(0)),
+            KvError::Protocol(ProtoError::BadOpCode(0)),
+            KvError::Protocol(ProtoError::BadStatus(0)),
+            KvError::Protocol(ProtoError::ValueTooLong(0)),
+            KvError::Protocol(ProtoError::BadValueLen { op: 0, len: 0 }),
+            KvError::Protocol(ProtoError::BadReserved(1)),
+        ];
+        // Pin the published numbers: these are the wire contract.
+        assert_eq!(KvError::Shutdown.code(), 0x01);
+        assert_eq!(KvError::Overloaded.code(), 0x02);
+        assert_eq!(KvError::Resize(ResizeError::Busy).code(), 0x10);
+        assert_eq!(KvError::Oracle(OracleError::Epoch).code(), 0x21);
+        assert_eq!(KvError::Protocol(ProtoError::BadMagic(9)).code(), 0x30);
+        let mut seen = std::collections::BTreeSet::new();
+        for e in all {
+            assert!(seen.insert(e.code()), "duplicate code {:#04x}", e.code());
+            assert_ne!(KvError::code_name(e.code()), "unknown", "{e:?}");
+            // Every unified error displays and sources like a std error.
+            let _: &dyn Error = &e;
+            assert!(!e.to_string().is_empty());
+        }
+        assert_eq!(KvError::code_name(0xEE), "unknown");
+    }
+
+    #[test]
+    fn conversions_preserve_identity() {
+        assert_eq!(KvError::from(SubmitError::Shutdown), KvError::Shutdown);
+        assert_eq!(
+            KvError::from(ResizeError::AtMaxDepth).code(),
+            KvError::Resize(ResizeError::AtMaxDepth).code()
+        );
+        assert_eq!(KvError::from(OracleError::Engine).code(), 0x20);
+        assert_eq!(
+            KvError::from(ProtoError::ValueTooLong(u32::MAX)).code(),
+            0x34
+        );
+    }
+}

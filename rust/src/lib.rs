@@ -41,13 +41,16 @@
 pub mod baselines;
 pub mod coordinator;
 pub mod dhash;
+pub mod error;
 pub mod lflist;
 pub mod map;
+pub mod net;
 pub mod rcu;
 pub mod runtime;
 pub mod torture;
 pub mod util;
 
 pub use crate::dhash::{DHashMap, ShardedDHash};
+pub use crate::error::KvError;
 pub use crate::map::ConcurrentMap;
 pub use crate::rcu::RcuThread;

@@ -1,19 +1,22 @@
-//! `dhash` — the leader binary: torture benchmarks, the KV service, and
-//! rebuild diagnostics from one CLI.
+//! `dhash` — the leader binary: torture benchmarks, the KV service (in
+//! process or over the wire), rebuild diagnostics, and the network
+//! bench client from one CLI.
 //!
 //! ```text
-//! dhash torture  [--table dhash|xu|rht|split] [--threads N] [--lookup-pct P]
-//!                [--alpha A] [--buckets B] [--keys U] [--secs S]
-//!                [--no-rebuild] [--repeats R]
-//! dhash serve    [--buckets B] [--shards N] [--max-shards M] [--lanes L]
-//!                [--workers W] [--pre-route off|shard|bucket] [--secs S]
-//!                [--attack-at T] [--weak-hash] [--no-analytics]
-//!
-//! `--max-shards M` (M > 0) turns on the elastic policy: the analytics
-//! thread splits hot shards and merges cold buddy pairs online, up to M
-//! shards; 0 (the default) keeps the shard count fixed at `--shards`.
-//! dhash rebuild  [--table dhash|xu|rht|split] [--nodes N] [--buckets B]
+//! dhash torture   [--table dhash|xu|rht|split] [--threads N] ...
+//! dhash serve     [--buckets B] [--shards N] [--max-shards M] ...
+//!                 [--listen ADDR] [--net-workers W] [--window K]
+//! dhash rebuild   [--table dhash|xu|rht|split] [--nodes N] [--buckets B]
+//! dhash netbench  [--addr ADDR] [--conns N] [--depth K] [--secs S]
 //! ```
+//!
+//! Each subcommand owns a flag registry: an unknown flag is a hard
+//! error listing the valid set, and `dhash <cmd> --help` prints every
+//! flag with its default. `serve --max-shards M` (M > 0) turns on the
+//! elastic policy (online split/merge up to M shards); `serve --listen`
+//! adds the wire-protocol front end (see `DESIGN.md` §Network front
+//! end); `netbench` with no `--addr` benches an internal loopback
+//! server.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -23,8 +26,73 @@ use dhash::coordinator::{Coordinator, CoordinatorConfig, ElasticConfig, PreRoute
 use dhash::dhash::{DHashMap, HashFn};
 use dhash::rcu::RcuThread;
 use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
-use dhash::util::cli::Args;
+use dhash::util::cli::{Args, CmdSpec, FlagSpec};
 use dhash::util::Summary;
+
+const TORTURE: CmdSpec = CmdSpec {
+    name: "torture",
+    about: "multi-threaded throughput benchmark over one table",
+    flags: &[
+        FlagSpec::new("table", "dhash", "table: dhash|xu|rht|split"),
+        FlagSpec::new("threads", "4", "client threads"),
+        FlagSpec::new("lookup-pct", "90", "lookup share of the op mix (%)"),
+        FlagSpec::new("alpha", "20", "target nodes per bucket"),
+        FlagSpec::new("buckets", "1024", "bucket count"),
+        FlagSpec::new("alt-buckets", "0", "rebuild target size (0 = 2x)"),
+        FlagSpec::new("keys", "1000000", "key range"),
+        FlagSpec::new("secs", "1", "seconds per sample"),
+        FlagSpec::new("no-rebuild", "false", "disable continuous rebuilds"),
+        FlagSpec::new("no-pin", "false", "do not pin threads to cores"),
+        FlagSpec::new("repeats", "3", "samples per configuration"),
+        FlagSpec::new("seed", "3521470189", "workload RNG seed (0xd1e55eed)"),
+        FlagSpec::new("hash-seed", "24301", "hash seed (0x5eed)"),
+    ],
+};
+
+const SERVE: CmdSpec = CmdSpec {
+    name: "serve",
+    about: "run the coordinator KV service under synthetic load",
+    flags: &[
+        FlagSpec::new("buckets", "4096", "buckets per shard"),
+        FlagSpec::new("shards", "1", "initial shard count"),
+        FlagSpec::new("max-shards", "0", "elastic growth limit (0 = fixed)"),
+        FlagSpec::new("lanes", "1", "ingest lanes"),
+        FlagSpec::new("workers", "2", "KV worker threads"),
+        FlagSpec::new("pre-route", "off", "pre-routing: off|shard|bucket"),
+        FlagSpec::new("secs", "10", "run duration in seconds"),
+        FlagSpec::new("attack-at", "secs/2", "attack burst start (seconds)"),
+        FlagSpec::new("weak-hash", "false", "start from the modulo hash"),
+        FlagSpec::new("no-analytics", "false", "disable detector/mitigation"),
+        FlagSpec::new("listen", "off", "wire-protocol bind address"),
+        FlagSpec::new("net-workers", "2", "epoll worker threads"),
+        FlagSpec::new("window", "256", "inflight window before shedding"),
+    ],
+};
+
+const REBUILD: CmdSpec = CmdSpec {
+    name: "rebuild",
+    about: "time one full rebuild of a populated table",
+    flags: &[
+        FlagSpec::new("table", "dhash", "table: dhash|xu|rht|split"),
+        FlagSpec::new("nodes", "100000", "nodes inserted pre-rebuild"),
+        FlagSpec::new("buckets", "1024", "start size (rebuild doubles)"),
+    ],
+};
+
+const NETBENCH: CmdSpec = CmdSpec {
+    name: "netbench",
+    about: "pipelined wire-protocol client: verify pass + load pass",
+    flags: &[
+        FlagSpec::new("addr", "(internal)", "server address (omit = loopback)"),
+        FlagSpec::new("conns", "8", "client connections"),
+        FlagSpec::new("depth", "8", "pipelined requests per conn"),
+        FlagSpec::new("secs", "2", "load-pass duration (seconds)"),
+        FlagSpec::new("keys", "65536", "load-pass key space"),
+        FlagSpec::new("verify-keys", "512", "verify-pass keys per conn"),
+    ],
+};
+
+const COMMANDS: &[&CmdSpec] = &[&TORTURE, &SERVE, &REBUILD, &NETBENCH];
 
 fn make_table(name: &str, nbuckets: usize, seed: u64) -> Arc<dyn ConcurrentMap> {
     match name {
@@ -84,6 +152,40 @@ fn cmd_torture(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The network front end, present only where the epoll listener builds.
+#[cfg(unix)]
+type NetFront = Option<dhash::net::NetServer>;
+#[cfg(not(unix))]
+type NetFront = Option<std::convert::Infallible>;
+
+#[cfg(unix)]
+fn start_net(listen: &str, args: &Args, c: &Coordinator) -> anyhow::Result<NetFront> {
+    let cfg = dhash::net::NetConfig {
+        addr: listen.to_string(),
+        workers: args.get_or("net-workers", 2usize)?,
+        inflight_window: args.get_or("window", 256usize)?,
+        ..Default::default()
+    };
+    let net = dhash::net::NetServer::start(&cfg, c.client())?;
+    eprintln!("serving the wire protocol on {}", net.local_addr()?);
+    Ok(Some(net))
+}
+
+#[cfg(not(unix))]
+fn start_net(_listen: &str, _args: &Args, _c: &Coordinator) -> anyhow::Result<NetFront> {
+    anyhow::bail!("--listen needs the unix network front end (not built on this platform)")
+}
+
+#[allow(unused_mut, unused_variables)]
+fn folded_stats(c: &Coordinator, net: &NetFront) -> dhash::coordinator::CoordinatorStats {
+    let mut st = c.stats();
+    #[cfg(unix)]
+    if let Some(n) = net {
+        n.fold_stats(&mut st);
+    }
+    st
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let secs = args.get_or("secs", 10u64)?;
     let attack_at = args.get_or("attack-at", secs / 2)?;
@@ -115,6 +217,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.batcher.pre_route = pre_route;
     eprintln!("serve: {cfg:?} for {secs}s, attack at {attack_at}s");
     let c = Arc::new(Coordinator::start(cfg)?);
+    let net: NetFront = match args.get("listen").unwrap_or("off") {
+        "off" => None,
+        addr => start_net(addr, args, &c)?,
+    };
 
     // Client load: normal traffic, then an attack burst.
     let c2 = c.clone();
@@ -153,7 +259,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     for sec in 0..secs {
         std::thread::sleep(Duration::from_secs(1));
-        let st = c.stats();
+        let st = folded_stats(&c, &net);
         println!(
             "t={:>3}s requests={:>9} batches={:>7} routed={:>7} fb_len={} fb_eng={} fb_ep={} \
              shards={} epoch={} splits={} merges={} chi2={:>10.1} rebuilds={}",
@@ -171,9 +277,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             st.last_chi2,
             st.rebuilds
         );
+        if let Some(ns) = &st.net {
+            println!(
+                "      net conns={}/{} frames_in={} frames_out={} batches={} sheds={} \
+                 proto_errs={}",
+                ns.active, ns.accepted, ns.frames_in, ns.frames_out, ns.batches, ns.sheds,
+                ns.protocol_errors
+            );
+        }
     }
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     client.join().unwrap();
+    // Drain the front end first so pending tickets resolve and flush
+    // before the coordinator goes away.
+    #[cfg(unix)]
+    if let Some(n) = net {
+        let ns = n.shutdown();
+        println!("net drained: {ns:?}");
+    }
     for ev in c.rebuild_events() {
         println!(
             "mitigation at {:?}: shard {} (epoch {}) chi2={:.1} -> {:?} ({} nodes in {:?})",
@@ -215,20 +336,124 @@ fn cmd_rebuild(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(unix)]
+fn cmd_netbench(args: &Args) -> anyhow::Result<()> {
+    use dhash::net::bench::{throughput_run, verify_run};
+    use dhash::net::{BenchReport, NetConfig, NetServer};
+
+    let conns = args.get_or("conns", 8usize)?.max(1);
+    let depth = args.get_or("depth", 8usize)?.max(1);
+    let secs = args.get_or("secs", 2.0f64)?;
+    let key_space = args.get_or("keys", 65_536u64)?;
+    let verify_keys = args.get_or("verify-keys", 512u64)?;
+
+    // Target: an explicit --addr, or an internal loopback server.
+    let (addr, internal) = match args.get("addr") {
+        Some(a) => (a.parse::<std::net::SocketAddr>()?, None),
+        None => {
+            let cfg = CoordinatorConfig {
+                shards: 4,
+                lanes: 2,
+                enable_analytics: false,
+                ..Default::default()
+            };
+            let c = Coordinator::start(cfg)?;
+            let net = NetServer::start(&NetConfig::default(), c.client())?;
+            let addr = net.local_addr()?;
+            eprintln!("netbench: internal server on {addr}");
+            (addr, Some((c, net)))
+        }
+    };
+
+    // Verify pass: phased self-validating workload per connection.
+    let mut vr = BenchReport::default();
+    let hs: Vec<_> = (0..conns)
+        .map(|i| {
+            std::thread::spawn(move || verify_run(addr, (i as u64) << 32, verify_keys, depth))
+        })
+        .collect();
+    for h in hs {
+        vr.merge(&h.join().expect("verify client panicked")?);
+    }
+    println!(
+        "netbench verify conns={conns} depth={depth} keys/conn={verify_keys} sent={} ok={} \
+         sheds={} errors={} mismatches={} reorders={}",
+        vr.sent, vr.ok, vr.sheds, vr.errors, vr.mismatches, vr.reorders
+    );
+    if vr.mismatches + vr.reorders > 0 {
+        anyhow::bail!("verify pass failed: responses lost, reordered, or wrong");
+    }
+
+    // Load pass: random mixed ops, validation off.
+    let dur = Duration::from_secs_f64(secs);
+    let t0 = std::time::Instant::now();
+    let mut tr = BenchReport::default();
+    let hs: Vec<_> = (0..conns)
+        .map(|i| {
+            std::thread::spawn(move || throughput_run(addr, dur, depth, key_space, 1 + i as u64))
+        })
+        .collect();
+    for h in hs {
+        tr.merge(&h.join().expect("load client panicked")?);
+    }
+    let dt = t0.elapsed();
+    println!(
+        "netbench load conns={conns} depth={depth} secs={:.1} received={} sheds={} errors={} \
+         req_per_s={:.0}",
+        dt.as_secs_f64(),
+        tr.received,
+        tr.sheds,
+        tr.errors,
+        tr.received as f64 / dt.as_secs_f64()
+    );
+
+    if let Some((c, net)) = internal {
+        net.shutdown();
+        c.shutdown();
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_netbench(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!("netbench needs the unix network front end (not built on this platform)")
+}
+
+fn usage() -> ! {
+    eprintln!("usage: dhash <command> [flags]\n\ncommands:");
+    for c in COMMANDS {
+        eprintln!("  {:<9} {}", c.name, c.about);
+    }
+    eprintln!("\n`dhash <command> --help` lists that command's flags.");
+    std::process::exit(2);
+}
+
 fn main() -> anyhow::Result<()> {
-    const KNOWN: &[&str] = &[
-        "table", "threads", "lookup-pct", "alpha", "buckets", "alt-buckets", "keys", "secs",
-        "no-rebuild", "no-pin", "repeats", "seed", "hash-seed", "workers", "shards", "max-shards",
-        "lanes", "pre-route", "attack-at", "weak-hash", "no-analytics", "nodes",
-    ];
-    let args = Args::from_env(KNOWN)?;
-    match args.positional().first().map(|s| s.as_str()) {
-        Some("torture") => cmd_torture(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("rebuild") => cmd_rebuild(&args),
-        _ => {
-            eprintln!("usage: dhash <torture|serve|rebuild> [flags] (see source docs)");
+    let mut tokens: Vec<String> = std::env::args().skip(1).collect();
+    if tokens.is_empty() {
+        usage();
+    }
+    let cmd = tokens.remove(0);
+    let Some(spec) = COMMANDS.iter().find(|c| c.name == cmd) else {
+        eprintln!("unknown command {cmd:?}\n");
+        usage();
+    };
+    let args = match spec.parse(tokens) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
             std::process::exit(2);
         }
+    };
+    if args.get_bool("help") {
+        print!("{}", spec.help());
+        return Ok(());
+    }
+    match spec.name {
+        "torture" => cmd_torture(&args),
+        "serve" => cmd_serve(&args),
+        "rebuild" => cmd_rebuild(&args),
+        "netbench" => cmd_netbench(&args),
+        _ => unreachable!("command table and dispatch drifted"),
     }
 }

@@ -1,0 +1,280 @@
+//! The `netbench` client: depth-K pipelining over one TCP connection,
+//! with a self-validating mode that checks every response against a
+//! client-side model of its own keys.
+//!
+//! Validation relies on two contracts:
+//!
+//! * **Per-connection response order** — the server answers a
+//!   connection's requests in request order, sheds included, so the
+//!   next response always belongs to the oldest outstanding id.
+//! * **Phased pipelining** — within a phase each key is touched once
+//!   (distinct keys pipeline freely); the pipeline drains between
+//!   phases, so cross-phase per-key ordering holds even though the
+//!   coordinator's workers may interleave consecutive *batches*.
+//!
+//! A shed ([`KvError::Overloaded`]'s code) is never a mismatch: the
+//! model simply does not apply the operation, and later phases expect
+//! the un-applied state.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::error::KvError;
+use crate::net::codec::Decoder;
+use crate::net::proto::{Request, RequestFrame, Response, ResponseFrame};
+use crate::util::SplitMix64;
+
+/// One operation as the client sent it (what to validate the response
+/// against).
+#[derive(Clone, Copy, Debug)]
+pub enum Sent {
+    Put { key: u64, val: u64 },
+    Get { key: u64 },
+    Del { key: u64 },
+}
+
+impl Sent {
+    fn request(&self) -> Request {
+        match *self {
+            Sent::Put { key, val } => Request::put(key, val),
+            Sent::Get { key } => Request::get(key),
+            Sent::Del { key } => Request::del(key),
+        }
+    }
+}
+
+/// What one client connection observed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BenchReport {
+    pub sent: u64,
+    pub received: u64,
+    /// Successful (non-error) responses.
+    pub ok: u64,
+    /// Requests shed by the server's inflight window (the overload wire
+    /// code) — explicit backpressure, counted apart from errors.
+    pub sheds: u64,
+    /// Error responses other than sheds (e.g. shutdown during drain).
+    pub errors: u64,
+    /// Responses that contradicted the client-side model (validating
+    /// mode only). Must be zero in a correct run.
+    pub mismatches: u64,
+    /// Responses out of request order. Must be zero: per-connection
+    /// order is the server's contract.
+    pub reorders: u64,
+}
+
+impl BenchReport {
+    pub fn merge(&mut self, o: &BenchReport) {
+        self.sent += o.sent;
+        self.received += o.received;
+        self.ok += o.ok;
+        self.sheds += o.sheds;
+        self.errors += o.errors;
+        self.mismatches += o.mismatches;
+        self.reorders += o.reorders;
+    }
+}
+
+/// A pipelined client over one connection.
+pub struct NetClient {
+    stream: TcpStream,
+    dec: Decoder,
+    next_id: u64,
+    outstanding: VecDeque<(u64, Sent)>,
+    /// Client-side model of this connection's keys (validating mode).
+    model: HashMap<u64, u64>,
+    /// Validate responses against the model. Off for throughput runs,
+    /// whose random keys repeat *within* the pipeline window (batch
+    /// interleaving then makes per-key order unknowable by design).
+    validate: bool,
+    pub report: BenchReport,
+}
+
+impl NetClient {
+    pub fn connect(addr: SocketAddr) -> io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self {
+            stream,
+            dec: Decoder::new(),
+            next_id: 1,
+            outstanding: VecDeque::new(),
+            model: HashMap::new(),
+            validate: true,
+            report: BenchReport::default(),
+        })
+    }
+
+    pub fn set_validate(&mut self, on: bool) {
+        self.validate = on;
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Send one request (pipelined; does not wait for the response).
+    pub fn send(&mut self, op: Sent) -> io::Result<()> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut wire = Vec::with_capacity(32);
+        RequestFrame::new(id, op.request()).encode(&mut wire);
+        self.stream.write_all(&wire)?;
+        self.outstanding.push_back((id, op));
+        self.report.sent += 1;
+        Ok(())
+    }
+
+    /// Block until one response arrives and account for it.
+    pub fn recv_one(&mut self) -> io::Result<()> {
+        loop {
+            match self.dec.next_response() {
+                Err(e) => return Err(io::Error::new(io::ErrorKind::InvalidData, e)),
+                Ok(Some(frame)) => {
+                    self.account(frame);
+                    return Ok(());
+                }
+                Ok(None) => {
+                    let mut buf = [0u8; 4096];
+                    let n = self.stream.read(&mut buf)?;
+                    if n == 0 {
+                        return Err(io::ErrorKind::UnexpectedEof.into());
+                    }
+                    self.dec.push(&buf[..n]);
+                }
+            }
+        }
+    }
+
+    /// Wait out every outstanding response (a phase barrier).
+    pub fn drain(&mut self) -> io::Result<()> {
+        while !self.outstanding.is_empty() {
+            self.recv_one()?;
+        }
+        Ok(())
+    }
+
+    /// Run one phase: pipeline `ops` at the given depth, then drain.
+    pub fn run_phase(
+        &mut self,
+        ops: impl IntoIterator<Item = Sent>,
+        depth: usize,
+    ) -> io::Result<()> {
+        for op in ops {
+            if self.outstanding.len() >= depth.max(1) {
+                self.recv_one()?;
+            }
+            self.send(op)?;
+        }
+        self.drain()
+    }
+
+    fn account(&mut self, frame: ResponseFrame) {
+        self.report.received += 1;
+        let Some((id, op)) = self.outstanding.pop_front() else {
+            self.report.reorders += 1; // response nobody asked for
+            return;
+        };
+        if frame.id != id {
+            // Order is the server's per-connection contract; a wrong id
+            // means it broke. Count it and stop validating this frame.
+            self.report.reorders += 1;
+            return;
+        }
+        match frame.body {
+            Err(code) if code == KvError::Overloaded.code() => {
+                // Shed: the operation was not applied; the model stays.
+                self.report.sheds += 1;
+            }
+            Err(_) => self.report.errors += 1,
+            Ok(resp) => {
+                self.report.ok += 1;
+                if self.validate && !self.model_check(op, resp) {
+                    self.report.mismatches += 1;
+                }
+            }
+        }
+    }
+
+    /// Validate `resp` against the model and apply the op's effect.
+    fn model_check(&mut self, op: Sent, resp: Response) -> bool {
+        match op {
+            Sent::Put { key, val } => {
+                self.model.insert(key, val);
+                matches!(resp, Response::Ok)
+            }
+            Sent::Get { key } => match self.model.get(&key) {
+                Some(&v) => resp == Response::Value(v),
+                None => resp == Response::Missing,
+            },
+            Sent::Del { key } => {
+                let was = self.model.remove(&key).is_some();
+                if was {
+                    resp == Response::Ok
+                } else {
+                    resp == Response::Missing
+                }
+            }
+        }
+    }
+}
+
+/// The self-validating workload: four phases over `n` keys unique to
+/// this client (`put` → `get` → `del` → `get`-missing), pipelined at
+/// `depth` with a drain barrier between phases. Any lost, reordered, or
+/// wrong response shows up in the report.
+pub fn verify_run(
+    addr: SocketAddr,
+    key_base: u64,
+    n: u64,
+    depth: usize,
+) -> io::Result<BenchReport> {
+    let mut c = NetClient::connect(addr)?;
+    let val = |k: u64| k.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    c.run_phase(
+        (0..n).map(|i| Sent::Put {
+            key: key_base + i,
+            val: val(i),
+        }),
+        depth,
+    )?;
+    c.run_phase((0..n).map(|i| Sent::Get { key: key_base + i }), depth)?;
+    c.run_phase((0..n).map(|i| Sent::Del { key: key_base + i }), depth)?;
+    c.run_phase((0..n).map(|i| Sent::Get { key: key_base + i }), depth)?;
+    Ok(c.report)
+}
+
+/// The throughput workload: mixed random ops over `key_space` keys at
+/// pipeline `depth` until `dur` elapses. Validation is off (random keys
+/// repeat within the window); sheds/errors still count.
+pub fn throughput_run(
+    addr: SocketAddr,
+    dur: Duration,
+    depth: usize,
+    key_space: u64,
+    seed: u64,
+) -> io::Result<BenchReport> {
+    let mut c = NetClient::connect(addr)?;
+    c.set_validate(false);
+    let mut rng = SplitMix64::new(seed);
+    let deadline = Instant::now() + dur;
+    while Instant::now() < deadline {
+        while c.outstanding() < depth.max(1) {
+            let key = rng.next_bounded(key_space.max(1));
+            let op = match rng.next_bounded(10) {
+                0..=4 => Sent::Get { key },
+                5..=8 => Sent::Put {
+                    key,
+                    val: rng.next_u64(),
+                },
+                _ => Sent::Del { key },
+            };
+            c.send(op)?;
+        }
+        c.recv_one()?;
+    }
+    c.drain()?;
+    Ok(c.report)
+}

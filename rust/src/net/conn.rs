@@ -1,0 +1,299 @@
+//! One connection's state machine: decode readable bytes into a
+//! request batch, submit it with **one**
+//! [`KvClient::submit_batch`] call per drain, and write responses back
+//! completion-driven as the ticket resolves — a worker never blocks on
+//! a pending ticket.
+//!
+//! ## Ordering
+//!
+//! Responses go back **in request order per connection**, even when a
+//! drain mixes accepted requests with sheds or shutdown rejections.
+//! Each readable drain produces one [`Drain`] queue entry holding the
+//! batch ticket plus the drain's items *in decode order*: an accepted
+//! request is a `Slot` item (consumes the ticket's next response), a
+//! shed/rejection is an inline `Err` item (carries its wire code). The
+//! queue is FIFO and a drain is encoded only when its ticket has fully
+//! resolved, so interleavings can never reorder a connection's
+//! responses.
+//!
+//! ## Overload
+//!
+//! The inflight window bounds `sum(accepted, not yet responded)` per
+//! connection. A request that would exceed it is **shed**: answered
+//! immediately with [`KvError::Overloaded`]'s wire code, connection
+//! kept open — explicit backpressure, not a dropped connection.
+//!
+//! [`KvClient::submit_batch`]: crate::coordinator::KvClient::submit_batch
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::os::fd::{AsRawFd, RawFd};
+use std::sync::Arc;
+
+use crate::coordinator::{BatchTicket, KvClient, SubmitError};
+use crate::error::KvError;
+use crate::net::codec::Decoder;
+use crate::net::proto::ResponseFrame;
+use crate::net::stats::{ConnStats, NetCounters};
+
+/// One response owed to the peer, in decode order within its drain.
+enum DrainItem {
+    /// An accepted request: consumes the drain ticket's next slot.
+    Slot { id: u64 },
+    /// An inline failure (shed, shutdown, protocol error): the wire
+    /// code is already known, no slot involved.
+    Err { id: u64, code: u8 },
+}
+
+/// Everything one readable drain owes the peer: at most one submitted
+/// batch plus the decode-order item list that interleaves its slots
+/// with inline errors.
+struct Drain {
+    ticket: Option<BatchTicket>,
+    items: Vec<DrainItem>,
+}
+
+/// One live connection. Owned behind a `Mutex` in the server's
+/// connection table; every method runs under that lock, on whichever
+/// worker the one-shot readiness event (or the completion sweep)
+/// landed.
+pub struct Conn {
+    stream: TcpStream,
+    dec: Decoder,
+    /// Encoded-but-unwritten response bytes (`out_pos` = write cursor).
+    out: Vec<u8>,
+    out_pos: usize,
+    /// FIFO of drains not yet encoded; the head blocks on its ticket.
+    queue: VecDeque<Drain>,
+    /// Accepted requests not yet encoded as responses (window subject).
+    inflight: usize,
+    pub stats: ConnStats,
+    counters: Arc<NetCounters>,
+    /// Peer sent FIN (or the socket failed): no more reads.
+    read_closed: bool,
+    /// Fatal (protocol/io) state: close once `out` is flushed.
+    dead: bool,
+    /// Removed from the server's table; sweeps must skip it.
+    pub gone: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, counters: Arc<NetCounters>) -> io::Result<Self> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true)?;
+        Ok(Self {
+            stream,
+            dec: Decoder::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            queue: VecDeque::new(),
+            inflight: 0,
+            stats: ConnStats::default(),
+            counters,
+            read_closed: false,
+            dead: false,
+            gone: false,
+        })
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.stream.as_raw_fd()
+    }
+
+    /// Drain readable bytes, decode frames, and submit the accepted
+    /// requests as ONE batch. `stopping` = the server is draining: new
+    /// requests are answered with the shutdown code instead of
+    /// submitted.
+    pub fn on_readable(&mut self, client: &KvClient, window: usize, stopping: bool) {
+        let mut buf = [0u8; 16 * 1024];
+        while !self.read_closed {
+            match self.stream.read(&mut buf) {
+                Ok(0) => self.read_closed = true,
+                Ok(n) => {
+                    self.stats.bytes_in += n as u64;
+                    NetCounters::add(&self.counters.bytes_in, n as u64);
+                    self.dec.push(&buf[..n]);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.read_closed = true;
+                    self.dead = true;
+                }
+            }
+        }
+        self.decode_and_submit(client, window, stopping);
+    }
+
+    fn decode_and_submit(&mut self, client: &KvClient, window: usize, stopping: bool) {
+        let mut reqs = Vec::new();
+        let mut items = Vec::new();
+        while !self.dead {
+            match self.dec.next_request() {
+                Ok(None) => break,
+                Ok(Some(frame)) => {
+                    self.stats.frames_in += 1;
+                    NetCounters::add(&self.counters.frames_in, 1);
+                    if stopping {
+                        items.push(DrainItem::Err {
+                            id: frame.id,
+                            code: KvError::Shutdown.code(),
+                        });
+                    } else if self.inflight + reqs.len() >= window {
+                        // Shed-on-full: an explicit wire error, not a
+                        // dropped connection.
+                        self.stats.sheds += 1;
+                        NetCounters::add(&self.counters.sheds, 1);
+                        items.push(DrainItem::Err {
+                            id: frame.id,
+                            code: KvError::Overloaded.code(),
+                        });
+                    } else {
+                        reqs.push(frame.req);
+                        items.push(DrainItem::Slot { id: frame.id });
+                    }
+                }
+                Err(e) => {
+                    // Framing lost: answer with the error's wire code
+                    // (id 0 — no trustworthy request id exists), then
+                    // close after flushing.
+                    self.stats.protocol_errors += 1;
+                    NetCounters::add(&self.counters.protocol_errors, 1);
+                    items.push(DrainItem::Err {
+                        id: 0,
+                        code: KvError::from(e).code(),
+                    });
+                    self.read_closed = true;
+                    self.dead = true;
+                }
+            }
+        }
+        if items.is_empty() {
+            return;
+        }
+        let ticket = if reqs.is_empty() {
+            None
+        } else {
+            match client.submit_batch(&reqs) {
+                Ok(t) => {
+                    self.stats.batches += 1;
+                    NetCounters::add(&self.counters.batches, 1);
+                    self.inflight += reqs.len();
+                    Some(t)
+                }
+                Err(SubmitError::Shutdown) => {
+                    // The whole drain becomes inline shutdown errors;
+                    // response order is unchanged.
+                    for it in &mut items {
+                        if let DrainItem::Slot { id } = *it {
+                            *it = DrainItem::Err {
+                                id,
+                                code: KvError::Shutdown.code(),
+                            };
+                        }
+                    }
+                    None
+                }
+            }
+        };
+        self.queue.push_back(Drain { ticket, items });
+    }
+
+    /// Encode every queued drain whose ticket has resolved (FIFO; the
+    /// first unresolved ticket stops the scan — order is the contract).
+    /// Never blocks: an unresolved ticket is left for the next sweep.
+    pub fn pump(&mut self) {
+        while let Some(front) = self.queue.front() {
+            let slots = match &front.ticket {
+                None => Vec::new(),
+                Some(t) => match t.poll_each() {
+                    None => break, // still executing; completion-driven
+                    Some(slots) => slots,
+                },
+            };
+            let drain = self.queue.pop_front().expect("front exists");
+            let mut next_slot = 0;
+            for item in &drain.items {
+                let frame = match *item {
+                    DrainItem::Err { id, code } => ResponseFrame {
+                        id,
+                        body: Err(code),
+                    },
+                    DrainItem::Slot { id } => {
+                        let r = slots[next_slot];
+                        next_slot += 1;
+                        self.inflight -= 1;
+                        match r {
+                            Ok(resp) => ResponseFrame::reply(id, resp),
+                            Err(e) => ResponseFrame::error(id, e.into()),
+                        }
+                    }
+                };
+                frame.encode(&mut self.out);
+                self.stats.frames_out += 1;
+                NetCounters::add(&self.counters.frames_out, 1);
+            }
+        }
+    }
+
+    /// Write buffered response bytes until the socket would block.
+    pub fn flush(&mut self) {
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => break,
+                Ok(n) => {
+                    self.out_pos += n;
+                    self.stats.bytes_out += n as u64;
+                    NetCounters::add(&self.counters.bytes_out, n as u64);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    self.read_closed = true;
+                    self.out_pos = self.out.len(); // nothing more to say
+                    break;
+                }
+            }
+        }
+        if self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+        }
+    }
+
+    /// Unwritten response bytes are waiting on the socket.
+    pub fn wants_write(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    /// Still interested in reading from the peer.
+    pub fn wants_read(&self) -> bool {
+        !self.read_closed
+    }
+
+    /// Work is pending that only a completion sweep (not a readiness
+    /// event) will advance: a queued drain, or unflushed output.
+    pub fn has_pending(&self) -> bool {
+        !self.queue.is_empty() || self.wants_write()
+    }
+
+    /// Nothing left to do: every response owed has been written, and no
+    /// more requests can arrive (`stopping` ends the connection once
+    /// drained — graceful FIN — as does peer close or a fatal error).
+    pub fn finished(&self, stopping: bool) -> bool {
+        self.queue.is_empty() && !self.wants_write() && (self.read_closed || self.dead || stopping)
+    }
+
+    /// Drain-deadline expiry: abandon pending work so the connection
+    /// closes now (tickets drop; their slots are already failed or will
+    /// be, and nothing further is written).
+    pub fn force_close(&mut self) {
+        self.queue.clear();
+        self.out.clear();
+        self.out_pos = 0;
+        self.read_closed = true;
+        self.dead = true;
+    }
+}

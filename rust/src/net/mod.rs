@@ -1,0 +1,52 @@
+//! The network front end: a compact binary wire protocol and a
+//! single-epoll-multiple-workers TCP listener serving the coordinator's
+//! completion-slot ingest API over real sockets.
+//!
+//! Layering (see DESIGN.md §Network front end):
+//!
+//! * [`proto`] — the wire format itself: [`Request`]/[`Response`] model
+//!   types (single source of truth, re-exported by `coordinator`),
+//!   stable op codes, and exact frame encode/decode.
+//! * [`codec`] — the zero-copy incremental [`codec::Decoder`] that
+//!   turns a connection's byte stream back into frames across arbitrary
+//!   read boundaries.
+//! * [`stats`] — per-connection and aggregate counters, folded into
+//!   [`crate::coordinator::CoordinatorStats`].
+//! * [`listener`] *(unix)* — the readiness loop behind the
+//!   [`listener::Listener`] trait (epoll today; the trait is the seam
+//!   where an io_uring backend lands later).
+//! * [`conn`] *(unix)* — one connection's state machine: decode →
+//!   **one** [`KvClient::submit_batch`] per readable drain →
+//!   completion-driven response writes as tickets resolve; bounded
+//!   inflight window with shed-on-full as a wire error code.
+//! * [`server`] *(unix)* — [`server::NetServer`]: owns the listener,
+//!   the worker threads, and graceful drain on shutdown.
+//! * [`bench`] *(unix)* — the `netbench` pipelined loopback client and
+//!   its verification/throughput drivers.
+//!
+//! [`KvClient::submit_batch`]: crate::coordinator::KvClient::submit_batch
+//! [`Request`]: proto::Request
+//! [`Response`]: proto::Response
+
+pub mod codec;
+pub mod proto;
+pub mod stats;
+
+#[cfg(unix)]
+pub mod bench;
+#[cfg(unix)]
+pub mod conn;
+#[cfg(unix)]
+pub mod listener;
+#[cfg(unix)]
+pub mod server;
+
+pub use codec::Decoder;
+pub use stats::{ConnStats, NetStats};
+
+#[cfg(unix)]
+pub use bench::{BenchReport, NetClient};
+#[cfg(unix)]
+pub use listener::Listener;
+#[cfg(unix)]
+pub use server::{NetConfig, NetServer};

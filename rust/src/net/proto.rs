@@ -1,0 +1,514 @@
+//! The wire protocol: the KV request/response model types and their
+//! exact binary frame encoding.
+//!
+//! This module is the **single source of truth** for the wire format:
+//! the server codec ([`super::codec`]), the `netbench` client
+//! ([`super::bench`]), and the in-process API all share the same
+//! [`Request`]/[`Response`] types and the same `encode`/`decode`
+//! methods, so the two sides can never drift apart. (The types used to
+//! live in `coordinator::batcher`; `coordinator` re-exports them, so
+//! in-process users are unaffected by the move.)
+//!
+//! ## Frame layout
+//!
+//! All integers are little-endian. A request frame is a fixed 24-byte
+//! header followed by an optional value:
+//!
+//! ```text
+//!  offset  size  field
+//!       0     1  magic      0xD4 (requests) / 0xD5 (responses)
+//!       1     1  version    0x01
+//!       2     1  op code    Get=1 Put=2 Del=3        (requests)
+//!       3     1  reserved   must be 0 on the wire
+//!       4     8  request id echoed verbatim in the response
+//!      12     8  key
+//!      20     4  value len  8 for Put, 0 otherwise
+//!      24     n  value      little-endian u64 (Put only)
+//! ```
+//!
+//! A response frame is a fixed 16-byte header followed by an optional
+//! value:
+//!
+//! ```text
+//!  offset  size  field
+//!       0     1  magic      0xD5
+//!       1     1  version    0x01
+//!       2     1  status     Ok=1 Value=2 Missing=3 Error=4
+//!       3     1  error code [`crate::error::KvError::code`]; 0 unless
+//!                           status == Error
+//!       4     8  request id echoed from the request
+//!      12     4  value len  8 for Value, 0 otherwise
+//!      16     n  value      little-endian u64 (Value only)
+//! ```
+//!
+//! Decoding is strict: a wrong magic, version, op, status, reserved
+//! byte, or a value length inconsistent with the op/status is a
+//! [`ProtoError`], never a guess — once framing is in doubt the
+//! connection cannot be resynchronized, so the server answers with an
+//! error frame and closes. Value lengths are validated against
+//! [`MAX_VALUE_LEN`] straight from the header, **before** any buffering
+//! decision, so a hostile 4 GiB length field is rejected instead of
+//! capping memory.
+
+use crate::error::ProtoError;
+
+/// A KV operation.
+#[non_exhaustive]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Request {
+    Get { key: u64 },
+    Put { key: u64, val: u64 },
+    Del { key: u64 },
+}
+
+impl Request {
+    pub fn get(key: u64) -> Self {
+        Request::Get { key }
+    }
+
+    pub fn put(key: u64, val: u64) -> Self {
+        Request::Put { key, val }
+    }
+
+    pub fn del(key: u64) -> Self {
+        Request::Del { key }
+    }
+
+    pub fn key(&self) -> u64 {
+        match *self {
+            Request::Get { key } | Request::Put { key, .. } | Request::Del { key } => key,
+        }
+    }
+
+    /// The stable wire op code of this request.
+    pub fn op(&self) -> OpCode {
+        match self {
+            Request::Get { .. } => OpCode::Get,
+            Request::Put { .. } => OpCode::Put,
+            Request::Del { .. } => OpCode::Del,
+        }
+    }
+}
+
+/// Reply to a [`Request`].
+#[non_exhaustive]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Response {
+    /// Put/Del succeeded.
+    Ok,
+    /// Get hit.
+    Value(u64),
+    /// Get/Del miss.
+    Missing,
+}
+
+/// Stable wire op codes. The discriminants are the protocol — they can
+/// be extended but never renumbered.
+#[non_exhaustive]
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpCode {
+    Get = 1,
+    Put = 2,
+    Del = 3,
+}
+
+impl OpCode {
+    /// Decode a wire op byte.
+    pub fn from_wire(b: u8) -> Result<OpCode, ProtoError> {
+        match b {
+            1 => Ok(OpCode::Get),
+            2 => Ok(OpCode::Put),
+            3 => Ok(OpCode::Del),
+            other => Err(ProtoError::BadOpCode(other)),
+        }
+    }
+}
+
+/// Request-frame magic byte.
+pub const MAGIC_REQ: u8 = 0xD4;
+/// Response-frame magic byte.
+pub const MAGIC_RESP: u8 = 0xD5;
+/// Protocol version; bumped on any incompatible layout change.
+pub const VERSION: u8 = 0x01;
+/// Fixed request-header length (bytes before the value).
+pub const REQ_HEADER_LEN: usize = 24;
+/// Fixed response-header length (bytes before the value).
+pub const RESP_HEADER_LEN: usize = 16;
+/// Upper bound on the value-length field. Values are u64 today, so any
+/// larger length is hostile or corrupt and is rejected straight from
+/// the header, before any allocation or buffering decision.
+pub const MAX_VALUE_LEN: u32 = 8;
+
+/// Response status bytes.
+pub const STATUS_OK: u8 = 1;
+pub const STATUS_VALUE: u8 = 2;
+pub const STATUS_MISSING: u8 = 3;
+pub const STATUS_ERROR: u8 = 4;
+
+fn read_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().unwrap())
+}
+
+fn read_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+/// One request on the wire: the client-chosen id (echoed verbatim in
+/// the response) plus the operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestFrame {
+    pub id: u64,
+    pub req: Request,
+}
+
+impl RequestFrame {
+    pub fn new(id: u64, req: Request) -> Self {
+        Self { id, req }
+    }
+
+    /// Append this frame's exact wire bytes to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let (key, val) = match self.req {
+            Request::Get { key } | Request::Del { key } => (key, None),
+            Request::Put { key, val } => (key, Some(val)),
+        };
+        out.reserve(REQ_HEADER_LEN + 8);
+        out.push(MAGIC_REQ);
+        out.push(VERSION);
+        out.push(self.req.op() as u8);
+        out.push(0); // reserved
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.extend_from_slice(&key.to_le_bytes());
+        match val {
+            None => out.extend_from_slice(&0u32.to_le_bytes()),
+            Some(v) => {
+                out.extend_from_slice(&8u32.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+
+    /// Decode one frame from the front of `buf`.
+    ///
+    /// `Ok(None)` means the bytes so far are a valid *prefix* — feed
+    /// more and retry (incremental decoding resumes at any split
+    /// point). `Ok(Some((frame, consumed)))` hands back the frame and
+    /// how many bytes it used. `Err` means the stream is not a valid
+    /// frame boundary; framing is lost and the connection should be
+    /// failed. Validation is strict-first: magic, then version, then
+    /// the full header — so corruption is reported as early as the
+    /// bytes allow, without waiting for (or allocating) the payload.
+    pub fn decode(buf: &[u8]) -> Result<Option<(RequestFrame, usize)>, ProtoError> {
+        if buf.is_empty() {
+            return Ok(None);
+        }
+        if buf[0] != MAGIC_REQ {
+            return Err(ProtoError::BadMagic(buf[0]));
+        }
+        if buf.len() < 2 {
+            return Ok(None);
+        }
+        if buf[1] != VERSION {
+            return Err(ProtoError::BadVersion(buf[1]));
+        }
+        if buf.len() < REQ_HEADER_LEN {
+            return Ok(None);
+        }
+        let op = OpCode::from_wire(buf[2])?;
+        if buf[3] != 0 {
+            return Err(ProtoError::BadReserved(buf[3]));
+        }
+        let id = read_u64(&buf[4..]);
+        let key = read_u64(&buf[12..]);
+        let vlen = read_u32(&buf[20..]);
+        if vlen > MAX_VALUE_LEN {
+            // Capped straight from the header: never wait for (let
+            // alone allocate) a hostile multi-GiB "value".
+            return Err(ProtoError::ValueTooLong(vlen));
+        }
+        let want = match op {
+            OpCode::Put => 8,
+            OpCode::Get | OpCode::Del => 0,
+        };
+        if vlen != want {
+            return Err(ProtoError::BadValueLen {
+                op: buf[2],
+                len: vlen,
+            });
+        }
+        let total = REQ_HEADER_LEN + vlen as usize;
+        if buf.len() < total {
+            return Ok(None);
+        }
+        let req = match op {
+            OpCode::Get => Request::get(key),
+            OpCode::Del => Request::del(key),
+            OpCode::Put => Request::put(key, read_u64(&buf[REQ_HEADER_LEN..])),
+        };
+        Ok(Some((RequestFrame { id, req }, total)))
+    }
+}
+
+/// One response on the wire: the echoed request id plus either the KV
+/// reply or a [`crate::error::KvError`] code byte (the same numeric
+/// code the in-process error carries, so on-wire and in-process errors
+/// cannot drift apart).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub body: Result<Response, u8>,
+}
+
+impl ResponseFrame {
+    pub fn reply(id: u64, resp: Response) -> Self {
+        Self { id, body: Ok(resp) }
+    }
+
+    /// An error response carrying `err`'s stable wire code.
+    pub fn error(id: u64, err: crate::error::KvError) -> Self {
+        Self {
+            id,
+            body: Err(err.code()),
+        }
+    }
+
+    /// Append this frame's exact wire bytes to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.reserve(RESP_HEADER_LEN + 8);
+        out.push(MAGIC_RESP);
+        out.push(VERSION);
+        let (status, err, val) = match self.body {
+            Ok(Response::Ok) => (STATUS_OK, 0, None),
+            Ok(Response::Value(v)) => (STATUS_VALUE, 0, Some(v)),
+            Ok(Response::Missing) => (STATUS_MISSING, 0, None),
+            Err(code) => (STATUS_ERROR, code, None),
+        };
+        out.push(status);
+        out.push(err);
+        out.extend_from_slice(&self.id.to_le_bytes());
+        match val {
+            None => out.extend_from_slice(&0u32.to_le_bytes()),
+            Some(v) => {
+                out.extend_from_slice(&8u32.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+
+    /// Decode one frame from the front of `buf`; same contract as
+    /// [`RequestFrame::decode`].
+    pub fn decode(buf: &[u8]) -> Result<Option<(ResponseFrame, usize)>, ProtoError> {
+        if buf.is_empty() {
+            return Ok(None);
+        }
+        if buf[0] != MAGIC_RESP {
+            return Err(ProtoError::BadMagic(buf[0]));
+        }
+        if buf.len() < 2 {
+            return Ok(None);
+        }
+        if buf[1] != VERSION {
+            return Err(ProtoError::BadVersion(buf[1]));
+        }
+        if buf.len() < RESP_HEADER_LEN {
+            return Ok(None);
+        }
+        let status = buf[2];
+        let err = buf[3];
+        let id = read_u64(&buf[4..]);
+        let vlen = read_u32(&buf[12..]);
+        if vlen > MAX_VALUE_LEN {
+            return Err(ProtoError::ValueTooLong(vlen));
+        }
+        let want = if status == STATUS_VALUE { 8 } else { 0 };
+        if vlen != want {
+            return Err(ProtoError::BadValueLen {
+                op: status,
+                len: vlen,
+            });
+        }
+        let total = RESP_HEADER_LEN + vlen as usize;
+        if buf.len() < total {
+            return Ok(None);
+        }
+        let body = match status {
+            STATUS_OK => Ok(Response::Ok),
+            STATUS_VALUE => Ok(Response::Value(read_u64(&buf[RESP_HEADER_LEN..]))),
+            STATUS_MISSING => Ok(Response::Missing),
+            STATUS_ERROR => Err(err),
+            other => return Err(ProtoError::BadStatus(other)),
+        };
+        if status != STATUS_ERROR && err != 0 {
+            return Err(ProtoError::BadReserved(err));
+        }
+        Ok(Some((ResponseFrame { id, body }, total)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::KvError;
+
+    #[test]
+    fn request_accessors_and_opcodes() {
+        assert_eq!(Request::put(3, 4).key(), 3);
+        assert_eq!(Request::del(5).key(), 5);
+        assert_eq!(Request::get(6).key(), 6);
+        assert_eq!(Request::get(0).op() as u8, 1);
+        assert_eq!(Request::put(0, 0).op() as u8, 2);
+        assert_eq!(Request::del(0).op() as u8, 3);
+        assert!(OpCode::from_wire(0).is_err());
+        assert!(OpCode::from_wire(4).is_err());
+    }
+
+    /// The byte layout is the protocol: pin it against golden bytes so
+    /// an accidental field reorder is a test failure, not a silent
+    /// version break.
+    #[test]
+    fn request_frame_golden_bytes() {
+        let mut out = Vec::new();
+        RequestFrame::new(0x0102_0304_0506_0708, Request::put(0x11, 0x22)).encode(&mut out);
+        #[rustfmt::skip]
+        let want = [
+            0xD4, 0x01, 0x02, 0x00,
+            0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01,
+            0x11, 0, 0, 0, 0, 0, 0, 0,
+            0x08, 0, 0, 0,
+            0x22, 0, 0, 0, 0, 0, 0, 0,
+        ];
+        assert_eq!(out, want);
+        let mut out = Vec::new();
+        RequestFrame::new(7, Request::get(9)).encode(&mut out);
+        assert_eq!(out.len(), REQ_HEADER_LEN);
+        assert_eq!(out[0], MAGIC_REQ);
+        assert_eq!(&out[20..24], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn response_frame_golden_bytes() {
+        let mut out = Vec::new();
+        ResponseFrame::reply(1, Response::Value(0x33)).encode(&mut out);
+        #[rustfmt::skip]
+        let want = [
+            0xD5, 0x01, 0x02, 0x00,
+            0x01, 0, 0, 0, 0, 0, 0, 0,
+            0x08, 0, 0, 0,
+            0x33, 0, 0, 0, 0, 0, 0, 0,
+        ];
+        assert_eq!(out, want);
+        let mut out = Vec::new();
+        ResponseFrame::error(2, KvError::Overloaded).encode(&mut out);
+        assert_eq!(out.len(), RESP_HEADER_LEN);
+        assert_eq!(out[2], STATUS_ERROR);
+        assert_eq!(out[3], KvError::Overloaded.code());
+    }
+
+    #[test]
+    fn round_trip_all_ops_and_statuses() {
+        let reqs = [
+            Request::get(u64::MAX),
+            Request::put(0, u64::MAX),
+            Request::del(42),
+        ];
+        for (i, r) in reqs.iter().enumerate() {
+            let f = RequestFrame::new(i as u64 * 1_000_003, *r);
+            let mut out = Vec::new();
+            f.encode(&mut out);
+            let (back, used) = RequestFrame::decode(&out).unwrap().unwrap();
+            assert_eq!(back, f);
+            assert_eq!(used, out.len());
+        }
+        let resps = [
+            ResponseFrame::reply(1, Response::Ok),
+            ResponseFrame::reply(2, Response::Value(77)),
+            ResponseFrame::reply(3, Response::Missing),
+            ResponseFrame::error(4, KvError::Shutdown),
+        ];
+        for f in resps {
+            let mut out = Vec::new();
+            f.encode(&mut out);
+            let (back, used) = ResponseFrame::decode(&out).unwrap().unwrap();
+            assert_eq!(back, f);
+            assert_eq!(used, out.len());
+        }
+    }
+
+    #[test]
+    fn every_strict_prefix_asks_for_more() {
+        let f = RequestFrame::new(9, Request::put(1, 2));
+        let mut out = Vec::new();
+        f.encode(&mut out);
+        for cut in 0..out.len() {
+            assert_eq!(
+                RequestFrame::decode(&out[..cut]).unwrap(),
+                None,
+                "prefix of {cut} bytes must be incomplete, not an error"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_headers_rejected() {
+        let mut out = Vec::new();
+        RequestFrame::new(5, Request::get(6)).encode(&mut out);
+        for (byte, want) in [
+            (0usize, ProtoError::BadMagic(0xFF)),
+            (1, ProtoError::BadVersion(0xFF)),
+            (2, ProtoError::BadOpCode(0xFF)),
+            (3, ProtoError::BadReserved(0xFF)),
+        ] {
+            let mut bad = out.clone();
+            bad[byte] = 0xFF;
+            assert_eq!(RequestFrame::decode(&bad).unwrap_err(), want);
+        }
+    }
+
+    #[test]
+    fn oversized_value_len_rejected_from_header_alone() {
+        let mut out = Vec::new();
+        RequestFrame::new(5, Request::put(6, 7)).encode(&mut out);
+        out[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        // Only the 24-byte header is present — the decoder must reject
+        // from the length field without waiting for 4 GiB of payload.
+        assert_eq!(
+            RequestFrame::decode(&out[..REQ_HEADER_LEN]).unwrap_err(),
+            ProtoError::ValueTooLong(u32::MAX)
+        );
+    }
+
+    #[test]
+    fn value_len_must_match_op_and_status() {
+        let mut out = Vec::new();
+        RequestFrame::new(5, Request::get(6)).encode(&mut out);
+        out[20..24].copy_from_slice(&8u32.to_le_bytes());
+        assert_eq!(
+            RequestFrame::decode(&out).unwrap_err(),
+            ProtoError::BadValueLen { op: 1, len: 8 }
+        );
+        let mut out = Vec::new();
+        ResponseFrame::reply(1, Response::Value(2)).encode(&mut out);
+        out[12..16].copy_from_slice(&0u32.to_le_bytes());
+        assert_eq!(
+            ResponseFrame::decode(&out).unwrap_err(),
+            ProtoError::BadValueLen {
+                op: STATUS_VALUE,
+                len: 0
+            }
+        );
+    }
+
+    #[test]
+    fn trailing_bytes_left_for_next_frame() {
+        let mut out = Vec::new();
+        RequestFrame::new(1, Request::get(2)).encode(&mut out);
+        let first_len = out.len();
+        RequestFrame::new(3, Request::put(4, 5)).encode(&mut out);
+        let (f, used) = RequestFrame::decode(&out).unwrap().unwrap();
+        assert_eq!(f.id, 1);
+        assert_eq!(used, first_len);
+        let (g, _) = RequestFrame::decode(&out[used..]).unwrap().unwrap();
+        assert_eq!(g.id, 3);
+    }
+}

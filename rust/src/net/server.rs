@@ -1,0 +1,324 @@
+//! [`NetServer`]: the single-epoll-multiple-workers serving loop.
+//!
+//! One [`Listener`] (epoll fd + accept socket) is shared by N worker
+//! threads. Every registration is one-shot, so each readiness event is
+//! handled by exactly one worker; the same workers also run completion
+//! sweeps that advance connections whose batch tickets resolved (the
+//! completion-driven write path — nothing ever blocks on a pending
+//! ticket). Shutdown is a graceful drain: stop accepting, answer new
+//! frames with the shutdown code, let pending tickets resolve and
+//! flush, then FIN — with a deadline after which stragglers are
+//! force-closed.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{CoordinatorStats, KvClient};
+use crate::net::conn::Conn;
+use crate::net::listener::{EpollListener, Listener, LISTENER_ID};
+use crate::net::stats::{ConnStats, NetCounters, NetStats};
+
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:7171` (port 0 = ephemeral).
+    pub addr: String,
+    /// Worker threads sharing the one epoll fd.
+    pub workers: usize,
+    /// Per-connection inflight window: accepted-but-unanswered requests
+    /// beyond this are shed with the overload wire code.
+    pub inflight_window: usize,
+    /// Graceful-drain deadline on shutdown; stragglers past it are
+    /// force-closed.
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            inflight_window: 256,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+type ConnArc = Arc<Mutex<Conn>>;
+
+/// State shared by the worker threads.
+struct Service {
+    listener: Box<dyn Listener>,
+    client: KvClient,
+    window: usize,
+    counters: Arc<NetCounters>,
+    conns: Mutex<HashMap<u64, ConnArc>>,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+    /// Sweep hint: some connection has a pending drain or unflushed
+    /// output, so workers poll with the short timeout. Heuristic only —
+    /// a stale value costs latency, never correctness.
+    has_pending: AtomicBool,
+    drain_timeout: Duration,
+}
+
+impl Service {
+    fn accept_all(&self) {
+        loop {
+            match self.listener.accept() {
+                Ok(Some(stream)) => self.add_conn(stream),
+                Ok(None) | Err(_) => break,
+            }
+        }
+    }
+
+    fn add_conn(&self, stream: std::net::TcpStream) {
+        if self.stop.load(Ordering::Relaxed) {
+            return; // draining: refuse new connections (stream drops → FIN)
+        }
+        let Ok(conn) = Conn::new(stream, self.counters.clone()) else {
+            return;
+        };
+        // Connection ids start at 1 (LISTENER_ID = 0 is the accept socket).
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let fd = conn.fd();
+        self.conns.lock().unwrap().insert(id, Arc::new(Mutex::new(conn)));
+        NetCounters::add(&self.counters.accepted, 1);
+        NetCounters::add(&self.counters.active, 1);
+        if self.listener.register(fd, id, true, false).is_err() {
+            self.remove(id);
+        }
+    }
+
+    /// Close and forget connection `id`. Lock order rule: the conns map
+    /// lock and a conn's own lock are never held together.
+    fn remove(&self, id: u64) {
+        let arc = { self.conns.lock().unwrap().remove(&id) };
+        if let Some(arc) = arc {
+            let mut c = arc.lock().unwrap();
+            c.gone = true;
+            let _ = self.listener.deregister(c.fd());
+            NetCounters::add(&self.counters.closed, 1);
+            self.counters.active.fetch_sub(1, Ordering::Relaxed);
+            // The TcpStream closes (FIN) when the last Arc drops.
+        }
+    }
+
+    /// Advance one locked connection; returns true when it is finished.
+    fn advance(&self, c: &mut Conn, readable: bool, stopping: bool) -> bool {
+        if readable {
+            c.on_readable(&self.client, self.window, stopping);
+        }
+        c.pump();
+        c.flush();
+        c.finished(stopping)
+    }
+
+    /// Handle a readiness event for connection `id`.
+    fn on_event(&self, id: u64, readable: bool, stopping: bool) {
+        let arc = {
+            let conns = self.conns.lock().unwrap();
+            conns.get(&id).cloned()
+        };
+        let Some(arc) = arc else { return };
+        let (finished, fd, r, w, pending) = {
+            let mut c = arc.lock().unwrap();
+            if c.gone {
+                return;
+            }
+            let finished = self.advance(&mut c, readable, stopping);
+            (finished, c.fd(), c.wants_read(), c.wants_write(), c.has_pending())
+        };
+        if finished {
+            self.remove(id);
+        } else {
+            let _ = self.listener.rearm(fd, id, r, w);
+            if pending {
+                self.has_pending.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Completion sweep: visit every connection, encode responses whose
+    /// tickets resolved, flush, close the finished. `try_lock` — a conn
+    /// being serviced by another worker is simply skipped (that worker
+    /// pumps it itself).
+    fn sweep(&self, stopping: bool) {
+        let snapshot: Vec<(u64, ConnArc)> = {
+            let conns = self.conns.lock().unwrap();
+            conns.iter().map(|(id, a)| (*id, a.clone())).collect()
+        };
+        let mut pending = false;
+        for (id, arc) in snapshot {
+            let verdict = match arc.try_lock() {
+                Err(_) => {
+                    pending = true; // busy elsewhere: check again soon
+                    continue;
+                }
+                Ok(mut c) => {
+                    if c.gone {
+                        continue;
+                    }
+                    let finished = self.advance(&mut c, false, stopping);
+                    (finished, c.fd(), c.wants_read(), c.wants_write(), c.has_pending())
+                }
+            };
+            let (finished, fd, r, w, pend) = verdict;
+            if finished {
+                self.remove(id);
+            } else {
+                pending |= pend;
+                if w {
+                    // Flush hit WouldBlock: arm for writability so the
+                    // event path resumes the write.
+                    let _ = self.listener.rearm(fd, id, r, true);
+                }
+            }
+        }
+        self.has_pending.store(pending, Ordering::Relaxed);
+    }
+
+    /// Drain-deadline expiry: abandon whatever is still pending.
+    fn force_close_all(&self) {
+        let ids: Vec<u64> = { self.conns.lock().unwrap().keys().copied().collect() };
+        for id in ids {
+            let arc = { self.conns.lock().unwrap().get(&id).cloned() };
+            if let Some(arc) = arc {
+                arc.lock().unwrap().force_close();
+            }
+            self.remove(id);
+        }
+    }
+
+    fn worker_loop(&self) {
+        let mut events = Vec::new();
+        let mut deadline: Option<Instant> = None;
+        loop {
+            let stopping = self.stop.load(Ordering::Relaxed);
+            if stopping && deadline.is_none() {
+                deadline = Some(Instant::now() + self.drain_timeout);
+            }
+            let timeout = if self.has_pending.load(Ordering::Relaxed) || stopping {
+                Duration::from_millis(1)
+            } else {
+                Duration::from_millis(25)
+            };
+            events.clear();
+            if self.listener.wait(&mut events, timeout).is_err() {
+                return; // readiness backend failed: nothing we can drive
+            }
+            for ev in &events {
+                if ev.id == LISTENER_ID {
+                    self.accept_all();
+                } else {
+                    self.on_event(ev.id, ev.readable, stopping);
+                }
+            }
+            self.sweep(stopping);
+            if stopping {
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    self.force_close_all();
+                }
+                if self.conns.lock().unwrap().is_empty() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// The running network front end. Start it over a [`KvClient`] (the
+/// coordinator stays owned by the caller), read stats any time, and
+/// [`shutdown`](NetServer::shutdown) for a graceful drain.
+pub struct NetServer {
+    svc: Arc<Service>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` with the epoll backend and start serving.
+    pub fn start(cfg: &NetConfig, client: KvClient) -> io::Result<Self> {
+        let listener = EpollListener::bind(&cfg.addr)?;
+        Self::start_with(Box::new(listener), cfg, client)
+    }
+
+    /// Start over an explicit [`Listener`] backend (the io_uring seam,
+    /// also used by tests).
+    pub fn start_with(
+        listener: Box<dyn Listener>,
+        cfg: &NetConfig,
+        client: KvClient,
+    ) -> io::Result<Self> {
+        let svc = Arc::new(Service {
+            listener,
+            client,
+            window: cfg.inflight_window.max(1),
+            counters: Arc::new(NetCounters::default()),
+            conns: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(LISTENER_ID + 1),
+            stop: AtomicBool::new(false),
+            has_pending: AtomicBool::new(false),
+            drain_timeout: cfg.drain_timeout,
+        });
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let svc2 = svc.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dhash-net-{w}"))
+                    .spawn(move || svc2.worker_loop())?,
+            );
+        }
+        Ok(Self { svc, workers })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.svc.listener.local_addr()
+    }
+
+    /// Aggregate network counters.
+    pub fn net_stats(&self) -> NetStats {
+        self.svc.counters.snapshot()
+    }
+
+    /// Per-connection stats of the currently open connections.
+    pub fn conn_stats(&self) -> Vec<ConnStats> {
+        let snapshot: Vec<ConnArc> = {
+            let conns = self.svc.conns.lock().unwrap();
+            conns.values().cloned().collect()
+        };
+        snapshot.iter().map(|a| a.lock().unwrap().stats).collect()
+    }
+
+    /// Fold the aggregate network counters into a coordinator stats
+    /// snapshot (`stats.net`), keeping serving-path and routing-path
+    /// degradation in one report.
+    pub fn fold_stats(&self, stats: &mut CoordinatorStats) {
+        stats.net = Some(self.net_stats());
+    }
+
+    /// Graceful drain: stop accepting, answer new frames with the
+    /// shutdown code, let pending tickets resolve and responses flush
+    /// (bounded by the drain deadline), then close every connection.
+    pub fn shutdown(mut self) -> NetStats {
+        self.svc.stop.store(true, Ordering::SeqCst);
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.svc.counters.snapshot()
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.svc.stop.store(true, Ordering::SeqCst);
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Network-layer counters: per-connection [`ConnStats`] and the
+//! aggregate [`NetStats`] snapshot folded into
+//! [`crate::coordinator::CoordinatorStats`] — serving-path degradation
+//! (sheds, protocol errors) is surfaced next to routing degradation,
+//! never siloed in the network layer.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregate network counters, as a plain snapshot.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted since start.
+    pub accepted: u64,
+    /// Connections currently open.
+    pub active: u64,
+    /// Connections fully closed.
+    pub closed: u64,
+    /// Raw bytes read from / written to sockets.
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Complete frames decoded / responses encoded.
+    pub frames_in: u64,
+    pub frames_out: u64,
+    /// `submit_batch` calls issued (one per connection drain).
+    pub batches: u64,
+    /// Requests shed by the per-connection inflight window
+    /// ([`crate::error::KvError::Overloaded`] on the wire).
+    pub sheds: u64,
+    /// Connections failed for unparseable bytes
+    /// ([`crate::error::KvError::Protocol`] on the wire).
+    pub protocol_errors: u64,
+}
+
+/// The live atomic counters behind [`NetStats`]. Shared by every worker
+/// thread; relaxed ordering is fine — these are monotonic tallies, not
+/// synchronization.
+#[derive(Default)]
+pub struct NetCounters {
+    pub accepted: AtomicU64,
+    pub active: AtomicU64,
+    pub closed: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    pub batches: AtomicU64,
+    pub sheds: AtomicU64,
+    pub protocol_errors: AtomicU64,
+}
+
+impl NetCounters {
+    pub fn add(c: &AtomicU64, n: u64) {
+        c.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> NetStats {
+        let get = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        NetStats {
+            accepted: get(&self.accepted),
+            active: get(&self.active),
+            closed: get(&self.closed),
+            bytes_in: get(&self.bytes_in),
+            bytes_out: get(&self.bytes_out),
+            frames_in: get(&self.frames_in),
+            frames_out: get(&self.frames_out),
+            batches: get(&self.batches),
+            sheds: get(&self.sheds),
+            protocol_errors: get(&self.protocol_errors),
+        }
+    }
+}
+
+/// One connection's counters (owned by the connection under its lock —
+/// plain integers, no atomics needed).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ConnStats {
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub batches: u64,
+    pub sheds: u64,
+    pub protocol_errors: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counter_updates() {
+        let c = NetCounters::default();
+        assert_eq!(c.snapshot(), NetStats::default());
+        NetCounters::add(&c.accepted, 3);
+        NetCounters::add(&c.active, 2);
+        NetCounters::add(&c.bytes_in, 100);
+        NetCounters::add(&c.sheds, 1);
+        let s = c.snapshot();
+        assert_eq!(s.accepted, 3);
+        assert_eq!(s.active, 2);
+        assert_eq!(s.bytes_in, 100);
+        assert_eq!(s.sheds, 1);
+        assert_eq!(s.frames_out, 0);
+    }
+}

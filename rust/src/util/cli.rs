@@ -1,7 +1,13 @@
 //! Minimal `--flag value` argument parser (clap is unavailable offline).
 //!
-//! Supports `--name value`, `--name=value`, boolean `--name`, and a list of
-//! positional arguments. Unknown flags are an error so typos fail loudly.
+//! Supports `--name value`, `--name=value`, boolean `--name`, and a list
+//! of positional arguments. Parsing is **per-subcommand**: each
+//! subcommand declares its own [`CmdSpec`] flag registry, an unknown or
+//! misspelled flag is a hard error that lists the valid flags, and
+//! every spec renders a `--help` page with defaults. (The old scheme —
+//! one global known-flag list shared by every subcommand — silently
+//! tolerated flags that belonged to *other* subcommands, so e.g.
+//! `serve --pre-rout bucket` did nothing.)
 
 use std::collections::BTreeMap;
 
@@ -11,24 +17,27 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug)]
-pub struct ParseError(pub String);
+/// A command-line usage error (unknown flag, bad value). Part of the
+/// unified error surface via `crate::error`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
 
-impl std::fmt::Display for ParseError {
+impl std::fmt::Display for CliError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "argument error: {}", self.0)
     }
 }
 
-impl std::error::Error for ParseError {}
+impl std::error::Error for CliError {}
 
 impl Args {
-    /// Parse from an explicit token stream. `known` lists the accepted flag
-    /// names (without the `--`); a value-less occurrence stores `"true"`.
+    /// Parse from an explicit token stream. `known` lists the accepted
+    /// flag names (without the `--`); a value-less occurrence stores
+    /// `"true"`.
     pub fn parse<I: IntoIterator<Item = String>>(
         tokens: I,
         known: &[&str],
-    ) -> Result<Self, ParseError> {
+    ) -> Result<Self, CliError> {
         let mut out = Args::default();
         let mut it = tokens.into_iter().peekable();
         while let Some(tok) = it.next() {
@@ -38,7 +47,7 @@ impl Args {
                     None => (body.to_string(), None),
                 };
                 if !known.contains(&name.as_str()) {
-                    return Err(ParseError(format!("unknown flag --{name}")));
+                    return Err(CliError(format!("unknown flag --{name}")));
                 }
                 let value = match inline {
                     Some(v) => v,
@@ -59,7 +68,7 @@ impl Args {
         Ok(out)
     }
 
-    pub fn from_env(known: &[&str]) -> Result<Self, ParseError> {
+    pub fn from_env(known: &[&str]) -> Result<Self, CliError> {
         Self::parse(std::env::args().skip(1), known)
     }
 
@@ -75,13 +84,84 @@ impl Args {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
 
-    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, ParseError> {
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
         match self.get(name) {
             None => Ok(default),
             Some(s) => s
                 .parse()
-                .map_err(|_| ParseError(format!("bad value for --{name}: {s:?}"))),
+                .map_err(|_| CliError(format!("bad value for --{name}: {s:?}"))),
         }
+    }
+}
+
+/// One registered flag: the name (without `--`), the default rendered
+/// in `--help`, and a one-line description.
+#[derive(Clone, Copy, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+impl FlagSpec {
+    /// Const constructor keeping registry tables to one line per flag.
+    pub const fn new(name: &'static str, default: &'static str, help: &'static str) -> Self {
+        Self {
+            name,
+            default,
+            help,
+        }
+    }
+}
+
+/// A subcommand's flag registry: the only flags this subcommand
+/// accepts. [`CmdSpec::parse`] hard-errors on anything else, listing
+/// the valid set; [`CmdSpec::help`] renders the `--help` page.
+#[derive(Clone, Copy, Debug)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: &'static [FlagSpec],
+}
+
+impl CmdSpec {
+    /// Parse this subcommand's tokens against its registry. `--help` is
+    /// always accepted (check [`Args::get_bool`]`("help")`). An unknown
+    /// flag is a hard error that names the valid flags.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, tokens: I) -> Result<Args, CliError> {
+        let mut known: Vec<&str> = self.flags.iter().map(|f| f.name).collect();
+        known.push("help");
+        Args::parse(tokens, &known).map_err(|CliError(msg)| {
+            let valid: Vec<String> = self.flags.iter().map(|f| format!("--{}", f.name)).collect();
+            CliError(format!(
+                "{msg}\nvalid flags for `{}`: {} (see `{} --help`)",
+                self.name,
+                valid.join(", "),
+                self.name
+            ))
+        })
+    }
+
+    /// The `--help` page: about line, then each flag with its default.
+    pub fn help(&self) -> String {
+        let mut out = format!("dhash {} — {}\n\nflags:\n", self.name, self.about);
+        let width = self
+            .flags
+            .iter()
+            .map(|f| f.name.len())
+            .chain(std::iter::once("help".len()))
+            .max()
+            .unwrap_or(4);
+        for f in self.flags {
+            let pad = " ".repeat(width - f.name.len());
+            out.push_str(&format!(
+                "  --{}{}  {} (default: {})\n",
+                f.name, pad, f.help, f.default
+            ));
+        }
+        let pad = " ".repeat(width - "help".len());
+        out.push_str(&format!("  --help{pad}  print this help\n"));
+        out
     }
 }
 
@@ -123,5 +203,44 @@ mod tests {
         let a = Args::parse(toks(""), &["threads"]).unwrap();
         assert_eq!(a.get_or("threads", 4usize).unwrap(), 4);
         assert!(!a.get_bool("threads"));
+    }
+
+    const SPEC: CmdSpec = CmdSpec {
+        name: "serve",
+        about: "run the KV service",
+        flags: &[
+            FlagSpec::new("listen", "off", "bind address"),
+            FlagSpec::new("secs", "10", "run duration"),
+        ],
+    };
+
+    #[test]
+    fn cmdspec_accepts_registered_flags_and_help() {
+        let a = SPEC.parse(toks("--listen 127.0.0.1:0 --secs 3")).unwrap();
+        assert_eq!(a.get("listen"), Some("127.0.0.1:0"));
+        assert_eq!(a.get_or("secs", 0u64).unwrap(), 3);
+        let h = SPEC.parse(toks("--help")).unwrap();
+        assert!(h.get_bool("help"));
+    }
+
+    #[test]
+    fn cmdspec_unknown_flag_lists_valid_set() {
+        // The misspelled-flag failure mode the registry exists for:
+        // `--sec` (for `--secs`) must fail loudly, naming the options.
+        let err = SPEC.parse(toks("--sec 3")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown flag --sec"), "{msg}");
+        assert!(msg.contains("--listen"), "{msg}");
+        assert!(msg.contains("--secs"), "{msg}");
+        assert!(msg.contains("serve"), "{msg}");
+    }
+
+    #[test]
+    fn cmdspec_help_shows_defaults() {
+        let h = SPEC.help();
+        assert!(h.contains("dhash serve"), "{h}");
+        assert!(h.contains("--listen"), "{h}");
+        assert!(h.contains("default: 10"), "{h}");
+        assert!(h.contains("--help"), "{h}");
     }
 }

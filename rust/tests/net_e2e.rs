@@ -1,0 +1,193 @@
+//! End-to-end wire-protocol tests over loopback: pipelined clients
+//! against a real `NetServer` + `Coordinator`, spanning a mid-stream
+//! mitigation rebuild, overload shedding, graceful drain, and protocol
+//! failure. Linux-only (the listener backend is epoll).
+
+#![cfg(target_os = "linux")]
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use dhash::coordinator::{Coordinator, CoordinatorConfig};
+use dhash::dhash::HashFn;
+use dhash::error::KvError;
+use dhash::net::bench::verify_run;
+use dhash::net::codec::Decoder;
+use dhash::net::proto::{Request, RequestFrame, Response};
+use dhash::net::{NetConfig, NetServer};
+
+fn start(shards: usize, window: usize) -> (Coordinator, NetServer, SocketAddr) {
+    let cfg = CoordinatorConfig {
+        shards,
+        lanes: 2,
+        enable_analytics: false, // rebuilds are forced, not detected
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg).expect("coordinator starts");
+    let net_cfg = NetConfig {
+        inflight_window: window,
+        ..Default::default()
+    };
+    let net = NetServer::start(&net_cfg, c.client()).expect("listener binds");
+    let addr = net.local_addr().expect("bound address");
+    (c, net, addr)
+}
+
+/// The tentpole acceptance run: 8 connections × depth-8 pipelining,
+/// self-validating phased workload, with hash-replacement rebuilds
+/// forced mid-stream. Zero lost, reordered, or wrong responses.
+#[test]
+fn pipelined_connections_span_a_rebuild_without_loss() {
+    let (c, net, addr) = start(4, 64);
+    let hs: Vec<_> = (0..8u64)
+        .map(|i| std::thread::spawn(move || verify_run(addr, i << 32, 96, 8)))
+        .collect();
+    // Force mitigation-style rebuilds while the clients are mid-flight.
+    let mut rebuilds = 0;
+    for r in 0..6u64 {
+        std::thread::sleep(Duration::from_millis(5));
+        if c.force_rebuild(4096, HashFn::Seeded(0xFEED ^ r)) {
+            rebuilds += 1;
+        }
+    }
+    assert!(rebuilds > 0, "no rebuild overlapped the run");
+    for h in hs {
+        let rep = h.join().expect("client panicked").expect("client io");
+        assert_eq!(rep.sent, 96 * 4);
+        assert_eq!(rep.received, rep.sent, "lost responses: {rep:?}");
+        assert_eq!(rep.reorders, 0, "reordered responses: {rep:?}");
+        assert_eq!(rep.mismatches, 0, "wrong responses: {rep:?}");
+        assert_eq!(rep.sheds + rep.errors, 0, "unexpected failures: {rep:?}");
+    }
+    let ns = net.shutdown();
+    assert_eq!(ns.frames_in, 8 * 96 * 4);
+    assert_eq!(ns.frames_out, ns.frames_in, "every request answered exactly once");
+    c.shutdown();
+}
+
+/// A burst deeper than the inflight window is shed with the overload
+/// wire code — responses stay in order and the connection stays open.
+#[test]
+fn overload_sheds_with_wire_code_and_keeps_the_connection() {
+    let (c, net, addr) = start(1, 4);
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // One write → one server drain: far more requests than the window.
+    let mut wire = Vec::new();
+    for i in 0..64u64 {
+        RequestFrame::new(i + 1, Request::put(i, i)).encode(&mut wire);
+    }
+    s.write_all(&wire).expect("burst write");
+
+    let mut dec = Decoder::new();
+    let mut got = Vec::new();
+    let mut buf = [0u8; 4096];
+    while got.len() < 64 {
+        let n = s.read(&mut buf).expect("read responses");
+        assert!(n > 0, "server closed mid-burst");
+        dec.push(&buf[..n]);
+        while let Some(f) = dec.next_response().expect("valid response frame") {
+            got.push(f);
+        }
+    }
+    let shed = KvError::Overloaded.code();
+    let mut sheds = 0;
+    for (i, f) in got.iter().enumerate() {
+        assert_eq!(f.id, i as u64 + 1, "responses out of request order");
+        match f.body {
+            Ok(Response::Ok) => {}
+            Err(code) if code == shed => sheds += 1,
+            other => panic!("unexpected response body {other:?}"),
+        }
+    }
+    assert!(sheds >= 1, "a 64-deep burst into a window of 4 must shed");
+    assert!(sheds < 64, "some requests must still be accepted");
+
+    // Shed-on-full is backpressure, not disconnection: the same
+    // connection still serves requests.
+    let mut wire = Vec::new();
+    RequestFrame::new(999, Request::get(0)).encode(&mut wire);
+    s.write_all(&wire).expect("follow-up write");
+    let f = loop {
+        if let Some(f) = dec.next_response().expect("valid follow-up frame") {
+            break f;
+        }
+        let n = s.read(&mut buf).expect("read follow-up");
+        assert!(n > 0, "server closed after shedding");
+        dec.push(&buf[..n]);
+    };
+    assert_eq!(f.id, 999);
+    assert!(f.body.is_ok(), "connection unusable after sheds: {f:?}");
+
+    net.shutdown();
+    c.shutdown();
+}
+
+/// Shutdown drains: every ingested request is answered (executed or
+/// shutdown-coded), responses flush, then the server FINs.
+#[test]
+fn graceful_drain_answers_pending_then_fins() {
+    let (c, net, addr) = start(1, 256);
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut wire = Vec::new();
+    for i in 0..32u64 {
+        RequestFrame::new(i + 1, Request::put(i, i)).encode(&mut wire);
+    }
+    s.write_all(&wire).expect("write burst");
+    std::thread::sleep(Duration::from_millis(50)); // let the server ingest
+    let ns = net.shutdown();
+
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("responses then FIN");
+    let mut dec = Decoder::new();
+    dec.push(&buf);
+    let mut got = Vec::new();
+    while let Some(f) = dec.next_response().expect("valid response frame") {
+        got.push(f);
+    }
+    assert_eq!(got.len(), 32, "drain lost responses");
+    let down = KvError::Shutdown.code();
+    for (i, f) in got.iter().enumerate() {
+        assert_eq!(f.id, i as u64 + 1, "drain reordered responses");
+        assert!(
+            f.body == Ok(Response::Ok) || f.body == Err(down),
+            "unexpected drain response {f:?}"
+        );
+    }
+    assert_eq!(ns.frames_out, 32);
+    c.shutdown();
+}
+
+/// Garbage on the wire: one error frame (id 0, the protocol error's
+/// wire code), then the server closes the connection.
+#[test]
+fn protocol_error_answers_with_code_then_closes() {
+    let (c, net, addr) = start(1, 256);
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&[0xFF, 0x00, 0x00, 0x00]).expect("write garbage");
+
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("error frame then FIN");
+    let mut dec = Decoder::new();
+    dec.push(&buf);
+    let f = dec
+        .next_response()
+        .expect("valid error frame")
+        .expect("exactly one frame before close");
+    assert_eq!(f.id, 0, "no trustworthy request id exists");
+    assert_eq!(
+        f.body,
+        Err(KvError::Protocol(dhash::error::ProtoError::BadMagic(0xFF)).code())
+    );
+    assert_eq!(dec.pending(), 0);
+    assert!(dec.next_response().unwrap().is_none());
+
+    let ns = net.shutdown();
+    assert_eq!(ns.protocol_errors, 1);
+    c.shutdown();
+}
