@@ -128,6 +128,72 @@ impl BenchJson {
     }
 }
 
+/// Shared single-op latency recorder over the crate's fixed-bucket
+/// log-linear histogram ([`dhash::util::LatencyHistogram`]): nanosecond
+/// samples in, `p50/p99/p999` out, with O(1) recording and no
+/// allocations on the measurement path. Per-thread recorders merge into
+/// one before reporting.
+pub struct LatencyRecorder {
+    hist: dhash::util::LatencyHistogram,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self {
+            hist: dhash::util::LatencyHistogram::new(),
+        }
+    }
+
+    /// Record one operation's wall time.
+    pub fn record(&mut self, elapsed: Duration) {
+        // u64 nanoseconds saturate past ~584 years; fine for op latency.
+        self.hist.record(elapsed.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Fold another thread's recorder into this one.
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.hist.merge(&other.hist);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.hist.count()
+    }
+
+    /// Print one human-readable percentile row and append the same
+    /// numbers (nanoseconds) to `json` under `metric`.
+    pub fn report(&self, json: &mut BenchJson, metric: &str) {
+        let (p50, p99, p999) = (
+            self.hist.percentile(0.50),
+            self.hist.percentile(0.99),
+            self.hist.percentile(0.999),
+        );
+        println!(
+            "latency {metric:<16} n={:<9} p50_ns={p50:<8} p99_ns={p99:<8} \
+             p999_ns={p999:<8} mean_ns={:<10.1} max_ns={}",
+            self.hist.count(),
+            self.hist.mean(),
+            self.hist.max(),
+        );
+        json.row(
+            metric,
+            &[
+                ("count", self.hist.count() as f64),
+                ("p50_ns", p50 as f64),
+                ("p99_ns", p99 as f64),
+                ("p999_ns", p999 as f64),
+                ("mean_ns", self.hist.mean()),
+                ("max_ns", self.hist.max() as f64),
+            ],
+        );
+    }
+}
+
 /// One Figure-2-style cell: throughput of `table` under the §6.2
 /// continuous-rebuild protocol.
 pub fn fig2_cell(table: &str, threads: usize, lookup_pct: u8, alpha: usize) -> Summary {

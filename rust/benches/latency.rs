@@ -1,0 +1,236 @@
+//! Single-op read/write latency scoreboard: p50/p99/p999 over the
+//! sharded map in three regimes — idle, a per-shard rebuild storm, and a
+//! split/merge storm — plus the batcher-oracle snapshot-cache check.
+//!
+//! Throughput benches (fig2..4, shard_scale) average over a window and
+//! hide tail pain; this one times every operation into the fixed-bucket
+//! log-linear histogram (`util::stats::LatencyHistogram`, ≤1/32 relative
+//! error, O(1) record) so the read-path orderings/padding work shows up
+//! where it matters: the p99/p999 gap between idle and storm columns.
+//!
+//! Under `DHASH_SMOKE=1` the run writes `BENCH_latency.json` and asserts
+//! the steady-path routing oracle serves every batch from its cached
+//! `RouteSnapshot` (zero rebuilds while the directory epoch is
+//! unchanged).
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use common::{measure_window, print_host_table1, BenchJson, LatencyRecorder};
+use dhash::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, PreRoute, Request, Response,
+};
+use dhash::dhash::{HashFn, ShardedDHash};
+use dhash::rcu::RcuThread;
+use dhash::util::SplitMix64;
+
+const SHARDS: usize = 4;
+const NBUCKETS_PER_SHARD: usize = 256;
+const KEYS: u64 = 4096;
+const MEASURE_THREADS: usize = 2;
+
+fn key_of(i: u64) -> u64 {
+    i.wrapping_mul(0x9e37) // spread keys; stays well clear of u64::MAX
+}
+
+fn populate(map: &ShardedDHash) {
+    let g = RcuThread::register();
+    for i in 0..KEYS {
+        map.insert(&g, key_of(i), i).unwrap();
+    }
+    g.quiescent_state();
+}
+
+/// Time single ops on `MEASURE_THREADS` threads for one measurement
+/// window while `storm` churns the map from its own thread; returns the
+/// merged (read, write) recorders.
+fn run_scenario(
+    map: &Arc<ShardedDHash>,
+    storm: impl FnOnce(&AtomicBool, &ShardedDHash) + Send,
+) -> (LatencyRecorder, LatencyRecorder) {
+    let stop = AtomicBool::new(false);
+    let window = measure_window();
+    std::thread::scope(|s| {
+        let mut measurers = Vec::new();
+        for t in 0..MEASURE_THREADS {
+            let map = map.clone();
+            let stop = &stop;
+            measurers.push(s.spawn(move || {
+                let g = RcuThread::register();
+                let mut rng = SplitMix64::new(0xbeef + t as u64);
+                let mut reads = LatencyRecorder::new();
+                let mut writes = LatencyRecorder::new();
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let k = key_of(rng.next_bounded(KEYS));
+                    if i % 4 == 3 {
+                        let t0 = Instant::now();
+                        map.upsert(&g, k, i);
+                        writes.record(t0.elapsed());
+                    } else {
+                        let t0 = Instant::now();
+                        std::hint::black_box(map.lookup(&g, k));
+                        reads.record(t0.elapsed());
+                    }
+                    // Quiesce every op: storm grace periods must never
+                    // wait on a measurement thread.
+                    g.quiescent_state();
+                    i += 1;
+                }
+                (reads, writes)
+            }));
+        }
+        let storm_h = s.spawn(|| storm(&stop, map.as_ref()));
+        std::thread::sleep(window);
+        stop.store(true, Ordering::Relaxed);
+        let mut reads = LatencyRecorder::new();
+        let mut writes = LatencyRecorder::new();
+        for m in measurers {
+            let (r, w) = m.join().unwrap();
+            reads.merge(&r);
+            writes.merge(&w);
+        }
+        storm_h.join().unwrap();
+        (reads, writes)
+    })
+}
+
+fn no_storm(stop: &AtomicBool, _map: &ShardedDHash) {
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::yield_now();
+    }
+}
+
+/// Continuous per-shard rebuilds (the §6.2 regime, sharded): every shard
+/// re-seeded round-robin, one migration at a time through the token.
+fn rebuild_storm(stop: &AtomicBool, map: &ShardedDHash) {
+    let g = RcuThread::register();
+    let mut i = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        for s in 0..map.shards() {
+            let _ = map.rebuild_shard(&g, s, NBUCKETS_PER_SHARD, HashFn::Seeded(0x5eed ^ i));
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+        i += 1;
+        g.quiescent_state();
+    }
+}
+
+/// Continuous directory churn: split shard 0, merge it back, repeat —
+/// every iteration bumps the epoch twice and drags keys through the
+/// cross-shard `moving` hazard protocol.
+fn split_merge_storm(stop: &AtomicBool, map: &ShardedDHash) {
+    let g = RcuThread::register();
+    while !stop.load(Ordering::Relaxed) {
+        let _ = map.split_shard(&g, 0, NBUCKETS_PER_SHARD, HashFn::Seeded(0x51de));
+        let _ = map.merge_shard(&g, 0, NBUCKETS_PER_SHARD, HashFn::Seeded(0x51de));
+        g.quiescent_state();
+    }
+}
+
+/// The steady path of the pre-route oracle must be allocation-free: one
+/// `RouteSnapshot` build per lane at first use, then every batch served
+/// from the epoch-keyed cache until a split/merge moves the epoch.
+fn oracle_cache_check(json: &mut BenchJson) {
+    let cfg = CoordinatorConfig {
+        nbuckets: 512,
+        hash: HashFn::Seeded(0xfeed),
+        shards: SHARDS,
+        lanes: 2,
+        workers: 2,
+        batcher: BatcherConfig {
+            pre_route: PreRoute::Bucket,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let lanes = cfg.lanes as u64;
+    let c = Coordinator::start(cfg).expect("coordinator start");
+    let client = c.client();
+    let run_batches = |rounds: u64| {
+        for r in 0..rounds {
+            let reqs: Vec<Request> = (0..256u64)
+                .map(|i| {
+                    let k = key_of(r * 256 + i);
+                    if i % 2 == 0 {
+                        Request::put(k, i)
+                    } else {
+                        Request::get(k)
+                    }
+                })
+                .collect();
+            let resps = client.submit_batch(&reqs).unwrap().wait().unwrap();
+            assert_eq!(resps.len(), 256);
+            // Every put slot must have resolved Ok (gets may miss: odd
+            // keys are probed, only even ones were written).
+            assert!(resps
+                .iter()
+                .step_by(2)
+                .all(|r| *r == Response::Ok));
+        }
+    };
+    let epoch0 = c.map().epoch();
+    run_batches(8); // warm both lanes: each builds its snapshot once
+    let warm = c.stats();
+    run_batches(24);
+    let st = c.stats();
+    c.shutdown();
+    assert_eq!(
+        c.map().epoch(),
+        epoch0,
+        "no split/merge ran; the epoch must not move"
+    );
+    assert!(
+        warm.snapshot_rebuilds <= lanes,
+        "cold start must build at most one snapshot per lane, got {}",
+        warm.snapshot_rebuilds
+    );
+    assert_eq!(
+        st.snapshot_rebuilds, warm.snapshot_rebuilds,
+        "steady path (epoch unchanged) must perform ZERO snapshot rebuilds"
+    );
+    println!(
+        "oracle_cache: batches={} snapshot_rebuilds={} (lanes={lanes}, epoch stable)",
+        st.total_batches, st.snapshot_rebuilds
+    );
+    json.row(
+        "oracle_cache",
+        &[
+            ("batches", st.total_batches as f64),
+            ("snapshot_rebuilds", st.snapshot_rebuilds as f64),
+            ("lanes", lanes as f64),
+        ],
+    );
+}
+
+fn main() {
+    print_host_table1();
+    println!("# Single-op latency (ns): {MEASURE_THREADS} measurement threads, 3:1 read:write");
+    let mut json = BenchJson::new("latency");
+
+    let scenarios: [(&str, fn(&AtomicBool, &ShardedDHash)); 3] = [
+        ("idle", no_storm),
+        ("rebuild", rebuild_storm),
+        ("splitmerge", split_merge_storm),
+    ];
+    for (name, storm) in scenarios {
+        let map = Arc::new(ShardedDHash::with_hash(
+            SHARDS,
+            NBUCKETS_PER_SHARD,
+            HashFn::Seeded(0xd1e5),
+        ));
+        populate(&map);
+        let (reads, writes) = run_scenario(&map, storm);
+        assert!(reads.count() > 0 && writes.count() > 0, "{name}: no samples");
+        reads.report(&mut json, &format!("{name}_read"));
+        writes.report(&mut json, &format!("{name}_write"));
+    }
+
+    oracle_cache_check(&mut json);
+    json.flush();
+}

@@ -64,8 +64,16 @@ const SLOT_MISSING: u8 = 3; // Response::Missing
 const SLOT_FAILED: u8 = 4; // SubmitError::Shutdown
 
 /// One pre-allocated completion slot: the response discriminant plus its
-/// payload. 16 bytes, written in place — the replacement for the old
-/// per-call `Sender<(usize, Response)>` reply channel.
+/// payload, written in place — the replacement for the old per-call
+/// `Sender<(usize, Response)>` reply channel.
+///
+/// Aligned to a cacheline: adjacent slots of one batch are resolved by
+/// *different* KV workers concurrently (the batcher fans a batch's
+/// entries out by key), so packed 16-byte slots would put four resolvers
+/// on one line and turn every `fulfill` into a coherence miss for its
+/// neighbors — measured by the `rebuild`/`splitmerge` write scenarios of
+/// `benches/latency.rs`.
+#[repr(align(64))]
 struct Slot {
     kind: AtomicU8,
     val: AtomicU64,

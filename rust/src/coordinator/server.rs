@@ -11,11 +11,14 @@
 //! paper's single `DHashMap` and every behavior matches the pre-sharding
 //! coordinator.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+use crossbeam_utils::CachePadded;
 
 use super::batcher::{
     Batch, Batcher, BatcherConfig, IngestLanes, LaneMsg, OracleError, PreRoute, Request, Response,
@@ -24,7 +27,7 @@ use super::batcher::{
 use super::client::KvClient;
 use super::controller::{ControllerConfig, ElasticConfig, RebuildController, ResizeAction};
 use super::detector::{partition_by_shard, DetectorConfig, KeySampler, SkewVerdict};
-use crate::dhash::{HashFn, ShardedDHash};
+use crate::dhash::{HashFn, RouteSnapshot, ShardedDHash};
 use crate::map::ConcurrentMap;
 use crate::rcu::RcuThread;
 use crate::runtime::{load_engine, Engine, HashKind, ShardParams};
@@ -103,6 +106,12 @@ pub struct CoordinatorStats {
     /// the directory epoch while the ids were being computed — expected
     /// (and rare) while a resize is in flight, never silent.
     pub pre_route_fallbacks_epoch: u64,
+    /// Route-snapshot (re)builds across all lane oracles. On the steady
+    /// path (directory epoch unchanged) each lane builds its snapshot
+    /// once and then serves every batch from the cache, so this stays at
+    /// the lane count until a split/merge moves the epoch — asserted by
+    /// the latency smoke bench.
+    pub snapshot_rebuilds: u64,
     /// Mitigation + manual rebuilds completed (a staggered whole-map
     /// rebuild counts once).
     pub rebuilds: u64,
@@ -133,12 +142,16 @@ struct Shared {
     map: ShardedDHash,
     sampler: KeySampler,
     stop: AtomicBool,
-    total_requests: AtomicU64,
-    total_batches: AtomicU64,
+    /// Padded: every worker bumps this once per request; sharing a line
+    /// with `total_batches` (bumped by every lane thread) would bounce
+    /// both counters across all cores.
+    total_requests: CachePadded<AtomicU64>,
+    total_batches: CachePadded<AtomicU64>,
     pre_routed_batches: AtomicU64,
     pre_route_fallbacks_length: AtomicU64,
     pre_route_fallbacks_engine: AtomicU64,
     pre_route_fallbacks_epoch: AtomicU64,
+    snapshot_rebuilds: AtomicU64,
     rebuilds: AtomicU64,
     detector_runs: AtomicU64,
     /// f32 bits of the last max-over-shards chi2.
@@ -189,12 +202,13 @@ impl Coordinator {
             map: ShardedDHash::with_hash(cfg.shards, cfg.nbuckets, cfg.hash),
             sampler: KeySampler::new(cfg.detector.sample_capacity),
             stop: AtomicBool::new(false),
-            total_requests: AtomicU64::new(0),
-            total_batches: AtomicU64::new(0),
+            total_requests: CachePadded::new(AtomicU64::new(0)),
+            total_batches: CachePadded::new(AtomicU64::new(0)),
             pre_routed_batches: AtomicU64::new(0),
             pre_route_fallbacks_length: AtomicU64::new(0),
             pre_route_fallbacks_engine: AtomicU64::new(0),
             pre_route_fallbacks_epoch: AtomicU64::new(0),
+            snapshot_rebuilds: AtomicU64::new(0),
             rebuilds: AtomicU64::new(0),
             detector_runs: AtomicU64::new(0),
             last_chi2: AtomicU64::new(0),
@@ -247,6 +261,19 @@ impl Coordinator {
                             None
                         };
                         let g = RcuThread::register();
+                        // Epoch-keyed cache of the route snapshot and its
+                        // lowered engine params: the steady path (directory
+                        // epoch unchanged) serves every batch from here —
+                        // no directory walk, no per-batch allocations — and
+                        // rebuilds only when the epoch moves or an epoch
+                        // fallback proves the cache stale. Geometry drift
+                        // *without* an epoch bump (a targeted mitigation
+                        // rebuild) leaves cached ids stale-but-sound:
+                        // routing ids only order the batch, per-op routing
+                        // always goes through the live directory (see
+                        // `ShardedDHash::route_snapshot`).
+                        let route_cache: RefCell<Option<(RouteSnapshot, Vec<ShardParams>)>> =
+                            RefCell::new(None);
                         loop {
                             // Collect OFFLINE (blocking recv must not
                             // stall grace periods), then route online.
@@ -299,21 +326,36 @@ impl Coordinator {
                                                 let e = engine
                                                     .as_ref()
                                                     .ok_or(OracleError::Engine)?;
-                                                let snap = shared2.map.route_snapshot(&g);
-                                                let params: Vec<ShardParams> = snap
-                                                    .shards
-                                                    .iter()
-                                                    .map(|&(hash, nb)| {
-                                                        let (kind, seed) = HashKind::of(hash);
-                                                        (seed, nb as u64, kind)
-                                                    })
-                                                    .collect();
+                                                let mut cache = route_cache.borrow_mut();
+                                                let live = shared2.map.epoch();
+                                                if cache
+                                                    .as_ref()
+                                                    .map_or(true, |(s, _)| s.epoch != live)
+                                                {
+                                                    let snap =
+                                                        shared2.map.route_snapshot(&g);
+                                                    let params: Vec<ShardParams> = snap
+                                                        .shards
+                                                        .iter()
+                                                        .map(|&(hash, nb)| {
+                                                            let (kind, seed) =
+                                                                HashKind::of(hash);
+                                                            (seed, nb as u64, kind)
+                                                        })
+                                                        .collect();
+                                                    shared2
+                                                        .snapshot_rebuilds
+                                                        .fetch_add(1, Ordering::Relaxed);
+                                                    *cache = Some((snap, params));
+                                                }
+                                                let (snap, params) =
+                                                    cache.as_ref().expect("just filled");
                                                 let shard_ids: Vec<u32> = keys
                                                     .iter()
                                                     .map(|&k| snap.shard_of(k))
                                                     .collect();
                                                 let ids = e
-                                                    .batch_hash_multi(keys, &shard_ids, &params)
+                                                    .batch_hash_multi(keys, &shard_ids, params)
                                                     .map_err(|_| OracleError::Engine)?;
                                                 (ids, snap.epoch)
                                             }
@@ -344,6 +386,13 @@ impl Coordinator {
                                         shared2
                                             .pre_route_fallbacks_epoch
                                             .fetch_add(1, Ordering::Relaxed);
+                                        // The ids straddled a resize: the
+                                        // cached snapshot (if its epoch
+                                        // matched the mid-publish mirror)
+                                        // may be stale — drop it so the
+                                        // next batch rebuilds against the
+                                        // settled directory.
+                                        route_cache.borrow_mut().take();
                                     }
                                     RouteOutcome::Unrouted => {}
                                 }
@@ -720,6 +769,7 @@ impl Coordinator {
                 .shared
                 .pre_route_fallbacks_epoch
                 .load(Ordering::Relaxed),
+            snapshot_rebuilds: self.shared.snapshot_rebuilds.load(Ordering::Relaxed),
             rebuilds: self.shared.rebuilds.load(Ordering::Relaxed),
             splits: self.shared.map.split_count(),
             merges: self.shared.map.merge_count(),

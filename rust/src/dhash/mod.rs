@@ -30,6 +30,7 @@ pub use hashfn::HashFn;
 pub use sharded::{shard_of, ResizeError, RouteSnapshot, ShardedDHash};
 pub use table::RebuildStats;
 
+use crossbeam_utils::CachePadded;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 
@@ -69,9 +70,14 @@ impl std::error::Error for KeyExists {}
 /// default and the configuration evaluated in the paper.
 pub struct DHashMap<B: BucketSet = MichaelList> {
     /// `htp`: the current table. Replaced by rebuild (Alg. 3 line 42).
-    cur: AtomicPtr<Table<B>>,
+    ///
+    /// Cache-padded: every lookup loads `cur`, while a rebuild stores
+    /// `rebuild_cur` once per migrated node — unpadded they share a line
+    /// and a rebuild storm invalidates every reader's cached `cur`.
+    cur: CachePadded<AtomicPtr<Table<B>>>,
     /// The node currently in its hazard period, or null (Alg. 2).
-    rebuild_cur: AtomicPtr<Node>,
+    /// Padded for the same reason as `cur` (it is the write-hot field).
+    rebuild_cur: CachePadded<AtomicPtr<Node>>,
     /// Serializes rebuild attempts (Alg. 2 `rebuild_lock`; trylock only).
     rebuild_lock: std::sync::Mutex<()>,
     /// Completed rebuild count (metrics).
@@ -95,8 +101,8 @@ impl<B: BucketSet> DHashMap<B> {
     /// (`ht_alloc` in Alg. 2).
     pub fn with_hash(nbuckets: usize, hash: HashFn) -> Self {
         Self {
-            cur: AtomicPtr::new(Table::alloc(nbuckets, hash)),
-            rebuild_cur: AtomicPtr::new(std::ptr::null_mut()),
+            cur: CachePadded::new(AtomicPtr::new(Table::alloc(nbuckets, hash))),
+            rebuild_cur: CachePadded::new(AtomicPtr::new(std::ptr::null_mut())),
             rebuild_lock: std::sync::Mutex::new(()),
             rebuilds: AtomicU64::new(0),
         }
@@ -104,32 +110,61 @@ impl<B: BucketSet> DHashMap<B> {
 
     #[inline(always)]
     fn table(&self) -> &Table<B> {
+        // Acquire: pairs with rebuild's table-swap store, so a reader that
+        // observes the new table pointer observes the fully-initialized
+        // table behind it. No total order with other atomics is needed:
+        // Lemma 4.1's check order only relies on per-location coherence
+        // plus the mark→hazard Release chain (see `live_node_slow`).
         // SAFETY: `cur` is never null; the pointed-to table is freed only
         // after a grace period follows its replacement, and all callers
         // hold a read-side critical section.
-        unsafe { &*self.cur.load(Ordering::SeqCst) }
+        unsafe { &*self.cur.load(Ordering::Acquire) }
     }
 
     /// The live node holding `key`, searched in Algorithm 4's proven
     /// order: (1) the old table, (2) the hazard-period node, (3) the new
     /// table. Lemma 4.1: this order never misses a present key.
     ///
+    /// `#[inline]`: steps (1)–(2) are the steady-state fast path (one
+    /// table load, one bucket find, one null check); the rebuild-only
+    /// arms live in the `#[cold]` outlined `live_node_slow`.
+    ///
     /// The caller must be inside a read-side critical section; the
     /// reference is valid until that section ends.
+    #[inline]
     fn live_node(&self, key: u64) -> Option<&Node> {
         let htp = self.table();
         // (1) Search the old (current) hash table.
         if let Some(n) = htp.bucket(key).find(key) {
             return Some(n);
         }
-        // (2) No rebuild in progress -> definitive miss.
-        let htp_new = htp.ht_new.load(Ordering::SeqCst);
+        // (2) No rebuild in progress -> definitive miss. Acquire: pairs
+        // with the rebuild's ht_new publication store, making the new
+        // table's contents visible before we walk it.
+        let htp_new = htp.ht_new.load(Ordering::Acquire);
         if htp_new.is_null() {
             return None;
         }
-        // smp_rmb (paper line 53) is subsumed by the SeqCst atomics.
+        self.live_node_slow(htp_new, key)
+    }
+
+    /// Steps (3)–(4) of Algorithm 4: the hazard-period node and the new
+    /// table. Only reachable while a rebuild is migrating this map.
+    ///
+    /// Why Acquire on `rebuild_cur` suffices (Lemma 4.1 without SeqCst):
+    /// the rebuild publishes `rebuild_cur = n` with Release *before* the
+    /// logical-delete CAS that can make `n` missing from the old table,
+    /// and that CAS is itself Release. A lookup that misses `n` in step
+    /// (1) Acquire-loaded the marked/unlinked link word, so it
+    /// synchronizes with the delete CAS — which happens-after the hazard
+    /// store — making the non-null `rebuild_cur` visible to the Acquire
+    /// load here. Miss-implies-hazard-visible needs only this
+    /// release/acquire chain, not a global SC order.
+    #[cold]
+    #[inline(never)]
+    fn live_node_slow(&self, htp_new: *mut Table<B>, key: u64) -> Option<&Node> {
         // (3) Check the node in its hazard period.
-        let cur = self.rebuild_cur.load(Ordering::SeqCst);
+        let cur = self.rebuild_cur.load(Ordering::Acquire);
         if !cur.is_null() {
             // SAFETY: a node reachable through rebuild_cur is reclaimed
             // only after rebuild_cur is cleared *and* a grace period
@@ -149,12 +184,19 @@ impl<B: BucketSet> DHashMap<B> {
     /// Lookup (paper Algorithm 4). Returns a copy of the value.
     ///
     /// `u64::MAX` is reserved (bucket sentinel) and is never present.
+    ///
+    /// Relaxed `val` load: the initial value was published by the Release
+    /// link CAS the bucket traversal synchronized with; later overwrites
+    /// (`upsert`) are racy by spec, and cross-thread read-your-write
+    /// ordering is provided externally (the completion-slot Release/
+    /// Acquire pair in the coordinator).
+    #[inline]
     pub fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
         if key == u64::MAX {
             return None;
         }
         let _g = guard.read_lock();
-        self.live_node(key).map(|n| n.val.load(Ordering::SeqCst))
+        self.live_node(key).map(|n| n.val.load(Ordering::Relaxed))
     }
 
     /// Atomic last-wins upsert: overwrite the value **in place** on the
@@ -175,7 +217,10 @@ impl<B: BucketSet> DHashMap<B> {
             {
                 let _g = guard.read_lock();
                 if let Some(n) = self.live_node(key) {
-                    n.val.store(val, Ordering::SeqCst);
+                    // Relaxed: last-wins overwrite on one location needs
+                    // only coherence; see `lookup` for the visibility
+                    // contract.
+                    n.val.store(val, Ordering::Relaxed);
                     return false;
                 }
             }
@@ -200,9 +245,9 @@ impl<B: BucketSet> DHashMap<B> {
             return None;
         }
         if let Some(n) = htp.bucket(key).find(key) {
-            return Some(n.val.load(Ordering::SeqCst));
+            return Some(n.val.load(Ordering::Relaxed));
         }
-        let htp_new = htp.ht_new.load(Ordering::SeqCst);
+        let htp_new = htp.ht_new.load(Ordering::Acquire);
         if htp_new.is_null() {
             return None;
         }
@@ -211,7 +256,7 @@ impl<B: BucketSet> DHashMap<B> {
         htp_new
             .bucket(key)
             .find(key)
-            .map(|n| n.val.load(Ordering::SeqCst))
+            .map(|n| n.val.load(Ordering::Relaxed))
     }
 
     /// Delete (paper Algorithm 5). Returns true if a node was deleted.
@@ -225,14 +270,17 @@ impl<B: BucketSet> DHashMap<B> {
         if let DeleteOutcome::Deleted(_) = htp.bucket(key).delete(key, LOGICALLY_REMOVED) {
             return true;
         }
-        let htp_new = htp.ht_new.load(Ordering::SeqCst);
+        // Acquire pair, same reasoning as `live_node`/`live_node_slow`:
+        // a miss in step (1) synchronized with the delete CAS that made
+        // the node missing, which happens-after the hazard publication.
+        let htp_new = htp.ht_new.load(Ordering::Acquire);
         if htp_new.is_null() {
             return false;
         }
         // (2) Check the hazard-period node: mark it deleted in place
         // (paper line 75). The flag is preserved by the rebuild's
         // re-insert, so the node is born dead in the new table.
-        let cur = self.rebuild_cur.load(Ordering::SeqCst);
+        let cur = self.rebuild_cur.load(Ordering::Acquire);
         if !cur.is_null() {
             // SAFETY: as in lookup.
             let n = unsafe { &*cur };
@@ -261,7 +309,9 @@ impl<B: BucketSet> DHashMap<B> {
         let node = Node::alloc(key, val);
         let _g = guard.read_lock();
         let htp = self.table();
-        let htp_new = htp.ht_new.load(Ordering::SeqCst);
+        // Acquire: see `live_node` — the new table is fully visible when
+        // its pointer is.
+        let htp_new = htp.ht_new.load(Ordering::Acquire);
         // No rebuild -> old table; rebuild in progress -> new table
         // (Lemma 4.3: the RCU barrier in rebuild makes this safe).
         let bucket = if htp_new.is_null() {
@@ -302,7 +352,10 @@ impl<B: BucketSet> DHashMap<B> {
             Err(_) => return Err(RebuildBusy),
         };
 
-        let htp_ptr = self.cur.load(Ordering::SeqCst);
+        // Acquire: the previous rebuild's swap store is also ordered by
+        // the rebuild lock; Acquire keeps this correct even for a reader
+        // path that might call in without it in the future.
+        let htp_ptr = self.cur.load(Ordering::Acquire);
         // SAFETY: we hold the rebuild lock; `cur` can only be replaced by
         // a rebuild, so the table stays alive for this whole function.
         let htp = unsafe { &*htp_ptr };
@@ -311,6 +364,10 @@ impl<B: BucketSet> DHashMap<B> {
         let htp_new_ptr = Table::<B>::alloc(nbuckets, hash);
         // SAFETY: freshly allocated, never null.
         let htp_new = unsafe { &*htp_new_ptr };
+        // SeqCst retained (writer-side protocol store, cold): this is the
+        // three-barrier protocol's first publication; barrier 1 below
+        // relies on it being ordered before the grace period for every
+        // observer. Listed in tools/seqcst_allowlist.txt.
         htp.ht_new.store(htp_new_ptr, Ordering::SeqCst);
 
         // Line 23 (barrier 1): wait for ops that may not see ht_new yet.
@@ -379,6 +436,10 @@ impl<B: BucketSet> DHashMap<B> {
                                 // other way, which would let a reader
                                 // starting mid-grace-period still fetch
                                 // the pointer (see DESIGN.md §Deviations).
+                                // SeqCst retained (cold duplicate path):
+                                // the clear must not be reordered after
+                                // the defer_free enqueue in any observable
+                                // way; allowlisted rather than re-proved.
                                 self.rebuild_cur
                                     .store(std::ptr::null_mut(), Ordering::SeqCst);
                                 // SAFETY: not in any table; unreachable
@@ -394,7 +455,10 @@ impl<B: BucketSet> DHashMap<B> {
 
         // Line 41: wait for ops still accessing nodes via old buckets.
         guard.offline_while(synchronize_rcu);
-        // Line 42: install the new table.
+        // Line 42: install the new table. SeqCst retained (writer-side
+        // protocol store between barriers 2 and 3, one per rebuild):
+        // keeps the swap totally ordered against the grace-period
+        // machinery exactly as the paper's proof sketch assumes.
         self.cur.store(htp_new_ptr, Ordering::SeqCst);
         // Line 43: wait for ops still referencing the old table.
         guard.offline_while(synchronize_rcu);
@@ -468,16 +532,19 @@ impl<B: BucketSet> DHashMap<B> {
         // reachable from it stays alive for the duration of our read-side
         // critical section (tables are freed a grace period after being
         // unpublished).
-        let mut t: &Table<B> = unsafe { &*self.cur.load(Ordering::SeqCst) };
+        let mut t: &Table<B> = unsafe { &*self.cur.load(Ordering::Acquire) };
         loop {
             for (k, v) in t.buckets().flat_map(|b| b.collect()) {
                 if seen.insert(k) {
                     out.push((k, v));
                 }
             }
-            let next = t.ht_new.load(Ordering::SeqCst);
+            // Acquire: pairs with the rebuild's ht_new publication, same
+            // reasoning as the lookup path (a node missing from `t` was
+            // unlinked by a Release CAS that happens-after it).
+            let next = t.ht_new.load(Ordering::Acquire);
             if next.is_null() {
-                // `ht_new` is published (SeqCst) before the first node is
+                // `ht_new` is published before the first node is
                 // distributed out of `t`, so null here means the scan
                 // above saw every node still owned by this table.
                 break;
@@ -485,13 +552,13 @@ impl<B: BucketSet> DHashMap<B> {
             // A rebuild is (or was) migrating t → next: catch the unique
             // node in its hazard period, then follow the chain (a second
             // rebuild may have started while we were scanning).
-            let cur = self.rebuild_cur.load(Ordering::SeqCst);
+            let cur = self.rebuild_cur.load(Ordering::Acquire);
             if !cur.is_null() {
                 // SAFETY: as in `lookup` — reclaimed only after
                 // `rebuild_cur` is cleared plus a grace period.
                 let n = unsafe { &*cur };
                 if !n.logically_removed() && seen.insert(n.key) {
-                    out.push((n.key, n.val.load(Ordering::SeqCst)));
+                    out.push((n.key, n.val.load(Ordering::Relaxed)));
                 }
             }
             // SAFETY: non-null `ht_new` tables are freed only a grace
@@ -545,11 +612,12 @@ impl<B: BucketSet> Drop for DHashMap<B> {
         // would borrow &self). A grace period covers stragglers that might
         // still be referenced by queued call_rcu callbacks? No — callbacks
         // never touch tables, only nodes they own. Direct free is safe.
-        let cur = self.cur.load(Ordering::SeqCst);
+        // Relaxed: exclusive access (&mut self).
+        let cur = self.cur.load(Ordering::Relaxed);
         if !cur.is_null() {
             // SAFETY: exclusive; Table::drop drains buckets.
             unsafe {
-                let ht_new = (*cur).ht_new.load(Ordering::SeqCst);
+                let ht_new = (*cur).ht_new.load(Ordering::Relaxed);
                 if !ht_new.is_null() {
                     drop(Box::from_raw(ht_new));
                 }

@@ -43,6 +43,8 @@ use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crossbeam_utils::CachePadded;
+
 use super::{DHashMap, HashFn, KeyExists, RebuildBusy, RebuildStats};
 use crate::lflist::{BucketSet, MichaelList, Node, LOGICALLY_REMOVED};
 use crate::rcu::{synchronize_rcu, RcuThread};
@@ -154,7 +156,11 @@ struct MigrationGauge<'a>(&'a AtomicUsize);
 
 impl<'a> MigrationGauge<'a> {
     fn enter(gauge: &'a AtomicUsize) -> Self {
-        let prev = gauge.fetch_add(1, Ordering::SeqCst);
+        // AcqRel: the migration token's Mutex already orders every
+        // enter/drop pair (at most one holder); the RMW only needs to
+        // keep the gauge itself coherent for `migrating_shards`
+        // observers, not to fence unrelated protocol state.
+        let prev = gauge.fetch_add(1, Ordering::AcqRel);
         assert_eq!(
             prev, 0,
             "staggered-migration invariant violated: a migration is already in flight"
@@ -165,7 +171,8 @@ impl<'a> MigrationGauge<'a> {
 
 impl Drop for MigrationGauge<'_> {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
+        // AcqRel: see `enter` — token-serialized, gauge-local coherence.
+        self.0.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -313,8 +320,11 @@ impl RouteSnapshot {
 /// [`merge`]: ShardedDHash::merge_shard
 pub struct ShardedDHash<B: BucketSet = MichaelList> {
     /// The routing directory (RCU-published; replaced only by split and
-    /// merge, which hold the migration token).
-    dir: AtomicPtr<Directory<B>>,
+    /// merge, which hold the migration token). Cache-padded: every op
+    /// on every thread loads this pointer, and during a split/merge
+    /// storm the publisher's stores would otherwise invalidate readers'
+    /// lines through whatever neighbor shares the cacheline.
+    dir: CachePadded<AtomicPtr<Directory<B>>>,
     /// Serializes whole-map sweeps (trylock: a second `rebuild_all` gets
     /// [`RebuildBusy`] instead of queueing behind an O(n) migration).
     rebuild_all_lock: Mutex<()>,
@@ -323,16 +333,21 @@ pub struct ShardedDHash<B: BucketSet = MichaelList> {
     migration_token: Mutex<()>,
     /// Migrations in flight — 0 or 1 by the invariant (asserted on every
     /// migration start; exposed as [`ShardedDHash::migrating_shards`] so
-    /// tests can observe the staggering from outside).
-    migrating: AtomicUsize,
+    /// tests can observe the staggering from outside). Padded so gauge
+    /// flips never bounce the `dir`/`moving` lines readers sit on.
+    migrating: CachePadded<AtomicUsize>,
     /// The node in its *cross-shard* hazard period (split/merge moves),
     /// or null. One pointer map-wide: the token admits one migration at
-    /// a time, and a migration moves one node at a time.
-    moving: AtomicPtr<Node>,
+    /// a time, and a migration moves one node at a time. Padded: a
+    /// migration stores here once per moved node while every reader in
+    /// an affected range polls it.
+    moving: CachePadded<AtomicPtr<Node>>,
     /// Guard-free mirrors of the directory's shape, for diagnostics that
-    /// must not require a registered RCU thread.
+    /// must not require a registered RCU thread. `cur_epoch` is padded
+    /// because the batcher oracle polls it per batch to validate its
+    /// cached route snapshot.
     nshards: AtomicUsize,
-    cur_epoch: AtomicU64,
+    cur_epoch: CachePadded<AtomicU64>,
     splits: AtomicU64,
     merges: AtomicU64,
     /// Next stable shard uid (see [`Slot`]); monotone, never reused.
@@ -369,13 +384,13 @@ impl<B: BucketSet> ShardedDHash<B> {
             })
             .collect();
         Self {
-            dir: AtomicPtr::new(Directory::build(0, depth, slots)),
+            dir: CachePadded::new(AtomicPtr::new(Directory::build(0, depth, slots))),
             rebuild_all_lock: Mutex::new(()),
             migration_token: Mutex::new(()),
-            migrating: AtomicUsize::new(0),
-            moving: AtomicPtr::new(std::ptr::null_mut()),
+            migrating: CachePadded::new(AtomicUsize::new(0)),
+            moving: CachePadded::new(AtomicPtr::new(std::ptr::null_mut())),
             nshards: AtomicUsize::new(nshards),
-            cur_epoch: AtomicU64::new(0),
+            cur_epoch: CachePadded::new(AtomicU64::new(0)),
             splits: AtomicU64::new(0),
             merges: AtomicU64::new(0),
             next_uid: AtomicU64::new(nshards as u64),
@@ -393,21 +408,35 @@ impl<B: BucketSet> ShardedDHash<B> {
         // period after being unpublished, and the publisher holds the
         // migration token — covered by either half of the caller
         // contract above.
-        unsafe { &*self.dir.load(Ordering::SeqCst) }
+        //
+        // Acquire pairs with `install_dir`'s Release store: it makes the
+        // directory's contents (slots, prev links, epoch) visible, plus
+        // everything sequenced before the publication — in particular
+        // the mirror stores (`nshards`, `cur_epoch`), which is the
+        // "mirrors-first" invariant `len`'s epoch re-check relies on.
+        unsafe { &*self.dir.load(Ordering::Acquire) }
     }
 
     /// Current number of shards. Guard-free: a racy-but-safe mirror (the
     /// true value lives in the directory), exact whenever no split/merge
     /// is concurrently publishing.
     pub fn shards(&self) -> usize {
-        self.nshards.load(Ordering::SeqCst)
+        // Acquire pairs with install_dir's Release mirror store; the
+        // value is racy by contract (a publication may be in flight),
+        // so no stronger ordering could sharpen it.
+        self.nshards.load(Ordering::Acquire)
     }
 
     /// Current directory epoch (bumped once per completed or in-flight
     /// split/merge publication). Guard-free mirror, like
     /// [`ShardedDHash::shards`].
     pub fn epoch(&self) -> u64 {
-        self.cur_epoch.load(Ordering::SeqCst)
+        // Acquire pairs with install_dir's Release mirror store. The
+        // batcher oracle keys its cached RouteSnapshot on this value:
+        // monotone staleness is fine (one conservatively rebuilt
+        // snapshot), torn/invented values are not — which coherence on
+        // the single word already rules out.
+        self.cur_epoch.load(Ordering::Acquire)
     }
 
     /// Completed splits.
@@ -451,7 +480,9 @@ impl<B: BucketSet> ShardedDHash<B> {
 
     /// Migrations in flight right now (0 or 1).
     pub fn migrating_shards(&self) -> usize {
-        self.migrating.load(Ordering::SeqCst)
+        // Acquire pairs with the gauge's AcqRel RMWs (diagnostic read;
+        // the invariant itself is enforced by the token + assertion).
+        self.migrating.load(Ordering::Acquire)
     }
 
     /// The ordinal of shard `s`'s merge buddy — the shard serving the
@@ -479,22 +510,49 @@ impl<B: BucketSet> ShardedDHash<B> {
         }
         let _g = guard.read_lock();
         let slot = self.dir().slot_of(key);
+        // Steady state (no split/merge touching this range): one branch,
+        // straight into the shard. The migration arm is outlined and
+        // `#[cold]` so its register pressure and the hazard-pointer poll
+        // stay off the fast path.
         if let Some(prev) = &slot.prev {
-            if let Some(n) = prev.live_node(key) {
-                return Some(n.val.load(Ordering::SeqCst));
-            }
-            let cur = self.moving.load(Ordering::SeqCst);
-            if !cur.is_null() {
-                // SAFETY: a node reachable through `moving` is reclaimed
-                // only after `moving` is cleared *and* a grace period
-                // passes; we are inside a read-side section.
-                let n = unsafe { &*cur };
-                if n.key == key && !n.logically_removed() {
-                    return Some(n.val.load(Ordering::SeqCst));
-                }
+            if let Some(v) = self.lookup_migrating(prev, key) {
+                return Some(v);
             }
         }
         slot.map.lookup(guard, key)
+    }
+
+    /// The cross-shard migration arm of [`ShardedDHash::lookup`]: source
+    /// shard, then the `moving` hazard node. `None` means "fall through
+    /// to the destination shard". Outlined and cold — it is reachable
+    /// only while the key's slot carries `prev`, i.e. during the bounded
+    /// window of one split/merge.
+    ///
+    /// The caller must be inside a read-side critical section.
+    #[cold]
+    #[inline(never)]
+    fn lookup_migrating(&self, prev: &DHashMap<B>, key: u64) -> Option<u64> {
+        if let Some(n) = prev.live_node(key) {
+            // Relaxed: same visibility contract as `DHashMap::lookup` —
+            // the initial value rode the Release link CAS that published
+            // the node, and in-place upsert overwrites order through the
+            // caller's own synchronization (see dhash/mod.rs).
+            return Some(n.val.load(Ordering::Relaxed));
+        }
+        // Acquire pairs with drain_into's Release publication of the
+        // candidate: observing the pointer makes the node's key/flags
+        // visible (the cross-shard Lemma 4.1 hazard handoff).
+        let cur = self.moving.load(Ordering::Acquire);
+        if !cur.is_null() {
+            // SAFETY: a node reachable through `moving` is reclaimed
+            // only after `moving` is cleared *and* a grace period
+            // passes; we are inside a read-side section.
+            let n = unsafe { &*cur };
+            if n.key == key && !n.logically_removed() {
+                return Some(n.val.load(Ordering::Relaxed));
+            }
+        }
+        None
     }
 
     /// Insert into the key's shard (per-shard Algorithm 6). During a
@@ -526,7 +584,9 @@ impl<B: BucketSet> ShardedDHash<B> {
             if prev.delete(guard, key) {
                 return true;
             }
-            let cur = self.moving.load(Ordering::SeqCst);
+            // Acquire: as in `lookup_migrating` — pairs with the
+            // drain's Release publication of the hazard node.
+            let cur = self.moving.load(Ordering::Acquire);
             if !cur.is_null() {
                 // SAFETY: as in lookup.
                 let n = unsafe { &*cur };
@@ -554,21 +614,27 @@ impl<B: BucketSet> ShardedDHash<B> {
                 let slot = self.dir().slot_of(key);
                 if let Some(prev) = &slot.prev {
                     if let Some(n) = prev.live_node(key) {
-                        n.val.store(val, Ordering::SeqCst);
+                        // Relaxed value stores throughout: same contract
+                        // as `DHashMap::upsert` — cross-thread "read my
+                        // upsert" visibility is the caller's edge (e.g.
+                        // the CompletionSet's Release/Acquire), not the
+                        // value word's.
+                        n.val.store(val, Ordering::Relaxed);
                         return false;
                     }
-                    let cur = self.moving.load(Ordering::SeqCst);
+                    // Acquire: as in `lookup_migrating`.
+                    let cur = self.moving.load(Ordering::Acquire);
                     if !cur.is_null() {
                         // SAFETY: as in lookup.
                         let n = unsafe { &*cur };
                         if n.key == key && !n.logically_removed() {
-                            n.val.store(val, Ordering::SeqCst);
+                            n.val.store(val, Ordering::Relaxed);
                             return false;
                         }
                     }
                 }
                 if let Some(n) = slot.map.live_node(key) {
-                    n.val.store(val, Ordering::SeqCst);
+                    n.val.store(val, Ordering::Relaxed);
                     return false;
                 }
             }
@@ -699,7 +765,9 @@ impl<B: BucketSet> ShardedDHash<B> {
         let mut dropped_dup = 0u64;
         // SAFETY: we hold the migration token, so `src` cannot be
         // mid-rebuild (its `cur` is stable and its `ht_new` is null).
-        let src_table = unsafe { &*src.cur.load(Ordering::SeqCst) };
+        // Acquire: the table was published by a Release-or-stronger
+        // store (construction or a token-serialized rebuild swap).
+        let src_table = unsafe { &*src.cur.load(Ordering::Acquire) };
         for bucket in src_table.buckets() {
             loop {
                 let popped = bucket.take_first_for_distribution(&mut |cand| {
@@ -731,6 +799,11 @@ impl<B: BucketSet> ShardedDHash<B> {
                                 // A concurrent insert won the destination;
                                 // clear `moving` BEFORE the deferred free
                                 // (the rebuild loop's ordering fix).
+                                // SeqCst retained (writer-side protocol
+                                // store, cold): mirrors the rebuild dup
+                                // path's hazard-clear — see DESIGN.md
+                                // §Memory orderings. Listed in
+                                // tools/seqcst_allowlist.txt.
                                 self.moving.store(std::ptr::null_mut(), Ordering::SeqCst);
                                 // SAFETY: not in any table; unreachable
                                 // once `moving` is cleared.
@@ -755,9 +828,16 @@ impl<B: BucketSet> ShardedDHash<B> {
         // through the new directory is guaranteed to read the new epoch,
         // so epoch re-checks (the pre-route oracle, `len`'s fast path)
         // can only err toward the conservative fallback.
-        self.nshards.store(d.nshards(), Ordering::SeqCst);
-        self.cur_epoch.store(d.epoch, Ordering::SeqCst);
-        self.dir.store(new_dir, Ordering::SeqCst);
+        //
+        // Release on all three suffices for that invariant: the mirror
+        // stores are sequenced before the `dir` Release store, so a
+        // reader whose `dir` Acquire load returns `new_dir` has the new
+        // mirror values happen-before its subsequent mirror loads —
+        // coherence then forbids it reading the older epoch. The
+        // guard-free mirror accessors pair with these stores directly.
+        self.nshards.store(d.nshards(), Ordering::Release);
+        self.cur_epoch.store(d.epoch, Ordering::Release);
+        self.dir.store(new_dir, Ordering::Release);
     }
 
     /// Split shard `s` online: its keys migrate to two child shards,
@@ -812,7 +892,9 @@ impl<B: BucketSet> ShardedDHash<B> {
         if local_size == 1 && d0.depth >= MAX_DEPTH {
             return Err(ResizeError::AtMaxDepth);
         }
-        let d0_ptr = self.dir.load(Ordering::SeqCst);
+        // Acquire (token held: we are the only dir writer; the load
+        // only needs to see the last published directory).
+        let d0_ptr = self.dir.load(Ordering::Acquire);
         let mig = MigrationGauge::enter(&self.migrating);
         let parent = d0.shard_map(s).clone();
         let c0 = Arc::new(DHashMap::with_hash(nbuckets, hash));
@@ -952,7 +1034,9 @@ impl<B: BucketSet> ShardedDHash<B> {
         let Some(b) = d0.buddy_of(s) else {
             return Err(ResizeError::Unmergeable);
         };
-        let d0_ptr = self.dir.load(Ordering::SeqCst);
+        // Acquire (token held: we are the only dir writer; the load
+        // only needs to see the last published directory).
+        let d0_ptr = self.dir.load(Ordering::Acquire);
         let mig = MigrationGauge::enter(&self.migrating);
         let src_s = d0.shard_map(s).clone();
         let src_b = d0.shard_map(b).clone();
@@ -1145,12 +1229,14 @@ impl<B: BucketSet> ShardedDHash<B> {
             }
         }
         // (2) The cross-shard hazard node.
-        let cur = self.moving.load(Ordering::SeqCst);
+        // Acquire: pairs with the drain's Release publication, as in
+        // `lookup_migrating`.
+        let cur = self.moving.load(Ordering::Acquire);
         if !cur.is_null() {
             // SAFETY: as in lookup.
             let n = unsafe { &*cur };
             if !n.logically_removed() && seen.insert(n.key) {
-                out.push((n.key, n.val.load(Ordering::SeqCst)));
+                out.push((n.key, n.val.load(Ordering::Relaxed)));
             }
         }
         // (3) Destination shards.
@@ -1178,7 +1264,7 @@ impl<B: BucketSet> ShardedDHash<B> {
     pub fn len(&self, guard: &RcuThread) -> usize {
         let _g = guard.read_lock();
         let d = self.dir();
-        if self.moving.load(Ordering::SeqCst).is_null()
+        if self.moving.load(Ordering::Acquire).is_null()
             && d.slots.iter().all(|sl| sl.prev.is_none())
         {
             let n = (0..d.nshards()).map(|s| d.shard_map(s).len(guard)).sum();
@@ -1228,7 +1314,7 @@ impl<B: BucketSet> ShardedDHash<B> {
 impl<B: BucketSet> Drop for ShardedDHash<B> {
     fn drop(&mut self) {
         // Exclusive access: no concurrent ops, no migration in flight.
-        let d = self.dir.load(Ordering::SeqCst);
+        let d = self.dir.load(Ordering::Relaxed);
         if !d.is_null() {
             // SAFETY: exclusive; dropping the directory drops its shard
             // Arcs, and each last-referenced DHashMap drains itself.

@@ -40,15 +40,21 @@ unsafe impl Sync for CowSortedArray {}
 
 impl CowSortedArray {
     fn load_version(&self) -> &Version {
+        // Acquire: pairs with the Release half of `publish`'s swap so the
+        // new version's contents (the Vec it points to) are visible —
+        // this one load is the entirety of the wait-free read path.
         // SAFETY: the version pointer is never null and, under the
         // caller's RCU read-side section, not yet reclaimed.
-        unsafe { &*self.current.load(Ordering::SeqCst) }
+        unsafe { &*self.current.load(Ordering::Acquire) }
     }
 
     /// Publish `new`, retiring the old version through RCU. Lock held.
     fn publish(&self, new: Version) {
         let new_ptr = Box::into_raw(Box::new(new));
-        let old = self.current.swap(new_ptr, Ordering::SeqCst);
+        // AcqRel: Release publishes the new version's contents to
+        // `load_version`'s Acquire; Acquire orders the retirement of the
+        // old version after every read we did of it under the lock.
+        let old = self.current.swap(new_ptr, Ordering::AcqRel);
         let retired = SendVersion(old);
         call_rcu(move || {
             let retired = retired; // move the wrapper, not the raw field
@@ -135,14 +141,17 @@ unsafe impl BucketSet for CowSortedArray {
                 // Exactly-one-deleter: CAS the flag in from an unflagged
                 // state (a plain OR could "succeed" on an already-dead
                 // node).
+                // AcqRel flag CAS: the Release half makes the mark (the
+                // delete's linearization point) publish prior stores, the
+                // same pairing as Node::set_flag.
                 loop {
-                    let old = (*node).next.load(Ordering::SeqCst);
+                    let old = (*node).next.load(Ordering::Acquire);
                     if old & super::FLAG_MASK != 0 {
                         return DeleteOutcome::NotFound; // already dead
                     }
                     if (*node)
                         .next
-                        .compare_exchange(old, old | flag, Ordering::SeqCst, Ordering::SeqCst)
+                        .compare_exchange(old, old | flag, Ordering::AcqRel, Ordering::Acquire)
                         .is_ok()
                     {
                         break;
@@ -179,14 +188,15 @@ unsafe impl BucketSet for CowSortedArray {
         // SAFETY: RCU-live entries.
         v.iter()
             .filter(|&&p| unsafe { (*p).flags() } == 0)
-            .map(|&p| unsafe { ((*p).key, (*p).val.load(Ordering::SeqCst)) })
+            .map(|&p| unsafe { ((*p).key, (*p).val.load(Ordering::Relaxed)) })
             .collect()
     }
 
     fn drain_exclusive(&mut self) {
         // SAFETY: exclusive access; free nodes then the version vec.
+        // Relaxed: `&mut self` excludes concurrent readers and writers.
         unsafe {
-            let v = self.current.load(Ordering::SeqCst);
+            let v = self.current.load(Ordering::Relaxed);
             for &p in (*v).iter() {
                 Node::free(p);
             }
@@ -200,7 +210,7 @@ impl Drop for CowSortedArray {
         self.drain_exclusive();
         // SAFETY: exclusive; reclaim the final (now empty) version.
         unsafe {
-            drop(Box::from_raw(self.current.load(Ordering::SeqCst)));
+            drop(Box::from_raw(self.current.load(Ordering::Relaxed)));
         }
     }
 }
@@ -218,7 +228,7 @@ mod tests {
             b.insert(Node::alloc(k, k * 2)).unwrap();
         }
         assert_eq!(b.len(), 3);
-        assert_eq!(b.find(2).unwrap().val.load(Ordering::SeqCst), 4);
+        assert_eq!(b.find(2).unwrap().val.load(Ordering::Relaxed), 4);
         assert!(matches!(
             b.delete(2, LOGICALLY_REMOVED),
             DeleteOutcome::Deleted(_)
@@ -242,7 +252,7 @@ mod tests {
         let n1 = b.find(1).unwrap();
         b.delete(2, LOGICALLY_REMOVED);
         // n1 still readable.
-        assert_eq!(n1.val.load(Ordering::SeqCst), 10);
+        assert_eq!(n1.val.load(Ordering::Relaxed), 10);
         drop(g);
         t.quiescent_state();
         rcu_barrier();

@@ -88,13 +88,24 @@ impl MichaelList {
     /// `IS_BEING_DISTRIBUTED` (alone or together with a concurrent
     /// `LOGICALLY_REMOVED` from the hazard-period delete path) belong to
     /// the rebuild thread, which re-inserts or frees them itself.
+    /// Memory orderings (DESIGN.md §Memory orderings, cluster L): every
+    /// link-word load is `Acquire` and every link-word CAS publishes with
+    /// `Release` (via `AcqRel`). Invariant: a traversal that observes a
+    /// node pointer observes the node's `key`/initial `val` (written
+    /// before the Release link CAS that published it), and a traversal
+    /// that observes a mark observes everything the marker published
+    /// first — for the rebuild path that includes the `rebuild_cur`
+    /// hazard store (Lemma 4.1 needs mark-implies-hazard-visible, which
+    /// is exactly Release→Acquire on the link word; no total order over
+    /// unrelated atomics, i.e. no SeqCst, is required). Failed CASes use
+    /// `Acquire`: the observed value seeds the next iteration's reads.
     fn search(&self, key: u64) -> Pos {
         'retry: loop {
             let mut prev: *const AtomicUsize = &self.head;
             // SAFETY: `prev` points to either the bucket head or the
             // `next` field of a node kept alive by RCU for the duration of
             // the caller's read-side critical section.
-            let mut cur = untag(unsafe { (*prev).load(Ordering::SeqCst) });
+            let mut cur = untag(unsafe { (*prev).load(Ordering::Acquire) });
             loop {
                 if cur.is_null() {
                     return Pos {
@@ -104,12 +115,12 @@ impl MichaelList {
                     };
                 }
                 // SAFETY: as above; RCU keeps `cur` alive.
-                let next_t = unsafe { (*cur).next.load(Ordering::SeqCst) };
+                let next_t = unsafe { (*cur).next.load(Ordering::Acquire) };
                 // Re-validate: `prev` must still point at `cur` with no
                 // flags. Fails if (a) a concurrent op unlinked/inserted
                 // here, (b) the node holding `prev` got marked, or (c) a
                 // rebuild reused a node under us. Restart from head.
-                if unsafe { (*prev).load(Ordering::SeqCst) } != cur as usize {
+                if unsafe { (*prev).load(Ordering::Acquire) } != cur as usize {
                     continue 'retry;
                 }
                 if tag_of(next_t) != 0 {
@@ -122,8 +133,8 @@ impl MichaelList {
                             .compare_exchange(
                                 cur as usize,
                                 next,
-                                Ordering::SeqCst,
-                                Ordering::SeqCst,
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
                             )
                             .is_ok()
                     } {
@@ -170,27 +181,33 @@ impl MichaelList {
             // Point the node at its successor. CAS (not store) so a delete
             // arriving through `rebuild_cur` between our load and the link
             // CAS cannot have its LOGICALLY_REMOVED bit overwritten.
+            // Acquire load + AcqRel CAS: must observe (and preserve) a
+            // concurrent deleter's mark, and the successor pointer must be
+            // in place before the link CAS below publishes the node.
             loop {
                 // SAFETY: node is ours or (rebuild path) unlinked + owned.
-                let old = unsafe { (*node).next.load(Ordering::SeqCst) };
+                let old = unsafe { (*node).next.load(Ordering::Acquire) };
                 let new = pos.cur as usize | (old & LOGICALLY_REMOVED);
                 if unsafe {
                     (*node)
                         .next
-                        .compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst)
+                        .compare_exchange(old, new, Ordering::AcqRel, Ordering::Acquire)
                         .is_ok()
                 } {
                     break;
                 }
             }
+            // Link CAS. Release half publishes the node's key/val/next to
+            // any traversal that Acquire-loads this link word; Acquire
+            // half revalidates against concurrent unlinks.
             // SAFETY: `pos.prev` valid under RCU (revalidated by the CAS).
             if unsafe {
                 (*pos.prev)
                     .compare_exchange(
                         pos.cur as usize,
                         node as usize,
-                        Ordering::SeqCst,
-                        Ordering::SeqCst,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
                     )
                     .is_ok()
             } {
@@ -209,11 +226,20 @@ impl MichaelList {
             }
             let cur = pos.cur;
             // Logical delete: mark `next`. The expected value is the
-            // unmarked snapshot, so exactly one deleter can win.
+            // unmarked snapshot, so exactly one deleter can win. AcqRel:
+            // the Release half makes the mark (delete's linearization
+            // point) publish everything sequenced before it — on the
+            // rebuild's hazard path that is the `rebuild_cur` store Lemma
+            // 4.1 depends on.
             if unsafe {
                 (*cur)
                     .next
-                    .compare_exchange(pos.next, pos.next | flag, Ordering::SeqCst, Ordering::SeqCst)
+                    .compare_exchange(
+                        pos.next,
+                        pos.next | flag,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
                     .is_err()
             } {
                 // Another op marked or relinked `cur`; retry. If it was
@@ -222,10 +248,11 @@ impl MichaelList {
                 continue;
             }
             // Physical unlink. On success the unlinker reclaims iff the
-            // node carries only LOGICALLY_REMOVED.
+            // node carries only LOGICALLY_REMOVED. AcqRel/Acquire as in
+            // `search`'s unlink CAS.
             if unsafe {
                 (*pos.prev)
-                    .compare_exchange(cur as usize, pos.next, Ordering::SeqCst, Ordering::SeqCst)
+                    .compare_exchange(cur as usize, pos.next, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
             } {
                 if flag == LOGICALLY_REMOVED {
@@ -298,15 +325,19 @@ unsafe impl BucketSet for MichaelList {
             // Hazard publication precedes the logical delete (Alg. 3
             // lines 26 -> 29).
             publish(cur);
-            // Logical removal for distribution (expected: unmarked).
+            // Logical removal for distribution (expected: unmarked). The
+            // AcqRel mark's Release half orders the hazard publication
+            // above before the mark: a reader that sees this node marked
+            // (and thus possibly missing from the old table) is guaranteed
+            // to see `rebuild_cur` pointing at it (Lemma 4.1).
             if unsafe {
                 (*cur)
                     .next
                     .compare_exchange(
                         pos.next,
                         pos.next | IS_BEING_DISTRIBUTED,
-                        Ordering::SeqCst,
-                        Ordering::SeqCst,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
                     )
                     .is_err()
             } {
@@ -316,7 +347,7 @@ unsafe impl BucketSet for MichaelList {
             // rebuild reuses the node, so it must be out of the chain).
             if unsafe {
                 (*pos.prev)
-                    .compare_exchange(cur as usize, pos.next, Ordering::SeqCst, Ordering::SeqCst)
+                    .compare_exchange(cur as usize, pos.next, Ordering::AcqRel, Ordering::Acquire)
                     .is_err()
             } {
                 // SAFETY: key immutable, node RCU-live.
@@ -332,13 +363,16 @@ unsafe impl BucketSet for MichaelList {
 
     fn collect(&self) -> Vec<(u64, u64)> {
         let mut out = Vec::new();
-        let mut cur = untag(self.head.load(Ordering::SeqCst));
+        let mut cur = untag(self.head.load(Ordering::Acquire));
         while !cur.is_null() {
             // SAFETY: alive under RCU (callers hold a read-side section;
             // tests hold exclusive access).
-            let next_t = unsafe { (*cur).next.load(Ordering::SeqCst) };
+            let next_t = unsafe { (*cur).next.load(Ordering::Acquire) };
             if tag_of(next_t) == 0 && !Self::is_sentinel(cur) {
-                unsafe { out.push(((*cur).key, (*cur).val.load(Ordering::SeqCst))) };
+                // Relaxed val: the initial value was published by the
+                // Release link CAS our Acquire walk synchronized with;
+                // later upserts are racy-by-spec for a snapshot.
+                unsafe { out.push(((*cur).key, (*cur).val.load(Ordering::Relaxed))) };
             }
             cur = untag(next_t);
         }
@@ -349,9 +383,9 @@ unsafe impl BucketSet for MichaelList {
         let mut cur = untag(*self.head.get_mut());
         while !cur.is_null() {
             // SAFETY: exclusive access (`&mut self`), no concurrent
-            // readers can exist; free immediately.
+            // readers can exist; free immediately (Relaxed suffices).
             unsafe {
-                let next = untag((*cur).next.load(Ordering::SeqCst));
+                let next = untag((*cur).next.load(Ordering::Relaxed));
                 Node::free(cur);
                 cur = next;
             }
@@ -400,7 +434,7 @@ mod tests {
             Ok(()) => panic!("duplicate accepted"),
         }
         assert_eq!(l.len(), 1);
-        assert_eq!(l.find(4).unwrap().val.load(Ordering::SeqCst), 1);
+        assert_eq!(l.find(4).unwrap().val.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -428,7 +462,7 @@ mod tests {
         assert_eq!(l.delete(10, LOGICALLY_REMOVED), DeleteOutcome::NotFound);
         // Same key can be inserted again.
         l.insert(Node::alloc(10, 2)).unwrap();
-        assert_eq!(l.find(10).unwrap().val.load(Ordering::SeqCst), 2);
+        assert_eq!(l.find(10).unwrap().val.load(Ordering::Relaxed), 2);
         t.quiescent_state();
         rcu_barrier();
     }
@@ -580,7 +614,7 @@ mod tests {
             hs.push(std::thread::spawn(move || {
                 let g = RcuThread::register();
                 let mut i = 0u64;
-                while !s2.load(Ordering::SeqCst) {
+                while !s2.load(Ordering::Relaxed) {
                     let k = (t * 7 + i) % 64;
                     if i % 2 == 0 {
                         if let Err(p) = l2.insert(Node::alloc(k, i)) {
@@ -597,7 +631,7 @@ mod tests {
             }));
         }
         std::thread::sleep(std::time::Duration::from_millis(300));
-        stop.store(true, Ordering::SeqCst);
+        stop.store(true, Ordering::Relaxed);
         let total: u64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
         assert!(total > 1000, "too few iterations: {total}");
         // Structural invariant after the dust settles: sorted unique keys.

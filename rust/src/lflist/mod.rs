@@ -120,9 +120,13 @@ impl Node {
     }
 
     /// The flag bits of this node's `next` word.
+    ///
+    /// Acquire: pairs with the AcqRel flag RMWs / link CASes so a reader
+    /// that observes a mark also observes everything the marker published
+    /// before it (DESIGN.md §Memory orderings, cluster L).
     #[inline(always)]
     pub fn flags(&self) -> usize {
-        self.next.load(Ordering::SeqCst) & FLAG_MASK
+        self.next.load(Ordering::Acquire) & FLAG_MASK
     }
 
     /// True if a user delete has logically removed this node.
@@ -133,15 +137,21 @@ impl Node {
 
     /// Atomically set flag bits (paper's `set_flag` helper, Alg. 2).
     /// Returns the *previous* flag bits.
+    ///
+    /// AcqRel: the Release half publishes the marker's prior stores with
+    /// the mark (a logical delete is the linearization point of delete);
+    /// the Acquire half orders the marker's subsequent unlink attempt
+    /// after any link state it read here.
     #[inline]
     pub fn set_flag(&self, flag: usize) -> usize {
-        self.next.fetch_or(flag & FLAG_MASK, Ordering::SeqCst) & FLAG_MASK
+        self.next.fetch_or(flag & FLAG_MASK, Ordering::AcqRel) & FLAG_MASK
     }
 
     /// Atomically clear flag bits (paper's `clean_flag` helper, Alg. 2).
+    /// AcqRel for the same pairing as [`Node::set_flag`].
     #[inline]
     pub fn clean_flag(&self, flag: usize) {
-        self.next.fetch_and(!(flag & FLAG_MASK), Ordering::SeqCst);
+        self.next.fetch_and(!(flag & FLAG_MASK), Ordering::AcqRel);
     }
 }
 

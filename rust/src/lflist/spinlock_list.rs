@@ -72,13 +72,17 @@ impl SpinLock {
 /// `link` must point to a valid link word (bucket head or a live node's
 /// `next` field) and the caller must hold the bucket lock (so no other
 /// thread rewrites the *pointer* part concurrently).
+///
+/// Orderings: Acquire load observes a racing hazard-period mark; AcqRel
+/// CAS publishes the pointed-to node's contents (insert's link step) with
+/// its Release half — the same pairing as the lock-free list's link CAS.
 unsafe fn set_link(link: &AtomicUsize, target: usize) {
     debug_assert_eq!(target & FLAG_MASK, 0);
     loop {
-        let old = link.load(Ordering::SeqCst);
+        let old = link.load(Ordering::Acquire);
         let new = target | (old & FLAG_MASK);
         if link
-            .compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst)
+            .compare_exchange(old, new, Ordering::AcqRel, Ordering::Acquire)
             .is_ok()
         {
             return;
@@ -106,13 +110,13 @@ impl SpinlockList {
     unsafe fn prune_locked(&self) {
         let mut pp: *const AtomicUsize = &self.head;
         loop {
-            let cur = untag((*pp).load(Ordering::SeqCst));
+            let cur = untag((*pp).load(Ordering::Acquire));
             if cur.is_null() {
                 return;
             }
             let flags = (*cur).flags();
             if flags != 0 {
-                let next = untag((*cur).next.load(Ordering::SeqCst));
+                let next = untag((*cur).next.load(Ordering::Acquire));
                 set_link(&*pp, next as usize);
                 if flags == LOGICALLY_REMOVED {
                     Node::defer_free(cur);
@@ -141,8 +145,11 @@ unsafe impl BucketSet for SpinlockList {
         self.lock.with(|| {
             // SAFETY: lock held, chain stable; refs stay valid past unlock
             // thanks to RCU-deferred reclamation.
+            // Acquire link loads: the chain structure is lock-private,
+            // but flag bits arrive from hazard-period deleters outside
+            // the lock (AcqRel RMWs in Node::set_flag).
             unsafe {
-                let mut cur = untag(self.head.load(Ordering::SeqCst));
+                let mut cur = untag(self.head.load(Ordering::Acquire));
                 while !cur.is_null() {
                     let k = (*cur).key;
                     if k == key {
@@ -155,7 +162,7 @@ unsafe impl BucketSet for SpinlockList {
                     if k > key {
                         return None;
                     }
-                    cur = untag((*cur).next.load(Ordering::SeqCst));
+                    cur = untag((*cur).next.load(Ordering::Acquire));
                 }
                 None
             }
@@ -169,10 +176,10 @@ unsafe impl BucketSet for SpinlockList {
                 self.prune_locked();
                 let key = (*node).key;
                 let mut pp: *const AtomicUsize = &self.head;
-                let mut cur = untag((*pp).load(Ordering::SeqCst));
+                let mut cur = untag((*pp).load(Ordering::Acquire));
                 while !cur.is_null() && (*cur).key < key {
                     pp = &(*cur).next;
-                    cur = untag((*cur).next.load(Ordering::SeqCst));
+                    cur = untag((*cur).next.load(Ordering::Acquire));
                 }
                 if !cur.is_null() && (*cur).key == key {
                     return Err(node);
@@ -180,11 +187,11 @@ unsafe impl BucketSet for SpinlockList {
                 // Point the node at its successor, preserving a racing
                 // LOGICALLY_REMOVED (hazard-period delete, §4.4).
                 loop {
-                    let old = (*node).next.load(Ordering::SeqCst);
+                    let old = (*node).next.load(Ordering::Acquire);
                     let new = cur as usize | (old & LOGICALLY_REMOVED);
                     if (*node)
                         .next
-                        .compare_exchange(old, new, Ordering::SeqCst, Ordering::SeqCst)
+                        .compare_exchange(old, new, Ordering::AcqRel, Ordering::Acquire)
                         .is_ok()
                     {
                         break;
@@ -202,7 +209,7 @@ unsafe impl BucketSet for SpinlockList {
             unsafe {
                 let mut pp: *const AtomicUsize = &self.head;
                 loop {
-                    let cur = untag((*pp).load(Ordering::SeqCst));
+                    let cur = untag((*pp).load(Ordering::Acquire));
                     if cur.is_null() {
                         return DeleteOutcome::NotFound;
                     }
@@ -212,7 +219,7 @@ unsafe impl BucketSet for SpinlockList {
                             return DeleteOutcome::NotFound; // already dead
                         }
                         (*cur).set_flag(flag);
-                        let next = untag((*cur).next.load(Ordering::SeqCst));
+                        let next = untag((*cur).next.load(Ordering::Acquire));
                         set_link(&*pp, next as usize);
                         if flag == LOGICALLY_REMOVED {
                             Node::defer_free(cur);
@@ -233,7 +240,7 @@ unsafe impl BucketSet for SpinlockList {
             // SAFETY: lock held.
             unsafe {
                 self.prune_locked();
-                let h = untag(self.head.load(Ordering::SeqCst));
+                let h = untag(self.head.load(Ordering::Acquire));
                 if h.is_null() {
                     None
                 } else {
@@ -252,12 +259,12 @@ unsafe impl BucketSet for SpinlockList {
             let mut out = Vec::new();
             // SAFETY: lock held.
             unsafe {
-                let mut cur = untag(self.head.load(Ordering::SeqCst));
+                let mut cur = untag(self.head.load(Ordering::Acquire));
                 while !cur.is_null() {
                     if (*cur).flags() == 0 {
-                        out.push(((*cur).key, (*cur).val.load(Ordering::SeqCst)));
+                        out.push(((*cur).key, (*cur).val.load(Ordering::Relaxed)));
                     }
-                    cur = untag((*cur).next.load(Ordering::SeqCst));
+                    cur = untag((*cur).next.load(Ordering::Acquire));
                 }
             }
             out
@@ -266,14 +273,15 @@ unsafe impl BucketSet for SpinlockList {
 
     fn drain_exclusive(&mut self) {
         // SAFETY: exclusive access.
+        // Relaxed: exclusive access, no concurrent readers or writers.
         unsafe {
-            let mut cur = untag(self.head.load(Ordering::SeqCst));
+            let mut cur = untag(self.head.load(Ordering::Relaxed));
             while !cur.is_null() {
-                let next = untag((*cur).next.load(Ordering::SeqCst));
+                let next = untag((*cur).next.load(Ordering::Relaxed));
                 Node::free(cur);
                 cur = next;
             }
-            self.head.store(0, Ordering::SeqCst);
+            self.head.store(0, Ordering::Relaxed);
         }
     }
 }

@@ -19,10 +19,14 @@
 //!   passed through a quiescent state after the bump, so no reader can
 //!   still hold a reference obtained before it.
 //!
-//! `SeqCst` is used on the `ctr`/`GP` protocol accesses. This is the
-//! correctness-first choice; the §Perf pass measures the read-side cost
-//! (see `EXPERIMENTS.md §Perf` — quiescent-state announcement is a single
-//! uncontended load+store and does not appear in profiles).
+//! The `ctr`/`GP` protocol accesses use acquire/release pairs, not
+//! `SeqCst`: a quiescent-state announcement stores the *acquired* `GP`
+//! value into `ctr` with `Release`, so a waiter that observes
+//! `ctr >= g+1` with `Acquire` knows the reader both finished its prior
+//! section (Release→Acquire on `ctr`) and saw every publication that
+//! preceded the bump (the stored value proves the reader's `Acquire`
+//! load of `GP` synchronized with the `AcqRel` bump). Per-site rationale
+//! lives in `qsbr.rs` and DESIGN.md §Memory orderings.
 //!
 //! ## Usage
 //!

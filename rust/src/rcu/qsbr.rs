@@ -1,6 +1,22 @@
 //! QSBR grace-period machinery: thread records, the global grace-period
 //! counter, and `synchronize_rcu`.
+//!
+//! Memory-ordering contract (full per-site table in DESIGN.md §Memory
+//! orderings): the protocol needs only acquire/release pairs, no SeqCst.
+//!
+//! * Writer side: a publication (e.g. a new table pointer store) is
+//!   sequenced-before `gp.fetch_add(1, AcqRel)` in [`RcuDomain::synchronize`].
+//! * Reader side: [`RcuThread::quiescent_state`] loads `gp` with `Acquire`
+//!   and stores that very value into its `ctr` with `Release`. The stored
+//!   value carries the proof: if the waiter later observes
+//!   `ctr >= target`, the reader's `gp` load must have synchronized with
+//!   the `target` bump, so the reader's *next* read-side section sees every
+//!   pre-grace-period publication — it cannot resurrect a stale pointer.
+//! * The waiter's `Acquire` load of `ctr` synchronizes with the reader's
+//!   `Release` store, so everything the reader did in its previous section
+//!   happens-before the writer frees retired memory.
 
+use crossbeam_utils::CachePadded;
 use std::cell::Cell;
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -9,8 +25,13 @@ use std::sync::{Arc, Mutex};
 /// One registered reader thread. `ctr == 0` means offline; otherwise the
 /// value of the global grace-period counter at the thread's most recent
 /// quiescent state.
+///
+/// Cache-padded: each reader stores to its own `ctr` on every quiescent
+/// state, and an unpadded `Vec<Arc<..>>` registry could land two records'
+/// allocations on one line, making every reader's announcement invalidate
+/// its neighbour's.
 struct ThreadRecord {
-    ctr: AtomicU64,
+    ctr: CachePadded<AtomicU64>,
 }
 
 /// The RCU domain: the global grace-period counter plus the registry of
@@ -23,6 +44,10 @@ pub struct RcuDomain {
     /// calls batch behind each other, exactly like liburcu's `gp_lock`).
     gp_lock: Mutex<()>,
     registry: Mutex<Vec<Arc<ThreadRecord>>>,
+    /// Number of times a grace-period wait escalated all the way to
+    /// `thread::sleep` (observable so tests can pin the no-reader fast
+    /// path: a grace period with no stalled reader must never sleep).
+    sleeps: AtomicU64,
 }
 
 impl Default for RcuDomain {
@@ -37,13 +62,22 @@ impl RcuDomain {
             gp: AtomicU64::new(1),
             gp_lock: Mutex::new(()),
             registry: Mutex::new(Vec::new()),
+            sleeps: AtomicU64::new(0),
         }
+    }
+
+    /// How many grace-period waits have escalated to sleeping since the
+    /// domain was created.
+    pub fn sleep_count(&self) -> u64 {
+        self.sleeps.load(Ordering::Relaxed)
     }
 
     fn register(&'static self) -> RcuThread {
         let rec = Arc::new(ThreadRecord {
             // Born online, as if it had just announced a quiescent state.
-            ctr: AtomicU64::new(self.gp.load(Ordering::SeqCst)),
+            // Acquire: pairs with the AcqRel gp bump so the new thread's
+            // first section sees every pre-registration publication.
+            ctr: CachePadded::new(AtomicU64::new(self.gp.load(Ordering::Acquire))),
         });
         self.registry.lock().unwrap().push(rec.clone());
         RcuThread {
@@ -61,34 +95,52 @@ impl RcuDomain {
         // offline for the duration (its read-side references are its own
         // responsibility — calling synchronize_rcu inside a read-side
         // critical section is a bug, same as in liburcu).
+        //
+        // AcqRel swap: the Release half publishes the caller's preceding
+        // section to whoever observes the 0.
         let restore = caller.map(|t| {
-            let prev = t.rec.ctr.swap(0, Ordering::SeqCst);
+            let prev = t.rec.ctr.swap(0, Ordering::AcqRel);
             (t, prev)
         });
 
         {
             let _g = self.gp_lock.lock().unwrap();
-            let target = self.gp.fetch_add(1, Ordering::SeqCst) + 1;
+            // AcqRel: Release makes every store sequenced-before this call
+            // (the retiring writer's publications) visible to readers whose
+            // Acquire gp load returns >= target; Acquire orders the bump
+            // after the previous grace period's ctr observations.
+            let target = self.gp.fetch_add(1, Ordering::AcqRel) + 1;
             // Snapshot the registry; threads registered *after* the bump
             // cannot hold pre-bump references, so the snapshot is enough.
             let records: Vec<Arc<ThreadRecord>> =
                 self.registry.lock().unwrap().iter().cloned().collect();
             for rec in records {
+                // Escalating backoff: pure spin while the reader is likely
+                // mid-operation, yield to share a core, and only then sleep
+                // (exponentially, capped) for genuinely stalled readers. A
+                // reader that is already offline or current breaks on the
+                // first load — that path must never sleep (pinned by
+                // `no_reader_grace_period_never_sleeps`).
                 let mut spins = 0u32;
+                let mut sleep_us = 1u64;
                 loop {
-                    let c = rec.ctr.load(Ordering::SeqCst);
+                    // Acquire: pairs with the reader's Release ctr store so
+                    // the reader's completed section happens-before any
+                    // post-grace-period free.
+                    let c = rec.ctr.load(Ordering::Acquire);
                     if c == 0 || c >= target {
                         break;
                     }
                     spins += 1;
-                    if spins < 64 {
+                    if spins < 128 {
                         std::hint::spin_loop();
-                    } else {
+                    } else if spins < 1024 {
                         // Single-core friendliness: give the reader a turn.
                         std::thread::yield_now();
-                        if spins > 4096 {
-                            std::thread::sleep(std::time::Duration::from_micros(50));
-                        }
+                    } else {
+                        self.sleeps.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(std::time::Duration::from_micros(sleep_us));
+                        sleep_us = (sleep_us * 2).min(128);
                     }
                 }
             }
@@ -96,8 +148,11 @@ impl RcuDomain {
 
         if let Some((t, prev)) = restore {
             if prev != 0 {
-                // Re-online at the *current* GP value.
-                t.rec.ctr.store(self.gp.load(Ordering::SeqCst), Ordering::SeqCst);
+                // Re-online at the *current* GP value (Acquire/Release pair
+                // as in `quiescent_state`).
+                t.rec
+                    .ctr
+                    .store(self.gp.load(Ordering::Acquire), Ordering::Release);
             }
         }
     }
@@ -105,8 +160,9 @@ impl RcuDomain {
     fn deregister(&self, rec: &Arc<ThreadRecord>) {
         // Go offline FIRST: an in-flight `synchronize` may hold a snapshot
         // containing this record; a frozen non-zero ctr would stall that
-        // grace period forever once the thread is gone.
-        rec.ctr.store(0, Ordering::SeqCst);
+        // grace period forever once the thread is gone. Release publishes
+        // the thread's final section to the waiter's Acquire load.
+        rec.ctr.store(0, Ordering::Release);
         let mut reg = self.registry.lock().unwrap();
         if let Some(pos) = reg.iter().position(|r| Arc::ptr_eq(r, rec)) {
             reg.swap_remove(pos);
@@ -140,11 +196,11 @@ pub(crate) fn with_current_offline<R>(f: impl FnOnce() -> R) -> R {
     // SAFETY: the record outlives the RcuThread guard that set CURRENT and
     // the guard clears CURRENT on drop, so `cur` is valid here.
     let rec = unsafe { &*cur };
-    let prev = rec.ctr.swap(0, Ordering::SeqCst);
+    let prev = rec.ctr.swap(0, Ordering::AcqRel);
     let r = f();
     if prev != 0 {
         rec.ctr
-            .store(GLOBAL.gp.load(Ordering::SeqCst), Ordering::SeqCst);
+            .store(GLOBAL.gp.load(Ordering::Acquire), Ordering::Release);
     }
     r
 }
@@ -192,6 +248,10 @@ impl RcuThread {
 
     /// Announce a quiescent state: the thread holds no RCU-protected
     /// references. Cost: one load + one store.
+    ///
+    /// Acquire on `gp` + Release on `ctr`: storing the *acquired* gp value
+    /// is what proves to the waiter that this thread has seen the
+    /// publications preceding that grace period (module docs).
     #[inline(always)]
     pub fn quiescent_state(&self) {
         debug_assert_eq!(
@@ -201,14 +261,15 @@ impl RcuThread {
         );
         self.rec
             .ctr
-            .store(self.domain.gp.load(Ordering::SeqCst), Ordering::SeqCst);
+            .store(self.domain.gp.load(Ordering::Acquire), Ordering::Release);
     }
 
-    /// Enter an extended quiescent state (e.g. before blocking).
+    /// Enter an extended quiescent state (e.g. before blocking). Release
+    /// publishes the preceding section before waiters may free.
     #[inline]
     pub fn offline(&self) {
         debug_assert_eq!(self.depth.get(), 0, "offline inside a read-side section");
-        self.rec.ctr.store(0, Ordering::SeqCst);
+        self.rec.ctr.store(0, Ordering::Release);
     }
 
     /// Leave the extended quiescent state.
@@ -216,7 +277,7 @@ impl RcuThread {
     pub fn online(&self) {
         self.rec
             .ctr
-            .store(self.domain.gp.load(Ordering::SeqCst), Ordering::SeqCst);
+            .store(self.domain.gp.load(Ordering::Acquire), Ordering::Release);
     }
 
     /// Run `f` while offline (for blocking operations such as lock
@@ -253,5 +314,70 @@ impl Drop for RcuReadGuard<'_> {
     #[inline(always)]
     fn drop(&mut self) {
         self.owner.depth.set(self.owner.depth.get() - 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite regression: a grace period with no stalled reader must
+    /// complete without ever reaching the sleep tier of the backoff.
+    /// Isolated (leaked) domain: the global domain's readers from parallel
+    /// tests could legitimately force sleeps here.
+    #[test]
+    fn no_reader_grace_period_never_sleeps() {
+        let dom: &'static RcuDomain = Box::leak(Box::new(RcuDomain::new()));
+        for _ in 0..64 {
+            dom.synchronize(None);
+        }
+        assert_eq!(dom.sleep_count(), 0, "no-reader grace period slept");
+
+        // A registered caller is exempted from its own grace period, so a
+        // single-threaded writer must also stay on the no-sleep path.
+        let t = dom.register();
+        t.quiescent_state();
+        for _ in 0..64 {
+            dom.synchronize(Some(&t));
+        }
+        assert_eq!(dom.sleep_count(), 0, "self-exempted grace period slept");
+
+        // An offline reader (ctr == 0) must not delay the grace period.
+        let r2 = dom.register();
+        r2.offline();
+        for _ in 0..64 {
+            dom.synchronize(Some(&t));
+        }
+        assert_eq!(dom.sleep_count(), 0, "offline reader forced a sleep");
+    }
+
+    /// The backoff escalates (and is counted) when a reader genuinely
+    /// stalls: a reader that announces quiescence only after a delay must
+    /// eventually push the waiter into the sleep tier, and the grace
+    /// period still completes.
+    #[test]
+    fn stalled_reader_escalates_to_sleep() {
+        let dom: &'static RcuDomain = Box::leak(Box::new(RcuDomain::new()));
+        let writer = dom.register();
+        writer.quiescent_state();
+
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(2));
+        let b2 = barrier.clone();
+        let reader = std::thread::spawn(move || {
+            let t = dom.register();
+            t.quiescent_state();
+            b2.wait();
+            // Hold the section open long enough to exhaust spin + yield.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            t.quiescent_state();
+            // Park until the writer is done so the record stays registered.
+            b2.wait();
+        });
+
+        barrier.wait();
+        dom.synchronize(Some(&writer));
+        assert!(dom.sleep_count() > 0, "20ms-stalled reader never slept");
+        barrier.wait();
+        reader.join().unwrap();
     }
 }

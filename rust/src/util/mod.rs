@@ -9,4 +9,4 @@ pub mod rng;
 pub mod stats;
 
 pub use rng::{mix64, SplitMix64};
-pub use stats::Summary;
+pub use stats::{LatencyHistogram, Summary};

@@ -63,6 +63,140 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[rank.min(sorted.len() - 1)]
 }
 
+/// Sub-bucket resolution of [`LatencyHistogram`]: each power-of-two value
+/// range is divided into `2^SUB_BITS` linear buckets, bounding the
+/// relative quantization error at `1 / 2^SUB_BITS` (~3%).
+const SUB_BITS: u32 = 5;
+const SUBS: u64 = 1 << SUB_BITS;
+/// Chunks 0..=59 cover every u64 value (chunk 0 is `[0, SUBS)` at width
+/// 1; chunk c >= 1 is `[SUBS << (c-1), SUBS << c)` at width `2^(c-1)`).
+const CHUNKS: usize = (64 - SUB_BITS as usize) + 1;
+
+/// HdrHistogram-style fixed-bucket latency histogram: log2 chunks with
+/// linear sub-buckets, so recording is O(1) with no allocation and the
+/// full u64 range (nanoseconds) fits in `CHUNKS * SUBS` counters.
+/// Percentile values are reported as the recorded bucket's upper bound,
+/// so p-quantiles are never understated and the relative error is
+/// bounded by the sub-bucket width (~3% at `SUB_BITS = 5`).
+///
+/// This is the shared percentile code path for the bench harness
+/// (`benches/common` wraps it as `LatencyRecorder`); single-writer by
+/// design — per-thread instances merge at the end of a run.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; CHUNKS * SUBS as usize],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    /// Bucket index for `v`.
+    #[inline]
+    fn index_of(v: u64) -> usize {
+        if v < SUBS {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros();
+        let chunk = (msb - SUB_BITS + 1) as u64;
+        (chunk * SUBS + (v >> (chunk - 1)) - SUBS) as usize
+    }
+
+    /// Upper bound of bucket `idx` (the value a percentile reports).
+    #[inline]
+    fn value_of(idx: usize) -> u64 {
+        let chunk = idx as u64 / SUBS;
+        if chunk == 0 {
+            return idx as u64;
+        }
+        let width = 1u64 << (chunk - 1);
+        ((SUBS + idx as u64 % SUBS) << (chunk - 1)) + width - 1
+    }
+
+    /// Record one sample (O(1), allocation-free).
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index_of(v)] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v as u128;
+    }
+
+    /// Fold another histogram into this one (per-thread recorders merge
+    /// at the end of a measurement window).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded sample (not quantized).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) as the matching bucket's upper
+    /// bound; 0 on an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Never report past the true max (the top bucket's upper
+                // bound can overshoot it).
+                return Self::value_of(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
 /// Online mean/variance accumulator (Welford) for streaming metrics in the
 /// coordinator's stats loop, where buffering every latency sample would
 /// allocate on the hot path.
@@ -132,6 +266,82 @@ mod tests {
         assert_eq!(percentile(&v, 1.0), 100.0);
         // Nearest-rank on 100 items: rank = round(0.5 * 99) = 50 → value 51.
         assert_eq!(percentile(&v, 0.5), 51.0);
+    }
+
+    #[test]
+    fn histogram_exact_below_resolution() {
+        // Values below SUBS land in width-1 buckets: percentiles are exact.
+        let mut h = LatencyHistogram::new();
+        for v in 0..SUBS {
+            h.record(v);
+        }
+        assert_eq!(h.count(), SUBS);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), SUBS - 1);
+        assert_eq!(h.percentile(0.5), SUBS / 2 - 1);
+        assert_eq!(h.percentile(1.0), SUBS - 1);
+    }
+
+    #[test]
+    fn histogram_relative_error_bound() {
+        // Reported quantile for a single recorded value is its bucket's
+        // upper bound: never below the value, within 1/SUBS above it.
+        for v in [1u64, 31, 32, 33, 100, 1_000, 123_456, 1 << 40, u64::MAX] {
+            let mut h = LatencyHistogram::new();
+            h.record(v);
+            let got = h.percentile(0.999);
+            assert!(got >= v, "p999 {got} understates {v}");
+            let bound = v.saturating_add(v / SUBS + 1);
+            assert!(got <= bound, "p999 {got} exceeds error bound {bound} for {v}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentile_monotone_and_mean() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i);
+        }
+        let p50 = h.percentile(0.50);
+        let p99 = h.percentile(0.99);
+        let p999 = h.percentile(0.999);
+        assert!(p50 <= p99 && p99 <= p999);
+        assert!(p50 >= 5_000 && p50 <= 5_200);
+        assert!(p999 >= 9_990);
+        assert!((h.mean() - 5_000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 0..500u64 {
+            let v = i * i % 7_919;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.percentile(q), all.percentile(q));
+        }
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
     }
 
     #[test]

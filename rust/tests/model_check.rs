@@ -7,6 +7,7 @@
 //! the migration machinery deterministically.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
@@ -331,6 +332,184 @@ fn model_dense_key_collisions() {
     check("dense keys", 20, |g| {
         let ops = gen_ops(g, 600, 8);
         run_against_model(&*fresh("dhash-michael"), &ops, None)
+    });
+    rcu_barrier();
+}
+
+// ---------------------------------------------------------------------
+// Relaxed-ordering audit cases (DESIGN.md §Memory orderings): one
+// concurrent pin per relaxed cluster. These are the tests the ordering
+// table cites — if a future edit weakens an Acquire/Release pair below
+// what its documented invariant needs, the lost happens-before edge
+// shows up here as a lost key or an incoherent epoch, not as silent UB
+// in production.
+// ---------------------------------------------------------------------
+
+#[test]
+fn ordering_audit_lookup_during_rebuild() {
+    // Cluster R1+R2 (dhash table pointers + lflist link words at
+    // Acquire/Release, Lemma 4.1 without SeqCst): a key inserted once
+    // and never deleted must resolve in EVERY interleaving with a
+    // continuous rebuild storm — the three-step lookup order relies on
+    // the Release `rebuild_cur` store being visible to any reader that
+    // missed the key via the unlink CAS chain.
+    let map = Arc::new(DHashMap::<MichaelList>::with_hash(8, HashFn::Seeded(1)));
+    let keys: Vec<u64> = (0..64u64).map(|i| i * 7 + 1).collect();
+    {
+        let g = RcuThread::register();
+        for &k in &keys {
+            assert!(map.insert(&g, k, k + 1).is_ok());
+        }
+        g.quiescent_state();
+    }
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            let map = map.clone();
+            let stop = &stop;
+            let keys = &keys;
+            s.spawn(move || {
+                let g = RcuThread::register();
+                while !stop.load(Ordering::Relaxed) {
+                    for &k in keys {
+                        assert_eq!(map.lookup(&g, k), Some(k + 1), "key {k} lost mid-rebuild");
+                    }
+                    g.quiescent_state();
+                }
+            });
+        }
+        let map = map.clone();
+        let stop = &stop;
+        s.spawn(move || {
+            let g = RcuThread::register();
+            for i in 0..40u64 {
+                let nb = if i % 2 == 0 { 16 } else { 8 };
+                map.rebuild(&g, nb, HashFn::Seeded(i)).unwrap();
+            }
+            stop.store(true, Ordering::Relaxed);
+            g.quiescent_state();
+        });
+    });
+    rcu_barrier();
+}
+
+#[test]
+fn ordering_audit_lookup_during_split_merge() {
+    // Cluster R3 (sharded directory pointer + `moving` hazard pointer at
+    // Acquire/Release): resident keys must resolve through the
+    // source → hazard node → destination order while the directory
+    // splits and merges underneath — the Acquire `moving` load must see
+    // the key/flags of a node published by the drain's Release store.
+    let map = Arc::new(ShardedDHash::with_buckets(4, 8, 1));
+    let keys: Vec<u64> = (0..128u64).map(|i| i * 13 + 1).collect();
+    {
+        let g = RcuThread::register();
+        for &k in &keys {
+            map.insert(&g, k, k ^ 0xabc).unwrap();
+        }
+        g.quiescent_state();
+    }
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..2 {
+            let map = map.clone();
+            let stop = &stop;
+            let keys = &keys;
+            s.spawn(move || {
+                let g = RcuThread::register();
+                while !stop.load(Ordering::Relaxed) {
+                    for &k in keys {
+                        assert_eq!(map.lookup(&g, k), Some(k ^ 0xabc), "key {k} lost mid-resize");
+                    }
+                    g.quiescent_state();
+                }
+            });
+        }
+        let map = map.clone();
+        let stop = &stop;
+        s.spawn(move || {
+            let g = RcuThread::register();
+            for i in 0..12u64 {
+                let s = (i as usize) % map.shards().max(1);
+                let _ = map.split_shard(&g, s, 8, HashFn::Seeded(i));
+                let _ = map.merge_shard(&g, s, 8, HashFn::Seeded(i ^ 1));
+                g.quiescent_state();
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+    });
+    rcu_barrier();
+}
+
+#[test]
+fn ordering_audit_snapshot_vs_epoch() {
+    // Cluster R3's mirrors-first invariant (install_dir at Release): a
+    // route snapshot's epoch must stay coherent with the guard-free
+    // `epoch()` mirror under concurrent publications. The mirror is
+    // written BEFORE the directory pointer, so it may lead the snapshot
+    // by at most the one in-flight publication (single migration token)
+    // and can never trail it — and the snapshot itself must always be
+    // internally coherent.
+    let map = Arc::new(ShardedDHash::with_buckets(2, 8, 1));
+    {
+        let g = RcuThread::register();
+        for k in 0..64u64 {
+            map.insert(&g, k * 3 + 1, k).unwrap();
+        }
+        g.quiescent_state();
+    }
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        {
+            let map = map.clone();
+            let stop = &stop;
+            s.spawn(move || {
+                let g = RcuThread::register();
+                let mut last_seen = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let e_before = map.epoch();
+                    let snap = map.route_snapshot(&g);
+                    let e_after = map.epoch();
+                    assert!(e_after >= e_before, "mirror epoch went backwards");
+                    assert!(
+                        snap.epoch <= e_after,
+                        "snapshot epoch {} ahead of mirror {e_after}: the mirror \
+                         store must be sequenced before the directory publish",
+                        snap.epoch
+                    );
+                    assert!(
+                        snap.epoch + 1 >= e_before,
+                        "snapshot epoch {} trails mirror {e_before} by more than \
+                         the one in-flight publication",
+                        snap.epoch
+                    );
+                    assert!(
+                        snap.epoch >= last_seen,
+                        "snapshot epochs must be monotone per observer"
+                    );
+                    last_seen = snap.epoch;
+                    // Internal coherence: one geometry + uid per shard,
+                    // every selector routes to a live ordinal.
+                    assert_eq!(snap.shards.len(), snap.uids.len());
+                    assert!(snap.nshards() >= 1);
+                    for k in [0u64, 1, 97, 1 << 40, u64::MAX - 1] {
+                        assert!((snap.shard_of(k) as usize) < snap.nshards());
+                    }
+                    g.quiescent_state();
+                }
+            });
+        }
+        let map = map.clone();
+        let stop = &stop;
+        s.spawn(move || {
+            let g = RcuThread::register();
+            for i in 0..10u64 {
+                let _ = map.split_shard(&g, 0, 8, HashFn::Seeded(i));
+                let _ = map.merge_shard(&g, 0, 8, HashFn::Seeded(i ^ 1));
+                g.quiescent_state();
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
     });
     rcu_barrier();
 }
