@@ -33,6 +33,9 @@ struct SendRht(*mut RhtNode);
 // SAFETY: reclaimer-only access after a grace period.
 unsafe impl Send for SendRht {}
 
+/// # Safety
+/// `p` must be unlinked (unreachable to new readers) and passed here at
+/// most once; the reclaimer frees it after a grace period.
 unsafe fn defer_free_rht(p: *mut RhtNode) {
     let w = SendRht(p);
     call_rcu(move || {
@@ -93,7 +96,11 @@ impl RhtTab {
         None
     }
 
-    /// Unlink `key` from this bucket's chain; bucket lock must be held.
+    /// Unlink `key` from this bucket's chain.
+    ///
+    /// # Safety
+    /// The bucket lock must be held: the chain cannot change under the
+    /// traversal, and every node reached is live until a grace period.
     unsafe fn unlink_locked(&self, key: u64) -> Option<*mut RhtNode> {
         let bucket = self.bucket(key);
         let mut pp: *const AtomicUsize = &bucket.head;

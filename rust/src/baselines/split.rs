@@ -73,6 +73,9 @@ struct SendSo(*mut SoNode);
 // SAFETY: reclaimer-only access after a grace period.
 unsafe impl Send for SendSo {}
 
+/// # Safety
+/// `p` must be unlinked (unreachable to new readers) and passed here at
+/// most once; the reclaimer frees it after a grace period.
 unsafe fn defer_free_so(p: *mut SoNode) {
     let w = SendSo(p);
     call_rcu(move || {
@@ -265,9 +268,12 @@ impl HtSplit {
         let so_key = unsafe { (*node).so_key };
         loop {
             let pos = self.list_search(head, so_key);
+            // SAFETY: `pos.cur`, when non-null, is RCU-live.
             if !pos.cur.is_null() && unsafe { (*pos.cur).so_key } == so_key {
                 return Err(pos.cur);
             }
+            // SAFETY: `node` is ours until the CAS publishes it;
+            // `pos.prev` is a live link word from the search.
             unsafe {
                 (*node).next.store(pos.cur as usize, Ordering::SeqCst);
                 if (*pos.prev)
@@ -289,6 +295,7 @@ impl HtSplit {
     fn list_delete(&self, head: *mut SoNode, so_key: u64) -> bool {
         loop {
             let pos = self.list_search(head, so_key);
+            // SAFETY: `pos.cur`, when non-null, is RCU-live.
             if pos.cur.is_null() || unsafe { (*pos.cur).so_key } != so_key {
                 return false;
             }

@@ -34,6 +34,9 @@ struct SendXu(*mut XuNode);
 // SAFETY: reclaimer-only access after a grace period.
 unsafe impl Send for SendXu {}
 
+/// # Safety
+/// `p` must be unlinked (unreachable to new readers) and passed here at
+/// most once; the reclaimer frees it after a grace period.
 unsafe fn defer_free_xu(p: *mut XuNode) {
     let w = SendXu(p);
     call_rcu(move || {
@@ -105,8 +108,12 @@ impl XuTab {
         None
     }
 
-    /// Unlink `key` from this table's chain; lock must be held.
-    /// Returns the node if it was present.
+    /// Unlink `key` from this table's chain; returns the node if it
+    /// was present.
+    ///
+    /// # Safety
+    /// The table lock must be held: the chain cannot change under the
+    /// traversal, and every node reached is live until a grace period.
     unsafe fn unlink_locked(&self, key: u64) -> Option<*mut XuNode> {
         let bucket = self.bucket(key);
         let mut pp: *const AtomicUsize = &bucket.head;

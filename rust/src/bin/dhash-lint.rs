@@ -1,0 +1,111 @@
+//! `dhash-lint` — enforce the repo's concurrency contracts.
+//!
+//! ```text
+//! cargo run --release --bin dhash-lint            # all rules
+//! cargo run --release --bin dhash-lint -- --rule seqcst-budget
+//! cargo run --release --bin dhash-lint -- --root /path/to/repo
+//! cargo run --release --bin dhash-lint -- --list-rules
+//! ```
+//!
+//! Exit status: 0 when clean, 1 when any rule fires, 2 on usage or
+//! I/O errors. Diagnostics print one per line as
+//! `file:line: [rule] message`. See `rust/src/lint/mod.rs` for the
+//! rule inventory and DESIGN.md §Static analysis & sanitizers for the
+//! annotation grammar.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use dhash::lint::{self, LintContext};
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut rules: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => return usage("--root needs a path"),
+            },
+            "--rule" => match args.next() {
+                Some(r) => rules.push(r),
+                None => return usage("--rule needs a rule name"),
+            },
+            "--list-rules" => {
+                for (name, _) in lint::RULES {
+                    println!("{name}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => return usage(""),
+            other => return usage(&format!("unknown argument '{other}'")),
+        }
+    }
+    for r in &rules {
+        if !lint::RULES.iter().any(|(name, _)| name == r) {
+            return usage(&format!("unknown rule '{r}' (see --list-rules)"));
+        }
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            match LintContext::find_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!(
+                        "dhash-lint: could not find the repo root (a directory with rust/src \
+                         and tools/seqcst_allowlist.txt) above {}",
+                        cwd.display()
+                    );
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+
+    let ctx = match LintContext::load(&root) {
+        Ok(ctx) => ctx,
+        Err(e) => {
+            eprintln!("dhash-lint: failed to load {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let diags = lint::run(&ctx, &rules);
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        let which = if rules.is_empty() {
+            lint::RULES.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+        } else {
+            rules.join(", ")
+        };
+        println!(
+            "dhash-lint: OK — {} file(s) clean under rules: {which}",
+            ctx.files.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("dhash-lint: {} finding(s)", diags.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(err: &str) -> ExitCode {
+    if !err.is_empty() {
+        eprintln!("dhash-lint: {err}");
+    }
+    eprintln!(
+        "usage: dhash-lint [--root REPO_ROOT] [--rule NAME]... [--list-rules]\n\
+         rules: safety, ord, seqcst-budget, hot, wire"
+    );
+    if err.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(2)
+    }
+}

@@ -108,6 +108,7 @@ impl<B: BucketSet> DHashMap<B> {
         }
     }
 
+    // lint: hot
     #[inline(always)]
     fn table(&self) -> &Table<B> {
         // Acquire: pairs with rebuild's table-swap store, so a reader that
@@ -118,6 +119,7 @@ impl<B: BucketSet> DHashMap<B> {
         // SAFETY: `cur` is never null; the pointed-to table is freed only
         // after a grace period follows its replacement, and all callers
         // hold a read-side critical section.
+        // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
         unsafe { &*self.cur.load(Ordering::Acquire) }
     }
 
@@ -131,6 +133,7 @@ impl<B: BucketSet> DHashMap<B> {
     ///
     /// The caller must be inside a read-side critical section; the
     /// reference is valid until that section ends.
+    // lint: hot
     #[inline]
     fn live_node(&self, key: u64) -> Option<&Node> {
         let htp = self.table();
@@ -141,6 +144,7 @@ impl<B: BucketSet> DHashMap<B> {
         // (2) No rebuild in progress -> definitive miss. Acquire: pairs
         // with the rebuild's ht_new publication store, making the new
         // table's contents visible before we walk it.
+        // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
         let htp_new = htp.ht_new.load(Ordering::Acquire);
         if htp_new.is_null() {
             return None;
@@ -164,6 +168,7 @@ impl<B: BucketSet> DHashMap<B> {
     #[inline(never)]
     fn live_node_slow(&self, htp_new: *mut Table<B>, key: u64) -> Option<&Node> {
         // (3) Check the node in its hazard period.
+        // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
         let cur = self.rebuild_cur.load(Ordering::Acquire);
         if !cur.is_null() {
             // SAFETY: a node reachable through rebuild_cur is reclaimed
@@ -190,12 +195,14 @@ impl<B: BucketSet> DHashMap<B> {
     /// (`upsert`) are racy by spec, and cross-thread read-your-write
     /// ordering is provided externally (the completion-slot Release/
     /// Acquire pair in the coordinator).
+    // lint: hot
     #[inline]
     pub fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
         if key == u64::MAX {
             return None;
         }
         let _g = guard.read_lock();
+        // ord: node-val — value rides the link publish; later stores racy-by-spec
         self.live_node(key).map(|n| n.val.load(Ordering::Relaxed))
     }
 
@@ -220,6 +227,7 @@ impl<B: BucketSet> DHashMap<B> {
                     // Relaxed: last-wins overwrite on one location needs
                     // only coherence; see `lookup` for the visibility
                     // contract.
+                    // ord: node-val — value rides the link publish; later stores racy-by-spec
                     n.val.store(val, Ordering::Relaxed);
                     return false;
                 }
@@ -245,14 +253,17 @@ impl<B: BucketSet> DHashMap<B> {
             return None;
         }
         if let Some(n) = htp.bucket(key).find(key) {
+            // ord: node-val — value rides the link publish; later stores racy-by-spec
             return Some(n.val.load(Ordering::Relaxed));
         }
+        // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
         let htp_new = htp.ht_new.load(Ordering::Acquire);
         if htp_new.is_null() {
             return None;
         }
         // SAFETY: as in `lookup`.
         let htp_new = unsafe { &*htp_new };
+        // ord: node-val — value rides the link publish; later stores racy-by-spec
         htp_new
             .bucket(key)
             .find(key)
@@ -273,6 +284,7 @@ impl<B: BucketSet> DHashMap<B> {
         // Acquire pair, same reasoning as `live_node`/`live_node_slow`:
         // a miss in step (1) synchronized with the delete CAS that made
         // the node missing, which happens-after the hazard publication.
+        // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
         let htp_new = htp.ht_new.load(Ordering::Acquire);
         if htp_new.is_null() {
             return false;
@@ -280,6 +292,7 @@ impl<B: BucketSet> DHashMap<B> {
         // (2) Check the hazard-period node: mark it deleted in place
         // (paper line 75). The flag is preserved by the rebuild's
         // re-insert, so the node is born dead in the new table.
+        // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
         let cur = self.rebuild_cur.load(Ordering::Acquire);
         if !cur.is_null() {
             // SAFETY: as in lookup.
@@ -311,6 +324,7 @@ impl<B: BucketSet> DHashMap<B> {
         let htp = self.table();
         // Acquire: see `live_node` — the new table is fully visible when
         // its pointer is.
+        // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
         let htp_new = htp.ht_new.load(Ordering::Acquire);
         // No rebuild -> old table; rebuild in progress -> new table
         // (Lemma 4.3: the RCU barrier in rebuild makes this safe).
@@ -355,6 +369,7 @@ impl<B: BucketSet> DHashMap<B> {
         // Acquire: the previous rebuild's swap store is also ordered by
         // the rebuild lock; Acquire keeps this correct even for a reader
         // path that might call in without it in the future.
+        // ord: dhash-rebuild — Algorithm 3 rebuild barrier (writer side, lock-serialized)
         let htp_ptr = self.cur.load(Ordering::Acquire);
         // SAFETY: we hold the rebuild lock; `cur` can only be replaced by
         // a rebuild, so the table stays alive for this whole function.
@@ -368,6 +383,7 @@ impl<B: BucketSet> DHashMap<B> {
         // three-barrier protocol's first publication; barrier 1 below
         // relies on it being ordered before the grace period for every
         // observer. Listed in tools/seqcst_allowlist.txt.
+        // ord: dhash-rebuild — Algorithm 3 rebuild barrier (writer side, lock-serialized)
         htp.ht_new.store(htp_new_ptr, Ordering::SeqCst);
 
         // Line 23 (barrier 1): wait for ops that may not see ht_new yet.
@@ -389,6 +405,7 @@ impl<B: BucketSet> DHashMap<B> {
                     // Line 26-27: publish the hazard-period pointer for
                     // every candidate BEFORE its logical delete. Release
                     // is the paper's smp_wmb (§Perf opt 1).
+                    // ord: dhash-rebuild — Algorithm 3 rebuild barrier (writer side, lock-serialized)
                     self.rebuild_cur.store(cand, Ordering::Release);
                 });
                 match popped {
@@ -399,6 +416,7 @@ impl<B: BucketSet> DHashMap<B> {
                         // paper's pseudocode has the same hole on its
                         // line-30 `continue` path — see DESIGN.md
                         // §Deviations). Clear before leaving the bucket.
+                        // ord: dhash-rebuild — Algorithm 3 rebuild barrier (writer side, lock-serialized)
                         self.rebuild_cur
                             .store(std::ptr::null_mut(), Ordering::Release);
                         break;
@@ -425,6 +443,7 @@ impl<B: BucketSet> DHashMap<B> {
                                 moved += 1;
                                 // Line 37-38: leave the hazard period
                                 // (Release = the paper's smp_wmb).
+                                // ord: dhash-rebuild — Algorithm 3 rebuild barrier (writer side, lock-serialized)
                                 self.rebuild_cur
                                     .store(std::ptr::null_mut(), Ordering::Release);
                             }
@@ -440,6 +459,7 @@ impl<B: BucketSet> DHashMap<B> {
                                 // the clear must not be reordered after
                                 // the defer_free enqueue in any observable
                                 // way; allowlisted rather than re-proved.
+                                // ord: dhash-rebuild — Algorithm 3 rebuild barrier (writer side, lock-serialized)
                                 self.rebuild_cur
                                     .store(std::ptr::null_mut(), Ordering::SeqCst);
                                 // SAFETY: not in any table; unreachable
@@ -459,6 +479,7 @@ impl<B: BucketSet> DHashMap<B> {
         // protocol store between barriers 2 and 3, one per rebuild):
         // keeps the swap totally ordered against the grace-period
         // machinery exactly as the paper's proof sketch assumes.
+        // ord: dhash-rebuild — Algorithm 3 rebuild barrier (writer side, lock-serialized)
         self.cur.store(htp_new_ptr, Ordering::SeqCst);
         // Line 43: wait for ops still referencing the old table.
         guard.offline_while(synchronize_rcu);
@@ -469,6 +490,7 @@ impl<B: BucketSet> DHashMap<B> {
         // table's Drop, which has exclusive access now.
         unsafe { drop(Box::from_raw(htp_ptr)) };
 
+        // ord: stats-relaxed — monotonic counter, no ordering role
         self.rebuilds.fetch_add(1, Ordering::Relaxed);
         Ok(RebuildStats {
             moved,
@@ -481,6 +503,7 @@ impl<B: BucketSet> DHashMap<B> {
 
     /// Number of completed rebuilds.
     pub fn rebuild_count(&self) -> u64 {
+        // ord: stats-relaxed — monotonic counter, no ordering role
         self.rebuilds.load(Ordering::Relaxed)
     }
 
@@ -532,6 +555,7 @@ impl<B: BucketSet> DHashMap<B> {
         // reachable from it stays alive for the duration of our read-side
         // critical section (tables are freed a grace period after being
         // unpublished).
+        // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
         let mut t: &Table<B> = unsafe { &*self.cur.load(Ordering::Acquire) };
         loop {
             for (k, v) in t.buckets().flat_map(|b| b.collect()) {
@@ -542,6 +566,7 @@ impl<B: BucketSet> DHashMap<B> {
             // Acquire: pairs with the rebuild's ht_new publication, same
             // reasoning as the lookup path (a node missing from `t` was
             // unlinked by a Release CAS that happens-after it).
+            // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
             let next = t.ht_new.load(Ordering::Acquire);
             if next.is_null() {
                 // `ht_new` is published before the first node is
@@ -552,12 +577,14 @@ impl<B: BucketSet> DHashMap<B> {
             // A rebuild is (or was) migrating t → next: catch the unique
             // node in its hazard period, then follow the chain (a second
             // rebuild may have started while we were scanning).
+            // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
             let cur = self.rebuild_cur.load(Ordering::Acquire);
             if !cur.is_null() {
                 // SAFETY: as in `lookup` — reclaimed only after
                 // `rebuild_cur` is cleared plus a grace period.
                 let n = unsafe { &*cur };
                 if !n.logically_removed() && seen.insert(n.key) {
+                    // ord: node-val — value rides the link publish; later stores racy-by-spec
                     out.push((n.key, n.val.load(Ordering::Relaxed)));
                 }
             }
@@ -613,10 +640,12 @@ impl<B: BucketSet> Drop for DHashMap<B> {
         // still be referenced by queued call_rcu callbacks? No — callbacks
         // never touch tables, only nodes they own. Direct free is safe.
         // Relaxed: exclusive access (&mut self).
+        // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
         let cur = self.cur.load(Ordering::Relaxed);
         if !cur.is_null() {
             // SAFETY: exclusive; Table::drop drains buckets.
             unsafe {
+                // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
                 let ht_new = (*cur).ht_new.load(Ordering::Relaxed);
                 if !ht_new.is_null() {
                     drop(Box::from_raw(ht_new));

@@ -160,6 +160,7 @@ impl<'a> MigrationGauge<'a> {
         // enter/drop pair (at most one holder); the RMW only needs to
         // keep the gauge itself coherent for `migrating_shards`
         // observers, not to fence unrelated protocol state.
+        // ord: sharded-dir — mirrors-first directory install / Acquire route reads
         let prev = gauge.fetch_add(1, Ordering::AcqRel);
         assert_eq!(
             prev, 0,
@@ -172,6 +173,7 @@ impl<'a> MigrationGauge<'a> {
 impl Drop for MigrationGauge<'_> {
     fn drop(&mut self) {
         // AcqRel: see `enter` — token-serialized, gauge-local coherence.
+        // ord: sharded-gauge — migration gauge AcqRel RMW; token serializes transitions
         self.0.fetch_sub(1, Ordering::AcqRel);
     }
 }
@@ -402,6 +404,7 @@ impl<B: BucketSet> ShardedDHash<B> {
     /// Safety contract (not enforceable by the signature): the caller
     /// must either be inside an RCU read-side critical section, or hold
     /// the migration token (the only writer of `dir`).
+    // lint: hot
     #[inline(always)]
     fn dir(&self) -> &Directory<B> {
         // SAFETY: `dir` is never null; a directory is freed only a grace
@@ -414,6 +417,7 @@ impl<B: BucketSet> ShardedDHash<B> {
         // everything sequenced before the publication — in particular
         // the mirror stores (`nshards`, `cur_epoch`), which is the
         // "mirrors-first" invariant `len`'s epoch re-check relies on.
+        // ord: sharded-dir — mirrors-first directory install / Acquire route reads
         unsafe { &*self.dir.load(Ordering::Acquire) }
     }
 
@@ -424,6 +428,7 @@ impl<B: BucketSet> ShardedDHash<B> {
         // Acquire pairs with install_dir's Release mirror store; the
         // value is racy by contract (a publication may be in flight),
         // so no stronger ordering could sharpen it.
+        // ord: sharded-dir — mirrors-first directory install / Acquire route reads
         self.nshards.load(Ordering::Acquire)
     }
 
@@ -436,16 +441,19 @@ impl<B: BucketSet> ShardedDHash<B> {
         // monotone staleness is fine (one conservatively rebuilt
         // snapshot), torn/invented values are not — which coherence on
         // the single word already rules out.
+        // ord: sharded-dir — mirrors-first directory install / Acquire route reads
         self.cur_epoch.load(Ordering::Acquire)
     }
 
     /// Completed splits.
     pub fn split_count(&self) -> u64 {
+        // ord: stats-relaxed — monotonic counter, no ordering role
         self.splits.load(Ordering::Relaxed)
     }
 
     /// Completed merges.
     pub fn merge_count(&self) -> u64 {
+        // ord: stats-relaxed — monotonic counter, no ordering role
         self.merges.load(Ordering::Relaxed)
     }
 
@@ -482,6 +490,7 @@ impl<B: BucketSet> ShardedDHash<B> {
     pub fn migrating_shards(&self) -> usize {
         // Acquire pairs with the gauge's AcqRel RMWs (diagnostic read;
         // the invariant itself is enforced by the token + assertion).
+        // ord: sharded-gauge — migration gauge AcqRel RMW; token serializes transitions
         self.migrating.load(Ordering::Acquire)
     }
 
@@ -503,6 +512,7 @@ impl<B: BucketSet> ShardedDHash<B> {
     /// *before* it is deleted from the source and unpublished only
     /// *after* it is inserted into the destination, so its hazard period
     /// covers every instant it is absent from both shards.
+    // lint: hot
     #[inline]
     pub fn lookup(&self, guard: &RcuThread, key: u64) -> Option<u64> {
         if key == u64::MAX {
@@ -537,11 +547,13 @@ impl<B: BucketSet> ShardedDHash<B> {
             // the initial value rode the Release link CAS that published
             // the node, and in-place upsert overwrites order through the
             // caller's own synchronization (see dhash/mod.rs).
+            // ord: node-val — value rides the link publish; later stores racy-by-spec
             return Some(n.val.load(Ordering::Relaxed));
         }
         // Acquire pairs with drain_into's Release publication of the
         // candidate: observing the pointer makes the node's key/flags
         // visible (the cross-shard Lemma 4.1 hazard handoff).
+        // ord: sharded-moving — cross-shard hazard pointer (Lemma 4.1 mirror)
         let cur = self.moving.load(Ordering::Acquire);
         if !cur.is_null() {
             // SAFETY: a node reachable through `moving` is reclaimed
@@ -549,6 +561,7 @@ impl<B: BucketSet> ShardedDHash<B> {
             // passes; we are inside a read-side section.
             let n = unsafe { &*cur };
             if n.key == key && !n.logically_removed() {
+                // ord: node-val — value rides the link publish; later stores racy-by-spec
                 return Some(n.val.load(Ordering::Relaxed));
             }
         }
@@ -586,6 +599,7 @@ impl<B: BucketSet> ShardedDHash<B> {
             }
             // Acquire: as in `lookup_migrating` — pairs with the
             // drain's Release publication of the hazard node.
+            // ord: sharded-moving — cross-shard hazard pointer (Lemma 4.1 mirror)
             let cur = self.moving.load(Ordering::Acquire);
             if !cur.is_null() {
                 // SAFETY: as in lookup.
@@ -619,21 +633,25 @@ impl<B: BucketSet> ShardedDHash<B> {
                         // upsert" visibility is the caller's edge (e.g.
                         // the CompletionSet's Release/Acquire), not the
                         // value word's.
+                        // ord: node-val — value rides the link publish; later stores racy-by-spec
                         n.val.store(val, Ordering::Relaxed);
                         return false;
                     }
                     // Acquire: as in `lookup_migrating`.
+                    // ord: sharded-moving — cross-shard hazard pointer (Lemma 4.1 mirror)
                     let cur = self.moving.load(Ordering::Acquire);
                     if !cur.is_null() {
                         // SAFETY: as in lookup.
                         let n = unsafe { &*cur };
                         if n.key == key && !n.logically_removed() {
+                            // ord: node-val — value rides the link publish; later stores racy-by-spec
                             n.val.store(val, Ordering::Relaxed);
                             return false;
                         }
                     }
                 }
                 if let Some(n) = slot.map.live_node(key) {
+                    // ord: node-val — value rides the link publish; later stores racy-by-spec
                     n.val.store(val, Ordering::Relaxed);
                     return false;
                 }
@@ -767,6 +785,7 @@ impl<B: BucketSet> ShardedDHash<B> {
         // mid-rebuild (its `cur` is stable and its `ht_new` is null).
         // Acquire: the table was published by a Release-or-stronger
         // store (construction or a token-serialized rebuild swap).
+        // ord: dhash-reader — Acquire table read pairs with rebuild's Release publish
         let src_table = unsafe { &*src.cur.load(Ordering::Acquire) };
         for bucket in src_table.buckets() {
             loop {
@@ -774,6 +793,7 @@ impl<B: BucketSet> ShardedDHash<B> {
                     // Publish the hazard-period pointer for every
                     // candidate BEFORE its logical delete (the paper's
                     // ordering, Alg. 3 lines 26-29).
+                    // ord: sharded-moving — cross-shard hazard pointer (Lemma 4.1 mirror)
                     self.moving.store(cand, Ordering::Release);
                 });
                 match popped {
@@ -781,6 +801,7 @@ impl<B: BucketSet> ShardedDHash<B> {
                         // A raced candidate may linger in `moving`; clear
                         // before leaving the bucket (same hole as the
                         // rebuild loop — see DESIGN.md §Deviations).
+                        // ord: sharded-moving — cross-shard hazard pointer (Lemma 4.1 mirror)
                         self.moving.store(std::ptr::null_mut(), Ordering::Release);
                         break;
                     }
@@ -793,6 +814,7 @@ impl<B: BucketSet> ShardedDHash<B> {
                                 moved += 1;
                                 // Leave the hazard period (Release = the
                                 // paper's smp_wmb).
+                                // ord: sharded-moving — cross-shard hazard pointer (Lemma 4.1 mirror)
                                 self.moving.store(std::ptr::null_mut(), Ordering::Release);
                             }
                             Err(n) => {
@@ -804,6 +826,7 @@ impl<B: BucketSet> ShardedDHash<B> {
                                 // path's hazard-clear — see DESIGN.md
                                 // §Memory orderings. Listed in
                                 // tools/seqcst_allowlist.txt.
+                                // ord: sharded-moving — cross-shard hazard pointer (Lemma 4.1 mirror)
                                 self.moving.store(std::ptr::null_mut(), Ordering::SeqCst);
                                 // SAFETY: not in any table; unreachable
                                 // once `moving` is cleared.
@@ -835,8 +858,11 @@ impl<B: BucketSet> ShardedDHash<B> {
         // mirror values happen-before its subsequent mirror loads —
         // coherence then forbids it reading the older epoch. The
         // guard-free mirror accessors pair with these stores directly.
+        // ord: sharded-dir — mirrors-first directory install / Acquire route reads
         self.nshards.store(d.nshards(), Ordering::Release);
+        // ord: sharded-dir — mirrors-first directory install / Acquire route reads
         self.cur_epoch.store(d.epoch, Ordering::Release);
+        // ord: sharded-dir — mirrors-first directory install / Acquire route reads
         self.dir.store(new_dir, Ordering::Release);
     }
 
@@ -894,11 +920,13 @@ impl<B: BucketSet> ShardedDHash<B> {
         }
         // Acquire (token held: we are the only dir writer; the load
         // only needs to see the last published directory).
+        // ord: sharded-dir — mirrors-first directory install / Acquire route reads
         let d0_ptr = self.dir.load(Ordering::Acquire);
         let mig = MigrationGauge::enter(&self.migrating);
         let parent = d0.shard_map(s).clone();
         let c0 = Arc::new(DHashMap::with_hash(nbuckets, hash));
         let c1 = Arc::new(DHashMap::with_hash(nbuckets, hash));
+        // ord: stats-relaxed — monotonic counter, no ordering role
         let uid0 = self.next_uid.fetch_add(2, Ordering::Relaxed);
         let child_slot =
             |child: &Arc<DHashMap<B>>, uid: u64, prev: Option<&Arc<DHashMap<B>>>| Slot {
@@ -976,6 +1004,7 @@ impl<B: BucketSet> ShardedDHash<B> {
             drop(Box::from_raw(d1_ptr));
         }
 
+        // ord: stats-relaxed — monotonic counter, no ordering role
         self.splits.fetch_add(1, Ordering::Relaxed);
         drop(mig);
         drop(token);
@@ -1036,11 +1065,13 @@ impl<B: BucketSet> ShardedDHash<B> {
         };
         // Acquire (token held: we are the only dir writer; the load
         // only needs to see the last published directory).
+        // ord: sharded-dir — mirrors-first directory install / Acquire route reads
         let d0_ptr = self.dir.load(Ordering::Acquire);
         let mig = MigrationGauge::enter(&self.migrating);
         let src_s = d0.shard_map(s).clone();
         let src_b = d0.shard_map(b).clone();
         let merged = Arc::new(DHashMap::with_hash(nbuckets, hash));
+        // ord: stats-relaxed — monotonic counter, no ordering role
         let merged_uid = self.next_uid.fetch_add(1, Ordering::Relaxed);
 
         let build = |with_prev: bool| -> *mut Directory<B> {
@@ -1096,6 +1127,7 @@ impl<B: BucketSet> ShardedDHash<B> {
             drop(Box::from_raw(d1_ptr));
         }
 
+        // ord: stats-relaxed — monotonic counter, no ordering role
         self.merges.fetch_add(1, Ordering::Relaxed);
         drop(mig);
         drop(token);
@@ -1231,11 +1263,13 @@ impl<B: BucketSet> ShardedDHash<B> {
         // (2) The cross-shard hazard node.
         // Acquire: pairs with the drain's Release publication, as in
         // `lookup_migrating`.
+        // ord: sharded-moving — cross-shard hazard pointer (Lemma 4.1 mirror)
         let cur = self.moving.load(Ordering::Acquire);
         if !cur.is_null() {
             // SAFETY: as in lookup.
             let n = unsafe { &*cur };
             if !n.logically_removed() && seen.insert(n.key) {
+                // ord: node-val — value rides the link publish; later stores racy-by-spec
                 out.push((n.key, n.val.load(Ordering::Relaxed)));
             }
         }
@@ -1264,6 +1298,7 @@ impl<B: BucketSet> ShardedDHash<B> {
     pub fn len(&self, guard: &RcuThread) -> usize {
         let _g = guard.read_lock();
         let d = self.dir();
+        // ord: sharded-moving — cross-shard hazard pointer (Lemma 4.1 mirror)
         if self.moving.load(Ordering::Acquire).is_null()
             && d.slots.iter().all(|sl| sl.prev.is_none())
         {
@@ -1314,6 +1349,7 @@ impl<B: BucketSet> ShardedDHash<B> {
 impl<B: BucketSet> Drop for ShardedDHash<B> {
     fn drop(&mut self) {
         // Exclusive access: no concurrent ops, no migration in flight.
+        // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
         let d = self.dir.load(Ordering::Relaxed);
         if !d.is_null() {
             // SAFETY: exclusive; dropping the directory drops its shard

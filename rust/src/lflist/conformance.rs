@@ -173,10 +173,12 @@ pub(crate) fn concurrent_churn_no_corruption<B: BucketSet>(b: Arc<B>) {
             i
         }));
     }
-    std::thread::sleep(std::time::Duration::from_millis(200));
+    let run_ms = crate::util::miri_clamp(200, 20) as u64;
+    std::thread::sleep(std::time::Duration::from_millis(run_ms));
     stop.store(true, Ordering::SeqCst);
     let total: u64 = hs.into_iter().map(|h| h.join().unwrap()).sum();
-    assert!(total > 300, "too few iterations: {total}");
+    let floor = crate::util::miri_clamp(300, 1) as u64;
+    assert!(total > floor, "too few iterations: {total}");
     let ks = keys(&*b);
     assert!(ks.windows(2).all(|w| w[0] < w[1]), "order violated: {ks:?}");
     rcu_barrier();

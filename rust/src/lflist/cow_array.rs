@@ -45,6 +45,7 @@ impl CowSortedArray {
         // this one load is the entirety of the wait-free read path.
         // SAFETY: the version pointer is never null and, under the
         // caller's RCU read-side section, not yet reclaimed.
+        // ord: cow-version — RCU version-pointer publish (Release store / Acquire load)
         unsafe { &*self.current.load(Ordering::Acquire) }
     }
 
@@ -54,6 +55,7 @@ impl CowSortedArray {
         // AcqRel: Release publishes the new version's contents to
         // `load_version`'s Acquire; Acquire orders the retirement of the
         // old version after every read we did of it under the lock.
+        // ord: cow-version — RCU version-pointer publish (Release store / Acquire load)
         let old = self.current.swap(new_ptr, Ordering::AcqRel);
         let retired = SendVersion(old);
         call_rcu(move || {
@@ -65,7 +67,11 @@ impl CowSortedArray {
     }
 
     /// Copy the current version, dropping dead nodes (freeing born-dead
-    /// ones). Lock held.
+    /// ones).
+    ///
+    /// # Safety
+    /// The writer lock must be held: no concurrent version swap, and a
+    /// born-dead node freed here was never published to any reader.
     unsafe fn clean_copy(&self) -> Version {
         let cur = self.load_version();
         let mut out = Vec::with_capacity(cur.len() + 1);
@@ -92,11 +98,13 @@ unsafe impl BucketSet for CowSortedArray {
         }
     }
 
+    // lint: hot
     fn find(&self, key: u64) -> Option<&Node> {
         let v = self.load_version();
         // SAFETY: array entries are RCU-live nodes.
         match v.binary_search_by_key(&key, |&p| unsafe { (*p).key }) {
             Ok(i) => {
+                // SAFETY: as above — the version array pins RCU-live nodes.
                 let node = unsafe { &*v[i] };
                 if node.flags() == 0 {
                     Some(node)
@@ -145,10 +153,12 @@ unsafe impl BucketSet for CowSortedArray {
                 // delete's linearization point) publish prior stores, the
                 // same pairing as Node::set_flag.
                 loop {
+                    // ord: node-flag-rmw — mark RMW in the link word orders mark vs unlink
                     let old = (*node).next.load(Ordering::Acquire);
                     if old & super::FLAG_MASK != 0 {
                         return DeleteOutcome::NotFound; // already dead
                     }
+                    // ord: node-flag-rmw — mark RMW in the link word orders mark vs unlink
                     if (*node)
                         .next
                         .compare_exchange(old, old | flag, Ordering::AcqRel, Ordering::Acquire)
@@ -186,6 +196,7 @@ unsafe impl BucketSet for CowSortedArray {
     fn collect(&self) -> Vec<(u64, u64)> {
         let v = self.load_version();
         // SAFETY: RCU-live entries.
+        // ord: node-val — value rides the link publish; later stores racy-by-spec
         v.iter()
             .filter(|&&p| unsafe { (*p).flags() } == 0)
             .map(|&p| unsafe { ((*p).key, (*p).val.load(Ordering::Relaxed)) })
@@ -196,6 +207,7 @@ unsafe impl BucketSet for CowSortedArray {
         // SAFETY: exclusive access; free nodes then the version vec.
         // Relaxed: `&mut self` excludes concurrent readers and writers.
         unsafe {
+            // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
             let v = self.current.load(Ordering::Relaxed);
             for &p in (*v).iter() {
                 Node::free(p);
@@ -210,6 +222,7 @@ impl Drop for CowSortedArray {
         self.drain_exclusive();
         // SAFETY: exclusive; reclaim the final (now empty) version.
         unsafe {
+            // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
             drop(Box::from_raw(self.current.load(Ordering::Relaxed)));
         }
     }

@@ -39,10 +39,10 @@ struct Pos {
 impl Pos {
     #[inline(always)]
     fn found(&self, key: u64) -> bool {
+        debug_assert_ne!(key, SENTINEL_KEY, "u64::MAX keys are reserved");
         // SAFETY: `cur`, when non-null, is a list node kept alive by RCU.
         // The sentinel (key == SENTINEL_KEY) is structural, never a match:
         // DHashMap reserves u64::MAX at the API boundary.
-        debug_assert_ne!(key, SENTINEL_KEY, "u64::MAX keys are reserved");
         !self.cur.is_null() && unsafe { (*self.cur).key } == key
     }
 }
@@ -105,6 +105,7 @@ impl MichaelList {
             // SAFETY: `prev` points to either the bucket head or the
             // `next` field of a node kept alive by RCU for the duration of
             // the caller's read-side critical section.
+            // ord: michael-link — link-word publish/traversal contract (Michael 2002)
             let mut cur = untag(unsafe { (*prev).load(Ordering::Acquire) });
             loop {
                 if cur.is_null() {
@@ -115,11 +116,16 @@ impl MichaelList {
                     };
                 }
                 // SAFETY: as above; RCU keeps `cur` alive.
+                // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                 let next_t = unsafe { (*cur).next.load(Ordering::Acquire) };
                 // Re-validate: `prev` must still point at `cur` with no
                 // flags. Fails if (a) a concurrent op unlinked/inserted
                 // here, (b) the node holding `prev` got marked, or (c) a
                 // rebuild reused a node under us. Restart from head.
+                // SAFETY: `prev` is the head word or a link word inside a
+                // node reached by this traversal; RCU keeps either alive
+                // for the duration of the caller's read section.
+                // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                 if unsafe { (*prev).load(Ordering::Acquire) } != cur as usize {
                     continue 'retry;
                 }
@@ -128,7 +134,10 @@ impl MichaelList {
                     // past (the §4.4 rule — never traverse beyond a marked
                     // node without removing it first).
                     let next = next_t & !FLAG_MASK;
+                    // SAFETY: `prev` stays a live link word (RCU, as
+                    // above); the CAS only republishes values read from it.
                     if unsafe {
+                        // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                         (*prev)
                             .compare_exchange(
                                 cur as usize,
@@ -186,9 +195,13 @@ impl MichaelList {
             // in place before the link CAS below publishes the node.
             loop {
                 // SAFETY: node is ours or (rebuild path) unlinked + owned.
+                // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                 let old = unsafe { (*node).next.load(Ordering::Acquire) };
                 let new = pos.cur as usize | (old & LOGICALLY_REMOVED);
+                // SAFETY: same exclusive ownership of `node` as the load
+                // above — no other thread can reach it before the link CAS.
                 if unsafe {
+                    // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                     (*node)
                         .next
                         .compare_exchange(old, new, Ordering::AcqRel, Ordering::Acquire)
@@ -202,6 +215,7 @@ impl MichaelList {
             // half revalidates against concurrent unlinks.
             // SAFETY: `pos.prev` valid under RCU (revalidated by the CAS).
             if unsafe {
+                // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                 (*pos.prev)
                     .compare_exchange(
                         pos.cur as usize,
@@ -231,7 +245,10 @@ impl MichaelList {
             // point) publish everything sequenced before it — on the
             // rebuild's hazard path that is the `rebuild_cur` store Lemma
             // 4.1 depends on.
+            // SAFETY: `cur` was reached by `search` inside the caller's
+            // RCU read section, so the node is live for the CAS.
             if unsafe {
+                // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                 (*cur)
                     .next
                     .compare_exchange(
@@ -250,7 +267,10 @@ impl MichaelList {
             // Physical unlink. On success the unlinker reclaims iff the
             // node carries only LOGICALLY_REMOVED. AcqRel/Acquire as in
             // `search`'s unlink CAS.
+            // SAFETY: `pos.prev` is a live link word from the same
+            // traversal (RCU read section pins it).
             if unsafe {
+                // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                 (*pos.prev)
                     .compare_exchange(cur as usize, pos.next, Ordering::AcqRel, Ordering::Acquire)
                     .is_ok()
@@ -280,6 +300,7 @@ unsafe impl BucketSet for MichaelList {
         Self::new_with_sentinel()
     }
 
+    // lint: hot
     fn find(&self, key: u64) -> Option<&Node> {
         let pos = self.search(key);
         if pos.found(key) {
@@ -330,7 +351,10 @@ unsafe impl BucketSet for MichaelList {
             // above before the mark: a reader that sees this node marked
             // (and thus possibly missing from the old table) is guaranteed
             // to see `rebuild_cur` pointing at it (Lemma 4.1).
+            // SAFETY: `cur` came out of `search` under the rebuild
+            // thread's RCU read section — live node, valid link word.
             if unsafe {
+                // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                 (*cur)
                     .next
                     .compare_exchange(
@@ -345,7 +369,10 @@ unsafe impl BucketSet for MichaelList {
             }
             // Physical unlink; on failure force it via a search (the
             // rebuild reuses the node, so it must be out of the chain).
+            // SAFETY: `pos.prev` is a live link word from the traversal
+            // above; the marked `cur` cannot be freed before our unlink.
             if unsafe {
+                // ord: michael-link — link-word publish/traversal contract (Michael 2002)
                 (*pos.prev)
                     .compare_exchange(cur as usize, pos.next, Ordering::AcqRel, Ordering::Acquire)
                     .is_err()
@@ -363,15 +390,19 @@ unsafe impl BucketSet for MichaelList {
 
     fn collect(&self) -> Vec<(u64, u64)> {
         let mut out = Vec::new();
+        // ord: michael-link — link-word publish/traversal contract (Michael 2002)
         let mut cur = untag(self.head.load(Ordering::Acquire));
         while !cur.is_null() {
             // SAFETY: alive under RCU (callers hold a read-side section;
             // tests hold exclusive access).
+            // ord: michael-link — link-word publish/traversal contract (Michael 2002)
             let next_t = unsafe { (*cur).next.load(Ordering::Acquire) };
             if tag_of(next_t) == 0 && !Self::is_sentinel(cur) {
                 // Relaxed val: the initial value was published by the
                 // Release link CAS our Acquire walk synchronized with;
                 // later upserts are racy-by-spec for a snapshot.
+                // SAFETY: `cur` is non-null here and RCU-live, as above.
+                // ord: node-val — value rides the link publish; later stores racy-by-spec
                 unsafe { out.push(((*cur).key, (*cur).val.load(Ordering::Relaxed))) };
             }
             cur = untag(next_t);
@@ -385,6 +416,7 @@ unsafe impl BucketSet for MichaelList {
             // SAFETY: exclusive access (`&mut self`), no concurrent
             // readers can exist; free immediately (Relaxed suffices).
             unsafe {
+                // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
                 let next = untag((*cur).next.load(Ordering::Relaxed));
                 Node::free(cur);
                 cur = next;

@@ -65,6 +65,7 @@ pub mod mem_stats {
 
     /// (allocated, freed) node counts since process start.
     pub fn counts() -> (u64, u64) {
+        // ord: stats-relaxed — monotonic counter, no ordering role
         (ALLOCS.load(Ordering::Relaxed), FREES.load(Ordering::Relaxed))
     }
 
@@ -85,6 +86,7 @@ impl Node {
     /// Heap-allocate a node. The caller owns the raw pointer until it is
     /// successfully published into a set.
     pub fn alloc(key: u64, val: u64) -> *mut Node {
+        // ord: stats-relaxed — monotonic counter, no ordering role
         mem_stats::ALLOCS.fetch_add(1, Ordering::Relaxed);
         Box::into_raw(Box::new(Node {
             key,
@@ -99,6 +101,7 @@ impl Node {
     /// `ptr` must be a unique, unpublished (or fully unlinked and
     /// grace-period-expired) node allocated by [`Node::alloc`].
     pub unsafe fn free(ptr: *mut Node) {
+        // ord: stats-relaxed — monotonic counter, no ordering role
         mem_stats::FREES.fetch_add(1, Ordering::Relaxed);
         drop(Box::from_raw(ptr));
     }
@@ -126,6 +129,7 @@ impl Node {
     /// before it (DESIGN.md §Memory orderings, cluster L).
     #[inline(always)]
     pub fn flags(&self) -> usize {
+        // ord: node-flag-rmw — mark RMW in the link word orders mark vs unlink
         self.next.load(Ordering::Acquire) & FLAG_MASK
     }
 
@@ -144,6 +148,7 @@ impl Node {
     /// after any link state it read here.
     #[inline]
     pub fn set_flag(&self, flag: usize) -> usize {
+        // ord: node-flag-rmw — mark RMW in the link word orders mark vs unlink
         self.next.fetch_or(flag & FLAG_MASK, Ordering::AcqRel) & FLAG_MASK
     }
 
@@ -151,6 +156,7 @@ impl Node {
     /// AcqRel for the same pairing as [`Node::set_flag`].
     #[inline]
     pub fn clean_flag(&self, flag: usize) {
+        // ord: node-flag-rmw — mark RMW in the link word orders mark vs unlink
         self.next.fetch_and(!(flag & FLAG_MASK), Ordering::AcqRel);
     }
 }

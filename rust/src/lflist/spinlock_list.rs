@@ -35,10 +35,12 @@ impl SpinLock {
     #[inline]
     pub(crate) fn lock(&self) {
         loop {
+            // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
             if !self.locked.swap(true, Ordering::Acquire) {
                 return;
             }
             let mut spins = 0;
+            // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
             while self.locked.load(Ordering::Relaxed) {
                 spins += 1;
                 if spins < 32 {
@@ -54,6 +56,7 @@ impl SpinLock {
 
     #[inline]
     pub(crate) fn unlock(&self) {
+        // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
         self.locked.store(false, Ordering::Release);
     }
 
@@ -79,8 +82,10 @@ impl SpinLock {
 unsafe fn set_link(link: &AtomicUsize, target: usize) {
     debug_assert_eq!(target & FLAG_MASK, 0);
     loop {
+        // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
         let old = link.load(Ordering::Acquire);
         let new = target | (old & FLAG_MASK);
+        // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
         if link
             .compare_exchange(old, new, Ordering::AcqRel, Ordering::Acquire)
             .is_ok()
@@ -107,15 +112,21 @@ impl SpinlockList {
     /// Marked nodes appear in a lock-based bucket only through the
     /// born-dead insert path (a hazard-period delete raced with a rebuild
     /// re-insert).
+    ///
+    /// # Safety
+    /// The bucket lock must be held: links cannot change under the
+    /// traversal, and unlinked nodes go to `call_rcu` exactly once.
     unsafe fn prune_locked(&self) {
         let mut pp: *const AtomicUsize = &self.head;
         loop {
+            // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
             let cur = untag((*pp).load(Ordering::Acquire));
             if cur.is_null() {
                 return;
             }
             let flags = (*cur).flags();
             if flags != 0 {
+                // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                 let next = untag((*cur).next.load(Ordering::Acquire));
                 set_link(&*pp, next as usize);
                 if flags == LOGICALLY_REMOVED {
@@ -149,6 +160,7 @@ unsafe impl BucketSet for SpinlockList {
             // but flag bits arrive from hazard-period deleters outside
             // the lock (AcqRel RMWs in Node::set_flag).
             unsafe {
+                // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                 let mut cur = untag(self.head.load(Ordering::Acquire));
                 while !cur.is_null() {
                     let k = (*cur).key;
@@ -162,6 +174,7 @@ unsafe impl BucketSet for SpinlockList {
                     if k > key {
                         return None;
                     }
+                    // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                     cur = untag((*cur).next.load(Ordering::Acquire));
                 }
                 None
@@ -176,9 +189,11 @@ unsafe impl BucketSet for SpinlockList {
                 self.prune_locked();
                 let key = (*node).key;
                 let mut pp: *const AtomicUsize = &self.head;
+                // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                 let mut cur = untag((*pp).load(Ordering::Acquire));
                 while !cur.is_null() && (*cur).key < key {
                     pp = &(*cur).next;
+                    // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                     cur = untag((*cur).next.load(Ordering::Acquire));
                 }
                 if !cur.is_null() && (*cur).key == key {
@@ -187,8 +202,10 @@ unsafe impl BucketSet for SpinlockList {
                 // Point the node at its successor, preserving a racing
                 // LOGICALLY_REMOVED (hazard-period delete, §4.4).
                 loop {
+                    // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                     let old = (*node).next.load(Ordering::Acquire);
                     let new = cur as usize | (old & LOGICALLY_REMOVED);
+                    // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                     if (*node)
                         .next
                         .compare_exchange(old, new, Ordering::AcqRel, Ordering::Acquire)
@@ -209,6 +226,7 @@ unsafe impl BucketSet for SpinlockList {
             unsafe {
                 let mut pp: *const AtomicUsize = &self.head;
                 loop {
+                    // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                     let cur = untag((*pp).load(Ordering::Acquire));
                     if cur.is_null() {
                         return DeleteOutcome::NotFound;
@@ -219,6 +237,7 @@ unsafe impl BucketSet for SpinlockList {
                             return DeleteOutcome::NotFound; // already dead
                         }
                         (*cur).set_flag(flag);
+                        // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                         let next = untag((*cur).next.load(Ordering::Acquire));
                         set_link(&*pp, next as usize);
                         if flag == LOGICALLY_REMOVED {
@@ -240,6 +259,7 @@ unsafe impl BucketSet for SpinlockList {
             // SAFETY: lock held.
             unsafe {
                 self.prune_locked();
+                // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                 let h = untag(self.head.load(Ordering::Acquire));
                 if h.is_null() {
                     None
@@ -259,11 +279,14 @@ unsafe impl BucketSet for SpinlockList {
             let mut out = Vec::new();
             // SAFETY: lock held.
             unsafe {
+                // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                 let mut cur = untag(self.head.load(Ordering::Acquire));
                 while !cur.is_null() {
                     if (*cur).flags() == 0 {
+                        // ord: node-val — value rides the link publish; later stores racy-by-spec
                         out.push(((*cur).key, (*cur).val.load(Ordering::Relaxed)));
                     }
+                    // ord: spinlock-bucket — bucket lock Acquire/Release; Release link stores for lock-free readers
                     cur = untag((*cur).next.load(Ordering::Acquire));
                 }
             }
@@ -275,12 +298,15 @@ unsafe impl BucketSet for SpinlockList {
         // SAFETY: exclusive access.
         // Relaxed: exclusive access, no concurrent readers or writers.
         unsafe {
+            // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
             let mut cur = untag(self.head.load(Ordering::Relaxed));
             while !cur.is_null() {
+                // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
                 let next = untag((*cur).next.load(Ordering::Relaxed));
                 Node::free(cur);
                 cur = next;
             }
+            // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
             self.head.store(0, Ordering::Relaxed);
         }
     }
@@ -302,6 +328,7 @@ mod tests {
         let lock = Arc::new(SpinLock::new());
         let counter = Arc::new(std::cell::UnsafeCell::new(0u64));
         struct Shared(Arc<std::cell::UnsafeCell<u64>>);
+        // SAFETY: the spinlock under test serializes all access.
         unsafe impl Send for Shared {}
         let mut hs = Vec::new();
         for _ in 0..4 {

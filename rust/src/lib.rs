@@ -43,6 +43,7 @@ pub mod coordinator;
 pub mod dhash;
 pub mod error;
 pub mod lflist;
+pub mod lint;
 pub mod map;
 pub mod net;
 pub mod rcu;

@@ -1,0 +1,141 @@
+//! Rule `hot`: functions tagged `// lint: hot` stay allocation-,
+//! lock-, sleep- and print-free.
+//!
+//! The tag is a standalone comment line — exactly `// lint: hot` —
+//! directly above a fast-path fn (the `#[inline]` lookup paths);
+//! merely *mentioning* the tag in prose does not arm the rule.
+//! The rule brace-matches the fn body and
+//! denies a fixed token list — mutex/spinlock acquisition, heap
+//! allocation, sleeping, formatting/printing. The check is *shallow*
+//! (tokens in the tagged body only, not callees): its job is to stop
+//! the easy regression where a debug `println!` or a convenience
+//! `Vec::new()` lands on the lookup path, not to prove the whole call
+//! graph allocation-free. QSBR's `read_lock()` is *not* a lock (it is
+//! a no-op counter copy) and is not matched — the deny tokens require
+//! a `.lock(` / `.try_lock(` method call.
+
+use super::{Diagnostic, LintContext};
+use super::scan::SourceFile;
+
+pub const TAG: &str = "// lint: hot";
+
+/// (needle in code text, human name in the diagnostic)
+pub const DENIED: &[(&str, &str)] = &[
+    (".lock(", "lock()"),
+    (".try_lock(", "try_lock()"),
+    ("sleep(", "sleep"),
+    ("println!", "println!"),
+    ("eprintln!", "eprintln!"),
+    ("print!(", "print!"),
+    ("format!", "format!"),
+    ("vec![", "vec![]"),
+    ("Vec::new", "Vec::new"),
+    ("Vec::with_capacity", "Vec::with_capacity"),
+    ("Box::new", "Box::new"),
+    ("String::new", "String::new"),
+    ("String::from", "String::from"),
+    (".to_vec(", "to_vec()"),
+    (".to_string(", "to_string()"),
+    (".to_owned(", "to_owned()"),
+    (".collect(", "collect()"),
+    ("HashMap::new", "HashMap::new"),
+    ("HashSet::new", "HashSet::new"),
+];
+
+pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for file in &ctx.files {
+        let mut idx = 0;
+        while idx < file.lines.len() {
+            if file.lines[idx].comment.trim() != TAG {
+                idx += 1;
+                continue;
+            }
+            match fn_after_tag(file, idx) {
+                Some((fn_line, name, body_end)) => {
+                    scan_body(file, fn_line, body_end, &name, &mut out);
+                    idx = body_end + 1;
+                }
+                None => {
+                    out.push(Diagnostic::new(
+                        &file.path,
+                        idx + 1,
+                        "hot",
+                        "// lint: hot tag with no fn following it".to_string(),
+                    ));
+                    idx += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// From the tag line, locate the next `fn`, its name, and the line of
+/// its matching close brace.
+fn fn_after_tag(file: &SourceFile, tag_idx: usize) -> Option<(usize, String, usize)> {
+    let lines = &file.lines;
+    let mut j = tag_idx;
+    // The fn header must follow within a few lines (attributes,
+    // comments, and the tag line itself in between are fine).
+    let mut fn_line = None;
+    while j < lines.len() && j <= tag_idx + 6 {
+        if super::scan::has_word(&lines[j].code, "fn") {
+            fn_line = Some(j);
+            break;
+        }
+        j += 1;
+    }
+    let fn_line = fn_line?;
+    let code = &lines[fn_line].code;
+    let after_fn = code.split("fn ").nth(1)?;
+    let name: String = after_fn
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    // Brace-match the body from the first `{` at or after the header.
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    let mut k = fn_line;
+    while k < lines.len() {
+        for c in lines[k].code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some((fn_line, name, k));
+        }
+        k += 1;
+    }
+    Some((fn_line, name, lines.len() - 1))
+}
+
+fn scan_body(
+    file: &SourceFile,
+    from: usize,
+    to: usize,
+    name: &str,
+    out: &mut Vec<Diagnostic>,
+) {
+    for idx in from..=to {
+        let code = &file.lines[idx].code;
+        for (needle, label) in DENIED {
+            if code.contains(needle) {
+                out.push(Diagnostic::new(
+                    &file.path,
+                    idx + 1,
+                    "hot",
+                    format!(
+                        "fn '{name}' is tagged // lint: hot but uses denied operation '{label}'"
+                    ),
+                ));
+            }
+        }
+    }
+}

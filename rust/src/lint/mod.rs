@@ -1,0 +1,204 @@
+//! `dhash-lint` — the repo's concurrency-contract static analyzer.
+//!
+//! DHash's correctness argument is a protocol: Lemma 4.1's
+//! publish→delete→insert→clear ordering, the hazard-pointer handshakes,
+//! and the per-site relaxed-ordering invariants from the read-path
+//! audit. That protocol lives in comments and DESIGN.md tables — this
+//! module makes it *enforced*. Five rules, each a pure function over
+//! scanned source ([`scan`]):
+//!
+//! | rule | contract |
+//! |---|---|
+//! | `safety` | every `unsafe` block/fn/impl is adjacent to a `// SAFETY:` comment (or a `/// # Safety` doc section) |
+//! | `ord` | every `Ordering::*` site in `dhash`/`lflist`/`rcu` production code carries an `// ord: <key>` annotation, and the key set equals the DESIGN.md §Memory orderings table (drift in either direction fails) |
+//! | `seqcst-budget` | per-file `Ordering::SeqCst` counts equal `tools/seqcst_allowlist.txt` (subsumes the old grep script) |
+//! | `hot` | fns tagged `// lint: hot` contain no locking, allocation, sleeping, or printing tokens |
+//! | `wire` | `KvError::code()` ↔ `code_name()` ↔ `net::proto::wire_code` ↔ DESIGN.md §Error codes agree byte-for-byte |
+//!
+//! The analyzer is hand-rolled (no new deps, per the vendored-deps
+//! rule) and line/token based: it never type-checks, so it errs toward
+//! explicit annotation over inference. Run it with
+//! `cargo run --release --bin dhash-lint`; fixture-driven self-tests
+//! live in `rust/tests/lint_self.rs` + `rust/tests/lint_fixtures/`.
+
+pub mod hot;
+pub mod ord;
+pub mod safety;
+pub mod scan;
+pub mod seqcst;
+pub mod wire;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use scan::SourceFile;
+
+/// One lint finding. Renders as `file:line: [rule] message` — the
+/// format the self-tests assert verbatim.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    pub file: String,
+    /// 1-based line the finding anchors to.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(file: &str, line: usize, rule: &'static str, message: String) -> Diagnostic {
+        Diagnostic { file: file.to_string(), line, rule, message }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Everything a rule may look at: the scanned `rust/src` tree plus the
+/// two contract documents. Self-tests build synthetic contexts with
+/// [`LintContext::from_sources`]; the binary loads the real tree with
+/// [`LintContext::load`].
+pub struct LintContext {
+    pub files: Vec<SourceFile>,
+    /// `rust/DESIGN.md`, verbatim.
+    pub design_md: String,
+    /// `tools/seqcst_allowlist.txt`, verbatim.
+    pub allowlist: String,
+}
+
+impl LintContext {
+    /// Load the real tree. `root` is the repo root (the directory
+    /// holding `rust/` and `tools/`).
+    pub fn load(root: &Path) -> io::Result<LintContext> {
+        let src = root.join("rust/src");
+        let mut paths = Vec::new();
+        walk_rs(&src, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::new();
+        for p in &paths {
+            let text = fs::read_to_string(p)?;
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            files.push(SourceFile::parse(&rel, &text));
+        }
+        let design_md = fs::read_to_string(root.join("rust/DESIGN.md"))?;
+        let allowlist = fs::read_to_string(root.join("tools/seqcst_allowlist.txt"))?;
+        let mut ctx = LintContext { files, design_md, allowlist };
+        ctx.resolve_test_only_files();
+        Ok(ctx)
+    }
+
+    /// Build a context from in-memory sources (self-tests, fixtures).
+    pub fn from_sources(
+        sources: &[(&str, &str)],
+        design_md: &str,
+        allowlist: &str,
+    ) -> LintContext {
+        let files = sources
+            .iter()
+            .map(|(path, text)| SourceFile::parse(path, text))
+            .collect();
+        let mut ctx = LintContext {
+            files,
+            design_md: design_md.to_string(),
+            allowlist: allowlist.to_string(),
+        };
+        ctx.resolve_test_only_files();
+        ctx
+    }
+
+    /// Find the repo root by walking up from `start` until a directory
+    /// holding both `rust/src` and `tools/seqcst_allowlist.txt`. Makes
+    /// the binary work from the workspace root, `rust/`, or anywhere
+    /// below.
+    pub fn find_root(start: &Path) -> Option<PathBuf> {
+        let mut dir = start.to_path_buf();
+        loop {
+            if dir.join("rust/src").is_dir() && dir.join("tools/seqcst_allowlist.txt").is_file() {
+                return Some(dir);
+            }
+            if !dir.pop() {
+                return None;
+            }
+        }
+    }
+
+    /// Propagate `#[cfg(test)] mod name;` declarations: the files they
+    /// resolve to are test code in their entirety.
+    fn resolve_test_only_files(&mut self) {
+        let mut test_paths: Vec<String> = Vec::new();
+        for f in &self.files {
+            for m in &f.cfg_test_mods {
+                // `a/b/mod.rs` (or lib.rs) declaring `mod m;` →
+                // `a/b/m.rs`; `a/b/c.rs` declaring it → `a/b/c/m.rs`.
+                let dir = match f.path.rsplit_once('/') {
+                    Some((d, base)) if base == "mod.rs" || base == "lib.rs" => d.to_string(),
+                    Some((d, base)) => {
+                        format!("{}/{}", d, base.trim_end_matches(".rs"))
+                    }
+                    None => String::new(),
+                };
+                let prefix = if dir.is_empty() { String::new() } else { format!("{dir}/") };
+                test_paths.push(format!("{prefix}{m}.rs"));
+                test_paths.push(format!("{prefix}{m}/mod.rs"));
+            }
+        }
+        for f in &mut self.files {
+            if test_paths.iter().any(|p| *p == f.path) {
+                f.test_only = true;
+            }
+        }
+    }
+
+    /// Files in the concurrency core (the `ord` / `seqcst-budget`
+    /// scope).
+    pub fn core_files(&self) -> impl Iterator<Item = &SourceFile> {
+        self.files.iter().filter(|f| {
+            f.path.starts_with("rust/src/dhash/")
+                || f.path.starts_with("rust/src/lflist/")
+                || f.path.starts_with("rust/src/rcu/")
+        })
+    }
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The rule registry, in report order.
+pub const RULES: &[(&str, fn(&LintContext) -> Vec<Diagnostic>)] = &[
+    ("safety", safety::check),
+    ("ord", ord::check),
+    ("seqcst-budget", seqcst::check),
+    ("hot", hot::check),
+    ("wire", wire::check),
+];
+
+/// Run the named rules (all when `which` is empty) and return findings
+/// sorted by file/line.
+pub fn run(ctx: &LintContext, which: &[String]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (name, rule) in RULES {
+        if which.is_empty() || which.iter().any(|w| w == name) {
+            out.extend(rule(ctx));
+        }
+    }
+    out.sort();
+    out
+}

@@ -1,0 +1,181 @@
+//! Rule `ord`: every memory-ordering choice in the concurrency core is
+//! annotated and indexed.
+//!
+//! ## Annotation grammar
+//!
+//! ```text
+//! // ord: <key> — <free-form justification>
+//! ```
+//!
+//! `<key>` is `[a-z0-9-]+` and names a row of the DESIGN.md §Memory
+//! orderings table (as a backticked `ord:<key>` token in that row). One
+//! key groups every site pinned by the same invariant — e.g. all of
+//! Michael-list link-word traffic is `michael-link`.
+//!
+//! ## Coverage
+//!
+//! An annotation covers `Ordering::*` tokens on its own line; an
+//! annotation on a comment line covers the statement below it — through
+//! the first code line that ends the statement (contains `;` or ends
+//! with `{`), so a multi-line `compare_exchange(…, Ordering::AcqRel,
+//! Ordering::Acquire)` needs only one annotation. A blank line or a new
+//! annotation also ends coverage.
+//!
+//! ## Scope
+//!
+//! Production code in `rust/src/{dhash,lflist,rcu}`. Test code — inline
+//! `#[cfg(test)]` regions and files declared via `#[cfg(test)] mod x;`
+//! — is exempt: test orderings are not protocol claims (the SeqCst ones
+//! are budgeted by `seqcst-budget` instead).
+//!
+//! ## Index agreement
+//!
+//! The set of keys used in source must equal the set of `ord:<key>`
+//! tokens in DESIGN.md §Memory orderings — a key used but undocumented
+//! fails, and a documented key no site uses fails (stale row).
+
+use std::collections::BTreeMap;
+
+use super::{Diagnostic, LintContext};
+
+pub const DESIGN_SECTION: &str = "## Memory orderings";
+
+pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    // key → first (file, line) that uses it.
+    let mut used: BTreeMap<String, (String, usize)> = BTreeMap::new();
+
+    for file in ctx.core_files() {
+        if file.test_only {
+            continue;
+        }
+        // Active annotation key, plus how many more lines it may cover
+        // (a cap so a forgotten statement end cannot blanket a file).
+        let mut active: Option<String> = None;
+        let mut budget = 0usize;
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                active = None;
+                continue;
+            }
+            let code = line.code.trim();
+            if code.is_empty() && line.comment.is_empty() {
+                active = None;
+                continue;
+            }
+            let here = extract_key(&line.comment);
+            if let Some(key) = &here {
+                used.entry(key.clone())
+                    .or_insert_with(|| (file.path.clone(), idx + 1));
+                active = Some(key.clone());
+                budget = 12;
+            }
+            if code.contains("Ordering::") && active.is_none() {
+                out.push(Diagnostic::new(
+                    &file.path,
+                    idx + 1,
+                    "ord",
+                    "Ordering site without an // ord: annotation (see DESIGN.md §Memory orderings)"
+                        .to_string(),
+                ));
+            }
+            // Statement end consumes the annotation.
+            if !code.is_empty() {
+                if code.contains(';') || code.ends_with('{') || code.ends_with('}') {
+                    active = None;
+                } else if budget > 0 {
+                    budget -= 1;
+                    if budget == 0 {
+                        active = None;
+                    }
+                }
+            }
+        }
+    }
+
+    // DESIGN.md §Memory orderings index.
+    let table = design_keys(&ctx.design_md);
+    for (key, (file, line)) in &used {
+        if !table.contains_key(key) {
+            out.push(Diagnostic::new(
+                file,
+                *line,
+                "ord",
+                format!("ord key '{key}' is not indexed in DESIGN.md {DESIGN_SECTION}"),
+            ));
+        }
+    }
+    for (key, line) in &table {
+        if !used.contains_key(key) {
+            out.push(Diagnostic::new(
+                "rust/DESIGN.md",
+                *line,
+                "ord",
+                format!(
+                    "DESIGN.md {DESIGN_SECTION} indexes ord key '{key}' but no source site uses it"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// `// ord: <key> …` → `Some(key)`. The `ord:` marker must start at a
+/// word boundary so prose like "record: announce" cannot arm the rule.
+pub fn extract_key(comment: &str) -> Option<String> {
+    let mut start = 0;
+    while let Some(pos) = comment[start..].find("ord:") {
+        let at = start + pos;
+        let boundary = !comment[..at]
+            .chars()
+            .next_back()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if boundary {
+            let key: String = comment[at + 4..]
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
+                .collect();
+            if !key.is_empty() {
+                return Some(key);
+            }
+        }
+        start = at + 4;
+    }
+    None
+}
+
+/// All `ord:<key>` tokens in the §Memory orderings section of
+/// DESIGN.md, with the 1-based line each first appears on.
+pub fn design_keys(design_md: &str) -> BTreeMap<String, usize> {
+    let mut keys = BTreeMap::new();
+    let mut in_section = false;
+    for (idx, line) in design_md.lines().enumerate() {
+        if line.starts_with("## ") {
+            in_section = line.starts_with(DESIGN_SECTION);
+            continue;
+        }
+        if !in_section {
+            continue;
+        }
+        let mut start = 0;
+        while let Some(pos) = line[start..].find("ord:") {
+            let at = start + pos;
+            let boundary = !line[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+            if boundary {
+                let key: String = line[at + 4..]
+                    .chars()
+                    .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
+                    .collect();
+                if !key.is_empty() {
+                    keys.entry(key).or_insert(idx + 1);
+                }
+            }
+            start = at + 4;
+        }
+    }
+    keys
+}

@@ -1,0 +1,97 @@
+//! Rule `safety`: every `unsafe` site is adjacent to a safety
+//! argument.
+//!
+//! A line whose *code* contains the `unsafe` keyword is covered when
+//! one of the following holds:
+//!
+//! 1. the same line carries a `// SAFETY:` comment (trailing style);
+//! 2. the line immediately below carries one (the
+//!    `unsafe { // SAFETY: … body }` block-leading style);
+//! 3. the contiguous comment block directly above — skipping attribute
+//!    lines and sibling one-line `unsafe impl`s, so one comment can
+//!    cover a `Send`/`Sync` pair — contains `SAFETY:` or a
+//!    `# Safety` doc heading (the contract section of a
+//!    `pub unsafe fn`/`unsafe trait` declaration);
+//! 4. the `unsafe` sits on a continuation line of a statement whose
+//!    first line was covered by (3) — a comment above a multi-line
+//!    iterator chain covers closures on the chained lines, through the
+//!    line that ends the statement (`;`, or a line ending in `{`/`}`).
+//!
+//! The rule applies to *all* scanned code, tests included: a test's
+//! `unsafe` still dereferences raw pointers and still deserves a
+//! sentence saying why that is sound.
+
+use super::scan::has_word;
+use super::{Diagnostic, LintContext};
+
+pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for file in &ctx.files {
+        // Statement tracking for rule 4: continuation lines of a
+        // statement whose first line was covered stay covered.
+        let mut in_stmt = false;
+        let mut stmt_covered = false;
+        for (idx, line) in file.lines.iter().enumerate() {
+            let code = line.code.trim();
+            if code.is_empty() {
+                if line.comment.is_empty() {
+                    // Blank line: any open statement is malformed anyway;
+                    // stop extending its coverage.
+                    in_stmt = false;
+                }
+                continue;
+            }
+            if !in_stmt {
+                stmt_covered = covered_above(file, idx);
+            }
+            if has_word(&line.code, "unsafe")
+                && !is_safety_comment(&line.comment)
+                && !(idx + 1 < file.lines.len()
+                    && is_safety_comment(&file.lines[idx + 1].comment))
+                && !stmt_covered
+            {
+                out.push(Diagnostic::new(
+                    &file.path,
+                    idx + 1,
+                    "safety",
+                    "unsafe site without an adjacent // SAFETY: comment".to_string(),
+                ));
+            }
+            in_stmt = !(code.contains(';') || code.ends_with('{') || code.ends_with('}'));
+        }
+    }
+    out
+}
+
+fn is_safety_comment(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+/// Does a contiguous comment block directly above line `idx` carry a
+/// safety argument? Skips attribute lines and sibling one-line
+/// `unsafe impl`s (one SAFETY comment may cover a Send/Sync pair).
+fn covered_above(file: &super::scan::SourceFile, idx: usize) -> bool {
+    let lines = &file.lines;
+    let mut j = idx;
+    while j > 0 {
+        let above = &lines[j - 1];
+        let t = above.code.trim();
+        if t.starts_with("#[") || t.contains("unsafe impl") {
+            j -= 1;
+        } else {
+            break;
+        }
+    }
+    while j > 0 {
+        let above = &lines[j - 1];
+        if above.code.trim().is_empty() && !above.comment.is_empty() {
+            if is_safety_comment(&above.comment) {
+                return true;
+            }
+            j -= 1;
+        } else {
+            break;
+        }
+    }
+    false
+}

@@ -1,0 +1,410 @@
+//! Line/token scanner for the lint rules.
+//!
+//! `dhash-lint` is deliberately not a parser: every contract it checks
+//! (SAFETY comments, `ord:` annotations, SeqCst budget, hot-path deny
+//! tokens) is a *line-local* property once comments and literals are
+//! out of the way. So the scanner does exactly that much: a character
+//! state machine splits each line into its **code** part (comments
+//! removed, string/char literal contents blanked so a `lock()` inside a
+//! log message is not a lock call) and its **comment** part (both
+//! `//`-style and nesting `/* */` blocks), then a second pass marks
+//! `#[cfg(test)]` regions so rules can scope themselves to production
+//! code.
+
+/// One source line, split into its code and comment parts.
+pub struct SourceLine {
+    /// The raw line text, verbatim.
+    pub raw: String,
+    /// The line with comments removed and literal contents blanked.
+    /// Quotes are kept so adjacent tokens do not merge.
+    pub code: String,
+    /// The comment text on this line (contents of `//…` and any `/* */`
+    /// parts, including doc comments).
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)]` item (an inline
+    /// `mod tests { … }` region or a `#[cfg(test)]`-gated item).
+    pub in_test: bool,
+}
+
+/// A scanned file: split lines plus test-scoping facts.
+pub struct SourceFile {
+    /// Path relative to the repo root, forward slashes.
+    pub path: String,
+    pub lines: Vec<SourceLine>,
+    /// The whole file is test code (a parent declared it behind
+    /// `#[cfg(test)] mod name;`).
+    pub test_only: bool,
+    /// Child module names this file declares behind `#[cfg(test)]`
+    /// (e.g. `conformance` for `#[cfg(test)] mod conformance;`) — the
+    /// loader resolves them to sibling files and marks those
+    /// `test_only`.
+    pub cfg_test_mods: Vec<String>,
+}
+
+/// Literal-scanner state carried across lines.
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    /// Inside a block comment, with nesting depth.
+    Block(u32),
+    /// Inside a `"…"` string literal.
+    Str,
+    /// Inside a raw string literal `r##"…"##` with this many hashes.
+    RawStr(usize),
+}
+
+impl SourceFile {
+    /// Scan `text` into split lines and mark `#[cfg(test)]` regions.
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let mut mode = Mode::Code;
+        let mut lines: Vec<SourceLine> = text
+            .lines()
+            .map(|l| {
+                let (code, comment) = scan_line(l, &mut mode);
+                SourceLine { raw: l.to_string(), code, comment, in_test: false }
+            })
+            .collect();
+        let cfg_test_mods = mark_test_regions(&mut lines);
+        SourceFile { path: path.to_string(), lines, test_only: false, cfg_test_mods }
+    }
+}
+
+/// Split one line into (code, comment), advancing the literal state.
+fn scan_line(line: &str, mode: &mut Mode) -> (String, String) {
+    let ch: Vec<char> = line.chars().collect();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < ch.len() {
+        match *mode {
+            Mode::Block(depth) => {
+                if ch[i] == '*' && ch.get(i + 1) == Some(&'/') {
+                    *mode = if depth <= 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    comment.push_str("*/");
+                    i += 2;
+                } else if ch[i] == '/' && ch.get(i + 1) == Some(&'*') {
+                    *mode = Mode::Block(depth + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else {
+                    comment.push(ch[i]);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if ch[i] == '\\' {
+                    // Escape: blank it and whatever it escapes.
+                    code.push(' ');
+                    if i + 1 < ch.len() {
+                        code.push(' ');
+                    }
+                    i += 2;
+                } else if ch[i] == '"' {
+                    code.push('"');
+                    *mode = Mode::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if ch[i] == '"' && (0..hashes).all(|k| ch.get(i + 1 + k) == Some(&'#')) {
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    *mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                let c = ch[i];
+                let prev_ident = code
+                    .chars()
+                    .last()
+                    .is_some_and(|p| p.is_alphanumeric() || p == '_');
+                if c == '/' && ch.get(i + 1) == Some(&'/') {
+                    // Line comment: the rest of the line (incl. doc
+                    // comments) is comment text.
+                    comment.extend(ch[i..].iter());
+                    i = ch.len();
+                } else if c == '/' && ch.get(i + 1) == Some(&'*') {
+                    *mode = Mode::Block(1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    *mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_ident {
+                    // Possible raw/byte literal prefix: r"…", r#"…"#,
+                    // b"…", br#"…"#, b'…'.
+                    let mut j = i + 1;
+                    let is_raw = c == 'r' || ch.get(j) == Some(&'r');
+                    if c == 'b' && ch.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0;
+                    while ch.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if ch.get(j) == Some(&'"') {
+                        for k in i..=j {
+                            code.push(ch[k]);
+                        }
+                        *mode = if is_raw { Mode::RawStr(hashes) } else { Mode::Str };
+                        i = j + 1;
+                    } else if c == 'b' && ch.get(i + 1) == Some(&'\'') {
+                        i = blank_char_literal(&ch, i + 1, &mut code, c);
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Lifetime or char literal. `'x'` / `'\…'` are char
+                    // literals; `'a` followed by anything else is a
+                    // lifetime and stays as code.
+                    let is_char = ch.get(i + 1) == Some(&'\\')
+                        || (ch.get(i + 2) == Some(&'\'') && ch.get(i + 1) != Some(&'\''));
+                    if is_char {
+                        i = blank_char_literal(&ch, i, &mut code, '\0');
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comment)
+}
+
+/// Blank a char literal starting at `ch[start] == '\''`; pushes the
+/// `b` prefix (if any) plus blanked quotes into `code`. Returns the
+/// index just past the closing quote.
+fn blank_char_literal(ch: &[char], start: usize, code: &mut String, prefix: char) -> usize {
+    if prefix != '\0' {
+        code.push(prefix);
+    }
+    code.push('\'');
+    let mut i = start + 1;
+    while i < ch.len() {
+        if ch[i] == '\\' {
+            code.push(' ');
+            if i + 1 < ch.len() {
+                code.push(' ');
+            }
+            i += 2;
+        } else if ch[i] == '\'' {
+            code.push('\'');
+            return i + 1;
+        } else {
+            code.push(' ');
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Mark `#[cfg(test)]` items: inline brace-delimited items get their
+/// whole region flagged `in_test`; `mod name;` declarations are
+/// returned so the loader can flag the child file `test_only`.
+fn mark_test_regions(lines: &mut [SourceLine]) -> Vec<String> {
+    let mut mods = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // Find where the gated item starts: either after the attribute
+        // on the same line, or on the next line with real code (skipping
+        // further attributes and comment-only lines).
+        let mut j = i;
+        let same_line_rest = lines[i]
+            .code
+            .split("#[cfg(test)]")
+            .nth(1)
+            .unwrap_or("")
+            .trim()
+            .to_string();
+        let mut item = same_line_rest;
+        if item.is_empty() {
+            j = i + 1;
+            while j < lines.len() {
+                let t = lines[j].code.trim();
+                if t.is_empty() || t.starts_with("#[") {
+                    j += 1;
+                } else {
+                    item = t.to_string();
+                    break;
+                }
+            }
+        }
+        if item.is_empty() {
+            i += 1;
+            continue;
+        }
+        if let Some(name) = parse_mod_decl(&item) {
+            // `#[cfg(test)] mod name;` — the child file is test-only.
+            mods.push(name);
+            for line in lines.iter_mut().take(j + 1).skip(i) {
+                line.in_test = true;
+            }
+            i = j + 1;
+        } else if !item.contains('{') && item.ends_with(';') {
+            // A single `;`-terminated gated item (use, const, …).
+            for line in lines.iter_mut().take(j + 1).skip(i) {
+                line.in_test = true;
+            }
+            i = j + 1;
+        } else {
+            // Brace-delimited item: flag through the matching close.
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut k = j;
+            while k < lines.len() {
+                for c in lines[k].code.chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                k += 1;
+            }
+            let end = k.min(lines.len() - 1);
+            for line in lines.iter_mut().take(end + 1).skip(i) {
+                line.in_test = true;
+            }
+            i = end + 1;
+        }
+    }
+    mods
+}
+
+/// `mod name;` (with optional visibility) → `Some(name)`.
+fn parse_mod_decl(item: &str) -> Option<String> {
+    let t = item.trim().trim_end_matches(';');
+    if !item.trim_end().ends_with(';') {
+        return None;
+    }
+    let mut words = t.split_whitespace().peekable();
+    while let Some(w) = words.peek() {
+        if w.starts_with("pub") {
+            words.next();
+        } else {
+            break;
+        }
+    }
+    if words.next()? != "mod" {
+        return None;
+    }
+    let name = words.next()?;
+    if words.next().is_some() || !name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+/// True when `code` contains `word` delimited by non-identifier chars.
+pub fn has_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = code[at + word.len()..].chars().next();
+        let after_ok = !after.is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> SourceFile {
+        SourceFile::parse("test.rs", text)
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let f = parse("let x = 1; // SAFETY: trailing\n/* a /* nested */ b */ let y;\n");
+        assert_eq!(f.lines[0].code.trim(), "let x = 1;");
+        assert!(f.lines[0].comment.contains("SAFETY: trailing"));
+        assert_eq!(f.lines[1].code.trim(), "let y;");
+        assert!(f.lines[1].comment.contains("nested"));
+    }
+
+    #[test]
+    fn blanks_string_contents_but_keeps_quotes() {
+        let f = parse("let s = \"lock() // not a comment\"; s.len();\n");
+        assert!(!f.lines[0].code.contains("lock()"));
+        assert!(f.lines[0].comment.is_empty());
+        assert!(f.lines[0].code.contains("s.len();"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_and_lifetimes() {
+        let f = parse(
+            "let r = r#\"unsafe \" inside\"#;\nlet c = '\\'';\nfn f<'a>(x: &'a str) {}\nlet q = 'q';\n",
+        );
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[1].code.contains("let c ="));
+        assert!(f.lines[2].code.contains("<'a>"));
+        assert!(!f.lines[3].code.contains('q') || f.lines[3].code.contains("let q"));
+    }
+
+    #[test]
+    fn multiline_string_state_carries() {
+        let f = parse("let s = \"line one\nOrdering::SeqCst\nend\";\nlet t = 1;\n");
+        assert!(!f.lines[1].code.contains("Ordering"));
+        assert!(f.lines[3].code.contains("let t"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let f = parse(
+            "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn prod2() {}\n",
+        );
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test && f.lines[2].in_test && f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn cfg_test_mod_decl_is_recorded() {
+        let f = parse("#[cfg(test)]\nmod conformance;\nfn prod() {}\n");
+        assert_eq!(f.cfg_test_mods, vec!["conformance".to_string()]);
+        assert!(!f.lines[2].in_test);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe {", "unsafe"));
+        assert!(!has_word("not_unsafe {", "unsafe"));
+        assert!(!has_word("unsafely", "unsafe"));
+    }
+}

@@ -1,0 +1,93 @@
+//! Rule `seqcst-budget`: per-file `Ordering::SeqCst` counts in the
+//! concurrency core equal `tools/seqcst_allowlist.txt`.
+//!
+//! Subsumes the old `tools/check_seqcst.sh` grep (the script survives
+//! as a thin wrapper that execs this rule). Semantics are the script's,
+//! with one upgrade: occurrences are counted on comment-stripped code,
+//! so *mentioning* SeqCst in a comment costs no budget. Drift in either
+//! direction fails — a new site needs a budget line (and a DESIGN.md
+//! §Memory orderings row), a removed site must prune its budget so the
+//! allowlist never pads headroom.
+
+use std::collections::BTreeMap;
+
+use super::{Diagnostic, LintContext};
+
+const NEEDLE: &str = "Ordering::SeqCst";
+
+pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    // path → (budget, allowlist line).
+    let mut want: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    for (idx, line) in ctx.allowlist.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match (parts.next(), parts.next().and_then(|c| c.parse::<usize>().ok())) {
+            (Some(path), Some(count)) => {
+                want.insert(path, (count, idx + 1));
+            }
+            _ => out.push(Diagnostic::new(
+                "tools/seqcst_allowlist.txt",
+                idx + 1,
+                "seqcst-budget",
+                format!("unparseable allowlist entry '{line}' (want '<path> <count>')"),
+            )),
+        }
+    }
+
+    // Count code-text occurrences per core file (tests included — the
+    // test-local flags are budgeted too).
+    let mut got: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+    for file in ctx.core_files() {
+        let mut count = 0;
+        let mut first = 0;
+        for (idx, line) in file.lines.iter().enumerate() {
+            let mut rest = line.code.as_str();
+            while let Some(pos) = rest.find(NEEDLE) {
+                count += 1;
+                if first == 0 {
+                    first = idx + 1;
+                }
+                rest = &rest[pos + NEEDLE.len()..];
+            }
+        }
+        if count > 0 {
+            got.insert(&file.path, (count, first));
+        }
+    }
+
+    for (path, (count, first)) in &got {
+        match want.get(path) {
+            None => out.push(Diagnostic::new(
+                path,
+                *first,
+                "seqcst-budget",
+                format!(
+                    "{count} SeqCst site(s) but no budget in tools/seqcst_allowlist.txt"
+                ),
+            )),
+            Some((budget, _)) if budget != count => out.push(Diagnostic::new(
+                path,
+                *first,
+                "seqcst-budget",
+                format!("{count} SeqCst site(s); allowlist budgets {budget}"),
+            )),
+            Some(_) => {}
+        }
+    }
+    for (path, (budget, line)) in &want {
+        if !got.contains_key(path) {
+            out.push(Diagnostic::new(
+                "tools/seqcst_allowlist.txt",
+                *line,
+                "seqcst-budget",
+                format!("{path} is budgeted ({budget}) but has no SeqCst sites — prune the entry"),
+            ));
+        }
+    }
+    out
+}

@@ -1,0 +1,238 @@
+//! Rule `wire`: the error-code table cannot drift.
+//!
+//! Four places state the wire error-code contract:
+//!
+//! 1. `error::KvError::code()` — the defining map (variant → byte);
+//! 2. `error::KvError::code_name()` — byte → human name;
+//! 3. `net::proto::wire_code` — the named byte constants the serving
+//!    layer and clients use;
+//! 4. DESIGN.md §Error codes — the documented table.
+//!
+//! `code()` is the anchor. The other three must cover exactly its code
+//! set, the names in (2) and (4) must agree, and each constant in (3)
+//! must be the SCREAMING_SNAKE_CASE of its `code_name()` with the same
+//! value. Any one-line drift in any direction fails.
+
+use std::collections::BTreeMap;
+
+use super::scan::SourceFile;
+use super::{Diagnostic, LintContext};
+
+pub const DESIGN_SECTION: &str = "### Error codes";
+const ERROR_RS: &str = "rust/src/error.rs";
+const PROTO_RS: &str = "rust/src/net/proto.rs";
+
+pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    let Some(error_rs) = ctx.files.iter().find(|f| f.path == ERROR_RS) else {
+        // Fixture contexts without error.rs simply skip the rule.
+        return out;
+    };
+
+    // 1. code(): the anchor set. code → line of the arm.
+    let mut codes: BTreeMap<u8, usize> = BTreeMap::new();
+    for (idx, raw) in fn_body(error_rs, "fn code(") {
+        if let Some(code) = raw.split("=> 0x").nth(1).and_then(parse_hex) {
+            if codes.insert(code, idx + 1).is_some() {
+                out.push(Diagnostic::new(
+                    ERROR_RS,
+                    idx + 1,
+                    "wire",
+                    format!("duplicate wire code {code:#04x} in KvError::code()"),
+                ));
+            }
+        }
+    }
+    if codes.is_empty() {
+        out.push(Diagnostic::new(
+            ERROR_RS,
+            1,
+            "wire",
+            "could not parse any `=> 0x..` arms out of KvError::code()".to_string(),
+        ));
+        return out;
+    }
+
+    // 2. code_name(): code → (name, line).
+    let mut names: BTreeMap<u8, (String, usize)> = BTreeMap::new();
+    for (idx, raw) in fn_body(error_rs, "fn code_name(") {
+        let t = raw.trim();
+        let (Some(code), Some(name)) = (
+            t.strip_prefix("0x").and_then(parse_hex),
+            quoted(t),
+        ) else {
+            continue;
+        };
+        names.insert(code, (name, idx + 1));
+    }
+    diff_sets(&mut out, &codes, &names, ERROR_RS, "KvError::code_name()");
+
+    // 3. net::proto::wire_code constants: code → (CONST_NAME, line).
+    let mut consts: BTreeMap<u8, (String, usize)> = BTreeMap::new();
+    if let Some(proto_rs) = ctx.files.iter().find(|f| f.path == PROTO_RS) {
+        for (idx, raw) in mod_body(proto_rs, "pub mod wire_code") {
+            let t = raw.trim();
+            let Some(rest) = t.strip_prefix("pub const ") else { continue };
+            let (Some(name), Some(code)) = (
+                rest.split(':').next().map(|s| s.trim().to_string()),
+                rest.split("= 0x").nth(1).and_then(parse_hex),
+            ) else {
+                continue;
+            };
+            consts.insert(code, (name, idx + 1));
+        }
+        diff_sets(&mut out, &codes, &consts, PROTO_RS, "net::proto::wire_code");
+        for (code, (cname, line)) in &consts {
+            if let Some((wname, _)) = names.get(code) {
+                let want = wname.to_uppercase().replace('-', "_");
+                if *cname != want {
+                    out.push(Diagnostic::new(
+                        PROTO_RS,
+                        *line,
+                        "wire",
+                        format!(
+                            "wire_code const for {code:#04x} is '{cname}' but code_name() implies '{want}'"
+                        ),
+                    ));
+                }
+            }
+        }
+    } else {
+        out.push(Diagnostic::new(
+            PROTO_RS,
+            1,
+            "wire",
+            "net/proto.rs not found (wire_code constants unchecked)".to_string(),
+        ));
+    }
+
+    // 4. DESIGN.md §Error codes rows: code → (name, line).
+    let mut design: BTreeMap<u8, (String, usize)> = BTreeMap::new();
+    let mut in_section = false;
+    for (idx, line) in ctx.design_md.lines().enumerate() {
+        if line.starts_with("## ") || line.starts_with("### ") {
+            in_section = line.starts_with(DESIGN_SECTION);
+            continue;
+        }
+        if !in_section || !line.trim_start().starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cells.len() < 3 {
+            continue;
+        }
+        let (Some(code), Some(name)) = (
+            cells[1].trim_matches('`').strip_prefix("0x").and_then(parse_hex),
+            backticked(cells.get(2).copied().unwrap_or("")),
+        ) else {
+            continue;
+        };
+        design.insert(code, (name, idx + 1));
+    }
+    diff_sets(&mut out, &codes, &design, "rust/DESIGN.md", "DESIGN.md §Error codes");
+    for (code, (dname, line)) in &design {
+        if let Some((wname, _)) = names.get(code) {
+            if dname != wname {
+                out.push(Diagnostic::new(
+                    "rust/DESIGN.md",
+                    *line,
+                    "wire",
+                    format!(
+                        "DESIGN.md names {code:#04x} '{dname}' but code_name() says '{wname}'"
+                    ),
+                ));
+            }
+        }
+    }
+
+    out
+}
+
+/// Compare a derived map against the anchor code set, reporting codes
+/// missing from / extra in `have`.
+fn diff_sets<T>(
+    out: &mut Vec<Diagnostic>,
+    anchor: &BTreeMap<u8, usize>,
+    have: &BTreeMap<u8, (T, usize)>,
+    file: &str,
+    what: &str,
+) {
+    for (code, line) in anchor {
+        if !have.contains_key(code) {
+            out.push(Diagnostic::new(
+                file,
+                1,
+                "wire",
+                format!(
+                    "{what} is missing wire code {code:#04x} (defined at rust/src/error.rs:{line})"
+                ),
+            ));
+        }
+    }
+    for (code, (_, line)) in have {
+        if !anchor.contains_key(code) {
+            out.push(Diagnostic::new(
+                file,
+                *line,
+                "wire",
+                format!("{what} lists wire code {code:#04x} that KvError::code() never returns"),
+            ));
+        }
+    }
+}
+
+/// Raw lines (0-based index, raw text) of the brace-matched body that
+/// starts at the first line whose code contains `needle`.
+fn fn_body<'a>(file: &'a SourceFile, needle: &str) -> Vec<(usize, &'a str)> {
+    let Some(start) = file.lines.iter().position(|l| l.code.contains(needle)) else {
+        return Vec::new();
+    };
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    let mut outl = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate().skip(start) {
+        outl.push((idx, line.raw.as_str()));
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    outl
+}
+
+fn mod_body<'a>(file: &'a SourceFile, needle: &str) -> Vec<(usize, &'a str)> {
+    fn_body(file, needle)
+}
+
+/// Leading hex digits of `s` → byte value.
+fn parse_hex(s: &str) -> Option<u8> {
+    let digits: String = s.chars().take_while(|c| c.is_ascii_hexdigit()).collect();
+    if digits.is_empty() {
+        return None;
+    }
+    u8::from_str_radix(&digits, 16).ok()
+}
+
+/// First `"…"` substring of a raw line.
+fn quoted(raw: &str) -> Option<String> {
+    let a = raw.find('"')? + 1;
+    let b = a + raw[a..].find('"')?;
+    Some(raw[a..b].to_string())
+}
+
+/// First `` `…` `` substring of a markdown cell.
+fn backticked(cell: &str) -> Option<String> {
+    let a = cell.find('`')? + 1;
+    let b = a + cell[a..].find('`')?;
+    Some(cell[a..b].to_string())
+}

@@ -102,12 +102,13 @@ mod sys {
 
     impl Epoll {
         pub fn new() -> io::Result<Self> {
+            // SAFETY: no pointer arguments; returns a fresh fd or -1.
             let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
             if fd < 0 {
                 return Err(io::Error::last_os_error());
             }
-            // SAFETY: fd is a fresh epoll descriptor we own.
             Ok(Self {
+                // SAFETY: fd is a fresh epoll descriptor we own.
                 fd: unsafe { OwnedFd::from_raw_fd(fd) },
             })
         }

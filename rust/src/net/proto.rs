@@ -146,6 +146,46 @@ pub const STATUS_VALUE: u8 = 2;
 pub const STATUS_MISSING: u8 = 3;
 pub const STATUS_ERROR: u8 = 4;
 
+/// The wire error-code bytes, named. Each constant is
+/// [`crate::error::KvError::code`] for the matching variant — the
+/// defining map — with the name derived from
+/// [`crate::error::KvError::code_name`] (SCREAMING_SNAKE_CASE of the
+/// wire name). `dhash-lint`'s `wire` rule holds this module, the two
+/// `error.rs` maps, and the DESIGN.md §Error codes table equal, so a
+/// client matching on these constants can never drift from the server.
+pub mod wire_code {
+    /// Coordinator shut down (or shut down mid-request).
+    pub const SHUTDOWN: u8 = 0x01;
+    /// Per-connection inflight window full; request shed.
+    pub const OVERLOADED: u8 = 0x02;
+    /// A shard resize/rebuild token was already taken.
+    pub const RESIZE_BUSY: u8 = 0x10;
+    /// Resize named a shard the directory does not route.
+    pub const RESIZE_NO_SUCH_SHARD: u8 = 0x11;
+    /// Split refused: shard already at maximum depth.
+    pub const RESIZE_AT_MAX_DEPTH: u8 = 0x12;
+    /// Merge refused: shards are not buddy pairs.
+    pub const RESIZE_UNMERGEABLE: u8 = 0x13;
+    /// Routing-oracle engine failed.
+    pub const ORACLE_ENGINE: u8 = 0x20;
+    /// Routing-oracle answer was for a superseded epoch.
+    pub const ORACLE_EPOCH: u8 = 0x21;
+    /// Frame magic byte mismatch.
+    pub const PROTO_BAD_MAGIC: u8 = 0x30;
+    /// Unsupported protocol version byte.
+    pub const PROTO_BAD_VERSION: u8 = 0x31;
+    /// Unknown request op-code byte.
+    pub const PROTO_BAD_OP: u8 = 0x32;
+    /// Unknown response status byte.
+    pub const PROTO_BAD_STATUS: u8 = 0x33;
+    /// Value-length field exceeds [`super::MAX_VALUE_LEN`].
+    pub const PROTO_VALUE_TOO_LONG: u8 = 0x34;
+    /// Value length inconsistent with the op/status byte.
+    pub const PROTO_BAD_VALUE_LEN: u8 = 0x35;
+    /// A reserved byte was not zero.
+    pub const PROTO_BAD_RESERVED: u8 = 0x36;
+}
+
 fn read_u32(b: &[u8]) -> u32 {
     u32::from_le_bytes(b[..4].try_into().unwrap())
 }

@@ -58,11 +58,13 @@ static QUEUE: Lazy<Mutex<Sender<Msg>>> = Lazy::new(|| {
                     }
                 }
                 super::qsbr::global().synchronize(None);
+                // ord: stats-relaxed — monotonic counter, no ordering role
                 GRACE_PERIODS.fetch_add(1, Ordering::Relaxed);
                 for m in pending.drain(..) {
                     match m {
                         Msg::Run(cb) => {
                             cb();
+                            // ord: stats-relaxed — monotonic counter, no ordering role
                             EXECUTED.fetch_add(1, Ordering::Relaxed);
                         }
                         Msg::Flush(tx) => {
@@ -83,6 +85,7 @@ static GRACE_PERIODS: AtomicU64 = AtomicU64::new(0);
 /// Schedule `f` to run after a future grace period. Never blocks (beyond a
 /// channel send); safe to call from inside a read-side critical section.
 pub fn call_rcu(f: impl FnOnce() + Send + 'static) {
+    // ord: stats-relaxed — monotonic counter, no ordering role
     ENQUEUED.fetch_add(1, Ordering::Relaxed);
     with_sender(|tx| tx.send(Msg::Run(Box::new(f)))).expect("rcu-reclaimer alive");
 }
@@ -104,6 +107,7 @@ pub fn rcu_barrier() {
 /// (enqueued, executed, grace_periods) counters for observability tests
 /// and the coordinator's metrics endpoint.
 pub fn reclaimer_stats() -> (u64, u64, u64) {
+    // ord: stats-relaxed — monotonic counter, no ordering role
     (
         ENQUEUED.load(Ordering::Relaxed),
         EXECUTED.load(Ordering::Relaxed),

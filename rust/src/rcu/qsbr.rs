@@ -69,6 +69,7 @@ impl RcuDomain {
     /// How many grace-period waits have escalated to sleeping since the
     /// domain was created.
     pub fn sleep_count(&self) -> u64 {
+        // ord: stats-relaxed — monotonic counter, no ordering role
         self.sleeps.load(Ordering::Relaxed)
     }
 
@@ -77,6 +78,7 @@ impl RcuDomain {
             // Born online, as if it had just announced a quiescent state.
             // Acquire: pairs with the AcqRel gp bump so the new thread's
             // first section sees every pre-registration publication.
+            // ord: qsbr-handshake — gp/ctr grace-period handshake
             ctr: CachePadded::new(AtomicU64::new(self.gp.load(Ordering::Acquire))),
         });
         self.registry.lock().unwrap().push(rec.clone());
@@ -99,6 +101,7 @@ impl RcuDomain {
         // AcqRel swap: the Release half publishes the caller's preceding
         // section to whoever observes the 0.
         let restore = caller.map(|t| {
+            // ord: qsbr-handshake — gp/ctr grace-period handshake
             let prev = t.rec.ctr.swap(0, Ordering::AcqRel);
             (t, prev)
         });
@@ -109,6 +112,7 @@ impl RcuDomain {
             // (the retiring writer's publications) visible to readers whose
             // Acquire gp load returns >= target; Acquire orders the bump
             // after the previous grace period's ctr observations.
+            // ord: qsbr-handshake — gp/ctr grace-period handshake
             let target = self.gp.fetch_add(1, Ordering::AcqRel) + 1;
             // Snapshot the registry; threads registered *after* the bump
             // cannot hold pre-bump references, so the snapshot is enough.
@@ -127,6 +131,7 @@ impl RcuDomain {
                     // Acquire: pairs with the reader's Release ctr store so
                     // the reader's completed section happens-before any
                     // post-grace-period free.
+                    // ord: qsbr-handshake — gp/ctr grace-period handshake
                     let c = rec.ctr.load(Ordering::Acquire);
                     if c == 0 || c >= target {
                         break;
@@ -138,6 +143,7 @@ impl RcuDomain {
                         // Single-core friendliness: give the reader a turn.
                         std::thread::yield_now();
                     } else {
+                        // ord: stats-relaxed — monotonic counter, no ordering role
                         self.sleeps.fetch_add(1, Ordering::Relaxed);
                         std::thread::sleep(std::time::Duration::from_micros(sleep_us));
                         sleep_us = (sleep_us * 2).min(128);
@@ -150,6 +156,7 @@ impl RcuDomain {
             if prev != 0 {
                 // Re-online at the *current* GP value (Acquire/Release pair
                 // as in `quiescent_state`).
+                // ord: qsbr-handshake — gp/ctr grace-period handshake
                 t.rec
                     .ctr
                     .store(self.gp.load(Ordering::Acquire), Ordering::Release);
@@ -162,6 +169,7 @@ impl RcuDomain {
         // containing this record; a frozen non-zero ctr would stall that
         // grace period forever once the thread is gone. Release publishes
         // the thread's final section to the waiter's Acquire load.
+        // ord: qsbr-handshake — gp/ctr grace-period handshake
         rec.ctr.store(0, Ordering::Release);
         let mut reg = self.registry.lock().unwrap();
         if let Some(pos) = reg.iter().position(|r| Arc::ptr_eq(r, rec)) {
@@ -196,9 +204,11 @@ pub(crate) fn with_current_offline<R>(f: impl FnOnce() -> R) -> R {
     // SAFETY: the record outlives the RcuThread guard that set CURRENT and
     // the guard clears CURRENT on drop, so `cur` is valid here.
     let rec = unsafe { &*cur };
+    // ord: qsbr-handshake — gp/ctr grace-period handshake
     let prev = rec.ctr.swap(0, Ordering::AcqRel);
     let r = f();
     if prev != 0 {
+        // ord: qsbr-handshake — gp/ctr grace-period handshake
         rec.ctr
             .store(GLOBAL.gp.load(Ordering::Acquire), Ordering::Release);
     }
@@ -240,6 +250,7 @@ impl RcuThread {
     /// is not called with a section open (a debug build check).
     ///
     /// [`quiescent_state`]: RcuThread::quiescent_state
+    // lint: hot
     #[inline(always)]
     pub fn read_lock(&self) -> RcuReadGuard<'_> {
         self.depth.set(self.depth.get() + 1);
@@ -252,6 +263,7 @@ impl RcuThread {
     /// Acquire on `gp` + Release on `ctr`: storing the *acquired* gp value
     /// is what proves to the waiter that this thread has seen the
     /// publications preceding that grace period (module docs).
+    // lint: hot
     #[inline(always)]
     pub fn quiescent_state(&self) {
         debug_assert_eq!(
@@ -259,6 +271,7 @@ impl RcuThread {
             0,
             "quiescent_state inside a read-side critical section"
         );
+        // ord: qsbr-handshake — gp/ctr grace-period handshake
         self.rec
             .ctr
             .store(self.domain.gp.load(Ordering::Acquire), Ordering::Release);
@@ -269,12 +282,14 @@ impl RcuThread {
     #[inline]
     pub fn offline(&self) {
         debug_assert_eq!(self.depth.get(), 0, "offline inside a read-side section");
+        // ord: qsbr-handshake — gp/ctr grace-period handshake
         self.rec.ctr.store(0, Ordering::Release);
     }
 
     /// Leave the extended quiescent state.
     #[inline]
     pub fn online(&self) {
+        // ord: qsbr-handshake — gp/ctr grace-period handshake
         self.rec
             .ctr
             .store(self.domain.gp.load(Ordering::Acquire), Ordering::Release);
@@ -327,8 +342,11 @@ mod tests {
     /// tests could legitimately force sleeps here.
     #[test]
     fn no_reader_grace_period_never_sleeps() {
+        // Miri runs the interpreter ~100x slower; 8 grace periods still
+        // cover every branch of the no-sleep path.
+        let rounds = crate::util::miri_clamp(64, 8);
         let dom: &'static RcuDomain = Box::leak(Box::new(RcuDomain::new()));
-        for _ in 0..64 {
+        for _ in 0..rounds {
             dom.synchronize(None);
         }
         assert_eq!(dom.sleep_count(), 0, "no-reader grace period slept");
@@ -337,7 +355,7 @@ mod tests {
         // single-threaded writer must also stay on the no-sleep path.
         let t = dom.register();
         t.quiescent_state();
-        for _ in 0..64 {
+        for _ in 0..rounds {
             dom.synchronize(Some(&t));
         }
         assert_eq!(dom.sleep_count(), 0, "self-exempted grace period slept");
@@ -345,7 +363,7 @@ mod tests {
         // An offline reader (ctr == 0) must not delay the grace period.
         let r2 = dom.register();
         r2.offline();
-        for _ in 0..64 {
+        for _ in 0..rounds {
             dom.synchronize(Some(&t));
         }
         assert_eq!(dom.sleep_count(), 0, "offline reader forced a sleep");

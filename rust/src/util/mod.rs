@@ -10,3 +10,21 @@ pub mod stats;
 
 pub use rng::{mix64, SplitMix64};
 pub use stats::{LatencyHistogram, Summary};
+
+/// True when the test run should clamp its iteration budgets: compiled
+/// under Miri (`cfg!(miri)`) or launched with `DHASH_MIRI=1` (the CI
+/// knob, also useful under TSan/qemu). Interpreted or instrumented
+/// execution is orders of magnitude slower, so stress loops shrink to
+/// a smoke-sized subset while keeping every code path exercised.
+pub fn miri_slow() -> bool {
+    cfg!(miri) || std::env::var_os("DHASH_MIRI").is_some_and(|v| v == "1")
+}
+
+/// `full` normally, `clamped` when [`miri_slow`] says so.
+pub fn miri_clamp(full: usize, clamped: usize) -> usize {
+    if miri_slow() {
+        clamped
+    } else {
+        full
+    }
+}

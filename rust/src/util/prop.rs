@@ -61,10 +61,12 @@ pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0x5eed_cafe_u64);
+    // An explicit DHASH_PROP_CASES always wins; otherwise Miri (or
+    // DHASH_MIRI=1) clamps the default budget — see `util::miri_clamp`.
     let cases = std::env::var("DHASH_PROP_CASES")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(cases);
+        .unwrap_or_else(|| crate::util::miri_clamp(cases, 2));
     for i in 0..cases {
         let seed = crate::util::rng::mix64(base_seed ^ (i as u64) << 1);
         let mut g = Gen::new(seed);

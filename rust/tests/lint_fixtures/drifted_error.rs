@@ -1,0 +1,25 @@
+//! Fixture for rule `wire`: `code()` defines {0x01, 0x02};
+//! `code_name()` knows both, but the proto constants and the DESIGN
+//! table each drift by one entry (see tests/lint_self.rs).
+
+pub enum KvError {
+    Shutdown,
+    Overloaded,
+}
+
+impl KvError {
+    pub fn code(&self) -> u8 {
+        match self {
+            KvError::Shutdown => 0x01,
+            KvError::Overloaded => 0x02,
+        }
+    }
+
+    pub fn code_name(code: u8) -> &'static str {
+        match code {
+            0x01 => "shutdown",
+            0x02 => "overloaded",
+            _ => "unknown",
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Fixture proto for rule `wire`: `OVERLOAD` disagrees with the
+//! SCREAMING_SNAKE_CASE of `code_name(0x02)`.
+
+pub mod wire_code {
+    pub const SHUTDOWN: u8 = 0x01;
+    pub const OVERLOAD: u8 = 0x02;
+}

@@ -1,0 +1,12 @@
+//! Fixture for rule `hot`: `lookup_fast` allocates inside a tagged
+//! fn; `lookup_clean` is fine.
+
+// lint: hot
+pub fn lookup_fast() -> Box<u64> {
+    Box::new(7)
+}
+
+// lint: hot
+pub fn lookup_clean(x: u64) -> u64 {
+    x.wrapping_mul(0x9e37_79b9_b97f_4a7d)
+}

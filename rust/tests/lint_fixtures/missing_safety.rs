@@ -1,0 +1,11 @@
+//! Fixture for rule `safety` (see tests/lint_self.rs): `deref_bad`
+//! must be flagged, `deref_ok` must not.
+
+pub fn deref_bad(p: *const u64) -> u64 {
+    unsafe { *p }
+}
+
+pub fn deref_ok(p: *const u64) -> u64 {
+    // SAFETY: fixture — the caller passes a valid, aligned pointer.
+    unsafe { *p }
+}

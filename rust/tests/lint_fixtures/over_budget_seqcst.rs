@@ -1,0 +1,12 @@
+//! Fixture for rule `seqcst-budget`: two `SeqCst` sites against a
+//! budget of one.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(x: &AtomicUsize) -> usize {
+    x.fetch_add(1, Ordering::SeqCst)
+}
+
+pub fn read(x: &AtomicUsize) -> usize {
+    x.load(Ordering::SeqCst)
+}

@@ -1,0 +1,14 @@
+//! Fixture for rule `ord`: `peek_bad` has an unannotated
+//! `Ordering::*` site; `peek_ok` carries the indexed fixture key.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn peek_bad(x: &AtomicUsize) -> usize {
+    x.load(Ordering::Acquire)
+}
+
+pub fn peek_ok(x: &AtomicUsize) -> usize {
+    // ord: fixture-key — fixture justification (indexed in the test's
+    // synthetic DESIGN table)
+    x.load(Ordering::Acquire)
+}

@@ -1,0 +1,248 @@
+//! Self-tests for `dhash-lint` (`rust/src/lint/`).
+//!
+//! Two layers:
+//!
+//! 1. **Fixtures** (`tests/lint_fixtures/`): one deliberately-bad file
+//!    per rule, fed through [`LintContext::from_sources`] under a
+//!    synthetic path that puts it in the rule's scope. Each test
+//!    asserts the *exact* rendered diagnostics — these strings are the
+//!    tool's UI contract.
+//! 2. **The real tree**: the shipped source must lint clean, and a
+//!    deliberate one-line drift in either contract table
+//!    (DESIGN.md §Memory orderings, §Error codes) or in the SeqCst
+//!    allowlist must fail — in both directions.
+
+use std::path::Path;
+
+use dhash::lint::{self, LintContext};
+
+/// Render a rule's findings, sorted, as display strings.
+fn render(mut diags: Vec<lint::Diagnostic>) -> Vec<String> {
+    diags.sort();
+    diags.iter().map(|d| d.to_string()).collect()
+}
+
+fn load_real_tree() -> LintContext {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    LintContext::load(&root).expect("real tree loads")
+}
+
+// ---------------------------------------------------------------- fixtures
+
+#[test]
+fn fixture_missing_safety() {
+    let ctx = LintContext::from_sources(
+        &[(
+            "rust/tests/lint_fixtures/missing_safety.rs",
+            include_str!("lint_fixtures/missing_safety.rs"),
+        )],
+        "",
+        "",
+    );
+    assert_eq!(
+        render(lint::safety::check(&ctx)),
+        vec![
+            "rust/tests/lint_fixtures/missing_safety.rs:5: [safety] \
+             unsafe site without an adjacent // SAFETY: comment"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
+fn fixture_unannotated_ordering() {
+    // The synthetic path puts the fixture inside the `ord` scope
+    // (`rust/src/dhash/`); the synthetic DESIGN table indexes the one
+    // key the compliant fn uses.
+    let design = "## Memory orderings\n\n\
+                  | site | ordering | why |\n|---|---|---|\n\
+                  | fixture row — `ord:fixture-key` | Relaxed | test |\n";
+    let ctx = LintContext::from_sources(
+        &[(
+            "rust/src/dhash/unannotated_ordering.rs",
+            include_str!("lint_fixtures/unannotated_ordering.rs"),
+        )],
+        design,
+        "",
+    );
+    assert_eq!(
+        render(lint::ord::check(&ctx)),
+        vec![
+            "rust/src/dhash/unannotated_ordering.rs:7: [ord] \
+             Ordering site without an // ord: annotation (see DESIGN.md §Memory orderings)"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
+fn fixture_over_budget_seqcst() {
+    let ctx = LintContext::from_sources(
+        &[(
+            "rust/src/rcu/over_budget_seqcst.rs",
+            include_str!("lint_fixtures/over_budget_seqcst.rs"),
+        )],
+        "",
+        "rust/src/rcu/over_budget_seqcst.rs 1\n",
+    );
+    assert_eq!(
+        render(lint::seqcst::check(&ctx)),
+        vec![
+            "rust/src/rcu/over_budget_seqcst.rs:7: [seqcst-budget] \
+             2 SeqCst site(s); allowlist budgets 1"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
+fn fixture_hot_alloc() {
+    let ctx = LintContext::from_sources(
+        &[(
+            "rust/tests/lint_fixtures/hot_alloc.rs",
+            include_str!("lint_fixtures/hot_alloc.rs"),
+        )],
+        "",
+        "",
+    );
+    assert_eq!(
+        render(lint::hot::check(&ctx)),
+        vec![
+            "rust/tests/lint_fixtures/hot_alloc.rs:6: [hot] \
+             fn 'lookup_fast' is tagged // lint: hot but uses denied operation 'Box::new'"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
+fn fixture_drifted_wire() {
+    // code() = {0x01, 0x02}. Three drifts: the DESIGN table is missing
+    // 0x02, lists a phantom 0x03, and the proto const for 0x02 is
+    // misnamed.
+    let design = "### Error codes\n\n\
+                  | code | name | meaning |\n|---|---|---|\n\
+                  | `0x01` | `shutdown` | fixture |\n\
+                  | `0x03` | `phantom` | fixture |\n";
+    let ctx = LintContext::from_sources(
+        &[
+            ("rust/src/error.rs", include_str!("lint_fixtures/drifted_error.rs")),
+            ("rust/src/net/proto.rs", include_str!("lint_fixtures/drifted_proto.rs")),
+        ],
+        design,
+        "",
+    );
+    assert_eq!(
+        render(lint::wire::check(&ctx)),
+        vec![
+            "rust/DESIGN.md:1: [wire] DESIGN.md §Error codes is missing wire code 0x02 \
+             (defined at rust/src/error.rs:14)"
+                .to_string(),
+            "rust/DESIGN.md:6: [wire] DESIGN.md §Error codes lists wire code 0x03 \
+             that KvError::code() never returns"
+                .to_string(),
+            "rust/src/net/proto.rs:6: [wire] wire_code const for 0x02 is 'OVERLOAD' \
+             but code_name() implies 'OVERLOADED'"
+                .to_string(),
+        ]
+    );
+}
+
+// ---------------------------------------------------------------- real tree
+
+#[test]
+fn real_tree_is_clean() {
+    let ctx = load_real_tree();
+    let diags = lint::run(&ctx, &[]);
+    assert!(
+        diags.is_empty(),
+        "dhash-lint should be clean on the shipped tree, got:\n{}",
+        render(diags).join("\n")
+    );
+}
+
+#[test]
+fn design_ord_drift_fails_both_directions() {
+    // Direction 1: drop one `ord:<key>` token from §Memory orderings —
+    // the key is still used in source, so the rule must fail.
+    let mut ctx = load_real_tree();
+    assert!(ctx.design_md.contains("`ord:michael-link`"), "token exists");
+    ctx.design_md = ctx.design_md.replace(" — `ord:michael-link`", "");
+    let diags = render(lint::ord::check(&ctx));
+    assert!(
+        diags.iter().any(|d| d.contains(
+            "[ord] ord key 'michael-link' is not indexed in DESIGN.md ## Memory orderings"
+        )),
+        "expected key-not-indexed finding, got:\n{}",
+        diags.join("\n")
+    );
+
+    // Direction 2: add a phantom row no source site uses.
+    let mut ctx = load_real_tree();
+    ctx.design_md = ctx.design_md.replace(
+        "## Memory orderings (read-path audit)\n",
+        "## Memory orderings (read-path audit)\n\n\
+         | ghost row — `ord:ghost-key` | Relaxed | phantom | none |\n",
+    );
+    let diags = render(lint::ord::check(&ctx));
+    assert!(
+        diags.iter().any(|d| d.contains(
+            "indexes ord key 'ghost-key' but no source site uses it"
+        )),
+        "expected stale-row finding, got:\n{}",
+        diags.join("\n")
+    );
+}
+
+#[test]
+fn design_wire_drift_fails_both_directions() {
+    // Renumbering one documented code both orphans the real code and
+    // documents a phantom one — the rule must report each side.
+    let mut ctx = load_real_tree();
+    assert!(ctx.design_md.contains("| `0x12` |"), "row exists");
+    ctx.design_md = ctx.design_md.replace("| `0x12` |", "| `0x17` |");
+    let diags = render(lint::wire::check(&ctx));
+    assert!(
+        diags.iter().any(|d| d.contains("is missing wire code 0x12")),
+        "expected missing-code finding, got:\n{}",
+        diags.join("\n")
+    );
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.contains("lists wire code 0x17 that KvError::code() never returns")),
+        "expected phantom-code finding, got:\n{}",
+        diags.join("\n")
+    );
+}
+
+#[test]
+fn allowlist_drift_fails_both_directions() {
+    // Direction 1: shrink a real budget.
+    let mut ctx = load_real_tree();
+    assert!(ctx.allowlist.contains("rust/src/rcu/mod.rs 19"), "entry exists");
+    ctx.allowlist = ctx.allowlist.replace("rust/src/rcu/mod.rs 19", "rust/src/rcu/mod.rs 18");
+    let diags = render(lint::seqcst::check(&ctx));
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.contains("[seqcst-budget] 19 SeqCst site(s); allowlist budgets 18")),
+        "expected over-budget finding, got:\n{}",
+        diags.join("\n")
+    );
+
+    // Direction 2: budget a file with no SeqCst sites.
+    let mut ctx = load_real_tree();
+    ctx.allowlist.push_str("rust/src/lflist/michael.rs 2\n");
+    let diags = render(lint::seqcst::check(&ctx));
+    assert!(
+        diags.iter().any(|d| d.contains(
+            "rust/src/lflist/michael.rs is budgeted (2) but has no SeqCst sites"
+        )),
+        "expected stale-entry finding, got:\n{}",
+        diags.join("\n")
+    );
+}

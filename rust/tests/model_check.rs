@@ -382,7 +382,8 @@ fn ordering_audit_lookup_during_rebuild() {
         let stop = &stop;
         s.spawn(move || {
             let g = RcuThread::register();
-            for i in 0..40u64 {
+            let rounds = dhash::util::miri_clamp(40, 4) as u64;
+            for i in 0..rounds {
                 let nb = if i % 2 == 0 { 16 } else { 8 };
                 map.rebuild(&g, nb, HashFn::Seeded(i)).unwrap();
             }
@@ -429,7 +430,8 @@ fn ordering_audit_lookup_during_split_merge() {
         let stop = &stop;
         s.spawn(move || {
             let g = RcuThread::register();
-            for i in 0..12u64 {
+            let rounds = dhash::util::miri_clamp(12, 3) as u64;
+            for i in 0..rounds {
                 let s = (i as usize) % map.shards().max(1);
                 let _ = map.split_shard(&g, s, 8, HashFn::Seeded(i));
                 let _ = map.merge_shard(&g, s, 8, HashFn::Seeded(i ^ 1));
@@ -503,7 +505,8 @@ fn ordering_audit_snapshot_vs_epoch() {
         let stop = &stop;
         s.spawn(move || {
             let g = RcuThread::register();
-            for i in 0..10u64 {
+            let rounds = dhash::util::miri_clamp(10, 3) as u64;
+            for i in 0..rounds {
                 let _ = map.split_shard(&g, 0, 8, HashFn::Seeded(i));
                 let _ = map.merge_shard(&g, 0, 8, HashFn::Seeded(i ^ 1));
                 g.quiescent_state();

@@ -1,53 +1,15 @@
 #!/usr/bin/env bash
 # SeqCst budget check for the concurrency core (rust/src/{dhash,lflist,rcu}).
 #
-# Every `Ordering::SeqCst` in the audited tree must be accounted for in
-# tools/seqcst_allowlist.txt (per-file counts). The ordering audit
-# relaxed the read paths to documented Acquire/Release/Relaxed pairs
-# (DESIGN.md §Memory orderings); the few SeqCst sites that remain are
-# writer-side protocol stores and test-local flags. A NEW SeqCst site —
-# or one that moves between files — fails this check until the allowlist
-# and the DESIGN.md table are updated to explain it.
+# Thin wrapper: the check itself moved into the `dhash-lint` static
+# analyzer (rule `seqcst-budget`, rust/src/lint/seqcst.rs), which counts
+# `Ordering::SeqCst` on comment-stripped code against the per-file
+# budgets in tools/seqcst_allowlist.txt — the allowlist stays the single
+# source of truth, and drift in either direction still fails. Run
+# `cargo run --release --bin dhash-lint` (no --rule) for the full rule
+# set: safety comments, ord annotations, hot-path denylist, wire codes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-allow=tools/seqcst_allowlist.txt
-scope=(rust/src/dhash rust/src/lflist rust/src/rcu)
-fail=0
-
-declare -A want
-while read -r path count; do
-    [[ -z "$path" || "$path" == \#* ]] && continue
-    want["$path"]=$count
-done <"$allow"
-
-declare -A got
-while IFS=: read -r path count; do
-    [[ "$count" == 0 ]] && continue
-    got["$path"]=$count
-done < <(grep -rc "Ordering::SeqCst" "${scope[@]}")
-
-for path in "${!got[@]}"; do
-    if [[ -z "${want[$path]:-}" ]]; then
-        echo "FAIL: $path has ${got[$path]} SeqCst site(s) but is not in $allow:"
-        grep -n "Ordering::SeqCst" "$path"
-        fail=1
-    elif [[ "${got[$path]}" -ne "${want[$path]}" ]]; then
-        echo "FAIL: $path has ${got[$path]} SeqCst site(s); allowlist budgets ${want[$path]}:"
-        grep -n "Ordering::SeqCst" "$path"
-        fail=1
-    fi
-done
-for path in "${!want[@]}"; do
-    if [[ -z "${got[$path]:-}" ]]; then
-        echo "FAIL: $path is allowlisted (${want[$path]}) but has no SeqCst sites — prune the entry"
-        fail=1
-    fi
-done
-
-if [[ "$fail" -eq 0 ]]; then
-    total=0
-    for c in "${got[@]}"; do total=$((total + c)); done
-    echo "OK: $total SeqCst site(s) across ${#got[@]} file(s), all within budget"
-fi
-exit "$fail"
+exec cargo run --release --quiet --manifest-path rust/Cargo.toml \
+    --bin dhash-lint -- --rule seqcst-budget
