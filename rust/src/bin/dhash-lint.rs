@@ -3,15 +3,19 @@
 //! ```text
 //! cargo run --release --bin dhash-lint            # all rules
 //! cargo run --release --bin dhash-lint -- --rule seqcst-budget
+//! cargo run --release --bin dhash-lint -- --rule lock-order,reclaim
+//! cargo run --release --bin dhash-lint -- --format json
 //! cargo run --release --bin dhash-lint -- --root /path/to/repo
 //! cargo run --release --bin dhash-lint -- --list-rules
 //! ```
 //!
 //! Exit status: 0 when clean, 1 when any rule fires, 2 on usage or
 //! I/O errors. Diagnostics print one per line as
-//! `file:line: [rule] message`. See `rust/src/lint/mod.rs` for the
-//! rule inventory and DESIGN.md §Static analysis & sanitizers for the
-//! annotation grammar.
+//! `file:line: [rule] message`; `--format json` emits a JSON array
+//! with one `{file, line, rule, message}` object per finding (an
+//! empty array when clean) for CI problem-matcher annotation. See
+//! `rust/src/lint/mod.rs` for the rule inventory and DESIGN.md
+//! §Static analysis & sanitizers for the annotation grammar.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -21,6 +25,7 @@ use dhash::lint::{self, LintContext};
 fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
     let mut rules: Vec<String> = Vec::new();
+    let mut json = false;
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -29,8 +34,20 @@ fn main() -> ExitCode {
                 None => return usage("--root needs a path"),
             },
             "--rule" => match args.next() {
-                Some(r) => rules.push(r),
+                // Comma-separated lists compose: `--rule a,b --rule c`.
+                Some(r) => rules.extend(
+                    r.split(',')
+                        .map(str::trim)
+                        .filter(|s| !s.is_empty())
+                        .map(str::to_string),
+                ),
                 None => return usage("--rule needs a rule name"),
+            },
+            "--format" => match args.next().as_deref() {
+                Some("json") => json = true,
+                Some("text") => json = false,
+                Some(other) => return usage(&format!("unknown format '{other}' (text|json)")),
+                None => return usage("--format needs text|json"),
             },
             "--list-rules" => {
                 for (name, _) in lint::RULES {
@@ -75,19 +92,25 @@ fn main() -> ExitCode {
     };
 
     let diags = lint::run(&ctx, &rules);
-    for d in &diags {
-        println!("{d}");
+    if json {
+        println!("{}", render_json(&diags));
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
     }
     if diags.is_empty() {
-        let which = if rules.is_empty() {
-            lint::RULES.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
-        } else {
-            rules.join(", ")
-        };
-        println!(
-            "dhash-lint: OK — {} file(s) clean under rules: {which}",
-            ctx.files.len()
-        );
+        if !json {
+            let which = if rules.is_empty() {
+                lint::RULES.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+            } else {
+                rules.join(", ")
+            };
+            println!(
+                "dhash-lint: OK — {} file(s) clean under rules: {which}",
+                ctx.files.len()
+            );
+        }
         ExitCode::SUCCESS
     } else {
         eprintln!("dhash-lint: {} finding(s)", diags.len());
@@ -95,13 +118,52 @@ fn main() -> ExitCode {
     }
 }
 
+/// Hand-rolled JSON (no new deps): an array of one object per finding.
+fn render_json(diags: &[lint::Diagnostic]) -> String {
+    let mut out = String::from("[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+            escape_json(&d.file),
+            d.line,
+            escape_json(d.rule),
+            escape_json(&d.message)
+        ));
+    }
+    if !diags.is_empty() {
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 fn usage(err: &str) -> ExitCode {
     if !err.is_empty() {
         eprintln!("dhash-lint: {err}");
     }
     eprintln!(
-        "usage: dhash-lint [--root REPO_ROOT] [--rule NAME]... [--list-rules]\n\
-         rules: safety, ord, seqcst-budget, hot, wire"
+        "usage: dhash-lint [--root REPO_ROOT] [--rule NAME[,NAME...]]... \
+         [--format text|json] [--list-rules]\n\
+         rules: safety, ord, seqcst-budget, hot, wire, lock-order, reclaim, publish"
     );
     if err.is_empty() {
         ExitCode::SUCCESS

@@ -141,7 +141,7 @@ impl CompletionSet {
             // Hold the lock across the notify: a waiter between its
             // `remaining` check and the condvar sleep holds it, so we
             // cannot slip a notification into that window.
-            let _g = self.lock.lock().unwrap();
+            let _g = self.lock.lock().unwrap(); // lock: completion
             self.done.notify_all();
         }
     }
@@ -169,7 +169,7 @@ impl CompletionSet {
         // (`Duration::MAX` as "effectively forever") would hit; overflow
         // means the deadline is unreachable, so treat it as no deadline.
         let deadline = timeout.and_then(|t| Instant::now().checked_add(t));
-        let mut g = self.lock.lock().unwrap();
+        let mut g = self.lock.lock().unwrap(); // lock: completion
         while self.remaining.load(Ordering::Acquire) != 0 {
             match deadline {
                 None => g = self.done.wait(g).unwrap(),

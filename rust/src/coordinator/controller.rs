@@ -170,7 +170,7 @@ impl RebuildController {
     /// current monotonic clock (and the shard uid, so two shards
     /// mitigated in the same instant never share a seed).
     pub fn plan_mitigation_for(&self, shard_uid: u64, now: Instant) -> Option<HashFn> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap(); // lock: coord-state
         // Expired clocks are permissive anyway; purge them so uids of
         // long-retired shards cannot accumulate.
         let cooldown = self.cfg.cooldown;
@@ -222,7 +222,7 @@ impl RebuildController {
         buddies: &[Option<usize>],
         now: Instant,
     ) -> Option<ResizeAction> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap(); // lock: coord-state
         if let Some(last) = st.last_resize {
             if now.duration_since(last) < cfg.cooldown {
                 return None;
@@ -274,7 +274,7 @@ impl RebuildController {
         moved: u64,
         elapsed: Duration,
     ) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap(); // lock: coord-state
         st.events.push(RebuildEvent {
             at: self.start.elapsed(),
             shard,
@@ -295,7 +295,7 @@ impl RebuildController {
         moved: u64,
         elapsed: Duration,
     ) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap(); // lock: coord-state
         st.resize_events.push(ResizeEvent {
             at: self.start.elapsed(),
             action,
@@ -307,11 +307,11 @@ impl RebuildController {
     }
 
     pub fn events(&self) -> Vec<RebuildEvent> {
-        self.state.lock().unwrap().events.clone()
+        self.state.lock().unwrap().events.clone() // lock: coord-state
     }
 
     pub fn resize_events(&self) -> Vec<ResizeEvent> {
-        self.state.lock().unwrap().resize_events.clone()
+        self.state.lock().unwrap().resize_events.clone() // lock: coord-state
     }
 }
 

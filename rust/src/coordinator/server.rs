@@ -426,7 +426,7 @@ impl Coordinator {
                             // Block offline so grace periods keep flowing
                             // while we wait for work.
                             let batch = g.offline_while(|| {
-                                let rx = rx.lock().unwrap();
+                                let rx = rx.lock().unwrap(); // lock: worker-queue
                                 rx.recv().ok()
                             });
                             let Some(batch) = batch else { break };
@@ -590,7 +590,7 @@ impl Coordinator {
                                     shared2
                                         .last_chi2
                                         .store(max_chi2.to_bits() as u64, Ordering::Relaxed);
-                                    *shared2.shard_chi2.lock().unwrap() = chi2s.clone();
+                                    *shared2.shard_chi2.lock().unwrap() = chi2s.clone(); // lock: coord-stats
                                 }
                             }
                             // Elastic policy: occupancy (+ chi² pressure)
@@ -692,6 +692,7 @@ impl Coordinator {
     pub fn client(&self) -> KvClient {
         let lanes = self
             .ingest
+            // lock: coord-ingest
             .lock()
             .unwrap()
             .clone()
@@ -776,7 +777,7 @@ impl Coordinator {
             shards: self.shared.map.shards() as u64,
             epoch: self.shared.map.epoch(),
             last_chi2: f32::from_bits(self.shared.last_chi2.load(Ordering::Relaxed) as u32),
-            last_chi2_per_shard: self.shared.shard_chi2.lock().unwrap().clone(),
+            last_chi2_per_shard: self.shared.shard_chi2.lock().unwrap().clone(), // lock: coord-stats
             detector_runs: self.shared.detector_runs.load(Ordering::Relaxed),
             net: None,
         }
@@ -797,10 +798,10 @@ impl Coordinator {
         // queued), whose exit closes the worker queue in turn. Sender
         // clones held by stray clients can't keep the lanes alive: the
         // threads stop at the marker, not at channel disconnect.
-        if let Some(lanes) = self.ingest.lock().unwrap().take() {
+        if let Some(lanes) = self.ingest.lock().unwrap().take() { // lock: coord-ingest
             lanes.close();
         }
-        let mut threads = self.threads.lock().unwrap();
+        let mut threads = self.threads.lock().unwrap(); // lock: coord-threads
         for h in threads.drain(..) {
             let _ = h.join();
         }

@@ -339,6 +339,7 @@ impl<B: BucketSet> DHashMap<B> {
             Err(n) => {
                 // SAFETY: rejected nodes were never published (paper frees
                 // directly on line 97).
+                // reclaim: node via unpublished — rejected before any reader could see it
                 unsafe { Node::free(n) };
                 Err(KeyExists)
             }
@@ -353,6 +354,7 @@ impl<B: BucketSet> DHashMap<B> {
     /// The caller must *not* be inside a read-side critical section; its
     /// registration is placed offline across the internal grace-period
     /// waits.
+    // lint: publish rebuild
     pub fn rebuild(
         &self,
         guard: &RcuThread,
@@ -361,7 +363,7 @@ impl<B: BucketSet> DHashMap<B> {
     ) -> Result<RebuildStats, RebuildBusy> {
         let t0 = std::time::Instant::now();
         // Line 19: trylock; concurrent rebuilds get -EBUSY.
-        let lock = match self.rebuild_lock.try_lock() {
+        let lock = match self.rebuild_lock.try_lock() { // lock: map-rebuild
             Ok(g) => g,
             Err(_) => return Err(RebuildBusy),
         };
@@ -488,7 +490,7 @@ impl<B: BucketSet> DHashMap<B> {
         // SAFETY: unpublished for a full grace period; leftover nodes in
         // its buckets (marked-but-still-linked residue) are freed by the
         // table's Drop, which has exclusive access now.
-        unsafe { drop(Box::from_raw(htp_ptr)) };
+        unsafe { drop(Box::from_raw(htp_ptr)) }; // reclaim: table via grace
 
         // ord: stats-relaxed — monotonic counter, no ordering role
         self.rebuilds.fetch_add(1, Ordering::Relaxed);
@@ -648,9 +650,9 @@ impl<B: BucketSet> Drop for DHashMap<B> {
                 // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
                 let ht_new = (*cur).ht_new.load(Ordering::Relaxed);
                 if !ht_new.is_null() {
-                    drop(Box::from_raw(ht_new));
+                    drop(Box::from_raw(ht_new)); // reclaim: table via exclusive
                 }
-                drop(Box::from_raw(cur));
+                drop(Box::from_raw(cur)); // reclaim: table via exclusive
             }
         }
     }

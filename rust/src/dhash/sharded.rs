@@ -214,6 +214,7 @@ impl<B: BucketSet> Directory<B> {
                 "aliased slots must be contiguous"
             );
         }
+        // reclaim: dir — owned raw until installed via install_dir
         Box::into_raw(Box::new(Directory {
             epoch,
             depth,
@@ -696,7 +697,7 @@ impl<B: BucketSet> ShardedDHash<B> {
         nbuckets: usize,
         hash: HashFn,
     ) -> Result<RebuildStats, RebuildBusy> {
-        let token = match self.migration_token.try_lock() {
+        let token = match self.migration_token.try_lock() { // lock: migration
             Ok(t) => t,
             Err(_) => return Err(RebuildBusy),
         };
@@ -735,7 +736,7 @@ impl<B: BucketSet> ShardedDHash<B> {
         hash: HashFn,
     ) -> Result<RebuildStats, RebuildBusy> {
         let t0 = Instant::now();
-        let _all = match self.rebuild_all_lock.try_lock() {
+        let _all = match self.rebuild_all_lock.try_lock() { // lock: rebuild-all
             Ok(g) => g,
             Err(_) => return Err(RebuildBusy),
         };
@@ -753,6 +754,7 @@ impl<B: BucketSet> ShardedDHash<B> {
             // hold the token and be waiting out grace periods that need
             // this thread to pass a quiescent state.
             let token = guard
+                // lock: migration
                 .offline_while(|| self.migration_token.lock().unwrap_or_else(|e| e.into_inner()));
             let mig = MigrationGauge::enter(&self.migrating);
             let r = map.rebuild(guard, nbuckets_per_shard, hash);
@@ -778,6 +780,7 @@ impl<B: BucketSet> ShardedDHash<B> {
     /// across its delete→insert window. The caller holds the migration
     /// token. Mirrors the distribution loop of `DHashMap::rebuild`
     /// (Alg. 3 lines 24-39) with the destination chosen per key.
+    // lint: publish drain
     fn drain_into(&self, src: &DHashMap<B>, new_dir: &Directory<B>) -> (u64, u64) {
         let mut moved = 0u64;
         let mut dropped_dup = 0u64;
@@ -844,6 +847,7 @@ impl<B: BucketSet> ShardedDHash<B> {
     /// Publish a freshly built directory (the caller holds the migration
     /// token and frees superseded directories itself, after the grace
     /// periods its protocol already waits out).
+    // lint: publish install-dir
     fn install_dir(&self, new_dir: *mut Directory<B>) {
         // SAFETY: `new_dir` was just built and is never null.
         let d = unsafe { &*new_dir };
@@ -893,6 +897,7 @@ impl<B: BucketSet> ShardedDHash<B> {
     /// one shard layout can never split whichever shard inherited the
     /// ordinal after a concurrent resize (the same pinning
     /// [`ShardedDHash::rebuild_shard_at`] gives mitigations).
+    // lint: publish resize
     pub fn split_shard_at(
         &self,
         guard: &RcuThread,
@@ -902,7 +907,7 @@ impl<B: BucketSet> ShardedDHash<B> {
         hash: HashFn,
     ) -> Result<RebuildStats, ResizeError> {
         let t0 = Instant::now();
-        let token = match self.migration_token.try_lock() {
+        let token = match self.migration_token.try_lock() { // lock: migration
             Ok(t) => t,
             Err(_) => return Err(ResizeError::Busy),
         };
@@ -1000,8 +1005,8 @@ impl<B: BucketSet> ShardedDHash<B> {
         guard.offline_while(synchronize_rcu);
         // SAFETY: both unpublished for at least a full grace period.
         unsafe {
-            drop(Box::from_raw(d0_ptr));
-            drop(Box::from_raw(d1_ptr));
+            drop(Box::from_raw(d0_ptr)); // reclaim: dir via grace
+            drop(Box::from_raw(d1_ptr)); // reclaim: dir via grace
         }
 
         // ord: stats-relaxed — monotonic counter, no ordering role
@@ -1040,6 +1045,7 @@ impl<B: BucketSet> ShardedDHash<B> {
     /// [`ShardedDHash::split_shard_at`]: refuses with
     /// [`ResizeError::Busy`] when the layout the decision was scored
     /// under is gone.
+    // lint: publish resize
     pub fn merge_shard_at(
         &self,
         guard: &RcuThread,
@@ -1049,7 +1055,7 @@ impl<B: BucketSet> ShardedDHash<B> {
         hash: HashFn,
     ) -> Result<RebuildStats, ResizeError> {
         let t0 = Instant::now();
-        let token = match self.migration_token.try_lock() {
+        let token = match self.migration_token.try_lock() { // lock: migration
             Ok(t) => t,
             Err(_) => return Err(ResizeError::Busy),
         };
@@ -1123,8 +1129,8 @@ impl<B: BucketSet> ShardedDHash<B> {
         guard.offline_while(synchronize_rcu);
         // SAFETY: both unpublished for at least a full grace period.
         unsafe {
-            drop(Box::from_raw(d0_ptr));
-            drop(Box::from_raw(d1_ptr));
+            drop(Box::from_raw(d0_ptr)); // reclaim: dir via grace
+            drop(Box::from_raw(d1_ptr)); // reclaim: dir via grace
         }
 
         // ord: stats-relaxed — monotonic counter, no ordering role
@@ -1354,7 +1360,7 @@ impl<B: BucketSet> Drop for ShardedDHash<B> {
         if !d.is_null() {
             // SAFETY: exclusive; dropping the directory drops its shard
             // Arcs, and each last-referenced DHashMap drains itself.
-            unsafe { drop(Box::from_raw(d)) };
+            unsafe { drop(Box::from_raw(d)) }; // reclaim: dir via exclusive
         }
     }
 }

@@ -20,6 +20,7 @@ impl<B: BucketSet> Table<B> {
     pub fn alloc(nbuckets: usize, hash: HashFn) -> *mut Table<B> {
         assert!(nbuckets > 0, "hash table needs at least one bucket");
         let bkts: Box<[B]> = (0..nbuckets).map(|_| B::new()).collect();
+        // reclaim: table — owned raw until published via cur/ht_new
         Box::into_raw(Box::new(Table {
             nbuckets,
             hash,

@@ -51,7 +51,7 @@ impl CowSortedArray {
 
     /// Publish `new`, retiring the old version through RCU. Lock held.
     fn publish(&self, new: Version) {
-        let new_ptr = Box::into_raw(Box::new(new));
+        let new_ptr = Box::into_raw(Box::new(new)); // reclaim: cow-version
         // AcqRel: Release publishes the new version's contents to
         // `load_version`'s Acquire; Acquire orders the retirement of the
         // old version after every read we did of it under the lock.
@@ -62,7 +62,7 @@ impl CowSortedArray {
             let retired = retired; // move the wrapper, not the raw field
             // SAFETY: grace period elapsed; the Vec (not the nodes it
             // points to) is dropped.
-            unsafe { drop(Box::from_raw(retired.0)) };
+            unsafe { drop(Box::from_raw(retired.0)) }; // reclaim: cow-version via rcu
         });
     }
 
@@ -93,6 +93,7 @@ impl CowSortedArray {
 unsafe impl BucketSet for CowSortedArray {
     fn new() -> Self {
         Self {
+            // reclaim: cow-version — the initial (empty) version
             current: AtomicPtr::new(Box::into_raw(Box::new(Vec::new()))),
             wlock: SpinLock::new(),
         }
@@ -117,7 +118,7 @@ unsafe impl BucketSet for CowSortedArray {
     }
 
     fn insert(&self, node: *mut Node) -> Result<(), *mut Node> {
-        self.wlock.with(|| {
+        self.wlock.with(|| { // lock: bucket
             // SAFETY: writer lock held.
             unsafe {
                 let mut next = self.clean_copy();
@@ -137,7 +138,7 @@ unsafe impl BucketSet for CowSortedArray {
     }
 
     fn delete(&self, key: u64, flag: usize) -> DeleteOutcome {
-        self.wlock.with(|| {
+        self.wlock.with(|| { // lock: bucket
             // SAFETY: writer lock held.
             unsafe {
                 let cur = self.load_version();
@@ -223,6 +224,7 @@ impl Drop for CowSortedArray {
         // SAFETY: exclusive; reclaim the final (now empty) version.
         unsafe {
             // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
+            // reclaim: cow-version via exclusive
             drop(Box::from_raw(self.current.load(Ordering::Relaxed)));
         }
     }

@@ -88,6 +88,7 @@ impl Node {
     pub fn alloc(key: u64, val: u64) -> *mut Node {
         // ord: stats-relaxed — monotonic counter, no ordering role
         mem_stats::ALLOCS.fetch_add(1, Ordering::Relaxed);
+        // reclaim: node — owned raw until published into a set
         Box::into_raw(Box::new(Node {
             key,
             val: AtomicU64::new(val),
@@ -103,7 +104,7 @@ impl Node {
     pub unsafe fn free(ptr: *mut Node) {
         // ord: stats-relaxed — monotonic counter, no ordering role
         mem_stats::FREES.fetch_add(1, Ordering::Relaxed);
-        drop(Box::from_raw(ptr));
+        drop(Box::from_raw(ptr)); // reclaim: node via contract — caller proves unreachability (# Safety)
     }
 
     /// Free a node after a grace period (`call_rcu(htnp, free)` in the

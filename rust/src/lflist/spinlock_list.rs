@@ -61,7 +61,7 @@ impl SpinLock {
     }
 
     pub(crate) fn with<R>(&self, f: impl FnOnce() -> R) -> R {
-        self.lock();
+        self.lock(); // lock: bucket
         let r = f();
         self.unlock();
         r
@@ -153,7 +153,7 @@ unsafe impl BucketSet for SpinlockList {
     }
 
     fn find(&self, key: u64) -> Option<&Node> {
-        self.lock.with(|| {
+        self.lock.with(|| { // lock: bucket
             // SAFETY: lock held, chain stable; refs stay valid past unlock
             // thanks to RCU-deferred reclamation.
             // Acquire link loads: the chain structure is lock-private,
@@ -183,7 +183,7 @@ unsafe impl BucketSet for SpinlockList {
     }
 
     fn insert(&self, node: *mut Node) -> Result<(), *mut Node> {
-        self.lock.with(|| {
+        self.lock.with(|| { // lock: bucket
             // SAFETY: lock held.
             unsafe {
                 self.prune_locked();
@@ -221,7 +221,7 @@ unsafe impl BucketSet for SpinlockList {
     }
 
     fn delete(&self, key: u64, flag: usize) -> DeleteOutcome {
-        self.lock.with(|| {
+        self.lock.with(|| { // lock: bucket
             // SAFETY: lock held.
             unsafe {
                 let mut pp: *const AtomicUsize = &self.head;
@@ -255,7 +255,7 @@ unsafe impl BucketSet for SpinlockList {
     }
 
     fn first(&self) -> Option<*mut Node> {
-        self.lock.with(|| {
+        self.lock.with(|| { // lock: bucket
             // SAFETY: lock held.
             unsafe {
                 self.prune_locked();
@@ -275,7 +275,7 @@ unsafe impl BucketSet for SpinlockList {
     }
 
     fn collect(&self) -> Vec<(u64, u64)> {
-        self.lock.with(|| {
+        self.lock.with(|| { // lock: bucket
             let mut out = Vec::new();
             // SAFETY: lock held.
             unsafe {

@@ -1,0 +1,168 @@
+//! Intra-crate call graph over [`scan::fn_extents`] — the shared flow
+//! layer under the `lock-order` and `reclaim` rules.
+//!
+//! ## Resolution model (deliberately name-based)
+//!
+//! There is no type inference here. A call site resolves to *every*
+//! function in the crate with the callee's name — an over-approximation
+//! that is sound for "can this path reach a lock/free?" questions as
+//! long as the name is specific. Two heuristics keep the
+//! over-approximation from drowning the rules in false edges:
+//!
+//! 1. **Receivers**: only `self.foo(…)` method calls resolve;
+//!    `other.foo(…)` would otherwise alias every `foo` in the crate
+//!    (`CURRENT.with` vs `SpinLock::with` is the canonical trap).
+//!    Bare calls (`foo(…)`) and path calls (`Node::free(…)`) resolve
+//!    by last segment.
+//! 2. **Ubiquitous names**: `new`, `drop`, `clone`, `next`, … shadow
+//!    std/trait methods on every type; resolving them by name would
+//!    wire, say, `Arc::new(…)` into `Coordinator::new` and fabricate
+//!    lock edges. They are never resolved ([`DENY_RESOLVE`]).
+//!
+//! Both heuristics under-approximate *edges*, never *sites*: lock
+//! acquisitions and free sites are found by token scan at the line
+//! level, so a dropped edge can only miss a transitive ordering, not
+//! an unannotated site.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::scan::{self, FnExtent, SourceFile};
+use super::LintContext;
+
+/// Names never resolved to call edges: std/trait idioms defined on
+/// many types, where name-matching would fabricate paths into
+/// unrelated impls.
+const DENY_RESOLVE: &[&str] = &[
+    "new", "now", "drop", "clone", "default", "from", "into", "fmt", "next", "len",
+    "is_empty", "min", "max", "abs", "clamp", "get", "set", "push", "pop", "insert",
+    "remove", "clear", "take", "swap", "load", "store", "collect", "iter", "join",
+    "spawn", "send", "recv", "wait", "write", "read", "flush", "contains", "extend",
+    "retain", "unwrap", "expect", "ok", "err", "f",
+];
+
+/// A call site inside a function extent.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    /// 0-based line of the call.
+    pub line: usize,
+    /// Last path segment of the callee.
+    pub name: String,
+    /// Inside a `call_rcu(…)` argument list — runs after a grace
+    /// period, not on this path.
+    pub deferred: bool,
+    /// On an in-test line.
+    pub in_test: bool,
+}
+
+/// One function in the graph.
+pub struct FnNode {
+    /// Index into `ctx.files`.
+    pub file: usize,
+    pub extent: FnExtent,
+    pub calls: Vec<CallSite>,
+}
+
+pub struct CallGraph {
+    pub nodes: Vec<FnNode>,
+    by_name: BTreeMap<String, Vec<usize>>,
+}
+
+impl CallGraph {
+    pub fn build(ctx: &LintContext) -> CallGraph {
+        let mut nodes = Vec::new();
+        for (fidx, file) in ctx.files.iter().enumerate() {
+            let extents = scan::fn_extents(file);
+            let deferred = deferred_lines(file);
+            let mut calls_per_extent: Vec<Vec<CallSite>> = vec![Vec::new(); extents.len()];
+            for (lidx, line) in file.lines.iter().enumerate() {
+                let Some(owner) = scan::innermost_extent(&extents, lidx) else { continue };
+                for (name, _via_self) in scan::calls_on_line(&line.code) {
+                    calls_per_extent[owner].push(CallSite {
+                        line: lidx,
+                        name,
+                        deferred: deferred[lidx],
+                        in_test: line.in_test,
+                    });
+                }
+            }
+            for (extent, calls) in extents.into_iter().zip(calls_per_extent) {
+                nodes.push(FnNode { file: fidx, extent, calls });
+            }
+        }
+        let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, n) in nodes.iter().enumerate() {
+            by_name.entry(n.extent.name.clone()).or_default().push(i);
+        }
+        CallGraph { nodes, by_name }
+    }
+
+    /// Node ids a callee name resolves to (empty for deny-listed or
+    /// unknown names).
+    pub fn resolve(&self, name: &str) -> &[usize] {
+        if DENY_RESOLVE.contains(&name) {
+            return &[];
+        }
+        self.by_name.get(name).map_or(&[], Vec::as_slice)
+    }
+
+    /// Transitive closure of non-deferred, non-test call edges from
+    /// `start` (inclusive of `start` itself).
+    pub fn reachable(&self, start: usize) -> BTreeSet<usize> {
+        let mut seen = BTreeSet::new();
+        let mut stack = vec![start];
+        while let Some(n) = stack.pop() {
+            if !seen.insert(n) {
+                continue;
+            }
+            for call in &self.nodes[n].calls {
+                if call.deferred || call.in_test {
+                    continue;
+                }
+                for &t in self.resolve(&call.name) {
+                    if !seen.contains(&t) {
+                        stack.push(t);
+                    }
+                }
+            }
+        }
+        seen
+    }
+}
+
+/// Per-line flags: inside the argument list of a `call_rcu(…)` call —
+/// code that runs from the reclaimer after a grace period, so lock and
+/// free events there are not part of the enclosing function's path.
+pub fn deferred_lines(file: &SourceFile) -> Vec<bool> {
+    let mut out = vec![false; file.lines.len()];
+    let mut i = 0;
+    while i < file.lines.len() {
+        let code = &file.lines[i].code;
+        let Some(pos) = code.find("call_rcu(") else {
+            i += 1;
+            continue;
+        };
+        // Paren-match from the `(` of call_rcu across lines.
+        let mut depth: i64 = 0;
+        let mut j = i;
+        let mut tail: &str = &code[pos..];
+        loop {
+            for c in tail.chars() {
+                match c {
+                    '(' => depth += 1,
+                    ')' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if depth <= 0 || j + 1 >= file.lines.len() {
+                break;
+            }
+            j += 1;
+            tail = &file.lines[j].code;
+        }
+        for flag in &mut out[i..=j] {
+            *flag = true;
+        }
+        i = j + 1;
+    }
+    out
+}

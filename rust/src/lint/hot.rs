@@ -2,17 +2,19 @@
 //! lock-, sleep- and print-free.
 //!
 //! The tag is a standalone comment line — exactly `// lint: hot` —
-//! directly above a fast-path fn (the `#[inline]` lookup paths);
-//! merely *mentioning* the tag in prose does not arm the rule.
-//! The rule brace-matches the fn body and
-//! denies a fixed token list — mutex/spinlock acquisition, heap
-//! allocation, sleeping, formatting/printing. The check is *shallow*
-//! (tokens in the tagged body only, not callees): its job is to stop
-//! the easy regression where a debug `println!` or a convenience
-//! `Vec::new()` lands on the lookup path, not to prove the whole call
-//! graph allocation-free. QSBR's `read_lock()` is *not* a lock (it is
-//! a no-op counter copy) and is not matched — the deny tokens require
-//! a `.lock(` / `.try_lock(` method call.
+//! directly above a fast-path fn (the `#[inline]` lookup paths) or a
+//! closure binding (`let probe = |k| { … };`); merely *mentioning* the
+//! tag in prose does not arm the rule. The rule brace-matches the full
+//! body extent — closures and nested `fn` items defined inside a
+//! tagged fn are part of its extent and are scanned too — and denies a
+//! fixed token list: mutex/spinlock acquisition, heap allocation,
+//! sleeping, formatting/printing. The check is *shallow* (tokens in
+//! the tagged extent only, not callees): its job is to stop the easy
+//! regression where a debug `println!` or a convenience `Vec::new()`
+//! lands on the lookup path, not to prove the whole call graph
+//! allocation-free. QSBR's `read_lock()` is *not* a lock (it is a
+//! no-op counter copy) and is not matched — the deny tokens require a
+//! `.lock(` / `.try_lock(` method call.
 
 use super::{Diagnostic, LintContext};
 use super::scan::SourceFile;
@@ -71,49 +73,50 @@ pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
     out
 }
 
-/// From the tag line, locate the next `fn`, its name, and the line of
-/// its matching close brace.
+/// From the tag line, locate the next `fn` header *or* closure
+/// binding, its name, and the line of its matching close brace.
 fn fn_after_tag(file: &SourceFile, tag_idx: usize) -> Option<(usize, String, usize)> {
     let lines = &file.lines;
     let mut j = tag_idx;
-    // The fn header must follow within a few lines (attributes,
-    // comments, and the tag line itself in between are fine).
-    let mut fn_line = None;
+    // The header must follow within a few lines (attributes, comments,
+    // and the tag line itself in between are fine).
+    let mut found = None;
     while j < lines.len() && j <= tag_idx + 6 {
-        if super::scan::has_word(&lines[j].code, "fn") {
-            fn_line = Some(j);
+        let code = &lines[j].code;
+        if super::scan::has_word(code, "fn") {
+            let name: String = code
+                .split("fn ")
+                .nth(1)?
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            found = Some((j, name));
+            break;
+        }
+        // A tagged closure binding: `let probe = |k| { … };` or
+        // `let probe = move |k| { … };`.
+        if super::scan::has_word(code, "let") && (code.contains("= |") || code.contains("= move |"))
+        {
+            let name: String = code
+                .split("let ")
+                .nth(1)?
+                .trim_start_matches("mut ")
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !code.contains('{') && code.contains(';') {
+                // Single-expression closure: the binding line is the
+                // whole extent.
+                return Some((j, name, j));
+            }
+            found = Some((j, name));
             break;
         }
         j += 1;
     }
-    let fn_line = fn_line?;
-    let code = &lines[fn_line].code;
-    let after_fn = code.split("fn ").nth(1)?;
-    let name: String = after_fn
-        .chars()
-        .take_while(|c| c.is_alphanumeric() || *c == '_')
-        .collect();
-    // Brace-match the body from the first `{` at or after the header.
-    let mut depth: i64 = 0;
-    let mut opened = false;
-    let mut k = fn_line;
-    while k < lines.len() {
-        for c in lines[k].code.chars() {
-            match c {
-                '{' => {
-                    depth += 1;
-                    opened = true;
-                }
-                '}' => depth -= 1,
-                _ => {}
-            }
-        }
-        if opened && depth <= 0 {
-            return Some((fn_line, name, k));
-        }
-        k += 1;
-    }
-    Some((fn_line, name, lines.len() - 1))
+    let (fn_line, name) = found?;
+    let end = super::scan::brace_match(file, fn_line).unwrap_or(lines.len() - 1);
+    Some((fn_line, name, end))
 }
 
 fn scan_body(

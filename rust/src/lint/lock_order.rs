@@ -1,0 +1,257 @@
+//! Rule `lock-order`: every blocking-lock acquisition is tagged with a
+//! hierarchy key, and no path acquires locks against the hierarchy.
+//!
+//! ## Annotation grammar
+//!
+//! ```text
+//! // lock: <key>
+//! ```
+//!
+//! `<key>` is `[a-z0-9-]+` and names a row of DESIGN.md §Lock order
+//! (as a backticked `lock:<key>` token). The annotation sits on the
+//! acquisition line or on a comment line directly above it (up to two
+//! comment-only lines away).
+//!
+//! ## Acquisition sites
+//!
+//! A production line in `rust/src/{dhash,lflist,rcu,coordinator}`
+//! whose code contains `.lock(`, `.try_lock(`, or `lock.with(` (the
+//! spinlock's scoped acquire — `SpinlockList.lock` / `CowArray.wlock`)
+//! is one acquisition event. QSBR `read_lock()` is a counter copy, not
+//! a lock, and does not match. Test code is exempt.
+//!
+//! ## Hierarchy check
+//!
+//! Rank = row order in §Lock order, outermost first. Locks acquired in
+//! a function are modeled as held until it returns (RAII guards);
+//! locks acquired by a callee are released on return. For each
+//! function, the acquisition sequence — its own sites, plus every key
+//! reachable through resolved call edges ([`flow`]) — must be
+//! rank-monotone: acquiring a key ranked *above* one already held is a
+//! finding. Same-key nesting is not flagged (re-acquisition is the
+//! spinlock's own concern, and try-lock self-nesting is benign).
+//!
+//! ## Index agreement
+//!
+//! Both-ways drift, as with `ord`: a key used in source but absent
+//! from §Lock order fails, and a documented key no site uses fails.
+
+use std::collections::BTreeMap;
+
+use super::scan::{self, SourceFile};
+use super::{flow, Diagnostic, LintContext};
+
+pub const DESIGN_SECTION: &str = "## Lock order";
+
+const SCOPE: &[&str] = &[
+    "rust/src/dhash/",
+    "rust/src/lflist/",
+    "rust/src/rcu/",
+    "rust/src/coordinator/",
+];
+
+const TOKENS: &[&str] = &[".lock(", ".try_lock(", "lock.with("];
+
+fn in_scope(path: &str) -> bool {
+    SCOPE.iter().any(|p| path.starts_with(p))
+}
+
+fn is_acquire(code: &str) -> bool {
+    TOKENS.iter().any(|t| code.contains(t))
+}
+
+/// The `lock:` key covering a site line: trailing comment on the line
+/// itself, or a comment within the two comment-only lines above.
+fn site_key(file: &SourceFile, idx: usize, marker: &str) -> Option<String> {
+    if let Some(k) = scan::extract_marked_key(&file.lines[idx].comment, marker) {
+        return Some(k);
+    }
+    let mut j = idx;
+    while j > 0 && idx - j < 2 {
+        let above = &file.lines[j - 1];
+        if !above.code.trim().is_empty() || above.comment.is_empty() {
+            break;
+        }
+        if let Some(k) = scan::extract_marked_key(&above.comment, marker) {
+            return Some(k);
+        }
+        j -= 1;
+    }
+    None
+}
+
+pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    // key → first (file, line) using it.
+    let mut used: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    // Per file: 0-based acquisition line → key.
+    let mut acq: BTreeMap<usize, BTreeMap<usize, String>> = BTreeMap::new();
+
+    for (fidx, file) in ctx.files.iter().enumerate() {
+        if !in_scope(&file.path) || file.test_only {
+            continue;
+        }
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test || !is_acquire(&line.code) {
+                continue;
+            }
+            match site_key(file, idx, "lock:") {
+                Some(key) => {
+                    used.entry(key.clone())
+                        .or_insert_with(|| (file.path.clone(), idx + 1));
+                    acq.entry(fidx).or_default().insert(idx, key);
+                }
+                None => out.push(Diagnostic::new(
+                    &file.path,
+                    idx + 1,
+                    "lock-order",
+                    "lock acquisition without a // lock: <key> annotation (see DESIGN.md §Lock order)"
+                        .to_string(),
+                )),
+            }
+        }
+    }
+
+    // DESIGN.md §Lock order: rank by row order, plus both-ways drift.
+    let table = super::design_marked_keys(&ctx.design_md, DESIGN_SECTION, "lock:");
+    let mut rank: BTreeMap<&str, usize> = BTreeMap::new();
+    {
+        let mut rows: Vec<(&String, &usize)> = table.iter().collect();
+        rows.sort_by_key(|(_, line)| **line);
+        for (i, (key, _)) in rows.into_iter().enumerate() {
+            rank.insert(key.as_str(), i);
+        }
+    }
+    for (key, (file, line)) in &used {
+        if !table.contains_key(key) {
+            out.push(Diagnostic::new(
+                file,
+                *line,
+                "lock-order",
+                format!("lock key '{key}' is not ranked in DESIGN.md {DESIGN_SECTION}"),
+            ));
+        }
+    }
+    for (key, line) in &table {
+        if !used.contains_key(key) {
+            out.push(Diagnostic::new(
+                "rust/DESIGN.md",
+                *line,
+                "lock-order",
+                format!(
+                    "DESIGN.md {DESIGN_SECTION} ranks lock key '{key}' but no source site uses it"
+                ),
+            ));
+        }
+    }
+
+    // Flow pass: per function, the held-set must stay rank-monotone
+    // across its own acquisitions and everything reachable from calls.
+    let graph = flow::CallGraph::build(ctx);
+    // node id → its direct (line, key) acquisitions, line-ordered.
+    // A line belongs to the *innermost* extent containing it, so a
+    // nested fn's sites are not double-counted against its parent.
+    let mut per_file_extents: BTreeMap<usize, Vec<scan::FnExtent>> = BTreeMap::new();
+    for fidx in acq.keys() {
+        per_file_extents.insert(*fidx, scan::fn_extents(&ctx.files[*fidx]));
+    }
+    let mut direct: Vec<Vec<(usize, String)>> = Vec::with_capacity(graph.nodes.len());
+    for node in &graph.nodes {
+        let mut sites = Vec::new();
+        if let Some(lines) = acq.get(&node.file) {
+            let extents = &per_file_extents[&node.file];
+            for (&line, key) in lines.range(node.extent.start..=node.extent.end) {
+                if let Some(owner) = scan::innermost_extent(extents, line) {
+                    if extents[owner].start != node.extent.start {
+                        continue;
+                    }
+                }
+                sites.push((line, key.clone()));
+            }
+        }
+        direct.push(sites);
+    }
+    for (nid, node) in graph.nodes.iter().enumerate() {
+        if direct[nid].is_empty() {
+            continue;
+        }
+        let file = &ctx.files[node.file];
+        let deferred = flow::deferred_lines(file);
+        // Events in line order: own acquisitions and call sites.
+        #[derive(Clone)]
+        enum Ev<'a> {
+            Acq(&'a str),
+            Call(&'a str),
+        }
+        let mut events: Vec<(usize, Ev)> = Vec::new();
+        for (line, key) in &direct[nid] {
+            if !deferred[*line] {
+                events.push((*line, Ev::Acq(key)));
+            }
+        }
+        for call in &node.calls {
+            if !call.deferred && !call.in_test {
+                events.push((call.line, Ev::Call(&call.name)));
+            }
+        }
+        events.sort_by_key(|(line, _)| *line);
+        let mut held: Vec<(String, usize)> = Vec::new();
+        for (line, ev) in events {
+            match ev {
+                Ev::Acq(k2) => {
+                    report_inversions(&mut out, file, line, k2, None, &held, &rank);
+                    held.push((k2.to_string(), line));
+                }
+                Ev::Call(name) => {
+                    for &target in graph.resolve(name) {
+                        for t in graph.reachable(target) {
+                            for (_, k2) in &direct[t] {
+                                report_inversions(
+                                    &mut out, file, line, k2, Some(name), &held, &rank,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    out.sort();
+    out.dedup();
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn report_inversions(
+    out: &mut Vec<Diagnostic>,
+    file: &SourceFile,
+    line: usize,
+    k2: &str,
+    via: Option<&str>,
+    held: &[(String, usize)],
+    rank: &BTreeMap<&str, usize>,
+) {
+    let Some(&r2) = rank.get(k2) else { return };
+    for (k1, l1) in held {
+        if k1 == k2 {
+            continue;
+        }
+        let Some(&r1) = rank.get(k1.as_str()) else { continue };
+        if r2 < r1 {
+            let how = match via {
+                Some(callee) => format!("call to '{callee}' can acquire"),
+                None => "acquires".to_string(),
+            };
+            out.push(Diagnostic::new(
+                &file.path,
+                line + 1,
+                "lock-order",
+                format!(
+                    "{how} lock '{k2}' while '{k1}' (line {}) is held — DESIGN.md {DESIGN_SECTION} ranks '{k2}' above '{k1}'",
+                    l1 + 1
+                ),
+            ));
+        }
+    }
+}

@@ -4,7 +4,7 @@
 //! publish→delete→insert→clear ordering, the hazard-pointer handshakes,
 //! and the per-site relaxed-ordering invariants from the read-path
 //! audit. That protocol lives in comments and DESIGN.md tables — this
-//! module makes it *enforced*. Five rules, each a pure function over
+//! module makes it *enforced*. Eight rules, each a pure function over
 //! scanned source ([`scan`]):
 //!
 //! | rule | contract |
@@ -12,17 +12,26 @@
 //! | `safety` | every `unsafe` block/fn/impl is adjacent to a `// SAFETY:` comment (or a `/// # Safety` doc section) |
 //! | `ord` | every `Ordering::*` site in `dhash`/`lflist`/`rcu` production code carries an `// ord: <key>` annotation, and the key set equals the DESIGN.md §Memory orderings table (drift in either direction fails) |
 //! | `seqcst-budget` | per-file `Ordering::SeqCst` counts equal `tools/seqcst_allowlist.txt` (subsumes the old grep script) |
-//! | `hot` | fns tagged `// lint: hot` contain no locking, allocation, sleeping, or printing tokens |
+//! | `hot` | fns (or closures) tagged `// lint: hot` contain no locking, allocation, sleeping, or printing tokens anywhere in their extent |
 //! | `wire` | `KvError::code()` ↔ `code_name()` ↔ `net::proto::wire_code` ↔ DESIGN.md §Error codes agree byte-for-byte |
+//! | `lock-order` | every `.lock(`/`.try_lock(`/spinlock acquire carries `// lock: <key>`, the key set equals DESIGN.md §Lock order, and no reachable acquisition sequence ([`flow`] call graph) inverts the ranked hierarchy |
+//! | `reclaim` | every `Box::into_raw`/`Box::from_raw` in the core carries `// reclaim: <key> [via <class>]`, classes are path-checked (rcu/grace/exclusive/contract), pairs and DESIGN.md §Reclamation contract agree, and no shared-`&self` path reaches a free site |
+//! | `publish` | fns tagged `// lint: publish <proto>` perform their hazard/epoch publication steps as an ordered token sequence (publish → barrier → clear; mirrors-first install) |
 //!
 //! The analyzer is hand-rolled (no new deps, per the vendored-deps
-//! rule) and line/token based: it never type-checks, so it errs toward
-//! explicit annotation over inference. Run it with
-//! `cargo run --release --bin dhash-lint`; fixture-driven self-tests
-//! live in `rust/tests/lint_self.rs` + `rust/tests/lint_fixtures/`.
+//! rule) and line/token based — the [`flow`] layer adds function
+//! extents and a name-resolved call graph, but it still never
+//! type-checks, so it errs toward explicit annotation over inference.
+//! Run it with `cargo run --release --bin dhash-lint`; fixture-driven
+//! self-tests live in `rust/tests/lint_self.rs` +
+//! `rust/tests/lint_fixtures/`.
 
+pub mod flow;
 pub mod hot;
+pub mod lock_order;
 pub mod ord;
+pub mod publish;
+pub mod reclaim;
 pub mod safety;
 pub mod scan;
 pub mod seqcst;
@@ -181,6 +190,47 @@ fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
     Ok(())
 }
 
+/// All `<marker><key>` tokens (e.g. `lock:bucket`) in the given
+/// section of DESIGN.md, with the 1-based line each first appears on.
+/// The section runs from a heading starting with `section` to the next
+/// same-or-higher-level heading.
+pub fn design_marked_keys(
+    design_md: &str,
+    section: &str,
+    marker: &str,
+) -> std::collections::BTreeMap<String, usize> {
+    let mut keys = std::collections::BTreeMap::new();
+    let mut in_section = false;
+    for (idx, line) in design_md.lines().enumerate() {
+        if line.starts_with("## ") {
+            in_section = line.starts_with(section);
+            continue;
+        }
+        if !in_section {
+            continue;
+        }
+        let mut start = 0;
+        while let Some(pos) = line[start..].find(marker) {
+            let at = start + pos;
+            let boundary = !line[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+            if boundary {
+                let key: String = line[at + marker.len()..]
+                    .chars()
+                    .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
+                    .collect();
+                if !key.is_empty() {
+                    keys.entry(key).or_insert(idx + 1);
+                }
+            }
+            start = at + marker.len();
+        }
+    }
+    keys
+}
+
 /// The rule registry, in report order.
 pub const RULES: &[(&str, fn(&LintContext) -> Vec<Diagnostic>)] = &[
     ("safety", safety::check),
@@ -188,6 +238,9 @@ pub const RULES: &[(&str, fn(&LintContext) -> Vec<Diagnostic>)] = &[
     ("seqcst-budget", seqcst::check),
     ("hot", hot::check),
     ("wire", wire::check),
+    ("lock-order", lock_order::check),
+    ("reclaim", reclaim::check),
+    ("publish", publish::check),
 ];
 
 /// Run the named rules (all when `which` is empty) and return findings

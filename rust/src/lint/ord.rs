@@ -79,8 +79,13 @@ pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
                         .to_string(),
                 ));
             }
-            // Statement end consumes the annotation.
-            if !code.is_empty() {
+            // Statement end consumes the annotation — except when the
+            // annotation itself arrived trailing a closing-brace-only
+            // line (`} // ord: key`): that code ends the *previous*
+            // statement, and the annotation covers the one below, just
+            // as it would from a comment-only line.
+            let only_closers = !code.is_empty() && code.chars().all(|c| "}){];, ".contains(c));
+            if !code.is_empty() && !(here.is_some() && only_closers) {
                 if code.contains(';') || code.ends_with('{') || code.ends_with('}') {
                     active = None;
                 } else if budget > 0 {
@@ -123,26 +128,7 @@ pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
 /// `// ord: <key> …` → `Some(key)`. The `ord:` marker must start at a
 /// word boundary so prose like "record: announce" cannot arm the rule.
 pub fn extract_key(comment: &str) -> Option<String> {
-    let mut start = 0;
-    while let Some(pos) = comment[start..].find("ord:") {
-        let at = start + pos;
-        let boundary = !comment[..at]
-            .chars()
-            .next_back()
-            .is_some_and(|c| c.is_alphanumeric() || c == '_');
-        if boundary {
-            let key: String = comment[at + 4..]
-                .trim_start()
-                .chars()
-                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
-                .collect();
-            if !key.is_empty() {
-                return Some(key);
-            }
-        }
-        start = at + 4;
-    }
-    None
+    super::scan::extract_marked_key(comment, "ord:")
 }
 
 /// All `ord:<key>` tokens in the §Memory orderings section of

@@ -1,0 +1,173 @@
+//! Rule `publish`: the hazard/epoch publication protocols are ordered
+//! token sequences inside tagged fns — a refactor that reorders the
+//! hazard clear past the unlink, or installs the directory pointer
+//! before its mirrors, fails lint instead of a torture run.
+//!
+//! ## Tag grammar
+//!
+//! ```text
+//! // lint: publish <protocol>
+//! ```
+//!
+//! A standalone comment line directly above the protocol fn (doc
+//! comments and attributes may sit between). Each protocol names an
+//! ordered list of code tokens; the fn body — whitespace-stripped and
+//! joined, so multi-line statements match — must contain every token,
+//! and their *first occurrences* must appear in protocol order.
+//!
+//! ## Protocols
+//!
+//! * `rebuild` — DHashMap table swap: candidate published in `ht_new`
+//!   → grace barrier → `rebuild_cur` hazard publish before logical
+//!   delete → hazard clear after re-insert → `cur` swap → free the
+//!   superseded table (Lemma 4.1 shape).
+//! * `drain` — per-node migration: pop under callback → `moving`
+//!   hazard publish → hazard clear → deferred free of the duplicate
+//!   path.
+//! * `install-dir` — mirrors-first directory install: `nshards`, then
+//!   `cur_epoch`, then the `dir` pointer last, so readers that load
+//!   the new pointer see consistent mirrors.
+//! * `resize` — shard split/merge: migration token → intermediate
+//!   directory install → grace barrier → drain → free superseded
+//!   directories.
+
+use super::scan;
+use super::{Diagnostic, LintContext};
+
+pub const TAG_PREFIX: &str = "// lint: publish ";
+
+/// protocol → ordered (whitespace-stripped token, step description).
+pub const PROTOCOLS: &[(&str, &[(&str, &str)])] = &[
+    (
+        "rebuild",
+        &[
+            ("rebuild_lock.try_lock(", "serialize rebuilds"),
+            ("ht_new.store(", "publish the candidate table"),
+            ("offline_while(synchronize_rcu)", "grace barrier"),
+            ("rebuild_cur.store(cand", "hazard publish before logical delete"),
+            ("rebuild_cur.store(std::ptr::null_mut(", "hazard clear after re-insert"),
+            ("self.cur.store(", "table swap"),
+            ("Box::from_raw(", "free the superseded table"),
+        ],
+    ),
+    (
+        "drain",
+        &[
+            ("take_first_for_distribution(", "pop under the hazard callback"),
+            ("moving.store(cand", "hazard publish before logical delete"),
+            ("moving.store(std::ptr::null_mut(", "hazard clear after re-insert"),
+            ("Node::defer_free(", "deferred free of the duplicate path"),
+        ],
+    ),
+    (
+        "install-dir",
+        &[
+            ("nshards.store(", "mirror: shard count"),
+            ("cur_epoch.store(", "mirror: epoch"),
+            ("dir.store(", "directory pointer last"),
+        ],
+    ),
+    (
+        "resize",
+        &[
+            ("migration_token.try_lock(", "one migration in flight"),
+            ("install_dir(", "install the intermediate directory"),
+            ("offline_while(synchronize_rcu)", "grace barrier"),
+            ("drain_into(", "drain via the moving hazard"),
+            ("Box::from_raw(", "free the superseded directories"),
+        ],
+    ),
+];
+
+pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for file in &ctx.files {
+        for (idx, line) in file.lines.iter().enumerate() {
+            let comment = line.comment.trim();
+            let Some(proto_name) = comment.strip_prefix(TAG_PREFIX) else {
+                continue;
+            };
+            let proto_name = proto_name.trim();
+            let Some((_, steps)) = PROTOCOLS.iter().find(|(n, _)| *n == proto_name) else {
+                out.push(Diagnostic::new(
+                    &file.path,
+                    idx + 1,
+                    "publish",
+                    format!("unknown publication protocol '{proto_name}'"),
+                ));
+                continue;
+            };
+            // Locate the tagged fn (hot-style: within a few lines).
+            let mut fn_line = None;
+            for j in idx..(idx + 7).min(file.lines.len()) {
+                if scan::has_word(&file.lines[j].code, "fn") {
+                    fn_line = Some(j);
+                    break;
+                }
+            }
+            let Some(start) = fn_line else {
+                out.push(Diagnostic::new(
+                    &file.path,
+                    idx + 1,
+                    "publish",
+                    format!("// lint: publish {proto_name} tag with no fn following it"),
+                ));
+                continue;
+            };
+            let name: String = file.lines[start]
+                .code
+                .split("fn ")
+                .nth(1)
+                .unwrap_or("")
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            let end = scan::brace_match(file, start).unwrap_or(file.lines.len() - 1);
+            // Whitespace-stripped body with a char-offset → line map.
+            let mut body = String::new();
+            let mut line_at: Vec<usize> = Vec::new();
+            for j in start..=end {
+                for c in file.lines[j].code.chars() {
+                    if !c.is_whitespace() {
+                        body.push(c);
+                        line_at.push(j);
+                    }
+                }
+            }
+            let mut last_pos: Option<usize> = None;
+            let mut last_step = "";
+            for &(token, step) in *steps {
+                let stripped: String = token.chars().filter(|c| !c.is_whitespace()).collect();
+                match body.find(&stripped) {
+                    None => out.push(Diagnostic::new(
+                        &file.path,
+                        start + 1,
+                        "publish",
+                        format!(
+                            "fn '{name}' (protocol '{proto_name}') is missing step '{step}' (token `{token}`)"
+                        ),
+                    )),
+                    Some(pos) => {
+                        if let Some(prev) = last_pos {
+                            if pos < prev {
+                                out.push(Diagnostic::new(
+                                    &file.path,
+                                    line_at[pos] + 1,
+                                    "publish",
+                                    format!(
+                                        "fn '{name}' (protocol '{proto_name}') performs step '{step}' before step '{last_step}' — protocol order is violated"
+                                    ),
+                                ));
+                            }
+                        }
+                        if last_pos.map_or(true, |prev| pos > prev) {
+                            last_pos = Some(pos);
+                            last_step = step;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}

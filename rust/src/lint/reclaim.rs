@@ -1,0 +1,322 @@
+//! Rule `reclaim`: every raw-pointer free in the concurrency core is
+//! annotated with its reclamation class, pairs with an allocation
+//! site, and is unreachable from shared-`&self` operations.
+//!
+//! ## Annotation grammar
+//!
+//! ```text
+//! // reclaim: <key>                         (Box::into_raw site)
+//! // reclaim: <key> via <class>             (free site / call site)
+//! ```
+//!
+//! `<key>` is `[a-z0-9-]+` and names a row of DESIGN.md §Reclamation
+//! contract (as a backticked `reclaim:<key>` token). `<class>` says
+//! why the free cannot race a reader:
+//!
+//! | class        | valid on                  | locally checked as |
+//! |--------------|---------------------------|--------------------|
+//! | `rcu`        | free site                 | inside a `call_rcu(…)` argument (runs after a grace period) |
+//! | `grace`      | free site or call site    | a `synchronize` token earlier in the same fn (QSBR waiter) |
+//! | `exclusive`  | free site                 | enclosing fn takes `&mut self` / `mut self`, or is `fn drop` |
+//! | `contract`   | free site                 | enclosing fn is `unsafe fn` — the obligation moves to call sites |
+//! | `unpublished`| call site                 | the pointer never escaped; justification is the annotation text |
+//!
+//! ## Flow pass
+//!
+//! A fn containing a `contract`-class free is *contract-freeing*. Any
+//! non-deferred call edge to a contract-freeing fn must be discharged:
+//! the caller takes `&mut self` (or is `fn drop`), or the call line
+//! carries `// reclaim: <key> via unpublished|grace`, or the caller is
+//! itself an `unsafe fn` (obligation propagates outward). A plain
+//! shared-`&self` fn reaching a free site any other way is the finding
+//! this rule exists for.
+//!
+//! ## Pairing and index agreement
+//!
+//! Every key needs at least one `Box::into_raw` site and one free
+//! site; the key set must equal the `reclaim:<key>` tokens in
+//! DESIGN.md §Reclamation contract (both-ways drift).
+//!
+//! ## Scope
+//!
+//! Production code in `rust/src/{dhash,lflist,rcu}` — the baselines
+//! and the serving layer hold no shared-reclamation contract.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::scan::{self, SourceFile};
+use super::{flow, Diagnostic, LintContext};
+
+pub const DESIGN_SECTION: &str = "## Reclamation contract";
+
+const SCOPE: &[&str] = &["rust/src/dhash/", "rust/src/lflist/", "rust/src/rcu/"];
+
+const FREE_TOKENS: &[&str] = &["Box::from_raw", "drop_in_place"];
+const ALLOC_TOKEN: &str = "Box::into_raw";
+
+fn in_scope(path: &str) -> bool {
+    SCOPE.iter().any(|p| path.starts_with(p))
+}
+
+/// Parsed `reclaim:` annotation: key plus optional `via <class>`.
+fn site_annot(file: &SourceFile, idx: usize) -> Option<(String, Option<String>)> {
+    let parse = |comment: &str| -> Option<(String, Option<String>)> {
+        let key = scan::extract_marked_key(comment, "reclaim:")?;
+        let after = comment.split("reclaim:").nth(1).unwrap_or("");
+        let class = after
+            .trim_start()
+            .strip_prefix(&key)
+            .and_then(|rest| rest.trim_start().strip_prefix("via "))
+            .map(|rest| {
+                rest.chars()
+                    .take_while(|c| c.is_ascii_lowercase() || *c == '-')
+                    .collect::<String>()
+            })
+            .filter(|c| !c.is_empty());
+        Some((key, class))
+    };
+    if let Some(found) = parse(&file.lines[idx].comment) {
+        return Some(found);
+    }
+    let mut j = idx;
+    while j > 0 && idx - j < 2 {
+        let above = &file.lines[j - 1];
+        if !above.code.trim().is_empty() || above.comment.is_empty() {
+            break;
+        }
+        if let Some(found) = parse(&above.comment) {
+            return Some(found);
+        }
+        j -= 1;
+    }
+    None
+}
+
+pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let graph = flow::CallGraph::build(ctx);
+
+    // key → (has alloc site, has free site, first (file, line)).
+    let mut keys: BTreeMap<String, (bool, bool, String, usize)> = BTreeMap::new();
+    let mut note = |keys: &mut BTreeMap<String, (bool, bool, String, usize)>,
+                    key: &str,
+                    alloc: bool,
+                    file: &str,
+                    line: usize| {
+        let e = keys
+            .entry(key.to_string())
+            .or_insert((false, false, file.to_string(), line));
+        if alloc {
+            e.0 = true;
+        } else {
+            e.1 = true;
+        }
+    };
+
+    // Contract-freeing node ids, and annotated call-site exemptions.
+    let mut contract_freeing: BTreeSet<usize> = BTreeSet::new();
+
+    for (fidx, file) in ctx.files.iter().enumerate() {
+        if !in_scope(&file.path) || file.test_only {
+            continue;
+        }
+        let extents = scan::fn_extents(file);
+        let deferred = flow::deferred_lines(file);
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let code = &line.code;
+            let is_free = FREE_TOKENS.iter().any(|t| code.contains(t));
+            let is_alloc = code.contains(ALLOC_TOKEN);
+            if !is_free && !is_alloc {
+                continue;
+            }
+            let annot = site_annot(file, idx);
+            if is_alloc {
+                match &annot {
+                    Some((key, _)) => note(&mut keys, key, true, &file.path, idx + 1),
+                    None => out.push(Diagnostic::new(
+                        &file.path,
+                        idx + 1,
+                        "reclaim",
+                        "Box::into_raw without a // reclaim: <key> annotation (see DESIGN.md §Reclamation contract)"
+                            .to_string(),
+                    )),
+                }
+            }
+            if is_free {
+                let Some((key, Some(class))) = &annot else {
+                    out.push(Diagnostic::new(
+                        &file.path,
+                        idx + 1,
+                        "reclaim",
+                        "free site without a // reclaim: <key> via <class> annotation (see DESIGN.md §Reclamation contract)"
+                            .to_string(),
+                    ));
+                    continue;
+                };
+                note(&mut keys, key, false, &file.path, idx + 1);
+                let owner = scan::innermost_extent(&extents, idx);
+                let ok = match class.as_str() {
+                    "rcu" => deferred[idx],
+                    "grace" => owner.is_some_and(|o| {
+                        (extents[o].start..idx)
+                            .any(|j| file.lines[j].code.contains("synchronize"))
+                    }),
+                    "exclusive" => owner.is_some_and(|o| {
+                        extents[o].exclusive_self || extents[o].name == "drop"
+                    }),
+                    "contract" => owner.is_some_and(|o| extents[o].is_unsafe),
+                    other => {
+                        out.push(Diagnostic::new(
+                            &file.path,
+                            idx + 1,
+                            "reclaim",
+                            format!("unknown reclamation class '{other}' (rcu|grace|exclusive|contract)"),
+                        ));
+                        continue;
+                    }
+                };
+                if !ok {
+                    out.push(Diagnostic::new(
+                        &file.path,
+                        idx + 1,
+                        "reclaim",
+                        format!("free site claims class '{class}' but the path does not support it"),
+                    ));
+                }
+                if class == "contract" {
+                    if let Some(o) = owner {
+                        if let Some(nid) = graph.nodes.iter().position(|n| {
+                            n.file == fidx && n.extent.start == extents[o].start
+                        }) {
+                            contract_freeing.insert(nid);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Flow pass: discharge every call edge into a contract-freeing fn.
+    // Propagation: an `unsafe fn` caller re-exports the obligation.
+    let mut frontier: Vec<usize> = contract_freeing.iter().copied().collect();
+    while let Some(target) = frontier.pop() {
+        let target_name = graph.nodes[target].extent.name.clone();
+        for (nid, node) in graph.nodes.iter().enumerate() {
+            let file = &ctx.files[node.file];
+            if !in_scope(&file.path) || file.test_only {
+                continue;
+            }
+            for call in &node.calls {
+                if call.deferred || call.in_test || call.name != target_name {
+                    continue;
+                }
+                if !graph.resolve(&call.name).contains(&target) {
+                    continue;
+                }
+                // Discharged by an exclusive receiver or Drop.
+                if node.extent.exclusive_self || node.extent.name == "drop" {
+                    continue;
+                }
+                // Discharged by a call-site annotation.
+                if let Some((_key, class)) = site_annot(file, call.line) {
+                    match class.as_deref() {
+                        Some("unpublished") => continue,
+                        Some("grace") => {
+                            let ok = (node.extent.start..call.line)
+                                .any(|j| file.lines[j].code.contains("synchronize"));
+                            if ok {
+                                continue;
+                            }
+                            out.push(Diagnostic::new(
+                                &file.path,
+                                call.line + 1,
+                                "reclaim",
+                                "call-site claims class 'grace' but no synchronize precedes it in this fn"
+                                    .to_string(),
+                            ));
+                            continue;
+                        }
+                        _ => {
+                            out.push(Diagnostic::new(
+                                &file.path,
+                                call.line + 1,
+                                "reclaim",
+                                "call into a freeing fn needs // reclaim: <key> via unpublished|grace"
+                                    .to_string(),
+                            ));
+                            continue;
+                        }
+                    }
+                }
+                // Propagate through unsafe fns (obligation re-exported
+                // to *their* call sites), unless shared-&self — a
+                // shared receiver is exactly the path this rule bans.
+                if node.extent.shared_self {
+                    out.push(Diagnostic::new(
+                        &file.path,
+                        call.line + 1,
+                        "reclaim",
+                        format!(
+                            "shared-&self fn '{}' reaches free site via '{target_name}' — annotate the call (// reclaim: <key> via unpublished|grace) or restructure",
+                            node.extent.name
+                        ),
+                    ));
+                } else if contract_freeing.insert(nid) {
+                    frontier.push(nid);
+                }
+            }
+        }
+    }
+
+    // Pairing.
+    for (key, (has_alloc, has_free, file, line)) in &keys {
+        if !has_alloc {
+            out.push(Diagnostic::new(
+                file,
+                *line,
+                "reclaim",
+                format!("reclaim key '{key}' has free sites but no Box::into_raw site"),
+            ));
+        }
+        if !has_free {
+            out.push(Diagnostic::new(
+                file,
+                *line,
+                "reclaim",
+                format!("reclaim key '{key}' has alloc sites but no annotated free site"),
+            ));
+        }
+    }
+
+    // DESIGN.md §Reclamation contract: both-ways drift.
+    let table = super::design_marked_keys(&ctx.design_md, DESIGN_SECTION, "reclaim:");
+    for (key, (_, _, file, line)) in &keys {
+        if !table.contains_key(key) {
+            out.push(Diagnostic::new(
+                file,
+                *line,
+                "reclaim",
+                format!("reclaim key '{key}' is not indexed in DESIGN.md {DESIGN_SECTION}"),
+            ));
+        }
+    }
+    for (key, line) in &table {
+        if !keys.contains_key(key) {
+            out.push(Diagnostic::new(
+                "rust/DESIGN.md",
+                *line,
+                "reclaim",
+                format!(
+                    "DESIGN.md {DESIGN_SECTION} indexes reclaim key '{key}' but no source site uses it"
+                ),
+            ));
+        }
+    }
+
+    out.sort();
+    out.dedup();
+    out
+}

@@ -321,6 +321,265 @@ fn parse_mod_decl(item: &str) -> Option<String> {
     Some(name.to_string())
 }
 
+// ------------------------------------------------------------- extents
+
+/// A function extent: the `fn` header line, the line of the body's
+/// matching close brace, and the receiver/safety facts the flow rules
+/// key on. Extents may nest (nested `fn` items); [`innermost_extent`]
+/// resolves a line to the tightest enclosing one.
+#[derive(Debug, Clone)]
+pub struct FnExtent {
+    pub name: String,
+    /// 0-based line of the `fn` header.
+    pub start: usize,
+    /// 0-based line of the body's matching close brace.
+    pub end: usize,
+    /// Receiver is `&mut self` or by-value `mut self` — the caller
+    /// holds exclusive access for the whole call.
+    pub exclusive_self: bool,
+    /// Receiver is a shared `&self` (or by-value `self`).
+    pub shared_self: bool,
+    /// Declared `unsafe fn`: its obligations are discharged at call
+    /// sites, not inside the body.
+    pub is_unsafe: bool,
+}
+
+/// Every `fn` item with a body in `file`, in header-line order.
+/// Bodyless declarations (trait methods, `extern` blocks) are skipped.
+pub fn fn_extents(file: &SourceFile) -> Vec<FnExtent> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if !has_word(&line.code, "fn") {
+            continue;
+        }
+        let Some(after) = line.code.split("fn ").nth(1) else { continue };
+        let name: String = after
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if name.is_empty() {
+            continue;
+        }
+        // Join code from the header until the body `{` (or a `;`,
+        // meaning a bodyless declaration). Generous cap: headers are
+        // short.
+        let mut header = String::new();
+        let mut body_open = None;
+        'hdr: for (j, l) in file.lines.iter().enumerate().skip(idx).take(10) {
+            let text = if j == idx {
+                // From the qualifiers (`pub unsafe …`) through the
+                // header — an earlier statement on the same line is
+                // not header text.
+                let at = l.code.find("fn ").unwrap_or(0);
+                let qual = l.code[..at]
+                    .rfind(|c: char| matches!(c, ';' | '{' | '}' | ')'))
+                    .map_or(0, |p| p + 1);
+                &l.code[qual..]
+            } else {
+                l.code.as_str()
+            };
+            for c in text.chars() {
+                match c {
+                    '{' => {
+                        body_open = Some(j);
+                        break 'hdr;
+                    }
+                    ';' => break 'hdr,
+                    _ => header.push(c),
+                }
+            }
+            header.push(' ');
+        }
+        let Some(open) = body_open else { continue };
+        let end = brace_match(file, open).unwrap_or(file.lines.len() - 1);
+        let params = param_list(&header);
+        let first = params.split(',').next().unwrap_or("").trim();
+        let is_receiver = has_word(first, "self");
+        let exclusive_self = is_receiver && has_word(first, "mut");
+        out.push(FnExtent {
+            name,
+            start: idx,
+            end,
+            exclusive_self,
+            shared_self: is_receiver && !exclusive_self,
+            is_unsafe: has_word(header.split("fn ").next().unwrap_or(""), "unsafe"),
+        });
+    }
+    out
+}
+
+/// The parameter list of a joined `fn` header: the parenthesized
+/// group after the name, skipping a generic `<...>` section (which may
+/// itself contain parens — `F: FnOnce() -> R`).
+fn param_list(header: &str) -> &str {
+    let ch: Vec<(usize, char)> = header.char_indices().collect();
+    let mut i = 0;
+    // Past `fn name`.
+    if let Some(pos) = header.find("fn ") {
+        i = ch.iter().position(|&(b, _)| b >= pos + 3).unwrap_or(ch.len());
+        while i < ch.len() && (ch[i].1.is_alphanumeric() || ch[i].1 == '_' || ch[i].1 == ' ') {
+            i += 1;
+        }
+    }
+    // Skip a generic section.
+    if i < ch.len() && ch[i].1 == '<' {
+        let mut depth = 0i64;
+        while i < ch.len() {
+            match ch[i].1 {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth <= 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+    // The param group.
+    while i < ch.len() && ch[i].1 != '(' {
+        i += 1;
+    }
+    if i >= ch.len() {
+        return "";
+    }
+    let open = ch[i].0;
+    let mut depth = 0i64;
+    while i < ch.len() {
+        match ch[i].1 {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth <= 0 {
+                    return &header[open + 1..ch[i].0];
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    &header[open + 1..]
+}
+
+/// Line of the close brace matching the first `{` at or after `from`
+/// (counting braces in code text only).
+pub fn brace_match(file: &SourceFile, from: usize) -> Option<usize> {
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for (k, l) in file.lines.iter().enumerate().skip(from) {
+        for c in l.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some(k);
+        }
+    }
+    None
+}
+
+/// Index of the tightest extent containing 0-based `line`, if any.
+pub fn innermost_extent(extents: &[FnExtent], line: usize) -> Option<usize> {
+    extents
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.start <= line && line <= e.end)
+        .min_by_key(|(_, e)| e.end - e.start)
+        .map(|(i, _)| i)
+}
+
+// --------------------------------------------------------------- calls
+
+/// Rust keywords (and primary expressions) that read like a call when
+/// followed by `(`.
+const CALL_KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "fn", "move", "unsafe", "else", "in",
+    "as", "let", "mut", "ref", "dyn", "impl", "where", "use", "pub", "mod", "enum",
+    "struct", "trait", "type", "const", "static", "crate", "super", "Self", "self",
+];
+
+/// Call-looking tokens on a comment-stripped code line:
+/// `(name, via_self)` pairs. `name` is the last path segment of the
+/// callee. Method calls are kept only when the receiver is exactly
+/// `self` (`self.foo(…)`) — without type inference, `other.foo(…)`
+/// cannot be resolved and is dropped rather than over-approximated
+/// into every `foo` in the crate. Macros (`name!(…)`) are not calls.
+pub fn calls_on_line(code: &str) -> Vec<(String, bool)> {
+    let ch: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < ch.len() {
+        if !(ch[i].is_alphabetic() || ch[i] == '_') {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < ch.len() && (ch[i].is_alphanumeric() || ch[i] == '_') {
+            i += 1;
+        }
+        if ch.get(i) != Some(&'(') {
+            continue;
+        }
+        let name: String = ch[start..i].iter().collect();
+        if CALL_KEYWORDS.contains(&name.as_str()) {
+            continue;
+        }
+        let before: String = ch[..start].iter().collect();
+        if before.ends_with('.') {
+            // Method call: keep only a `self.` receiver.
+            let recv = before[..before.len() - 1].trim_end();
+            if recv.ends_with("self")
+                && !recv[..recv.len() - 4]
+                    .chars()
+                    .next_back()
+                    .is_some_and(|c| c.is_alphanumeric() || c == '_' || c == '.')
+            {
+                out.push((name, true));
+            }
+        } else {
+            // Bare or path call (`foo(…)`, `Type::foo(…)`).
+            out.push((name, false));
+        }
+    }
+    out
+}
+
+/// `<marker> <key>` in a comment → `Some(key)`, where `key` is
+/// `[a-z0-9-]+` and the marker must start at a word boundary (prose
+/// like "unlock: …" cannot arm a `lock:` rule). Shared by the `ord:`,
+/// `lock:`, and `reclaim:` annotation grammars.
+pub fn extract_marked_key(comment: &str, marker: &str) -> Option<String> {
+    let mut start = 0;
+    while let Some(pos) = comment[start..].find(marker) {
+        let at = start + pos;
+        let boundary = !comment[..at]
+            .chars()
+            .next_back()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if boundary {
+            let key: String = comment[at + marker.len()..]
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '-')
+                .collect();
+            if !key.is_empty() {
+                return Some(key);
+            }
+        }
+        start = at + marker.len();
+    }
+    None
+}
+
 /// True when `code` contains `word` delimited by non-identifier chars.
 pub fn has_word(code: &str, word: &str) -> bool {
     let mut start = 0;

@@ -32,8 +32,8 @@ pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
 
     // 1. code(): the anchor set. code → line of the arm.
     let mut codes: BTreeMap<u8, usize> = BTreeMap::new();
-    for (idx, raw) in fn_body(error_rs, "fn code(") {
-        if let Some(code) = raw.split("=> 0x").nth(1).and_then(parse_hex) {
+    for (idx, _raw, line_code) in fn_body(error_rs, "fn code(") {
+        if let Some(code) = line_code.split("=> 0x").nth(1).and_then(parse_hex) {
             if codes.insert(code, idx + 1).is_some() {
                 out.push(Diagnostic::new(
                     ERROR_RS,
@@ -56,11 +56,10 @@ pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
 
     // 2. code_name(): code → (name, line).
     let mut names: BTreeMap<u8, (String, usize)> = BTreeMap::new();
-    for (idx, raw) in fn_body(error_rs, "fn code_name(") {
-        let t = raw.trim();
+    for (idx, raw, line_code) in fn_body(error_rs, "fn code_name(") {
         let (Some(code), Some(name)) = (
-            t.strip_prefix("0x").and_then(parse_hex),
-            quoted(t),
+            line_code.trim().strip_prefix("0x").and_then(parse_hex),
+            quoted(raw),
         ) else {
             continue;
         };
@@ -71,8 +70,8 @@ pub fn check(ctx: &LintContext) -> Vec<Diagnostic> {
     // 3. net::proto::wire_code constants: code → (CONST_NAME, line).
     let mut consts: BTreeMap<u8, (String, usize)> = BTreeMap::new();
     if let Some(proto_rs) = ctx.files.iter().find(|f| f.path == PROTO_RS) {
-        for (idx, raw) in mod_body(proto_rs, "pub mod wire_code") {
-            let t = raw.trim();
+        for (idx, _raw, line_code) in mod_body(proto_rs, "pub mod wire_code") {
+            let t = line_code.trim();
             let Some(rest) = t.strip_prefix("pub const ") else { continue };
             let (Some(name), Some(code)) = (
                 rest.split(':').next().map(|s| s.trim().to_string()),
@@ -182,9 +181,12 @@ fn diff_sets<T>(
     }
 }
 
-/// Raw lines (0-based index, raw text) of the brace-matched body that
-/// starts at the first line whose code contains `needle`.
-fn fn_body<'a>(file: &'a SourceFile, needle: &str) -> Vec<(usize, &'a str)> {
+/// Lines (0-based index, raw text, code text) of the brace-matched
+/// body that starts at the first line whose code contains `needle`.
+/// Structural parsing must use the *code* text — a commented-out arm
+/// (`// KvError::Legacy => 0x09,`) is not part of the contract — while
+/// string contents (blanked in code) come from raw.
+fn fn_body<'a>(file: &'a SourceFile, needle: &str) -> Vec<(usize, &'a str, &'a str)> {
     let Some(start) = file.lines.iter().position(|l| l.code.contains(needle)) else {
         return Vec::new();
     };
@@ -192,7 +194,7 @@ fn fn_body<'a>(file: &'a SourceFile, needle: &str) -> Vec<(usize, &'a str)> {
     let mut opened = false;
     let mut outl = Vec::new();
     for (idx, line) in file.lines.iter().enumerate().skip(start) {
-        outl.push((idx, line.raw.as_str()));
+        outl.push((idx, line.raw.as_str(), line.code.as_str()));
         for c in line.code.chars() {
             match c {
                 '{' => {
@@ -210,7 +212,7 @@ fn fn_body<'a>(file: &'a SourceFile, needle: &str) -> Vec<(usize, &'a str)> {
     outl
 }
 
-fn mod_body<'a>(file: &'a SourceFile, needle: &str) -> Vec<(usize, &'a str)> {
+fn mod_body<'a>(file: &'a SourceFile, needle: &str) -> Vec<(usize, &'a str, &'a str)> {
     fn_body(file, needle)
 }
 

@@ -27,7 +27,7 @@ thread_local! {
 }
 
 fn with_sender<R>(f: impl FnOnce(&Sender<Msg>) -> R) -> R {
-    TLS_TX.with(|c| f(c.get_or_init(|| QUEUE.lock().unwrap().clone())))
+    TLS_TX.with(|c| f(c.get_or_init(|| QUEUE.lock().unwrap().clone()))) // lock: rcu-queue
 }
 
 static QUEUE: Lazy<Mutex<Sender<Msg>>> = Lazy::new(|| {

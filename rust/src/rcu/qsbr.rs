@@ -81,7 +81,7 @@ impl RcuDomain {
             // ord: qsbr-handshake — gp/ctr grace-period handshake
             ctr: CachePadded::new(AtomicU64::new(self.gp.load(Ordering::Acquire))),
         });
-        self.registry.lock().unwrap().push(rec.clone());
+        self.registry.lock().unwrap().push(rec.clone()); // lock: rcu-registry
         RcuThread {
             domain: self,
             rec,
@@ -107,7 +107,7 @@ impl RcuDomain {
         });
 
         {
-            let _g = self.gp_lock.lock().unwrap();
+            let _g = self.gp_lock.lock().unwrap(); // lock: rcu-gp
             // AcqRel: Release makes every store sequenced-before this call
             // (the retiring writer's publications) visible to readers whose
             // Acquire gp load returns >= target; Acquire orders the bump
@@ -117,7 +117,7 @@ impl RcuDomain {
             // Snapshot the registry; threads registered *after* the bump
             // cannot hold pre-bump references, so the snapshot is enough.
             let records: Vec<Arc<ThreadRecord>> =
-                self.registry.lock().unwrap().iter().cloned().collect();
+                self.registry.lock().unwrap().iter().cloned().collect(); // lock: rcu-registry
             for rec in records {
                 // Escalating backoff: pure spin while the reader is likely
                 // mid-operation, yield to share a core, and only then sleep
@@ -171,7 +171,7 @@ impl RcuDomain {
         // the thread's final section to the waiter's Acquire load.
         // ord: qsbr-handshake — gp/ctr grace-period handshake
         rec.ctr.store(0, Ordering::Release);
-        let mut reg = self.registry.lock().unwrap();
+        let mut reg = self.registry.lock().unwrap(); // lock: rcu-registry
         if let Some(pos) = reg.iter().position(|r| Arc::ptr_eq(r, rec)) {
             reg.swap_remove(pos);
         }

@@ -1,0 +1,20 @@
+//! Fixture: scanner placement edge cases. `// ord:`-looking text
+//! inside a raw string is data, not a comment — it must not arm the
+//! rule for the site below. A `// ord:` annotation trailing a
+//! closing-brace-only line ends the *previous* statement and must
+//! cover the next one. Loaded by `lint_self.rs` under a synthetic
+//! `rust/src/dhash/` path.
+
+pub fn raw_string_cannot_arm(flag: &AtomicBool) {
+    let _doc = r#"
+        // ord: fake-key — string data, not a comment
+    "#;
+    flag.store(true, Ordering::Relaxed);
+}
+
+pub fn closer_line_annotation(flag: &AtomicBool) -> bool {
+    {
+        let _scope = ();
+    } // ord: fix-flag — trailing a closer still covers the next statement
+    flag.load(Ordering::Relaxed)
+}

@@ -1,0 +1,23 @@
+//! Fixture: denied operations hidden inside a closure and a nested
+//! `fn` within a `// lint: hot` function — the rule scans the full
+//! extent — plus a tagged closure binding.
+
+// lint: hot
+pub fn lookup_hot(keys: &[u64]) -> u64 {
+    let probe = |k: u64| {
+        let boxed = Box::new(k); // denied, inside a closure
+        *boxed
+    };
+    fn spill(v: u64) -> u64 {
+        v.to_string().len() as u64 // denied, inside a nested fn
+    }
+    spill(probe(keys[0]))
+}
+
+pub fn wrapper() -> u64 {
+    // lint: hot
+    let fast = |k: u64| -> u64 {
+        format!("{k}").len() as u64 // denied, inside a tagged closure
+    };
+    fast(7)
+}

@@ -1,0 +1,21 @@
+//! Fixture: a shared-`&self` operation that reaches a contract-class
+//! free site with no call-site discharge — the leak `reclaim` exists
+//! to catch — plus a key with a free site but no paired allocation.
+//! Loaded by `lint_self.rs` under a synthetic `rust/src/lflist/` path.
+
+pub struct Slot {
+    raw: *mut u64,
+}
+
+impl Slot {
+    /// # Safety
+    /// `ptr` must be unreachable for every reader.
+    pub unsafe fn release(ptr: *mut u64) {
+        drop(Box::from_raw(ptr)); // reclaim: fix-slot via contract — caller proves unreachability
+    }
+
+    /// Shared-`&self` path straight into the free — the finding.
+    pub fn evict(&self) {
+        unsafe { Slot::release(self.raw) };
+    }
+}

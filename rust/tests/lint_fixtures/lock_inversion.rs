@@ -1,0 +1,36 @@
+//! Fixture: inverted lock acquisition — directly, and through a call
+//! edge — against a two-row hierarchy. Loaded by `lint_self.rs` under
+//! a synthetic `rust/src/coordinator/` path.
+
+use std::sync::Mutex;
+
+pub struct Pair {
+    outer: Mutex<u32>,
+    inner: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn grab_outer(&self) -> u32 {
+        *self.outer.lock().unwrap() // lock: fix-outer
+    }
+
+    /// Correct order: outer before inner.
+    pub fn ordered(&self) -> u32 {
+        let a = self.outer.lock().unwrap(); // lock: fix-outer
+        let b = self.inner.lock().unwrap(); // lock: fix-inner
+        *a + *b
+    }
+
+    /// Direct inversion: inner held, then outer acquired.
+    pub fn inverted_direct(&self) -> u32 {
+        let b = self.inner.lock().unwrap(); // lock: fix-inner
+        let a = self.outer.lock().unwrap(); // lock: fix-outer
+        *a + *b
+    }
+
+    /// Inversion through a call edge: inner held, the helper takes outer.
+    pub fn inverted_via_call(&self) -> u32 {
+        let b = self.inner.lock().unwrap(); // lock: fix-inner
+        *b + self.grab_outer()
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixture: the `drain` publication protocol with the hazard clear
+//! hoisted above the hazard publish — the reorder Lemma 4.1 forbids.
+//! Loaded by `lint_self.rs` under a synthetic `rust/src/dhash/` path.
+
+// lint: publish drain
+pub fn drain_backwards(bucket: &B, moving: &AtomicPtr<Node>) {
+    let cand = bucket.take_first_for_distribution();
+    moving.store(std::ptr::null_mut(), Ordering::Release);
+    moving.store(cand, Ordering::Release);
+    Node::defer_free(cand);
+}

@@ -8,9 +8,10 @@
 //!    asserts the *exact* rendered diagnostics — these strings are the
 //!    tool's UI contract.
 //! 2. **The real tree**: the shipped source must lint clean, and a
-//!    deliberate one-line drift in either contract table
-//!    (DESIGN.md §Memory orderings, §Error codes) or in the SeqCst
-//!    allowlist must fail — in both directions.
+//!    deliberate one-line drift in any contract table
+//!    (DESIGN.md §Memory orderings, §Error codes, §Lock order,
+//!    §Reclamation contract) or in the SeqCst allowlist must fail —
+//!    in both directions.
 
 use std::path::Path;
 
@@ -151,6 +152,141 @@ fn fixture_drifted_wire() {
     );
 }
 
+#[test]
+fn fixture_hot_closure() {
+    // The denylist applies to the tagged fn's *full extent* — closures
+    // and nested fns inside it — and a closure binding is taggable.
+    let ctx = LintContext::from_sources(
+        &[(
+            "rust/tests/lint_fixtures/hot_closure.rs",
+            include_str!("lint_fixtures/hot_closure.rs"),
+        )],
+        "",
+        "",
+    );
+    assert_eq!(
+        render(lint::hot::check(&ctx)),
+        vec![
+            "rust/tests/lint_fixtures/hot_closure.rs:8: [hot] \
+             fn 'lookup_hot' is tagged // lint: hot but uses denied operation 'Box::new'"
+                .to_string(),
+            "rust/tests/lint_fixtures/hot_closure.rs:12: [hot] \
+             fn 'lookup_hot' is tagged // lint: hot but uses denied operation 'to_string()'"
+                .to_string(),
+            "rust/tests/lint_fixtures/hot_closure.rs:20: [hot] \
+             fn 'fast' is tagged // lint: hot but uses denied operation 'format!'"
+                .to_string(),
+        ]
+    );
+}
+
+#[test]
+fn fixture_annot_placement() {
+    // Scanner regression: `// ord:` text inside a raw string is data
+    // (the site below it must still be flagged), and an annotation
+    // trailing a closing-brace-only line covers the next statement
+    // (no finding for the covered site).
+    let design = "## Memory orderings\n\n\
+                  | site | ordering | why |\n|---|---|---|\n\
+                  | fixture row — `ord:fix-flag` | Relaxed | test |\n";
+    let ctx = LintContext::from_sources(
+        &[(
+            "rust/src/dhash/annot_placement.rs",
+            include_str!("lint_fixtures/annot_placement.rs"),
+        )],
+        design,
+        "",
+    );
+    assert_eq!(
+        render(lint::ord::check(&ctx)),
+        vec![
+            "rust/src/dhash/annot_placement.rs:12: [ord] \
+             Ordering site without an // ord: annotation (see DESIGN.md §Memory orderings)"
+                .to_string()
+        ]
+    );
+}
+
+#[test]
+fn fixture_lock_inversion() {
+    // A two-row hierarchy; the fixture inverts it directly and through
+    // a call edge.
+    let design = "## Lock order\n\n| rank | key |\n|---|---|\n\
+                  | 1 | `lock:fix-outer` |\n| 2 | `lock:fix-inner` |\n";
+    let ctx = LintContext::from_sources(
+        &[(
+            "rust/src/coordinator/lock_inversion.rs",
+            include_str!("lint_fixtures/lock_inversion.rs"),
+        )],
+        design,
+        "",
+    );
+    assert_eq!(
+        render(lint::lock_order::check(&ctx)),
+        vec![
+            "rust/src/coordinator/lock_inversion.rs:27: [lock-order] \
+             acquires lock 'fix-outer' while 'fix-inner' (line 26) is held — \
+             DESIGN.md ## Lock order ranks 'fix-outer' above 'fix-inner'"
+                .to_string(),
+            "rust/src/coordinator/lock_inversion.rs:34: [lock-order] \
+             call to 'grab_outer' can acquire lock 'fix-outer' while 'fix-inner' \
+             (line 33) is held — DESIGN.md ## Lock order ranks 'fix-outer' above 'fix-inner'"
+                .to_string(),
+        ]
+    );
+}
+
+#[test]
+fn fixture_leaked_free() {
+    // A shared-&self op reaching a contract-class free with no
+    // call-site discharge, and a key with no paired Box::into_raw.
+    let design = "## Reclamation contract\n\n| `reclaim:fix-slot` | fixture row |\n";
+    let ctx = LintContext::from_sources(
+        &[(
+            "rust/src/lflist/leaked_free.rs",
+            include_str!("lint_fixtures/leaked_free.rs"),
+        )],
+        design,
+        "",
+    );
+    assert_eq!(
+        render(lint::reclaim::check(&ctx)),
+        vec![
+            "rust/src/lflist/leaked_free.rs:14: [reclaim] \
+             reclaim key 'fix-slot' has free sites but no Box::into_raw site"
+                .to_string(),
+            "rust/src/lflist/leaked_free.rs:19: [reclaim] \
+             shared-&self fn 'evict' reaches free site via 'release' — annotate the call \
+             (// reclaim: <key> via unpublished|grace) or restructure"
+                .to_string(),
+        ]
+    );
+}
+
+#[test]
+fn fixture_publish_reorder() {
+    // The drain protocol with the hazard clear hoisted above the
+    // hazard publish.
+    let ctx = LintContext::from_sources(
+        &[(
+            "rust/src/dhash/publish_reorder.rs",
+            include_str!("lint_fixtures/publish_reorder.rs"),
+        )],
+        "",
+        "",
+    );
+    assert_eq!(
+        render(lint::publish::check(&ctx)),
+        vec![
+            "rust/src/dhash/publish_reorder.rs:8: [publish] \
+             fn 'drain_backwards' (protocol 'drain') performs step \
+             'hazard clear after re-insert' before step \
+             'hazard publish before logical delete' — protocol order is violated"
+                .to_string()
+        ]
+    );
+}
+
 // ---------------------------------------------------------------- real tree
 
 #[test]
@@ -215,6 +351,90 @@ fn design_wire_drift_fails_both_directions() {
             .iter()
             .any(|d| d.contains("lists wire code 0x17 that KvError::code() never returns")),
         "expected phantom-code finding, got:\n{}",
+        diags.join("\n")
+    );
+}
+
+#[test]
+fn design_lock_order_drift_fails_both_directions() {
+    // Replacing one ranked row both orphans the real key (used in
+    // source, no longer ranked) and documents a ghost key (ranked,
+    // never used) — the rule must report each side.
+    let mut ctx = load_real_tree();
+    assert!(
+        ctx.design_md.contains("| 9 | `lock:map-rebuild` |"),
+        "row exists"
+    );
+    ctx.design_md = ctx
+        .design_md
+        .replace("| 9 | `lock:map-rebuild` |", "| 9 | `lock:zz-ghost` |");
+    let diags = render(lint::lock_order::check(&ctx));
+    assert!(
+        diags.iter().any(|d| d.contains(
+            "lock key 'map-rebuild' is not ranked in DESIGN.md ## Lock order"
+        )),
+        "expected key-not-ranked finding, got:\n{}",
+        diags.join("\n")
+    );
+    assert!(
+        diags.iter().any(|d| d.contains(
+            "ranks lock key 'zz-ghost' but no source site uses it"
+        )),
+        "expected ghost-row finding, got:\n{}",
+        diags.join("\n")
+    );
+}
+
+#[test]
+fn design_reclaim_drift_fails_both_directions() {
+    let mut ctx = load_real_tree();
+    assert!(ctx.design_md.contains("| `reclaim:table` |"), "row exists");
+    ctx.design_md = ctx
+        .design_md
+        .replace("| `reclaim:table` |", "| `reclaim:ghost-key` |");
+    let diags = render(lint::reclaim::check(&ctx));
+    assert!(
+        diags.iter().any(|d| d.contains(
+            "reclaim key 'table' is not indexed in DESIGN.md ## Reclamation contract"
+        )),
+        "expected key-not-indexed finding, got:\n{}",
+        diags.join("\n")
+    );
+    assert!(
+        diags.iter().any(|d| d.contains(
+            "indexes reclaim key 'ghost-key' but no source site uses it"
+        )),
+        "expected ghost-row finding, got:\n{}",
+        diags.join("\n")
+    );
+}
+
+#[test]
+fn publish_reorder_on_real_tree_fails() {
+    // Hoist the rebuild hazard clear above the hazard publish — the
+    // one-line reorder Lemma 4.1 forbids — and the rule must fire.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    let src = std::fs::read_to_string(root.join("rust/src/dhash/mod.rs"))
+        .expect("dhash/mod.rs reads");
+    let publish_line = "self.rebuild_cur.store(cand, Ordering::Release);";
+    assert!(src.contains(publish_line), "publish site exists");
+    let mutated = src.replacen(
+        publish_line,
+        "self.rebuild_cur.store(std::ptr::null_mut(), Ordering::Release); \
+         self.rebuild_cur.store(cand, Ordering::Release);",
+        1,
+    );
+    let ctx = LintContext::from_sources(&[("rust/src/dhash/mod.rs", mutated.as_str())], "", "");
+    let diags = render(lint::publish::check(&ctx));
+    assert!(
+        diags.iter().any(|d| d.contains(
+            "performs step 'hazard clear after re-insert' before step \
+             'hazard publish before logical delete'"
+        )),
+        "expected protocol-order finding, got:\n{}",
         diags.join("\n")
     );
 }
