@@ -1,0 +1,162 @@
+//! Bucket-algorithm matrix: every `BucketSet` backend (michael /
+//! spinlock / cow / split-ordered) crossed with the paper's two load
+//! regimes (α = 20 and α = 200) under three scenarios:
+//!
+//!   uniform       — steady state, 90% lookups, strong keyed hash.
+//!   attack        — `HashFn::Modulo` with congruent keys: the whole
+//!                   population collides into one DHash bucket, so the
+//!                   cell measures the backend's intra-bucket structure
+//!                   (split-ordered grows its local sentinel directory;
+//!                   the list backends degrade linearly).
+//!   rebuild-storm — the §6.2 continuous-rebuild protocol racing the
+//!                   measured ops.
+//!
+//! This is the ablation the modularity claim rests on: which backend
+//! wins where, measured under one harness. Under `DHASH_SMOKE=1` the
+//! matrix is emitted as `BENCH_buckets.json` for the CI artifact trail.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use common::{measure_window, repeats, BenchJson};
+use dhash::baselines::ConcurrentMap;
+use dhash::dhash::{DHashMap, HashFn};
+use dhash::lflist::{CowSortedArray, MichaelList, SpinlockList, SplitOrderedList};
+use dhash::rcu::{rcu_barrier, RcuThread};
+use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
+use dhash::util::{SplitMix64, Summary};
+
+const BACKENDS: [&str; 4] = ["michael", "spinlock", "cow", "splitord"];
+const NBUCKETS: usize = 64;
+
+fn make_backend(name: &str, hash: HashFn) -> Arc<dyn ConcurrentMap> {
+    match name {
+        "michael" => Arc::new(DHashMap::<MichaelList>::with_hash(NBUCKETS, hash)),
+        "spinlock" => Arc::new(DHashMap::<SpinlockList>::with_hash(NBUCKETS, hash)),
+        "cow" => Arc::new(DHashMap::<CowSortedArray>::with_hash(NBUCKETS, hash)),
+        "splitord" => Arc::new(DHashMap::<SplitOrderedList>::with_hash(NBUCKETS, hash)),
+        _ => unreachable!("unknown backend {name}"),
+    }
+}
+
+fn torture_cfg(alpha: usize, rebuild: RebuildMode) -> TortureConfig {
+    TortureConfig {
+        threads: 2,
+        mix: OpMix::lookup_pct(90),
+        alpha,
+        nbuckets: NBUCKETS,
+        key_range: 0, // auto 2·α·β: stationary population at α·β
+        duration: measure_window(),
+        rebuild,
+        pin: false,
+        seed: 17,
+        hash_seed: 5,
+    }
+    .clamped_for_smoke()
+}
+
+/// One torture-driven cell (uniform / rebuild-storm).
+fn torture_cell(backend: &str, alpha: usize, rebuild: RebuildMode) -> Summary {
+    let map = make_backend(backend, HashFn::Seeded(5));
+    let cfg = torture_cfg(alpha, rebuild);
+    Summary::of(&torture::measure_mops(map, &cfg, repeats()))
+}
+
+/// The attack cell: weak `Modulo` hash, every key congruent to 0 mod β,
+/// so all α·β live nodes share one outer bucket and the measurement is
+/// the backend's behaviour at its own load threshold, not the table's.
+fn attack_cell(backend: &str, alpha: usize) -> Summary {
+    let samples: Vec<f64> = (0..repeats())
+        .map(|_| {
+            let map = make_backend(backend, HashFn::Modulo);
+            let n = (alpha * NBUCKETS) as u64;
+            {
+                let g = RcuThread::register();
+                for i in 0..n {
+                    map.insert(&g, i * NBUCKETS as u64, i);
+                }
+                g.quiescent_state();
+            }
+            let stop = Arc::new(AtomicBool::new(false));
+            let total = Arc::new(AtomicU64::new(0));
+            let mut workers = Vec::new();
+            for t in 0..2u64 {
+                let map = map.clone();
+                let stop = stop.clone();
+                let total = total.clone();
+                workers.push(std::thread::spawn(move || {
+                    let g = RcuThread::register();
+                    let mut rng = SplitMix64::new(t + 31);
+                    let mut ops = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        for _ in 0..32 {
+                            let i = rng.next_bounded(2 * n);
+                            let k = i * NBUCKETS as u64; // stays congruent
+                            if rng.next_bounded(10) == 0 {
+                                // 10% write churn on the colliding set.
+                                if !map.insert(&g, k, k) {
+                                    map.delete(&g, k);
+                                }
+                            } else {
+                                let _ = map.lookup(&g, k);
+                            }
+                            ops += 1;
+                        }
+                        g.quiescent_state();
+                    }
+                    total.fetch_add(ops, Ordering::Relaxed);
+                    g.offline();
+                }));
+            }
+            let window = measure_window();
+            std::thread::sleep(window);
+            stop.store(true, Ordering::Relaxed);
+            for w in workers {
+                w.join().unwrap();
+            }
+            rcu_barrier();
+            total.load(Ordering::Relaxed) as f64 / window.as_secs_f64() / 1e6
+        })
+        .collect();
+    Summary::of(&samples)
+}
+
+fn main() {
+    common::print_host_table1();
+    println!("# bucket matrix: backend x alpha {{20, 200}} x scenario");
+    let mut json = BenchJson::new("buckets");
+    for backend in BACKENDS {
+        for alpha in [20usize, 200] {
+            let cells: [(&str, Summary); 3] = [
+                ("uniform", torture_cell(backend, alpha, RebuildMode::None)),
+                ("attack", attack_cell(backend, alpha)),
+                (
+                    "rebuild-storm",
+                    torture_cell(
+                        backend,
+                        alpha,
+                        RebuildMode::Continuous { alt_nbuckets: NBUCKETS * 2 },
+                    ),
+                ),
+            ];
+            for (scenario, s) in cells {
+                println!(
+                    "buckets backend={backend:<9} alpha={alpha:<4} scenario={scenario:<13} \
+                     mops_mean={:<8.3} mops_stddev={:.3}",
+                    s.mean, s.stddev
+                );
+                json.row(
+                    &format!("{backend}/{scenario}"),
+                    &[
+                        ("alpha", alpha as f64),
+                        ("mops_mean", s.mean),
+                        ("mops_stddev", s.stddev),
+                    ],
+                );
+            }
+        }
+    }
+    json.flush();
+}

@@ -11,6 +11,13 @@ use std::sync::Arc;
 fn make(name: &str) -> Arc<dyn ConcurrentMap> {
     match name {
         "dhash" => Arc::new(DHashMap::with_buckets(32, 1)),
+        // Same geometry, but buckets backed by the recursive
+        // split-ordered list instead of Michael lists: the suite is the
+        // proof the fourth backend composes without changing semantics.
+        "dhash-splitord" => Arc::new(DHashMap::<crate::lflist::SplitOrderedList>::with_hash(
+            32,
+            HashFn::Seeded(1),
+        )),
         // Same 32-bucket budget, split across 4 shards: the suite is the
         // proof that sharding composes without changing map semantics.
         "sharded" => Arc::new(ShardedDHash::with_buckets(4, 8, 1)),
@@ -216,10 +223,188 @@ macro_rules! map_suite {
 }
 
 map_suite!(dhash, "dhash");
+map_suite!(dhash_splitord, "dhash-splitord");
 map_suite!(sharded, "sharded");
 map_suite!(xu, "xu");
 map_suite!(rht, "rht");
 map_suite!(split, "split");
+
+/// The headline-satellite regression: the *default* `upsert` (the one
+/// the baselines inherit from `map.rs`) must never lose its write to a
+/// concurrent `insert` landing inside its delete→re-insert window.
+/// Before the bounded retry fix the conflict was swallowed
+/// (`let _ = self.insert(...)`) and the racing insert's value stayed in
+/// the table while upsert reported an overwrite — a silent lost write.
+/// Fails against the old default; passes against the retry loop.
+#[test]
+fn default_upsert_never_loses_to_concurrent_inserts() {
+    const ROUNDS: u64 = 400;
+    const GOOD: u64 = 1 << 40;
+    const BAD: u64 = 2 << 40;
+    // HtXu does not override the trait default — this hammers map.rs.
+    let m = make("xu");
+    let barrier = Arc::new(std::sync::Barrier::new(4));
+    let mut hs = Vec::new();
+    // One upserter: its GOOD value must be what the table holds once
+    // the round quiesces, every round.
+    {
+        let m2 = m.clone();
+        let b2 = barrier.clone();
+        hs.push(std::thread::spawn(move || {
+            let g = RcuThread::register();
+            for k in 0..ROUNDS {
+                b2.wait();
+                m2.upsert(&g, k, GOOD);
+                b2.wait();
+                g.quiescent_state();
+            }
+            g.offline();
+        }));
+    }
+    // Two inserters hammering the same key with a bounded burst, aimed
+    // at the upserter's delete→insert window.
+    for _ in 0..2 {
+        let m2 = m.clone();
+        let b2 = barrier.clone();
+        hs.push(std::thread::spawn(move || {
+            let g = RcuThread::register();
+            for k in 0..ROUNDS {
+                b2.wait();
+                for _ in 0..64 {
+                    m2.insert(&g, k, BAD);
+                }
+                b2.wait();
+                g.quiescent_state();
+            }
+            g.offline();
+        }));
+    }
+    let g = RcuThread::register();
+    for k in 0..ROUNDS {
+        // Pre-populate so the upsert takes the delete→re-insert path.
+        assert!(m.insert(&g, k, BAD), "round key {k} must start fresh");
+        barrier.wait();
+        barrier.wait();
+        // The upserter has returned and nothing deletes: last-wins says
+        // GOOD is visible now and forever (inserts cannot overwrite).
+        assert_eq!(
+            m.lookup(&g, k),
+            Some(GOOD),
+            "{}: upsert lost its write to a concurrent insert (round {k})",
+            m.name()
+        );
+        g.quiescent_state();
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    rcu_barrier();
+}
+
+/// Last-wins agreement, audited: three writers issue upsert / insert /
+/// delete over a small shared key space while each tracks its own last
+/// "open" write per key (an upsert or successful insert opens one; any
+/// delete closes it — if the value was present it is removed, and
+/// values are globally unique so a closed write can never reappear).
+/// At the end, every surviving value must be its writer's last open
+/// write of that key: no resurrection, no lost overwrite.
+fn last_wins_agreement(m: Arc<dyn ConcurrentMap>) {
+    const KEYS: u64 = 128;
+    const OPS: u64 = 4000;
+    const THREADS: u64 = 3;
+    let mut hs = Vec::new();
+    for t in 0..THREADS {
+        let m2 = m.clone();
+        hs.push(std::thread::spawn(move || {
+            let g = RcuThread::register();
+            let mut rng = crate::util::SplitMix64::new(t + 99);
+            let mut last_open: Vec<Option<u64>> = vec![None; KEYS as usize];
+            for seq in 0..OPS {
+                let k = rng.next_bounded(KEYS);
+                let v = (t + 1) * 1_000_000_000 + seq; // globally unique
+                match rng.next_bounded(4) {
+                    0 | 1 => {
+                        m2.upsert(&g, k, v);
+                        last_open[k as usize] = Some(v);
+                    }
+                    2 => {
+                        if m2.insert(&g, k, v) {
+                            last_open[k as usize] = Some(v);
+                        }
+                    }
+                    _ => {
+                        m2.delete(&g, k);
+                        last_open[k as usize] = None;
+                    }
+                }
+                if seq % 64 == 0 {
+                    g.quiescent_state();
+                }
+            }
+            g.quiescent_state();
+            g.offline();
+            last_open
+        }));
+    }
+    let views: Vec<Vec<Option<u64>>> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+    let g = RcuThread::register();
+    for k in 0..KEYS {
+        if let Some(v) = m.lookup(&g, k) {
+            let t = (v / 1_000_000_000) as usize - 1;
+            assert!(t < views.len(), "{}: key {k} holds foreign value {v}", m.name());
+            assert_eq!(
+                views[t][k as usize],
+                Some(v),
+                "{}: key {k} holds {v}, not its writer's last open write",
+                m.name()
+            );
+        }
+    }
+    g.quiescent_state();
+    rcu_barrier();
+}
+
+/// The agreement audit across `DHashMap` over each of the four bucket
+/// backends — same facade, same contract, four very different engines.
+mod last_wins {
+    use super::*;
+    use crate::lflist::{CowSortedArray, MichaelList, SpinlockList, SplitOrderedList};
+
+    #[test]
+    fn michael() {
+        last_wins_agreement(Arc::new(DHashMap::<MichaelList>::with_hash(
+            32,
+            HashFn::Seeded(5),
+        )));
+    }
+
+    #[test]
+    fn spinlock() {
+        last_wins_agreement(Arc::new(DHashMap::<SpinlockList>::with_hash(
+            32,
+            HashFn::Seeded(5),
+        )));
+    }
+
+    #[test]
+    fn cow() {
+        last_wins_agreement(Arc::new(DHashMap::<CowSortedArray>::with_hash(
+            32,
+            HashFn::Seeded(5),
+        )));
+    }
+
+    #[test]
+    fn split_ordered() {
+        // Two outer buckets: ~64 hot keys land in each split-ordered
+        // list, so its local sentinel directory doubles repeatedly
+        // mid-churn — the agreement must hold across local growth.
+        last_wins_agreement(Arc::new(DHashMap::<SplitOrderedList>::with_hash(
+            2,
+            HashFn::Seeded(5),
+        )));
+    }
+}
 
 /// `ShardedDHash` **with online resizes**: the full `ConcurrentMap`
 /// contract must hold while the shard count itself moves (splits and

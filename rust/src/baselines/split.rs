@@ -406,6 +406,9 @@ impl ConcurrentMap for HtSplit {
     /// Resizable only: adopts the bucket count (power of two), ignores
     /// `hash` — exactly the limitation the paper contrasts against.
     fn rebuild(&self, _guard: &RcuThread, nbuckets: usize, _hash: HashFn) -> bool {
+        if nbuckets == 0 {
+            return false; // invalid geometry, refused at the boundary
+        }
         self.resize(nbuckets);
         true
     }

@@ -314,6 +314,9 @@ impl ConcurrentMap for HtXu {
     }
 
     fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
+        if nbuckets == 0 {
+            return false; // invalid geometry, refused at the boundary
+        }
         let lock = match self.rebuild_lock.try_lock() {
             Ok(g) => g,
             Err(_) => return false,

@@ -128,11 +128,27 @@ mod tests {
         for k in 0..200u64 {
             c.execute(Request::put(k, k));
         }
-        c.force_rebuild(128, HashFn::Seeded(0x1234));
+        c.force_rebuild(128, HashFn::Seeded(0x1234)).unwrap();
         for k in 0..200u64 {
             assert_eq!(c.execute(Request::get(k)), Response::Value(k), "key {k}");
         }
         assert_eq!(c.stats().rebuilds, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn zero_bucket_rebuild_is_refused_not_a_panic() {
+        use crate::error::{KvError, ResizeError};
+        let c = Arc::new(Coordinator::start(quick_config()).unwrap());
+        c.execute(Request::put(7, 7));
+        // A malformed geometry must come back as the typed wire error,
+        // never reach the table allocator's assert.
+        let err = c.force_rebuild(0, HashFn::Seeded(1)).unwrap_err();
+        assert_eq!(err, KvError::Resize(ResizeError::BadGeometry));
+        assert_eq!(err.code(), 0x14);
+        assert_eq!(c.stats().rebuilds, 0);
+        // The map is untouched and still serving.
+        assert_eq!(c.execute(Request::get(7)), Response::Value(7));
         c.shutdown();
     }
 
@@ -145,7 +161,7 @@ mod tests {
             assert_eq!(c.execute(Request::put(k, k * 2)), Response::Ok);
         }
         // Staggered whole-map rebuild, then everything still resolves.
-        assert!(c.force_rebuild(32, HashFn::Seeded(0x5a5a)));
+        assert!(c.force_rebuild(32, HashFn::Seeded(0x5a5a)).is_ok());
         for k in 0..400u64 {
             assert_eq!(c.execute(Request::get(k)), Response::Value(k * 2), "key {k}");
         }

@@ -724,14 +724,30 @@ impl Coordinator {
 
     /// Trigger a staggered whole-map rebuild right now (ops tooling /
     /// tests). `nbuckets` is per shard, matching `CoordinatorConfig`.
-    pub fn force_rebuild(&self, nbuckets: usize, hash: HashFn) -> bool {
+    ///
+    /// Refuses a zero-bucket geometry with
+    /// [`ResizeError::BadGeometry`](crate::error::ResizeError::BadGeometry)
+    /// before touching the map — this is the coordinator-side boundary
+    /// check that keeps a malformed `Rebuild` request (wire or CLI) from
+    /// panicking a worker on the table allocator's internal invariant —
+    /// and reports a rebuild already in flight as
+    /// [`ResizeError::Busy`](crate::error::ResizeError::Busy).
+    pub fn force_rebuild(
+        &self,
+        nbuckets: usize,
+        hash: HashFn,
+    ) -> Result<(), crate::error::KvError> {
+        use crate::error::{KvError, ResizeError};
+        if nbuckets == 0 {
+            return Err(KvError::Resize(ResizeError::BadGeometry));
+        }
         let g = RcuThread::register();
-        let ok = self.shared.map.rebuild_all(&g, nbuckets, hash).is_ok();
-        if ok {
+        let res = self.shared.map.rebuild_all(&g, nbuckets, hash);
+        if res.is_ok() {
             self.shared.rebuilds.fetch_add(1, Ordering::Relaxed);
         }
         g.quiescent_state();
-        ok
+        res.map(|_| ()).map_err(|_| KvError::Resize(ResizeError::Busy))
     }
 
     /// The underlying sharded map (shared with the service; use a

@@ -103,6 +103,11 @@ pub enum ResizeError {
     /// Merge: the shard has no mergeable buddy (single shard, or the
     /// buddy range is split deeper).
     Unmergeable,
+    /// The requested geometry is invalid (zero buckets). Validated at
+    /// the resize/rebuild boundary so a malformed wire or CLI request
+    /// gets a typed refusal instead of tripping [`Table`]'s internal
+    /// `nbuckets > 0` invariant assert deep in the kernel path.
+    BadGeometry,
 }
 
 impl std::fmt::Display for ResizeError {
@@ -112,6 +117,7 @@ impl std::fmt::Display for ResizeError {
             ResizeError::NoSuchShard => write!(f, "no such shard ordinal"),
             ResizeError::AtMaxDepth => write!(f, "directory is at its depth cap"),
             ResizeError::Unmergeable => write!(f, "shard has no mergeable buddy"),
+            ResizeError::BadGeometry => write!(f, "requested geometry is invalid"),
         }
     }
 }
@@ -907,6 +913,9 @@ impl<B: BucketSet> ShardedDHash<B> {
         hash: HashFn,
     ) -> Result<RebuildStats, ResizeError> {
         let t0 = Instant::now();
+        if nbuckets == 0 {
+            return Err(ResizeError::BadGeometry);
+        }
         let token = match self.migration_token.try_lock() { // lock: migration
             Ok(t) => t,
             Err(_) => return Err(ResizeError::Busy),
@@ -1055,6 +1064,9 @@ impl<B: BucketSet> ShardedDHash<B> {
         hash: HashFn,
     ) -> Result<RebuildStats, ResizeError> {
         let t0 = Instant::now();
+        if nbuckets == 0 {
+            return Err(ResizeError::BadGeometry);
+        }
         let token = match self.migration_token.try_lock() { // lock: migration
             Ok(t) => t,
             Err(_) => return Err(ResizeError::Busy),

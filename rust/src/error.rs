@@ -20,6 +20,7 @@
 //! | 0x11 | [`ResizeError::NoSuchShard`] |
 //! | 0x12 | [`ResizeError::AtMaxDepth`] |
 //! | 0x13 | [`ResizeError::Unmergeable`] |
+//! | 0x14 | [`ResizeError::BadGeometry`] |
 //! | 0x20 | [`OracleError::Engine`] |
 //! | 0x21 | [`OracleError::Epoch`] |
 //! | 0x30 | [`ProtoError::BadMagic`] |
@@ -113,6 +114,7 @@ impl KvError {
             KvError::Resize(ResizeError::NoSuchShard) => 0x11,
             KvError::Resize(ResizeError::AtMaxDepth) => 0x12,
             KvError::Resize(ResizeError::Unmergeable) => 0x13,
+            KvError::Resize(ResizeError::BadGeometry) => 0x14,
             KvError::Oracle(OracleError::Engine) => 0x20,
             KvError::Oracle(OracleError::Epoch) => 0x21,
             KvError::Protocol(ProtoError::BadMagic(_)) => 0x30,
@@ -135,6 +137,7 @@ impl KvError {
             0x11 => "resize-no-such-shard",
             0x12 => "resize-at-max-depth",
             0x13 => "resize-unmergeable",
+            0x14 => "resize-bad-geometry",
             0x20 => "oracle-engine",
             0x21 => "oracle-epoch",
             0x30 => "proto-bad-magic",
@@ -210,6 +213,7 @@ mod tests {
             KvError::Resize(ResizeError::NoSuchShard),
             KvError::Resize(ResizeError::AtMaxDepth),
             KvError::Resize(ResizeError::Unmergeable),
+            KvError::Resize(ResizeError::BadGeometry),
             KvError::Oracle(OracleError::Engine),
             KvError::Oracle(OracleError::Epoch),
             KvError::Protocol(ProtoError::BadMagic(0)),

@@ -228,3 +228,4 @@ macro_rules! conformance_suite {
 conformance_suite!(michael, super::MichaelList);
 conformance_suite!(spinlock, super::SpinlockList);
 conformance_suite!(cow, super::CowSortedArray);
+conformance_suite!(split_ordered, super::SplitOrderedList);

@@ -12,7 +12,7 @@
 //!
 //! DHash is modular (paper goal 2): any set providing the Algorithm 1 API
 //! can serve as the bucket implementation. That API is the [`BucketSet`]
-//! trait here, and three implementations with different progress/perf
+//! trait here, and four implementations with different progress/perf
 //! trade-offs ship with the crate:
 //!
 //! | impl | find | insert/delete | notes |
@@ -20,14 +20,17 @@
 //! | [`MichaelList`] | lock-free | lock-free | the paper's default: RCU-based Michael list |
 //! | [`SpinlockList`] | blocking | blocking | simplest correct baseline bucket |
 //! | [`CowSortedArray`] | wait-free | blocking (copy-on-write) | read-optimized bucket |
+//! | [`SplitOrderedList`] | lock-free | lock-free | recursive split-ordering: grows locally |
 
 pub mod cow_array;
 pub mod michael;
 pub mod spinlock_list;
+pub mod split_ordered;
 
 pub use cow_array::CowSortedArray;
 pub use michael::MichaelList;
 pub use spinlock_list::SpinlockList;
+pub use split_ordered::SplitOrderedList;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 

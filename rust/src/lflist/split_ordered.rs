@@ -1,0 +1,1138 @@
+//! Recursive split-ordered list (Shalev & Shavit, "Split-Ordered Lists:
+//! Lock-Free Extensible Hash Tables", JACM 2006) as a DHash bucket set.
+//!
+//! One lock-free ordered list holds every node of the bucket, sorted by
+//! *split-order rank*: the bit-reversal of the node's pre-hashed key. A
+//! growable directory of permanent *dummy* nodes (one per local bucket)
+//! provides shortcuts into the list, so a lookup walks only its own
+//! local bucket's chain segment. Doubling the local bucket count never
+//! moves a node — in split order, bucket `b`'s segment simply splits in
+//! two where the new dummy for bucket `b + size` lands — so a bucket's
+//! effective fanout doubles *locally*, with no table-wide migration and
+//! no blocking of concurrent lookup/insert/delete. Dummies are created
+//! lazily and recursively (parent before child, where `parent(b)` clears
+//! `b`'s top set bit), exactly as in the paper.
+//!
+//! Adaptations for DHash (this crate):
+//!
+//! * Nodes carry *user* keys (they migrate between tables through the
+//!   rebuild protocol, which reads `Node::key`), so the split-order rank
+//!   is derived, not stored: `rank(k) = (reverse(mix64(k)) | 1, k)`.
+//!   The `| 1` makes regular ranks odd (dummy ranks are even, so the two
+//!   namespaces never collide); the user key breaks ties between the two
+//!   pre-hashes that differ only in their top bit, keeping the rank
+//!   injective. `mix64` is a bijection, so adversarial user keys cannot
+//!   collapse the split order the way raw bit-reversal would.
+//! * A third link-word tag bit ([`DUMMY_TAG`]) marks pointers *to* dummy
+//!   nodes. Dummies cannot be recognized by key (any u64 is a legal user
+//!   key), and the bit travels with every link CAS for free. `Node`'s
+//!   flag helpers mask [`FLAG_MASK`] only, so the bit survives them.
+//! * RCU replaces the paper's memory management, like `michael.rs`:
+//!   traversals revalidate `*prev == cur` and restart from their dummy on
+//!   any mismatch, which also tolerates DHash's distributed-node reuse.
+//! * Chains end at a permanent tail dummy with rank `(MAX, MAX)` instead
+//!   of NULL (same reuse-ABA argument as `michael::SENTINEL_KEY`).
+//!
+//! The directory is a tagged-pointer [`GrowableArray`]: a segment tree
+//! whose root word carries the tree height in its low bits, doubling by
+//! CAS-installing a new root above the old one. Segments are only freed
+//! under exclusive access (teardown), so readers never race a free.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::{BucketSet, DeleteOutcome, Node, FLAG_MASK, IS_BEING_DISTRIBUTED, LOGICALLY_REMOVED};
+use crate::util::rng::mix64;
+
+/// Bit 2 of a link word: the pointed-to node is a dummy (bucket sentinel
+/// or the tail). Requires 8-byte alignment; `Node` is `#[repr(C)]` with
+/// u64/atomic fields, so this holds on every supported target.
+pub const DUMMY_TAG: usize = 0b100;
+const _: () = assert!(std::mem::align_of::<Node>() >= 8);
+
+/// Every tag bit a split-order link word can carry.
+const TAG_MASK3: usize = FLAG_MASK | DUMMY_TAG;
+
+/// Untag a split-order link word into a node pointer (this module must
+/// not use the crate-wide `untag`, which masks `FLAG_MASK` only).
+#[inline(always)]
+fn untag3(word: usize) -> *mut Node {
+    (word & !TAG_MASK3) as *mut Node
+}
+
+/// Local growth threshold: double the local bucket count once the live
+/// count exceeds `SPLIT_LOAD × size` (paper §4, MAX_LOAD).
+const SPLIT_LOAD: usize = 2;
+/// Cap on the local bucket count (keeps the directory height ≤ 3).
+const MAX_LOCAL_BUCKETS: usize = 1 << 16;
+
+/// Split-order rank of a regular node: bit-reversed pre-hash with the
+/// low bit forced odd, tie-broken by the user key (see module docs).
+#[inline(always)]
+fn regular_rank(key: u64) -> (u64, u64) {
+    (mix64(key).reverse_bits() | 1, key)
+}
+
+/// Split-order rank of bucket `b`'s dummy: plain bit reversal (even).
+#[inline(always)]
+fn dummy_rank(bucket: u64) -> (u64, u64) {
+    (bucket.reverse_bits(), 0)
+}
+
+/// Rank of an in-list node, given the dummy tag its link word carried.
+/// The tail dummy (key `u64::MAX`) ranks after everything.
+#[inline(always)]
+fn node_rank(is_dummy: bool, key: u64) -> (u64, u64) {
+    if is_dummy {
+        if key == u64::MAX {
+            (u64::MAX, u64::MAX)
+        } else {
+            dummy_rank(key)
+        }
+    } else {
+        regular_rank(key)
+    }
+}
+
+/// Parent bucket in the recursive-split order: clear the top set bit.
+#[inline(always)]
+fn parent_bucket(b: usize) -> usize {
+    debug_assert!(b > 0);
+    b & !(1usize << (usize::BITS as usize - 1 - b.leading_zeros() as usize))
+}
+
+const SEG_LOG: usize = 6;
+const SEG_SIZE: usize = 1 << SEG_LOG;
+/// Low bits of the root word hold the tree height (1..); `Segment` is
+/// 64-byte aligned so the pointer bits and the tag never overlap.
+const HEIGHT_MASK: usize = SEG_SIZE - 1;
+
+/// One node of the directory's segment tree: 64 child/leaf slots.
+/// Leaf slots hold dummy-`Node` pointers, inner slots child segments.
+#[repr(align(64))]
+struct Segment {
+    slots: [AtomicUsize; SEG_SIZE],
+}
+
+impl Segment {
+    fn alloc() -> *mut Segment {
+        // reclaim: split-seg — owned raw until published by a root/child CAS
+        Box::into_raw(Box::new(Segment {
+            slots: [0usize; SEG_SIZE].map(AtomicUsize::new),
+        }))
+    }
+}
+
+/// Free one segment.
+///
+/// # Safety
+/// `seg` must be unreachable: either it lost its publish CAS (never
+/// visible), or the caller holds exclusive access to the whole array.
+unsafe fn free_segment(seg: *mut Segment) {
+    drop(Box::from_raw(seg)); // reclaim: split-seg via contract — caller proves unreachability
+}
+
+/// Free a whole segment tree of the given height.
+///
+/// # Safety
+/// Caller must hold exclusive access to the array (teardown path): no
+/// concurrent reader may hold a reference into any segment.
+unsafe fn free_tree(seg: *mut Segment, height: usize) {
+    if height > 1 {
+        for i in 0..SEG_SIZE {
+            // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
+            let child = (*seg).slots[i].load(Ordering::Relaxed);
+            if child != 0 {
+                free_tree(child as *mut Segment, height - 1);
+            }
+        }
+    }
+    free_segment(seg);
+}
+
+/// The paper's tagged-pointer growable array: a segment tree reached
+/// through a root word whose low bits carry the height. Growing doubles
+/// capacity ×64 by installing a new root whose slot 0 is the old root;
+/// existing slot references stay valid forever (segments move never).
+struct GrowableArray {
+    root: AtomicUsize,
+}
+
+impl GrowableArray {
+    fn new() -> Self {
+        Self {
+            root: AtomicUsize::new(Segment::alloc() as usize | 1),
+        }
+    }
+
+    /// The leaf slot for `index`, allocating path segments on demand.
+    fn slot(&self, index: usize) -> &AtomicUsize {
+        loop {
+            // ord: split-dir — Acquire pairs with the Release root/child publish CAS
+            let root = self.root.load(Ordering::Acquire);
+            let height = root & HEIGHT_MASK;
+            if SEG_LOG * height < usize::BITS as usize && index >> (SEG_LOG * height) != 0 {
+                self.grow(root);
+                continue;
+            }
+            let mut seg = (root & !HEIGHT_MASK) as *mut Segment;
+            let mut level = height - 1;
+            loop {
+                let i = (index >> (SEG_LOG * level)) & (SEG_SIZE - 1);
+                // SAFETY: segments reachable from the published root are
+                // freed only under exclusive access (teardown), so `seg`
+                // outlives this shared borrow of `self`.
+                let slot = unsafe { &(*seg).slots[i] };
+                if level == 0 {
+                    return slot;
+                }
+                // ord: split-dir — Acquire pairs with the Release root/child publish CAS
+                let mut child = slot.load(Ordering::Acquire);
+                if child == 0 {
+                    let fresh = Segment::alloc();
+                    // ord: split-dir — Release publishes the zeroed segment to Acquire readers
+                    match slot.compare_exchange(
+                        0,
+                        fresh as usize,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    ) {
+                        Ok(_) => child = fresh as usize,
+                        Err(cur) => {
+                            // SAFETY: `fresh` lost the publish CAS; no
+                            // other thread ever saw it.
+                            // reclaim: split-seg via unpublished — lost the child CAS, never visible
+                            unsafe { free_segment(fresh) };
+                            child = cur;
+                        }
+                    }
+                }
+                seg = child as *mut Segment;
+                level -= 1;
+            }
+        }
+    }
+
+    /// Install a new root one level above `root` (capacity ×64).
+    fn grow(&self, root: usize) {
+        let height = root & HEIGHT_MASK;
+        let fresh = Segment::alloc();
+        // SAFETY: `fresh` is exclusively ours until the CAS publishes it.
+        // ord: split-dir — plain store; the Release root CAS below publishes it
+        unsafe { (*fresh).slots[0].store(root & !HEIGHT_MASK, Ordering::Relaxed) };
+        // ord: split-dir — Release publishes the taller tree to Acquire readers
+        if self
+            .root
+            .compare_exchange(
+                root,
+                fresh as usize | (height + 1),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_err()
+        {
+            // SAFETY: `fresh` lost the root CAS; never visible.
+            // reclaim: split-seg via unpublished — lost the root CAS, never visible
+            unsafe { free_segment(fresh) };
+        }
+    }
+
+    /// Free every segment. Idempotent; leaves the array unusable.
+    fn teardown(&mut self) {
+        let root = *self.root.get_mut();
+        if root == 0 {
+            return;
+        }
+        // SAFETY: `&mut self` proves no concurrent reader exists.
+        unsafe { free_tree((root & !HEIGHT_MASK) as *mut Segment, root & HEIGHT_MASK) };
+        *self.root.get_mut() = 0;
+    }
+}
+
+impl Drop for GrowableArray {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+/// Position returned by the searches: `cur` is the first node with
+/// rank ≥ the target (never null — chains end at the tail dummy),
+/// `prev` the link word pointing at it.
+struct Pos {
+    prev: *const AtomicUsize,
+    cur: *mut Node,
+    /// [`DUMMY_TAG`] if `cur` is a dummy, else 0 (as read from `*prev`).
+    cur_tag: usize,
+    /// Unmarked `next` word of `cur` (carries the successor's dummy tag).
+    next: usize,
+}
+
+impl Pos {
+    #[inline(always)]
+    fn found(&self, key: u64) -> bool {
+        // SAFETY: `cur` is a list node kept alive by RCU. Dummies and the
+        // tail are never a match: the tag bit discriminates them.
+        self.cur_tag == 0 && unsafe { (*self.cur).key } == key
+    }
+}
+
+/// The recursive split-ordered list. One instance per (outer) hash
+/// bucket; each instance grows its *local* fanout independently.
+pub struct SplitOrderedList {
+    /// Bucket-0 dummy: the permanent physical head of the split-order
+    /// chain. Written once in `new`, never relinked.
+    head: *mut Node,
+    /// Lazily populated dummy directory: slot `b` caches bucket `b`'s
+    /// dummy once it is linked (0 = not yet initialized).
+    dir: GrowableArray,
+    /// Current local bucket count (power of two, grows by doubling).
+    size: AtomicUsize,
+    /// Approximate live regular-node count (growth heuristic only; may
+    /// over-count born-dead inserts, never the other direction).
+    count: AtomicUsize,
+}
+
+// SAFETY: all mutation happens through atomics; `head` is written once
+// before the value is shared; reclamation goes through RCU / teardown.
+unsafe impl Send for SplitOrderedList {}
+unsafe impl Sync for SplitOrderedList {}
+
+impl SplitOrderedList {
+    fn new_with_sentinels() -> Self {
+        let tail = Node::alloc(u64::MAX, 0);
+        let head = Node::alloc(0, 0);
+        // SAFETY: both nodes are exclusively owned until `Self` escapes.
+        // ord: split-link — pre-publication store; Self is not shared yet
+        unsafe { (*head).next.store(tail as usize | DUMMY_TAG, Ordering::Relaxed) };
+        Self {
+            head,
+            dir: GrowableArray::new(),
+            size: AtomicUsize::new(1),
+            count: AtomicUsize::new(0),
+        }
+    }
+
+    /// Current local bucket count (power of two; diagnostic).
+    pub fn local_size(&self) -> usize {
+        // ord: split-size — growth heuristic; any power-of-two snapshot routes correctly
+        self.size.load(Ordering::Relaxed)
+    }
+
+    /// The local bucket `key` routes to under the current `size`. Stale
+    /// reads are safe either way: a smaller value routes to an ancestor
+    /// dummy (longer walk), a larger one initializes the deeper dummy.
+    #[inline(always)]
+    fn bucket_of(&self, key: u64) -> usize {
+        // ord: split-size — growth heuristic; any power-of-two snapshot routes correctly
+        (mix64(key) as usize) & (self.size.load(Ordering::Relaxed) - 1)
+    }
+
+    /// Link word to start a search for `key` from: its bucket's dummy.
+    fn bucket_head(&self, key: u64) -> *const AtomicUsize {
+        let d = self.dummy_for(self.bucket_of(key));
+        // SAFETY: dummies are permanent; the link word outlives `self`'s
+        // shared borrows.
+        unsafe { &(*d).next as *const AtomicUsize }
+    }
+
+    /// Bucket `b`'s dummy node, initializing it (and, recursively, its
+    /// ancestors) on first use.
+    fn dummy_for(&self, b: usize) -> *mut Node {
+        if b == 0 {
+            return self.head;
+        }
+        let slot = self.dir.slot(b);
+        // ord: split-dir — Acquire pairs with the Release slot publish in init_bucket
+        let p = slot.load(Ordering::Acquire);
+        if p != 0 {
+            return p as *mut Node;
+        }
+        self.init_bucket(b, slot)
+    }
+
+    /// Slow path of [`Self::dummy_for`]: link a dummy for bucket `b`
+    /// into the chain (after its parent dummy) and cache it in `slot`.
+    /// Exactly one dummy per rank can link — racers find the winner's
+    /// node via the rank-equality check and free their own candidate.
+    #[cold]
+    fn init_bucket(&self, b: usize, slot: &AtomicUsize) -> *mut Node {
+        let parent = self.dummy_for(parent_bucket(b));
+        let rank = dummy_rank(b as u64);
+        let d = Node::alloc(b as u64, 0);
+        let published = loop {
+            // SAFETY: parent dummies are permanent; the link word stays
+            // valid for the duration of the call.
+            let pos = self.search(unsafe { &(*parent).next }, rank);
+            // SAFETY: `pos.cur` is RCU-live; `key` is immutable.
+            if pos.cur_tag != 0 && unsafe { (*pos.cur).key } == b as u64 {
+                break pos.cur; // another thread linked this bucket's dummy
+            }
+            // Our dummy is unpublished and dummies are never marked, so a
+            // plain store suffices; the link CAS publishes it.
+            // SAFETY: we own `d` until the link CAS below succeeds.
+            // ord: split-link — successor in place before the Release link publish
+            unsafe { (*d).next.store(pos.cur as usize | pos.cur_tag, Ordering::Relaxed) };
+            // SAFETY: `pos.prev` is a live link word under RCU.
+            if unsafe {
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                (*pos.prev)
+                    .compare_exchange(
+                        pos.cur as usize | pos.cur_tag,
+                        d as usize | DUMMY_TAG,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+            } {
+                break d;
+            }
+        };
+        if published != d {
+            // SAFETY: our candidate lost the init race; it was never
+            // linked, so no other thread can hold a reference.
+            // reclaim: node via unpublished — lost the dummy-init race, never visible
+            unsafe { Node::free(d) };
+        }
+        // Cache the in-list dummy. Racers computed the same pointer, so a
+        // lost CAS means the identical value is already published.
+        // ord: split-dir — Release publishes the dummy to Acquire readers of the slot
+        let _ = slot.compare_exchange(
+            0,
+            published as usize,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        published
+    }
+
+    /// Michael-style search in split-order rank space, starting at
+    /// `start` (a dummy's link word). Returns the position of the first
+    /// node with rank ≥ `rank`, physically unlinking every marked node
+    /// encountered (only regular nodes are ever marked). Same ordering
+    /// contract as `michael::search`: Acquire loads, AcqRel link CAS,
+    /// `*prev == cur` revalidation, restart from `start` on mismatch.
+    fn search(&self, start: *const AtomicUsize, rank: (u64, u64)) -> Pos {
+        'retry: loop {
+            let mut prev = start;
+            // SAFETY: `start` is the link word of a permanent dummy;
+            // subsequent `prev` values are link words of RCU-live nodes.
+            // ord: split-link — link-word publish/traversal contract (split-order flavor)
+            let w = unsafe { (*prev).load(Ordering::Acquire) };
+            let mut cur = untag3(w);
+            let mut cur_tag = w & DUMMY_TAG;
+            loop {
+                // `cur` is never null: chains end at the tail dummy.
+                // SAFETY: RCU keeps `cur` alive.
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                let next_t = unsafe { (*cur).next.load(Ordering::Acquire) };
+                // SAFETY: `prev` is the starting dummy's link word or a
+                // link word reached by this traversal; RCU keeps either
+                // alive for the caller's read-side critical section.
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                if unsafe { (*prev).load(Ordering::Acquire) } != (cur as usize | cur_tag) {
+                    continue 'retry;
+                }
+                if next_t & FLAG_MASK != 0 {
+                    // Marked: unlink before moving past (§4.4 rule). The
+                    // republished word keeps the successor's dummy tag.
+                    let next = next_t & !FLAG_MASK;
+                    // SAFETY: `prev` stays a live link word (RCU); the
+                    // CAS only republishes values read from it.
+                    if unsafe {
+                        // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                        (*prev)
+                            .compare_exchange(
+                                cur as usize | cur_tag,
+                                next,
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            )
+                            .is_ok()
+                    } {
+                        if next_t & FLAG_MASK == LOGICALLY_REMOVED {
+                            // SAFETY: we won the unlink CAS; the node is
+                            // unreachable for new readers and ours to
+                            // reclaim after a grace period.
+                            unsafe { Node::defer_free(cur) };
+                        }
+                        cur = untag3(next);
+                        cur_tag = next & DUMMY_TAG;
+                        continue;
+                    }
+                    continue 'retry;
+                }
+                // SAFETY: RCU keeps `cur` alive; `key` is immutable.
+                let crank = node_rank(cur_tag != 0, unsafe { (*cur).key });
+                if crank >= rank {
+                    return Pos {
+                        prev,
+                        cur,
+                        cur_tag,
+                        next: next_t,
+                    };
+                }
+                // SAFETY: `cur` stays valid; taking the address of its
+                // atomic `next` field is safe under RCU.
+                prev = unsafe { &(*cur).next as *const AtomicUsize };
+                cur = untag3(next_t);
+                cur_tag = next_t & DUMMY_TAG;
+            }
+        }
+    }
+
+    /// Like [`Self::search`], but stops at the first *live regular* node
+    /// in split order (or the tail, when none remains). Used by the
+    /// distribution pop: rebuild does not care about key order, only
+    /// about taking some live head cheaply.
+    fn search_first_live(&self) -> Pos {
+        'retry: loop {
+            // SAFETY: the head dummy is permanent.
+            let mut prev = unsafe { &(*self.head).next as *const AtomicUsize };
+            // ord: split-link — link-word publish/traversal contract (split-order flavor)
+            let w = unsafe { (*prev).load(Ordering::Acquire) };
+            let mut cur = untag3(w);
+            let mut cur_tag = w & DUMMY_TAG;
+            loop {
+                // SAFETY: RCU keeps `cur` alive.
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                let next_t = unsafe { (*cur).next.load(Ordering::Acquire) };
+                // SAFETY: as in `search`.
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                if unsafe { (*prev).load(Ordering::Acquire) } != (cur as usize | cur_tag) {
+                    continue 'retry;
+                }
+                if next_t & FLAG_MASK != 0 {
+                    let next = next_t & !FLAG_MASK;
+                    // SAFETY: `prev` stays a live link word (RCU); the
+                    // CAS only republishes values read from it.
+                    if unsafe {
+                        // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                        (*prev)
+                            .compare_exchange(
+                                cur as usize | cur_tag,
+                                next,
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            )
+                            .is_ok()
+                    } {
+                        if next_t & FLAG_MASK == LOGICALLY_REMOVED {
+                            // SAFETY: we won the unlink CAS; ours to
+                            // reclaim after a grace period.
+                            unsafe { Node::defer_free(cur) };
+                        }
+                        cur = untag3(next);
+                        cur_tag = next & DUMMY_TAG;
+                        continue;
+                    }
+                    continue 'retry;
+                }
+                if cur_tag == 0 {
+                    return Pos {
+                        prev,
+                        cur,
+                        cur_tag,
+                        next: next_t,
+                    };
+                }
+                // SAFETY: RCU keeps `cur` alive; `key` is immutable.
+                if unsafe { (*cur).key } == u64::MAX {
+                    // The tail: no live regular node anywhere.
+                    return Pos {
+                        prev,
+                        cur,
+                        cur_tag,
+                        next: next_t,
+                    };
+                }
+                // An interior dummy: walk through it.
+                // SAFETY: as in `search`.
+                prev = unsafe { &(*cur).next as *const AtomicUsize };
+                cur = untag3(next_t);
+                cur_tag = next_t & DUMMY_TAG;
+            }
+        }
+    }
+
+    /// Double the local bucket count once the live count crosses the
+    /// load threshold. Dummies for the new buckets appear lazily.
+    fn maybe_grow(&self, live: usize) {
+        // ord: split-size — growth heuristic; any power-of-two snapshot routes correctly
+        let s = self.size.load(Ordering::Relaxed);
+        if live > s.saturating_mul(SPLIT_LOAD) && s < MAX_LOCAL_BUCKETS {
+            // A lost CAS means another inserter already doubled — done.
+            // ord: split-size — growth heuristic; any power-of-two snapshot routes correctly
+            let _ = self
+                .size
+                .compare_exchange(s, s * 2, Ordering::Relaxed, Ordering::Relaxed);
+        }
+    }
+
+    fn insert_node(&self, node: *mut Node) -> Result<(), *mut Node> {
+        // SAFETY: caller owns `node` (unpublished here); `key` immutable.
+        let key = unsafe { (*node).key };
+        debug_assert_ne!(key, u64::MAX, "u64::MAX keys are reserved");
+        let rank = regular_rank(key);
+        loop {
+            let pos = self.search(self.bucket_head(key), rank);
+            if pos.found(key) {
+                return Err(node);
+            }
+            // Point the node at its successor. CAS (not store) so a
+            // deleter arriving through `rebuild_cur` cannot have its
+            // LOGICALLY_REMOVED bit overwritten; the same CAS clears
+            // IS_BEING_DISTRIBUTED atomically with the re-publish.
+            loop {
+                // SAFETY: node is ours or (rebuild path) unlinked+owned.
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                let old = unsafe { (*node).next.load(Ordering::Acquire) };
+                let new = (pos.cur as usize | pos.cur_tag) | (old & LOGICALLY_REMOVED);
+                // SAFETY: same exclusive ownership of `node` as above —
+                // no other thread can reach it before the link CAS.
+                if unsafe {
+                    // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                    (*node)
+                        .next
+                        .compare_exchange(old, new, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                } {
+                    break;
+                }
+            }
+            // Link CAS: Release publishes key/val/next, Acquire
+            // revalidates against concurrent unlinks. Regular nodes link
+            // without the dummy tag.
+            // SAFETY: `pos.prev` is valid under RCU (revalidated by CAS).
+            if unsafe {
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                (*pos.prev)
+                    .compare_exchange(
+                        pos.cur as usize | pos.cur_tag,
+                        node as usize,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+            } {
+                // ord: split-size — growth heuristic; any power-of-two snapshot routes correctly
+                let live = self.count.fetch_add(1, Ordering::Relaxed) + 1;
+                self.maybe_grow(live);
+                return Ok(());
+            }
+            // Lost the race: retry from a fresh search.
+        }
+    }
+
+    fn delete_node(&self, key: u64, flag: usize) -> DeleteOutcome {
+        debug_assert!(flag == LOGICALLY_REMOVED || flag == IS_BEING_DISTRIBUTED);
+        let rank = regular_rank(key);
+        loop {
+            let pos = self.search(self.bucket_head(key), rank);
+            if !pos.found(key) {
+                return DeleteOutcome::NotFound;
+            }
+            let cur = pos.cur; // regular node: its link words carry no dummy tag
+            // Logical delete: mark `next`. Expected is the unmarked
+            // snapshot (successor dummy tag included), so exactly one
+            // deleter wins; AcqRel publishes everything sequenced before
+            // the mark (Lemma 4.1 on the rebuild's hazard path).
+            // SAFETY: `cur` was reached by `search` inside the caller's
+            // RCU read section, so the node is live for the CAS.
+            if unsafe {
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                (*cur)
+                    .next
+                    .compare_exchange(
+                        pos.next,
+                        pos.next | flag,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_err()
+            } {
+                continue; // raced another op; a fresh search decides
+            }
+            // ord: split-size — growth heuristic; any power-of-two snapshot routes correctly
+            self.count.fetch_sub(1, Ordering::Relaxed);
+            // Physical unlink; the clean word keeps the successor's tag.
+            // SAFETY: `pos.prev` is a live link word from the traversal.
+            if unsafe {
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                (*pos.prev)
+                    .compare_exchange(
+                        cur as usize,
+                        pos.next & !FLAG_MASK,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+            } {
+                if flag == LOGICALLY_REMOVED {
+                    // SAFETY: unlinked by us; reclaim after grace period.
+                    unsafe { Node::defer_free(cur) };
+                }
+            } else if flag == IS_BEING_DISTRIBUTED {
+                // The rebuild thread reuses this node: force the unlink
+                // via a search over its bucket segment (unlinks every
+                // marked node up to and including our rank).
+                let _ = self.search(self.bucket_head(key), rank);
+            }
+            return DeleteOutcome::Deleted(cur);
+        }
+    }
+}
+
+// SAFETY: see trait contract; the implementation maintains all four
+// guarantees (RCU-valid pointers, call_rcu reclamation, unlink-before-
+// return for distribution, LOGICALLY_REMOVED preservation + atomic
+// IS_BEING_DISTRIBUTED clear on insert) — same protocol as michael.rs,
+// in split-order rank space.
+unsafe impl BucketSet for SplitOrderedList {
+    fn new() -> Self {
+        Self::new_with_sentinels()
+    }
+
+    // lint: hot
+    fn find(&self, key: u64) -> Option<&Node> {
+        let pos = self.search(self.bucket_head(key), regular_rank(key));
+        if pos.found(key) {
+            // SAFETY: valid under the caller's RCU read-side section.
+            Some(unsafe { &*pos.cur })
+        } else {
+            None
+        }
+    }
+
+    fn insert(&self, node: *mut Node) -> Result<(), *mut Node> {
+        self.insert_node(node)
+    }
+
+    fn delete(&self, key: u64, flag: usize) -> DeleteOutcome {
+        self.delete_node(key, flag)
+    }
+
+    fn first(&self) -> Option<*mut Node> {
+        // The chain is ordered by split-order rank, not user key, so the
+        // live minimum takes a full walk (diagnostic/teardown use; the
+        // rebuild hot path uses `take_first_for_distribution` instead).
+        let mut best: *mut Node = std::ptr::null_mut();
+        let mut best_key = u64::MAX;
+        // SAFETY: head is permanent; traversal nodes are RCU-live.
+        // ord: split-link — link-word publish/traversal contract (split-order flavor)
+        let mut w = unsafe { (*self.head).next.load(Ordering::Acquire) };
+        let mut cur = untag3(w);
+        while !cur.is_null() {
+            // SAFETY: RCU keeps `cur` alive.
+            // ord: split-link — link-word publish/traversal contract (split-order flavor)
+            let next_t = unsafe { (*cur).next.load(Ordering::Acquire) };
+            if w & DUMMY_TAG == 0 && next_t & FLAG_MASK == 0 {
+                // SAFETY: RCU-live; `key` is immutable.
+                let k = unsafe { (*cur).key };
+                if k < best_key {
+                    best_key = k;
+                    best = cur;
+                }
+            }
+            w = next_t;
+            cur = untag3(next_t);
+        }
+        if best.is_null() {
+            None
+        } else {
+            Some(best)
+        }
+    }
+
+    fn take_first_for_distribution(
+        &self,
+        publish: &mut dyn FnMut(*mut Node),
+    ) -> Option<*mut Node> {
+        // Pop the split-order head: rebuild needs *a* live node, not the
+        // key minimum, and the first live regular in rank order is one
+        // traversal away (amortized O(1) as the chain drains front-first).
+        loop {
+            let pos = self.search_first_live();
+            if pos.cur_tag != 0 {
+                return None; // reached the tail: nothing live remains
+            }
+            let cur = pos.cur;
+            // Hazard publication precedes the logical delete (Alg. 3
+            // lines 26 -> 29).
+            publish(cur);
+            // Logical removal for distribution (expected: unmarked); the
+            // Release half orders the hazard publication above before
+            // the mark (Lemma 4.1).
+            // SAFETY: `cur` came out of the traversal under the rebuild
+            // thread's RCU read section — live node, valid link word.
+            if unsafe {
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                (*cur)
+                    .next
+                    .compare_exchange(
+                        pos.next,
+                        pos.next | IS_BEING_DISTRIBUTED,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_err()
+            } {
+                continue; // raced a deleter or an insert after cur
+            }
+            // ord: split-size — growth heuristic; any power-of-two snapshot routes correctly
+            self.count.fetch_sub(1, Ordering::Relaxed);
+            // Physical unlink; on failure force it via a bucket search
+            // (the rebuild reuses the node, so it must be out first).
+            // SAFETY: `pos.prev` is a live link word from the traversal
+            // above; the marked `cur` cannot be freed before our unlink.
+            if unsafe {
+                // ord: split-link — link-word publish/traversal contract (split-order flavor)
+                (*pos.prev)
+                    .compare_exchange(
+                        cur as usize,
+                        pos.next & !FLAG_MASK,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_err()
+            } {
+                // SAFETY: key immutable, node RCU-live.
+                let key = unsafe { (*cur).key };
+                let _ = self.search(self.bucket_head(key), regular_rank(key));
+            }
+            return Some(cur);
+        }
+    }
+
+    fn len(&self) -> usize {
+        let mut n = 0;
+        // SAFETY: head is permanent; traversal nodes are RCU-live.
+        // ord: split-link — link-word publish/traversal contract (split-order flavor)
+        let mut w = unsafe { (*self.head).next.load(Ordering::Acquire) };
+        let mut cur = untag3(w);
+        while !cur.is_null() {
+            // SAFETY: RCU keeps `cur` alive.
+            // ord: split-link — link-word publish/traversal contract (split-order flavor)
+            let next_t = unsafe { (*cur).next.load(Ordering::Acquire) };
+            if w & DUMMY_TAG == 0 && next_t & FLAG_MASK == 0 {
+                n += 1;
+            }
+            w = next_t;
+            cur = untag3(next_t);
+        }
+        n
+    }
+
+    fn collect(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        // SAFETY: head is permanent; traversal nodes are RCU-live.
+        // ord: split-link — link-word publish/traversal contract (split-order flavor)
+        let mut w = unsafe { (*self.head).next.load(Ordering::Acquire) };
+        let mut cur = untag3(w);
+        while !cur.is_null() {
+            // SAFETY: RCU keeps `cur` alive.
+            // ord: split-link — link-word publish/traversal contract (split-order flavor)
+            let next_t = unsafe { (*cur).next.load(Ordering::Acquire) };
+            if w & DUMMY_TAG == 0 && next_t & FLAG_MASK == 0 {
+                // SAFETY: `cur` is non-null here and RCU-live; the value
+                // rode the Release link publish our Acquire walk saw.
+                // ord: node-val — value rides the link publish; later stores racy-by-spec
+                unsafe { out.push(((*cur).key, (*cur).val.load(Ordering::Relaxed))) };
+            }
+            w = next_t;
+            cur = untag3(next_t);
+        }
+        // The chain is in split-order rank order; the trait promises
+        // user-key order.
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
+    }
+
+    fn drain_exclusive(&mut self) {
+        let mut cur = self.head;
+        while !cur.is_null() {
+            // SAFETY: exclusive access (`&mut self`), no concurrent
+            // readers can exist; free everything (dummies, tail,
+            // residual regulars) immediately.
+            unsafe {
+                // ord: unshared — exclusive access (&mut/Drop); no concurrent observers
+                let next = untag3((*cur).next.load(Ordering::Relaxed));
+                Node::free(cur);
+                cur = next;
+            }
+        }
+        self.head = std::ptr::null_mut();
+        self.dir.teardown();
+        *self.count.get_mut() = 0;
+    }
+}
+
+impl Drop for SplitOrderedList {
+    fn drop(&mut self) {
+        self.drain_exclusive();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rcu::{rcu_barrier, RcuThread};
+    use std::sync::Arc;
+
+    fn keys(l: &SplitOrderedList) -> Vec<u64> {
+        l.collect().into_iter().map(|(k, _)| k).collect()
+    }
+
+    #[test]
+    fn collect_is_user_key_ordered() {
+        let l = SplitOrderedList::new();
+        for k in [5u64, 1, 9, 3, 7] {
+            assert!(l.insert(Node::alloc(k, k * 10)).is_ok());
+        }
+        assert_eq!(keys(&l), vec![1, 3, 5, 7, 9]);
+        assert_eq!(l.len(), 5);
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let l = SplitOrderedList::new();
+        assert!(l.insert(Node::alloc(4, 1)).is_ok());
+        let dup = Node::alloc(4, 2);
+        match l.insert(dup) {
+            Err(p) => {
+                assert_eq!(p, dup);
+                // SAFETY: rejected node never published.
+                unsafe { Node::free(p) };
+            }
+            Ok(()) => panic!("duplicate accepted"),
+        }
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.find(4).unwrap().val.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn find_miss_and_hit() {
+        let l = SplitOrderedList::new();
+        for k in [2u64, 4, 6] {
+            l.insert(Node::alloc(k, k)).unwrap();
+        }
+        assert!(l.find(3).is_none());
+        assert!(l.find(0).is_none());
+        assert!(l.find(7).is_none());
+        assert_eq!(l.find(4).unwrap().key, 4);
+    }
+
+    #[test]
+    fn delete_logical_and_reinsert() {
+        let t = RcuThread::register();
+        let l = SplitOrderedList::new();
+        l.insert(Node::alloc(10, 1)).unwrap();
+        assert!(matches!(
+            l.delete(10, LOGICALLY_REMOVED),
+            DeleteOutcome::Deleted(_)
+        ));
+        assert!(l.find(10).is_none());
+        assert_eq!(l.delete(10, LOGICALLY_REMOVED), DeleteOutcome::NotFound);
+        l.insert(Node::alloc(10, 2)).unwrap();
+        assert_eq!(l.find(10).unwrap().val.load(Ordering::Relaxed), 2);
+        t.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn delete_for_distribution_unlinks_but_does_not_free() {
+        let t = RcuThread::register();
+        let l = SplitOrderedList::new();
+        l.insert(Node::alloc(1, 11)).unwrap();
+        l.insert(Node::alloc(2, 22)).unwrap();
+        let n = match l.delete(1, IS_BEING_DISTRIBUTED) {
+            DeleteOutcome::Deleted(p) => p,
+            _ => panic!("missing node"),
+        };
+        assert_eq!(keys(&l), vec![2]);
+        // SAFETY: unlinked, not reclaimed by contract.
+        unsafe {
+            assert_eq!((*n).key, 1);
+            assert_eq!((*n).flags(), IS_BEING_DISTRIBUTED);
+        }
+        // Reuse in another list (insert clears the distribution flag
+        // atomically with the link).
+        let l2 = SplitOrderedList::new();
+        l2.insert(n).unwrap();
+        assert_eq!(keys(&l2), vec![1]);
+        t.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn insert_preserves_concurrent_logical_removal() {
+        let t = RcuThread::register();
+        let l = SplitOrderedList::new();
+        let n = Node::alloc(5, 5);
+        // SAFETY: we own n.
+        unsafe { (*n).set_flag(LOGICALLY_REMOVED) };
+        l.insert(n).unwrap();
+        // Born dead: find must skip it; the traversal unlinks + frees.
+        assert!(l.find(5).is_none());
+        assert_eq!(l.len(), 0);
+        t.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn first_returns_user_key_minimum() {
+        let t = RcuThread::register();
+        let l = SplitOrderedList::new();
+        for k in [4u64, 2, 9] {
+            l.insert(Node::alloc(k, k)).unwrap();
+        }
+        l.delete(2, LOGICALLY_REMOVED);
+        let f = l.first().unwrap();
+        // SAFETY: RCU-live.
+        assert_eq!(unsafe { (*f).key }, 4);
+        t.quiescent_state();
+        rcu_barrier();
+    }
+
+    #[test]
+    fn local_growth_crosses_threshold_and_keeps_membership() {
+        let l = SplitOrderedList::new();
+        assert_eq!(l.local_size(), 1);
+        let n = 200u64;
+        for k in 0..n {
+            l.insert(Node::alloc(k, k + 1000)).unwrap();
+        }
+        // 200 live nodes over SPLIT_LOAD=2 forces several doublings.
+        assert!(l.local_size() >= 32, "size {}", l.local_size());
+        assert_eq!(l.len(), n as usize);
+        for k in 0..n {
+            assert_eq!(l.find(k).unwrap().val.load(Ordering::Relaxed), k + 1000);
+        }
+        assert_eq!(keys(&l), (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deep_dummy_directory_grows_past_one_segment() {
+        // Push the local bucket count past SEG_SIZE so the directory
+        // installs a second tree level, then verify every key.
+        let l = SplitOrderedList::new();
+        let n = 400u64;
+        for k in 0..n {
+            l.insert(Node::alloc(k, k)).unwrap();
+        }
+        assert!(l.local_size() > SEG_SIZE, "size {}", l.local_size());
+        for k in 0..n {
+            assert_eq!(l.find(k).unwrap().key, k);
+        }
+    }
+
+    #[test]
+    fn empty_list_edge_cases() {
+        let l = SplitOrderedList::new();
+        assert!(l.find(0).is_none());
+        assert!(l.first().is_none());
+        assert!(l.is_empty());
+        assert_eq!(l.delete(0, LOGICALLY_REMOVED), DeleteOutcome::NotFound);
+    }
+
+    #[test]
+    fn u64_extreme_keys() {
+        let l = SplitOrderedList::new();
+        for k in [0u64, 1, u64::MAX - 2, u64::MAX - 1] {
+            l.insert(Node::alloc(k, k)).unwrap();
+        }
+        assert_eq!(keys(&l), vec![0, 1, u64::MAX - 2, u64::MAX - 1]);
+        assert_eq!(l.find(u64::MAX - 1).unwrap().key, u64::MAX - 1);
+    }
+
+    #[test]
+    fn concurrent_same_key_insert_exactly_one_wins() {
+        for _ in 0..20 {
+            let l = Arc::new(SplitOrderedList::new());
+            let mut hs = Vec::new();
+            for _ in 0..4 {
+                let l2 = l.clone();
+                hs.push(std::thread::spawn(move || {
+                    let g = RcuThread::register();
+                    let n = Node::alloc(42, 0);
+                    let r = l2.insert(n);
+                    let won = if let Err(p) = r {
+                        // SAFETY: rejected, unpublished.
+                        unsafe { Node::free(p) };
+                        false
+                    } else {
+                        true
+                    };
+                    g.quiescent_state();
+                    won
+                }));
+            }
+            let wins = hs
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .filter(|&x| x)
+                .count();
+            assert_eq!(wins, 1);
+            assert_eq!(l.len(), 1);
+        }
+    }
+
+    #[test]
+    fn concurrent_growth_keeps_every_key() {
+        let l = Arc::new(SplitOrderedList::new());
+        let mut hs = Vec::new();
+        for t in 0..4u64 {
+            let l2 = l.clone();
+            hs.push(std::thread::spawn(move || {
+                let g = RcuThread::register();
+                for i in 0..500u64 {
+                    l2.insert(Node::alloc(t * 10_000 + i, i)).unwrap();
+                    g.quiescent_state();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(l.len(), 2000);
+        assert!(l.local_size() >= 64, "size {}", l.local_size());
+        let ks = keys(&l);
+        assert!(ks.windows(2).all(|w| w[0] < w[1]), "not sorted/unique");
+        for t in 0..4u64 {
+            for i in (0..500u64).step_by(97) {
+                assert!(l.find(t * 10_000 + i).is_some());
+            }
+        }
+        rcu_barrier();
+    }
+
+    #[test]
+    fn concurrent_insert_delete_churn_under_growth() {
+        let l = Arc::new(SplitOrderedList::new());
+        let mut hs = Vec::new();
+        for t in 0..4u64 {
+            let l2 = l.clone();
+            hs.push(std::thread::spawn(move || {
+                let g = RcuThread::register();
+                for i in 0..1500u64 {
+                    let k = (t * 7 + i) % 256;
+                    if i % 2 == 0 {
+                        if let Err(p) = l2.insert(Node::alloc(k, i)) {
+                            // SAFETY: rejected, unpublished.
+                            unsafe { Node::free(p) };
+                        }
+                    } else {
+                        l2.delete(k, LOGICALLY_REMOVED);
+                    }
+                    g.quiescent_state();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        // Structural invariant after the dust settles: sorted unique.
+        let ks = keys(&l);
+        assert!(ks.windows(2).all(|w| w[0] < w[1]));
+        assert!(ks.iter().all(|&k| k < 256));
+        rcu_barrier();
+    }
+}

@@ -24,6 +24,7 @@ use std::time::Duration;
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
 use dhash::coordinator::{Coordinator, CoordinatorConfig, ElasticConfig, PreRoute, Request};
 use dhash::dhash::{DHashMap, HashFn};
+use dhash::error::{KvError, ResizeError};
 use dhash::rcu::RcuThread;
 use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
 use dhash::util::cli::{Args, CmdSpec, FlagSpec};
@@ -315,6 +316,15 @@ fn cmd_rebuild(args: &Args) -> anyhow::Result<()> {
     let table = args.get("table").unwrap_or("dhash").to_string();
     let nodes = args.get_or("nodes", 100_000u64)?;
     let nbuckets = args.get_or("buckets", 1024usize)?;
+    if nbuckets == 0 {
+        // Same refusal the wire boundary gives: typed, never a panic in
+        // the table allocator.
+        anyhow::bail!(
+            "invalid --buckets 0: {} (wire code {:#04x})",
+            KvError::Resize(ResizeError::BadGeometry),
+            KvError::Resize(ResizeError::BadGeometry).code()
+        );
+    }
     let map = make_table(&table, nbuckets, 1);
     let g = RcuThread::register();
     for k in 0..nodes {

@@ -13,6 +13,13 @@ use crate::dhash::{DHashMap, HashFn, ShardedDHash};
 use crate::lflist::BucketSet;
 use crate::rcu::RcuThread;
 
+/// Retry budget for the default [`ConcurrentMap::upsert`]: each failed
+/// round means a concurrent insert landed inside our delete→insert
+/// window, so progress-starvation needs that adversarial interleaving
+/// this many times in a row. The bound exists only so a hypothetical
+/// pathological scheduler cannot spin a worker forever.
+const UPSERT_RETRY_BOUND: usize = 1024;
+
 /// Object-safe facade over the evaluated hash tables.
 pub trait ConcurrentMap: Send + Sync + 'static {
     /// Display name used in bench output (`HT-DHash`, `HT-Xu`, ...).
@@ -36,12 +43,30 @@ pub trait ConcurrentMap: Send + Sync + 'static {
     /// override this with an in-place value swap on the live node, so a
     /// key being overwritten is never absent (the coordinator's `Put`
     /// relies on this).
+    ///
+    /// The delete→insert window can race a concurrent insert that wins
+    /// the empty slot first; swallowing that conflict would silently
+    /// drop this call's value (a lost write: upsert returns as if it
+    /// overwrote, but the *other* writer's value survives). The default
+    /// therefore retries the delete→insert cycle until its own insert
+    /// lands. The retry count is bounded for paranoia; every retry
+    /// requires an adversarial interleaving to land inside the window,
+    /// so the bound is unreachable outside pathological schedules — and
+    /// even then the final attempt's failure leaves a *concurrent*
+    /// writer's value in place, never a stale one.
     fn upsert(&self, guard: &RcuThread, key: u64, val: u64) -> bool {
         if self.insert(guard, key, val) {
             return true;
         }
-        self.delete(guard, key);
-        let _ = self.insert(guard, key, val);
+        // The key existed: last-wins requires OUR value to be the one
+        // visible when we return (until someone else writes later).
+        for _ in 0..UPSERT_RETRY_BOUND {
+            self.delete(guard, key);
+            if self.insert(guard, key, val) {
+                return false;
+            }
+            // A concurrent insert won the window — delete it and retry.
+        }
         false
     }
 
@@ -52,7 +77,12 @@ pub trait ConcurrentMap: Send + Sync + 'static {
     /// everyone to resizing for comparability anyway) and only the power-
     /// of-two bucket count applies. `nbuckets` is the *total* budget: the
     /// sharded map divides it across shards and rebuilds them one at a
-    /// time (staggered). Returns false if another rebuild is in flight.
+    /// time (staggered). Returns false if another rebuild is in flight
+    /// or the requested geometry is invalid (`nbuckets == 0`) — the
+    /// geometry check happens here at the boundary so a malformed wire
+    /// or CLI request can never reach the table allocator's internal
+    /// `nbuckets > 0` assert (the coordinator surfaces the same refusal
+    /// as [`crate::error::ResizeError::BadGeometry`] with a wire code).
     fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool;
 
     /// Live entries (O(n), diagnostic).
@@ -101,6 +131,9 @@ impl<B: BucketSet> ConcurrentMap for DHashMap<B> {
     }
 
     fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
+        if nbuckets == 0 {
+            return false;
+        }
         DHashMap::rebuild(self, guard, nbuckets, hash).is_ok()
     }
 
@@ -139,6 +172,9 @@ impl<B: BucketSet> ConcurrentMap for ShardedDHash<B> {
     }
 
     fn rebuild(&self, guard: &RcuThread, nbuckets: usize, hash: HashFn) -> bool {
+        if nbuckets == 0 {
+            return false;
+        }
         // `nbuckets` is the total budget; split it across shards.
         let per_shard = (nbuckets / self.shards()).max(1);
         self.rebuild_all(guard, per_shard, hash).is_ok()

@@ -166,6 +166,8 @@ pub mod wire_code {
     pub const RESIZE_AT_MAX_DEPTH: u8 = 0x12;
     /// Merge refused: shards are not buddy pairs.
     pub const RESIZE_UNMERGEABLE: u8 = 0x13;
+    /// Rebuild/resize refused: requested geometry is invalid (0 buckets).
+    pub const RESIZE_BAD_GEOMETRY: u8 = 0x14;
     /// Routing-oracle engine failed.
     pub const ORACLE_ENGINE: u8 = 0x20;
     /// Routing-oracle answer was for a superseded epoch.

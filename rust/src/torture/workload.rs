@@ -9,6 +9,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::dhash::{HashFn, ShardedDHash};
+use crate::lflist::BucketSet;
 use crate::rcu::RcuThread;
 use crate::util::SplitMix64;
 
@@ -218,7 +219,10 @@ pub struct ElasticReport {
 /// invariant violation. The final state is audited exactly: the map
 /// holds precisely the pinned keys plus what the workers believe they
 /// left behind.
-pub fn run_elastic(map: Arc<ShardedDHash>, cfg: &ElasticTortureConfig) -> ElasticReport {
+pub fn run_elastic<B: BucketSet>(
+    map: Arc<ShardedDHash<B>>,
+    cfg: &ElasticTortureConfig,
+) -> ElasticReport {
     const PIN_BASE: u64 = 1 << 50;
     const PIN_XOR: u64 = 0xF00D;
     {

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
 use dhash::dhash::{DHashMap, HashFn, ResizeError, ShardedDHash};
-use dhash::lflist::{CowSortedArray, MichaelList, SpinlockList};
+use dhash::lflist::{CowSortedArray, MichaelList, SpinlockList, SplitOrderedList};
 use dhash::rcu::{rcu_barrier, RcuThread};
 use dhash::util::prop::{check, shrink_ops, Gen};
 
@@ -202,6 +202,10 @@ fn fresh(table: &str) -> Arc<dyn ConcurrentMap> {
         "dhash-michael" => Arc::new(DHashMap::<MichaelList>::with_hash(16, HashFn::Seeded(1))),
         "dhash-spinlock" => Arc::new(DHashMap::<SpinlockList>::with_hash(16, HashFn::Seeded(1))),
         "dhash-cow" => Arc::new(DHashMap::<CowSortedArray>::with_hash(16, HashFn::Seeded(1))),
+        // Few outer buckets on purpose: the 64-key op stream then piles
+        // enough load into each split-ordered list to double its local
+        // sentinel directory mid-sequence.
+        "dhash-splitord" => Arc::new(DHashMap::<SplitOrderedList>::with_hash(4, HashFn::Seeded(1))),
         "sharded" => Arc::new(ShardedDHash::with_buckets(4, 4, 1)),
         "xu" => Arc::new(HtXu::new(16, HashFn::Seeded(1))),
         "rht" => Arc::new(HtRht::new(16, HashFn::Seeded(1))),
@@ -253,6 +257,11 @@ fn model_dhash_spinlock() {
 #[test]
 fn model_dhash_cow() {
     model_check("dhash-cow", 20);
+}
+
+#[test]
+fn model_dhash_split_ordered() {
+    model_check("dhash-splitord", 20);
 }
 
 #[test]

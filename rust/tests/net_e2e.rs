@@ -47,7 +47,7 @@ fn pipelined_connections_span_a_rebuild_without_loss() {
     let mut rebuilds = 0;
     for r in 0..6u64 {
         std::thread::sleep(Duration::from_millis(5));
-        if c.force_rebuild(4096, HashFn::Seeded(0xFEED ^ r)) {
+        if c.force_rebuild(4096, HashFn::Seeded(0xFEED ^ r)).is_ok() {
             rebuilds += 1;
         }
     }

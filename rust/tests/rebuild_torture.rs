@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use dhash::baselines::{ConcurrentMap, HtRht, HtSplit, HtXu};
 use dhash::dhash::{DHashMap, HashFn, RebuildBusy, ShardedDHash};
+use dhash::lflist::SplitOrderedList;
 use dhash::rcu::{rcu_barrier, RcuThread};
 use dhash::torture::{self, OpMix, RebuildMode, TortureConfig};
 
@@ -31,6 +32,12 @@ fn tables(nbuckets: usize, seed: u64) -> Vec<Arc<dyn ConcurrentMap>> {
         // Same total bucket budget, split over 4 shards: the torture
         // rebuilder drives the staggered rebuild_all through the trait.
         Arc::new(ShardedDHash::with_buckets(4, nbuckets / 4, seed)),
+        // DHash over the split-ordered backend: full-table rebuilds
+        // racing the backend's own local sentinel-directory growth.
+        Arc::new(DHashMap::<SplitOrderedList>::with_hash(
+            nbuckets,
+            HashFn::Seeded(seed),
+        )),
         Arc::new(HtXu::new(nbuckets, HashFn::Seeded(seed))),
         Arc::new(HtRht::new(nbuckets, HashFn::Seeded(seed))),
         Arc::new(HtSplit::new(nbuckets, 1 << 20)),
@@ -148,6 +155,33 @@ fn elastic_torture_splits_and_merges_under_churn() {
     // traffic happened.
     use dhash::torture::ElasticTortureConfig;
     let map = Arc::new(ShardedDHash::with_buckets(2, 32, 21));
+    let cfg = ElasticTortureConfig {
+        threads: 3,
+        duration: Duration::from_millis(350),
+        resize_every: Duration::from_millis(2),
+        ..Default::default()
+    }
+    .clamped_for_smoke();
+    let report = torture::run_elastic(map.clone(), &cfg);
+    assert!(report.total_ops > 1_000, "ops {}", report.total_ops);
+    assert!(report.splits >= 1, "no split completed");
+    assert!(report.merges >= 1, "no merge completed");
+    assert_eq!(report.final_epoch, report.splits + report.merges);
+    rcu_barrier();
+}
+
+#[test]
+fn elastic_torture_over_split_ordered_buckets() {
+    // The same elastic storm with every shard's buckets backed by the
+    // split-ordered list: directory-level splits/merges race the
+    // backend's own local sentinel-directory growth, and every
+    // run_elastic invariant must still hold.
+    use dhash::torture::ElasticTortureConfig;
+    let map = Arc::new(ShardedDHash::<SplitOrderedList>::with_hash(
+        2,
+        32,
+        HashFn::Seeded(21),
+    ));
     let cfg = ElasticTortureConfig {
         threads: 3,
         duration: Duration::from_millis(350),
